@@ -1,0 +1,94 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): the full LIMPQ
+//! pipeline on a real small workload — ResNet18-S on the 10-class
+//! synthetic image dataset — proving all three layers compose:
+//!
+//!   Pallas LSQ kernels (L1) -> JAX QAT graphs AOT-lowered to HLO (L2)
+//!   -> this Rust coordinator driving PJRT (L3).
+//!
+//! Stages: FP pretrain (loss curve logged) -> joint indicator training
+//! (§3.4) -> one-time ILP search (eq. 3) -> QAT finetune -> evaluation,
+//! with the headline metric (quantized vs FP accuracy at the 4-bit-level
+//! BitOps budget) printed at the end.  Results recorded in EXPERIMENTS.md.
+//!
+//! Run:  make artifacts && cargo run --release --example e2e_pipeline
+//! Env:  E2E_MODEL (default resnet18s), E2E_FAST=1 for a 2-minute version.
+
+use anyhow::Result;
+use limpq::config::Config;
+use limpq::coordinator::Pipeline;
+use limpq::data::train_val;
+use limpq::quant::cost::{total_bitops, uniform_bitops};
+use limpq::report::bit_chart;
+use limpq::runtime::pjrt::PjrtBackend;
+use limpq::search::{solve, MpqProblem};
+
+fn main() -> Result<()> {
+    let model = std::env::var("E2E_MODEL").unwrap_or_else(|_| "resnet18s".into());
+    let fast = std::env::var("E2E_FAST").is_ok();
+
+    let mut cfg = Config { model: model.clone(), ..Config::default() };
+    if fast {
+        cfg.fp.steps = 60;
+        cfg.indicator.steps = 8;
+        cfg.finetune.steps = 40;
+        cfg.data.train_n = 2000;
+        cfg.data.val_n = 1000;
+    }
+    cfg.search.alpha = Config::paper_alpha(&model);
+
+    let t0 = std::time::Instant::now();
+    let backend = PjrtBackend::load(&cfg.artifacts_dir, &model)?;
+    let meta = backend.meta.clone();
+    let (train, val) = train_val(cfg.data.train_n, cfg.data.val_n, cfg.data.seed);
+    println!(
+        "e2e: {} ({} params, {} layers) on {} train / {} val synthetic images",
+        meta.name, meta.param_size, meta.n_qlayers, train.n, val.n
+    );
+
+    let mut pipe = Pipeline::new(&backend, &meta, cfg.clone());
+
+    // Stage 1: FP pretraining with logged loss curve.
+    let fp = pipe.fp_pretrain(&train, &val)?;
+    println!("-- FP loss curve (step, loss, acc) --");
+    for p in fp.curve.iter().step_by((fp.curve.len() / 12).max(1)) {
+        println!("   {:>5}  {:.4}  {:.3}", p.step, p.loss, p.acc);
+    }
+    println!("FP val accuracy: {:.4}", fp.val_acc);
+
+    // Stage 2: joint indicator training (n+1 atomic passes per step).
+    let ind = pipe.train_indicators(&fp.flat, &train)?;
+    let imp = ind.store.importance(&meta);
+
+    // Stage 3: the one-time ILP at the 4-bit-level BitOps budget.
+    let cap = uniform_bitops(&meta, 4, 4);
+    let problem = MpqProblem::from_importance(&meta, &imp, cfg.search.alpha, Some(cap), None, false);
+    let t_ilp = std::time::Instant::now();
+    let sol = solve(&problem)?;
+    let policy = problem.to_bit_config(&sol);
+    println!(
+        "ILP search: {:?} for {} vars; policy BitOps {:.4} G (cap {:.4} G)",
+        t_ilp.elapsed(),
+        problem.n_vars(),
+        total_bitops(&meta, &policy) as f64 / 1e9,
+        cap as f64 / 1e9
+    );
+    let names: Vec<String> = meta.qlayers.iter().map(|q| q.name.clone()).collect();
+    println!("{}", bit_chart("searched bit assignment", &names, &policy.w_bits, &policy.a_bits));
+
+    // Stage 4: QAT finetune under the searched policy.
+    let ft = pipe.finetune(&fp.flat, &ind.store, &policy, &train, &val)?;
+
+    // Headline metric.
+    println!("==================================================================");
+    println!(
+        "HEADLINE: {} @4-bit level — FP top-1 {:.2}%  quantized top-1 {:.2}%  drop {:+.2}%  ({:.3} G BitOps, {:.1}s total)",
+        meta.name,
+        100.0 * fp.val_acc,
+        100.0 * ft.best_val_acc,
+        100.0 * (ft.best_val_acc - fp.val_acc),
+        total_bitops(&meta, &policy) as f64 / 1e9,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("==================================================================");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Fleet search (§4.3's z-device deployment story): one-time importance
+//! indicators answer per-device MPQ queries both in-process and over the
+//! TCP line-protocol server.
+//!
+//! Run:  make artifacts && cargo run --release --example fleet_search
+
+use anyhow::Result;
+use limpq::data::{generate, SynthConfig};
+use limpq::fleet::{query, DeviceSpec, FleetSearcher, FleetServer};
+use limpq::importance::IndicatorStore;
+use limpq::models::ModelMeta;
+use limpq::quant::cost::uniform_bitops;
+use limpq::util::json::Json;
+use limpq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let meta = ModelMeta::load(std::path::Path::new("artifacts"), "mobilenetv1s")?;
+    // Stats-initialized indicators stand in for trained ones here (run the
+    // full pipeline for learned values); the service machinery is the same.
+    let mut rng = Rng::new(3);
+    let flat = meta.init_params(&mut rng);
+    let imp = IndicatorStore::init_stats(&meta, &flat).importance(&meta);
+    let _ = generate(&SynthConfig { n: 1, ..Default::default() }, 0); // warm synthetic path
+
+    let searcher = FleetSearcher::new(meta.clone(), imp);
+
+    // In-process sweep over a fleet of devices with diverse budgets.
+    let base = uniform_bitops(&meta, 6, 6);
+    let fleet: Vec<DeviceSpec> = (0..6)
+        .map(|i| DeviceSpec {
+            name: format!("device-{i} ({}% budget)", 55 + 8 * i),
+            bitops_cap: Some(base * (55 + 8 * i as u64) / 100),
+            size_cap_bytes: None,
+            alpha: 1.0,
+            weight_only: false,
+        })
+        .collect();
+    let t = std::time::Instant::now();
+    let policies = searcher.search_fleet(&fleet)?;
+    println!("fleet of {} devices searched in {:?} total:", fleet.len(), t.elapsed());
+    for p in &policies {
+        println!(
+            "  {:<24} bitops {:.4} G  cost {:.4}  solve {} us  W{:?}",
+            p.device,
+            p.bitops as f64 / 1e9,
+            p.cost,
+            p.solve_us,
+            p.policy.w_bits
+        );
+    }
+
+    // Same thing over the wire.
+    let server = FleetServer::spawn(searcher, "127.0.0.1:0")?;
+    println!("\nfleet server on {} — querying over TCP:", server.addr);
+    let req = Json::obj(vec![
+        ("name", Json::from("edge-tpu")),
+        ("cap_gbitops", Json::Num(base as f64 * 0.6 / 1e9)),
+        ("alpha", Json::Num(1.0)),
+    ]);
+    let resp = query(&server.addr, &req)?;
+    println!("  request : {req}");
+    println!("  response: {resp}");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the LIMPQ public API in ~60 lines.
+//!
+//! Loads the smallest model's AOT artifacts, generates a synthetic batch,
+//! runs one quantized training step through the PJRT runtime, and solves
+//! the paper's ILP (eq. 3) for a 4-bit-level BitOps budget.
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use limpq::data::{generate, SynthConfig};
+use limpq::importance::IndicatorStore;
+use limpq::quant::cost::{total_bitops, uniform_bitops};
+use limpq::quant::BitConfig;
+use limpq::runtime::{pjrt::PjrtBackend, ModelBackend};
+use limpq::search::{solve, MpqProblem};
+use limpq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT-compiled model (Python never runs here).
+    let backend = PjrtBackend::load(std::path::Path::new("artifacts"), "mlp")?;
+    let meta = backend.meta.clone();
+    println!("loaded {}: {} params, {} quantized layers", meta.name, meta.param_size, meta.n_qlayers);
+
+    // 2. Synthetic data + initialized parameters and scale indicators.
+    let data = generate(&SynthConfig { n: 256, ..Default::default() }, 0);
+    let mut rng = Rng::new(7);
+    let flat = meta.init_params(&mut rng);
+    let store = IndicatorStore::init_stats(&meta, &flat);
+
+    // 3. One quantized forward/backward at uniform 4 bits.
+    let policy = BitConfig::uniform_pinned(&meta, 4, 4);
+    let (sw, sa) = store.gather(&policy)?;
+    let (qw, qa) = policy.qmax_vectors();
+    let b = backend.train_batch();
+    let e = data.image_elems();
+    let out = backend.train_step(&flat, &sw, &sa, &qw, &qa, &data.images[..b * e], &data.labels[..b])?;
+    println!("train_step: loss {:.4}, acc {:.3}, |g| {:.4}", out.loss, out.acc, limpq::tensor::l2_norm(&out.g_flat));
+
+    // 4. The one-time ILP search (paper eq. 3) at a 4-bit-level budget.
+    let imp = store.importance(&meta);
+    let cap = uniform_bitops(&meta, 4, 4);
+    let problem = MpqProblem::from_importance(&meta, &imp, 3.0, Some(cap), None, false);
+    let t = std::time::Instant::now();
+    let sol = solve(&problem)?;
+    let searched = problem.to_bit_config(&sol);
+    println!(
+        "ILP: {} vars solved in {:?}; policy W{:?} A{:?} at {:.4} GBitOps (cap {:.4})",
+        problem.n_vars(),
+        t.elapsed(),
+        searched.w_bits,
+        searched.a_bits,
+        total_bitops(&meta, &searched) as f64 / 1e9,
+        cap as f64 / 1e9,
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Serving example: batched quantized inference through the AOT `logits`
+//! artifact, reporting latency percentiles and throughput.
+//!
+//! Uses the finetuned checkpoint from a previous `limpq pipeline` run if
+//! present (runs/cache), otherwise falls back to fresh init — the serving
+//! path is identical either way.
+//!
+//! Run:  make artifacts && cargo run --release --example serve_quantized
+
+use anyhow::Result;
+use limpq::coordinator::checkpoint::Cache;
+use limpq::data::{generate, SynthConfig};
+use limpq::importance::IndicatorStore;
+use limpq::quant::BitConfig;
+use limpq::runtime::{pjrt::PjrtBackend, ModelBackend};
+use limpq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let model = std::env::var("SERVE_MODEL").unwrap_or_else(|_| "resnet18s".into());
+    let backend = PjrtBackend::load(std::path::Path::new("artifacts"), &model)?;
+    let meta = backend.meta.clone();
+
+    // Prefer a finetuned checkpoint; fall back to fresh state.
+    let cache = Cache::new(std::path::Path::new("runs"))?;
+    let (flat, sw, sa, src) = match cache.load_finetuned(&model, "pipeline_w4")? {
+        Some((flat, sw, sa, acc)) => {
+            println!("serving finetuned checkpoint (val acc {:.4})", acc);
+            (flat, sw, sa, "finetuned")
+        }
+        None => {
+            let mut rng = Rng::new(11);
+            let flat = meta.init_params(&mut rng);
+            let store = IndicatorStore::init_stats(&meta, &flat);
+            let policy = BitConfig::uniform_pinned(&meta, 4, 4);
+            let (sw, sa) = store.gather(&policy)?;
+            println!("no checkpoint found; serving fresh-initialized weights");
+            (flat, sw, sa, "fresh")
+        }
+    };
+    let policy = BitConfig::uniform_pinned(&meta, 4, 4);
+    let (qw, qa) = policy.qmax_vectors();
+
+    // Request stream: synthetic images in serve-sized batches.
+    let b = meta.serve_batch;
+    let data = generate(&SynthConfig { n: b * 64, ..Default::default() }, 9);
+    let e = data.image_elems();
+
+    // Warmup, then measure.
+    backend.logits(&flat, &sw, &sa, &qw, &qa, &data.images[..b * e])?;
+    let mut lat_us: Vec<u128> = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    let mut served = 0usize;
+    for batch in 0..64 {
+        let xs = &data.images[batch * b * e..(batch + 1) * b * e];
+        let t = std::time::Instant::now();
+        let logits = backend.logits(&flat, &sw, &sa, &qw, &qa, xs)?;
+        lat_us.push(t.elapsed().as_micros());
+        for i in 0..b {
+            let row = &logits[i * meta.n_classes..(i + 1) * meta.n_classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 == data.labels[batch * b + i] {
+                correct += 1;
+            }
+            served += 1;
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    lat_us.sort_unstable();
+    let pct = |p: usize| lat_us[(lat_us.len() * p / 100).min(lat_us.len() - 1)] as f64 / 1e3;
+    println!(
+        "served {served} requests ({} weights) in {total:.2}s: {:.1} req/s",
+        src,
+        served as f64 / total
+    );
+    println!(
+        "batch latency ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  (batch={b})",
+        pct(50),
+        pct(90),
+        pct(99)
+    );
+    println!("top-1 on stream: {:.3}", correct as f64 / served as f64);
+    Ok(())
+}

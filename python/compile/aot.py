@@ -1,0 +1,145 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + model metadata.
+
+This is the only place Python touches the system; ``make artifacts`` runs
+it once and the Rust binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Per model we emit:
+  <model>_train_step.hlo.txt   quantized fwd/bwd (indicator training, QAT)
+  <model>_eval.hlo.txt         quantized eval (loss_sum, correct)
+  <model>_fp_train_step.hlo.txt  full-precision fwd/bwd (pretraining)
+  <model>_fp_eval.hlo.txt      full-precision eval
+  <model>_hvp.hlo.txt          FP Hessian-vector product (HAWQ baseline)
+  <model>_logits.hlo.txt       quantized inference (serving example)
+  <model>_meta.json            params/qlayers/cost-model metadata
+plus a top-level manifest.json.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models mlp,...]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import MODEL_NAMES, make_model
+from .train import (
+    make_eval_step,
+    make_fp_eval,
+    make_fp_train_step,
+    make_hvp,
+    make_logits,
+    make_train_step,
+)
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 250
+SERVE_BATCH = 8
+
+# Bit-width options B = {2,3,4,5,6} (paper §4.1); first/last pinned to 8.
+BIT_OPTIONS = [2, 3, 4, 5, 6]
+PIN_BITS = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(name: str, out_dir: str, verbose: bool = True) -> dict:
+    model = make_model(name)
+    L = model.n_qlayers
+    P = model.param_size
+    H, W, C = model.input_shape
+
+    flat = _spec((P,))
+    svec = _spec((L,))
+    xtr = _spec((TRAIN_BATCH, H, W, C))
+    ytr = _spec((TRAIN_BATCH,), jnp.int32)
+    xev = _spec((EVAL_BATCH, H, W, C))
+    yev = _spec((EVAL_BATCH,), jnp.int32)
+    xsv = _spec((SERVE_BATCH, H, W, C))
+
+    entries = {
+        "train_step": (make_train_step(model), (flat, svec, svec, svec, svec, xtr, ytr)),
+        "eval": (make_eval_step(model), (flat, svec, svec, svec, svec, xev, yev)),
+        "fp_train_step": (make_fp_train_step(model), (flat, xtr, ytr)),
+        "fp_eval": (make_fp_eval(model), (flat, xev, yev)),
+        "hvp": (make_hvp(model), (flat, flat, xtr, ytr)),
+        "logits": (make_logits(model), (flat, svec, svec, svec, svec, xsv)),
+    }
+
+    artifacts = {}
+    for ep_name, (fn, specs) in entries.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{ep_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[ep_name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        if verbose:
+            print(f"  {fname}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s")
+
+    meta = model.meta()
+    meta.update(
+        artifacts=artifacts,
+        train_batch=TRAIN_BATCH,
+        eval_batch=EVAL_BATCH,
+        serve_batch=SERVE_BATCH,
+        bit_options=BIT_OPTIONS,
+        pin_bits=PIN_BITS,
+    )
+    meta_file = os.path.join(out_dir, f"{name}_meta.json")
+    with open(meta_file, "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODEL_NAMES))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    manifest = {"models": {}, "bit_options": BIT_OPTIONS, "pin_bits": PIN_BITS}
+    t0 = time.time()
+    for name in names:
+        print(f"[aot] lowering {name} ...")
+        meta = lower_model(name, args.out_dir)
+        manifest["models"][name] = {
+            "meta": f"{name}_meta.json",
+            "param_size": meta["param_size"],
+            "n_qlayers": meta["n_qlayers"],
+        }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done: {len(names)} models in {time.time()-t0:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""L1 Pallas kernels for LIMPQ: LSQ fake-quantization + fused quantized GEMM.
+
+Public surface:
+  fake_quant(v, s, qmin, qmax)                      — custom_vjp elementwise
+  qmatmul(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max) — custom_vjp GEMM
+  matmul_pallas(a, b)                               — plain tiled GEMM
+  ref.*                                             — pure-jnp oracles
+"""
+from .fake_quant import fake_quant, fake_quant_bwd_pallas, fake_quant_fwd_pallas
+from .qmatmul import matmul_pallas, qmatmul, qmatmul_fwd_pallas
+
+__all__ = [
+    "fake_quant",
+    "fake_quant_fwd_pallas",
+    "fake_quant_bwd_pallas",
+    "qmatmul",
+    "qmatmul_fwd_pallas",
+    "matmul_pallas",
+]

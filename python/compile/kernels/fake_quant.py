@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: blocked LSQ fake-quantization (forward + backward).
+
+TPU-style structure (see DESIGN.md §Hardware-Adaptation): the input is
+flattened and processed in 1-D VMEM-sized blocks via ``BlockSpec``; the
+scalar quantizer parameters ``(s, qmin, qmax, gscale)`` ride along as a
+tiny (4,) operand whose BlockSpec maps every grid point to the same block.
+The backward kernel emits a per-block partial scale-gradient that is
+reduced on the host side of the kernel boundary (one extra jnp.sum over
+``nblocks`` elements).
+
+``interpret=True`` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering produces plain HLO that the Rust
+runtime's CPU client runs directly (see /opt/xla-example/README.md).
+
+Autodiff never sees ``pallas_call``: the public entry point
+:func:`fake_quant` is a ``jax.custom_vjp`` whose fwd/bwd are these kernels,
+so the same LSQ straight-through semantics hold under ``jax.grad``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import lsq_grad_scale
+
+# Block size for the 1-D elementwise grid.  On a real TPU this is sized so
+# a block of f32 (4 B/elem) plus the output block fits comfortably in VMEM
+# (2 * 4096 * 4 B = 32 KiB per program instance, ~0.2% of a 16 MiB VMEM —
+# leaving room for double-buffering the HBM->VMEM pipeline).
+BLOCK = 4096
+_EPS = 1e-9
+
+
+def _fq_fwd_kernel(v_ref, qp_ref, o_ref):
+    """o = round(clip(v/s, qmin, qmax)) * s for one VMEM block."""
+    s = jnp.maximum(qp_ref[0], _EPS)
+    qmin, qmax = qp_ref[1], qp_ref[2]
+    u = v_ref[...] / s
+    o_ref[...] = jnp.round(jnp.clip(u, qmin, qmax)) * s
+
+
+def _fq_bwd_kernel(v_ref, qp_ref, g_ref, gv_ref, gs_ref):
+    """LSQ backward for one block: STE data grad + partial scale grad."""
+    s = jnp.maximum(qp_ref[0], _EPS)
+    qmin, qmax, gscale = qp_ref[1], qp_ref[2], qp_ref[3]
+    u = v_ref[...] / s
+    g = g_ref[...]
+    inside = (u >= qmin) & (u <= qmax)
+    gv_ref[...] = jnp.where(inside, g, 0.0)
+    contrib = jnp.where(inside, jnp.round(u) - u, jnp.clip(u, qmin, qmax))
+    gs_ref[0] = jnp.sum(g * contrib) * gscale
+
+
+def _pad_flat(v, block):
+    """Flatten ``v`` and zero-pad to a multiple of ``block``."""
+    flat = v.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n
+
+
+def _qparams(s, qmin, qmax, gscale):
+    return jnp.stack(
+        [
+            jnp.asarray(s, jnp.float32),
+            jnp.asarray(qmin, jnp.float32),
+            jnp.asarray(qmax, jnp.float32),
+            jnp.asarray(gscale, jnp.float32),
+        ]
+    )
+
+
+def fake_quant_fwd_pallas(v, s, qmin, qmax, *, block: int = BLOCK):
+    """Blocked Pallas forward pass (used standalone and by custom_vjp)."""
+    flat, n = _pad_flat(v, block)
+    nblocks = flat.shape[0] // block
+    qp = _qparams(s, qmin, qmax, 0.0)
+    out = pl.pallas_call(
+        _fq_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(flat, qp)
+    return out[:n].reshape(v.shape)
+
+
+def fake_quant_bwd_pallas(v, s, qmin, qmax, g, *, block: int = BLOCK):
+    """Blocked Pallas backward pass: returns (dL/dv, dL/ds).
+
+    The LSQ normalizer uses the *unpadded* element count; padded lanes of
+    both ``v`` and ``g`` are zero, so they contribute nothing to either
+    gradient (0 is always inside the clip range and its cotangent is 0).
+    """
+    flat_v, n = _pad_flat(v, block)
+    flat_g, _ = _pad_flat(g, block)
+    nblocks = flat_v.shape[0] // block
+    qp = _qparams(s, qmin, qmax, lsq_grad_scale(v.size, qmax))
+    gv, gs_part = pl.pallas_call(
+        _fq_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(flat_v.shape, jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(flat_v, qp, flat_g)
+    return gv[:n].reshape(v.shape), jnp.sum(gs_part)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant(v, s, qmin, qmax):
+    """LSQ fake-quantization with learnable scale ``s`` (paper eq. 1).
+
+    Differentiable in ``v`` (straight-through) and ``s`` (LSQ scale
+    gradient); ``qmin``/``qmax`` are runtime scalars carrying the bit-width
+    and receive zero cotangents.
+    """
+    return fake_quant_fwd_pallas(v, s, qmin, qmax)
+
+
+def _fq_vjp_fwd(v, s, qmin, qmax):
+    return fake_quant_fwd_pallas(v, s, qmin, qmax), (v, s, qmin, qmax)
+
+
+def _fq_vjp_bwd(res, g):
+    v, s, qmin, qmax = res
+    gv, gs = fake_quant_bwd_pallas(v, s, qmin, qmax, g)
+    return gv, gs, jnp.zeros_like(qmin), jnp.zeros_like(qmax)
+
+
+fake_quant.defvjp(_fq_vjp_fwd, _fq_vjp_bwd)

@@ -1,0 +1,145 @@
+"""L1 extension kernel: asymmetric LSQ+ fake-quantization (scale + offset).
+
+The paper builds on LSQ [12] and cites LSQ+ [2] for initialization; this
+kernel implements the LSQ+ quantizer as an optional extension of the
+importance-indicator family:
+
+  fwd:  u = (v - beta) / s
+        v_q = round(clip(u, qmin, qmax)) * s + beta
+  bwd (straight-through, LSQ+ eq. 6-8):
+        dL/dv    = g * 1[inside]
+        dL/ds    = gscale * sum(g * (round(u) - u     if inside
+                                     clip(u,.,.)      otherwise))
+        dL/dbeta = sum(g * 1[outside])
+
+The offset `beta` lets an activation quantizer track non-zero-centered
+distributions (e.g. GELU/swish outputs); with beta = 0 this reduces
+exactly to the symmetric `fake_quant` kernel, which the property tests
+assert.  Same TPU-style 1-D blocked structure as fake_quant.py;
+interpret=True for CPU PJRT (see that module's header).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fake_quant import _EPS, _pad_flat, BLOCK
+from .ref import lsq_grad_scale
+
+
+def _fqa_fwd_kernel(v_ref, qp_ref, o_ref):
+    s = jnp.maximum(qp_ref[0], _EPS)
+    beta, qmin, qmax = qp_ref[1], qp_ref[2], qp_ref[3]
+    u = (v_ref[...] - beta) / s
+    o_ref[...] = jnp.round(jnp.clip(u, qmin, qmax)) * s + beta
+
+
+def _fqa_bwd_kernel(v_ref, qp_ref, g_ref, gv_ref, gs_ref, gb_ref):
+    s = jnp.maximum(qp_ref[0], _EPS)
+    beta, qmin, qmax, gscale = qp_ref[1], qp_ref[2], qp_ref[3], qp_ref[4]
+    u = (v_ref[...] - beta) / s
+    g = g_ref[...]
+    inside = (u >= qmin) & (u <= qmax)
+    gv_ref[...] = jnp.where(inside, g, 0.0)
+    contrib = jnp.where(inside, jnp.round(u) - u, jnp.clip(u, qmin, qmax))
+    gs_ref[0] = jnp.sum(g * contrib) * gscale
+    gb_ref[0] = jnp.sum(jnp.where(inside, 0.0, g))
+
+
+def _qp(s, beta, qmin, qmax, gscale):
+    return jnp.stack([
+        jnp.asarray(s, jnp.float32),
+        jnp.asarray(beta, jnp.float32),
+        jnp.asarray(qmin, jnp.float32),
+        jnp.asarray(qmax, jnp.float32),
+        jnp.asarray(gscale, jnp.float32),
+    ])
+
+
+def fake_quant_asym_fwd_pallas(v, s, beta, qmin, qmax, *, block: int = BLOCK):
+    flat, n = _pad_flat(v, block)
+    nblocks = flat.shape[0] // block
+    out = pl.pallas_call(
+        _fqa_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((5,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(flat, _qp(s, beta, qmin, qmax, 0.0))
+    return out[:n].reshape(v.shape)
+
+
+def fake_quant_asym_bwd_pallas(v, s, beta, qmin, qmax, g, *, block: int = BLOCK):
+    """Returns (dL/dv, dL/ds, dL/dbeta).
+
+    Padded lanes carry zero cotangent.  Note the beta gradient of padded
+    zeros: inside the clip range, so their contribution is 0 as required.
+    """
+    flat_v, n = _pad_flat(v, block)
+    flat_g, _ = _pad_flat(g, block)
+    nblocks = flat_v.shape[0] // block
+    gv, gs_part, gb_part = pl.pallas_call(
+        _fqa_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(flat_v.shape, jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((5,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(flat_v, _qp(s, beta, qmin, qmax, lsq_grad_scale(v.size, qmax)), flat_g)
+    return gv[:n].reshape(v.shape), jnp.sum(gs_part), jnp.sum(gb_part)
+
+
+@jax.custom_vjp
+def fake_quant_asym(v, s, beta, qmin, qmax):
+    """LSQ+ asymmetric fake-quantization; differentiable in v, s, beta."""
+    return fake_quant_asym_fwd_pallas(v, s, beta, qmin, qmax)
+
+
+def _vjp_fwd(v, s, beta, qmin, qmax):
+    return fake_quant_asym_fwd_pallas(v, s, beta, qmin, qmax), (v, s, beta, qmin, qmax)
+
+
+def _vjp_bwd(res, g):
+    v, s, beta, qmin, qmax = res
+    gv, gs, gb = fake_quant_asym_bwd_pallas(v, s, beta, qmin, qmax, g)
+    return gv, gs, gb, jnp.zeros_like(qmin), jnp.zeros_like(qmax)
+
+
+fake_quant_asym.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# --- pure-jnp oracle --------------------------------------------------------
+
+
+def fake_quant_asym_ref(v, s, beta, qmin, qmax):
+    s = jnp.maximum(s, 1e-9)
+    u = (v - beta) / s
+    return jnp.round(jnp.clip(u, qmin, qmax)) * s + beta
+
+
+def fake_quant_asym_vjp_ref(v, s, beta, qmin, qmax, g):
+    s = jnp.maximum(s, 1e-9)
+    u = (v - beta) / s
+    inside = (u >= qmin) & (u <= qmax)
+    g_v = jnp.where(inside, g, 0.0)
+    contrib = jnp.where(inside, jnp.round(u) - u, jnp.clip(u, qmin, qmax))
+    g_s = jnp.sum(g * contrib) * lsq_grad_scale(v.size, qmax)
+    g_b = jnp.sum(jnp.where(inside, 0.0, g))
+    return g_v, g_s, g_b

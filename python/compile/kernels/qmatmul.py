@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: tiled matmul with fused in-VMEM fake-quantization.
+
+The paper's compute hot-spot is the quantized GEMM at the heart of every
+conv/dense layer.  On GPU the usual trick is to fake-quantize operands in
+shared memory per threadblock; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) is the same idea expressed through ``BlockSpec``:
+
+  grid = (M/bm, N/bn, K/bk); each program instance pulls an (bm, bk) A-tile
+  and a (bk, bn) W-tile from HBM into VMEM, fake-quantizes *both tiles in
+  VMEM* (so the quantize cost is paid once per tile, fused into the GEMM
+  schedule, never materialized in HBM), multiply-accumulates into the
+  (bm, bn) output block in f32 (the MXU accumulation path).
+
+Backward composes the plain Pallas matmul with the fake-quant backward
+kernel from :mod:`fake_quant` via ``jax.custom_vjp``:
+
+  y  = fq(A) @ fq(W)
+  dA, dsa = fq_bwd(A, sa, g @ fq(W)^T)
+  dW, dsw = fq_bwd(W, sw, fq(A)^T @ g)
+
+``interpret=True`` everywhere (CPU PJRT; see fake_quant.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fake_quant import _EPS, fake_quant_bwd_pallas, fake_quant_fwd_pallas
+
+# Tile sizes.  On a real TPU: bm=bn=bk=128 fills the 128x128 MXU exactly;
+# VMEM per instance = (bm*bk + bk*bn + bm*bn) * 4 B = 192 KiB, ~1.2% of
+# 16 MiB — ample headroom for double buffering.  The CPU-interpret build
+# keeps the same structure with tiles sized to this repo's small models.
+BM, BN, BK = 32, 32, 32
+
+
+def _qmm_kernel(a_ref, w_ref, qp_ref, o_ref):
+    """One (bm, bn) output tile step: quantize tiles in VMEM, then MAC."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    sa = jnp.maximum(qp_ref[0], _EPS)
+    sw = jnp.maximum(qp_ref[1], _EPS)
+    qa_min, qa_max = qp_ref[2], qp_ref[3]
+    qw_min, qw_max = qp_ref[4], qp_ref[5]
+    aq = jnp.round(jnp.clip(a_ref[...] / sa, qa_min, qa_max)) * sa
+    wq = jnp.round(jnp.clip(w_ref[...] / sw, qw_min, qw_max)) * sw
+    o_ref[...] += jnp.dot(aq, wq, preferred_element_type=jnp.float32)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """Plain tiled f32 matmul (used by the backward pass)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad2(x, bm, bk):
+    m, k = x.shape
+    pm, pk = (-m) % bm, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+def matmul_pallas(a, b, *, bm=BM, bn=BN, bk=BK):
+    """Tiled Pallas f32 matmul with zero-padding to tile multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap, bp = _pad2(a, bm, bk), _pad2(b, bk, bn)
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def qmatmul_fwd_pallas(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max, *, bm=BM, bn=BN, bk=BK):
+    """Fused quantized matmul forward: fq(a) @ fq(w) in one kernel.
+
+    Zero padding is exact: 0/s clips and rounds to 0, contributing nothing
+    to the MAC.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    ap, wp = _pad2(a, bm, bk), _pad2(w, bk, bn)
+    qp = jnp.stack(
+        [
+            jnp.asarray(sa, jnp.float32),
+            jnp.asarray(sw, jnp.float32),
+            jnp.asarray(qa_min, jnp.float32),
+            jnp.asarray(qa_max, jnp.float32),
+            jnp.asarray(qw_min, jnp.float32),
+            jnp.asarray(qw_max, jnp.float32),
+        ]
+    )
+    grid = (ap.shape[0] // bm, wp.shape[1] // bn, ap.shape[1] // bk)
+    out = pl.pallas_call(
+        _qmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], wp.shape[1]), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((6,), lambda i, j, t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        interpret=True,
+    )(ap, wp, qp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def qmatmul(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max):
+    """Quantized GEMM y = fq(a; sa) @ fq(w; sw) with LSQ gradients.
+
+    Differentiable in ``a``, ``w``, ``sa``, ``sw``; the four clip bounds
+    are runtime bit-width carriers and get zero cotangents.
+    """
+    return qmatmul_fwd_pallas(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max)
+
+
+def _qmm_vjp_fwd(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max):
+    y = qmatmul_fwd_pallas(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max)
+    return y, (a, w, sa, sw, qa_min, qa_max, qw_min, qw_max)
+
+
+def _qmm_vjp_bwd(res, g):
+    a, w, sa, sw, qa_min, qa_max, qw_min, qw_max = res
+    # Recompute the quantized operands (cheaper than saving them: the
+    # residuals stay at the unquantized operands' footprint).
+    aq = fake_quant_fwd_pallas(a, sa, qa_min, qa_max)
+    wq = fake_quant_fwd_pallas(w, sw, qw_min, qw_max)
+    d_aq = matmul_pallas(g, wq.T)
+    d_wq = matmul_pallas(aq.T, g)
+    ga, gsa = fake_quant_bwd_pallas(a, sa, qa_min, qa_max, d_aq)
+    gw, gsw = fake_quant_bwd_pallas(w, sw, qw_min, qw_max, d_wq)
+    zero = jnp.zeros_like(qa_min)
+    return ga, gw, gsa, gsw, zero, zero, zero, zero
+
+
+qmatmul.defvjp(_qmm_vjp_fwd, _qmm_vjp_bwd)

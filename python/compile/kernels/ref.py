@@ -1,0 +1,62 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has an exact reference here, written
+with plain ``jax.numpy`` ops only.  pytest (``python/tests/``) asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated
+shape/dtype/bit sweeps — this file is the single source of truth for the
+quantization semantics:
+
+  fake-quant forward (LSQ):   v_q = round(clip(v / s, qmin, qmax)) * s
+  fake-quant backward (LSQ):
+      let u = v / s, inside = qmin <= u <= qmax
+      dL/dv = g * 1[inside]                     (straight-through estimator)
+      dL/ds = gscale * sum(g * (round(u) - u)   if inside
+                               clip(u, qmin, qmax) otherwise)
+      gscale = 1 / sqrt(numel(v) * qmax)        (LSQ gradient normalizer)
+
+These match Esser et al. (LSQ, ICLR'20) eq. (3)-(4), which is the quantizer
+family the paper builds its importance indicators on (paper §3.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lsq_grad_scale(numel: int, qmax) -> jnp.ndarray:
+    """LSQ gradient normalizer g = 1/sqrt(numel * qmax).
+
+    ``qmax`` may be a traced scalar (bit-width is a *runtime* input in this
+    build — see DESIGN.md §3 "Static-HLO trick").
+    """
+    return 1.0 / jnp.sqrt(jnp.asarray(numel, jnp.float32) * qmax)
+
+
+def fake_quant_ref(v, s, qmin, qmax):
+    """Reference LSQ fake-quantization (forward only)."""
+    s = jnp.maximum(s, 1e-9)
+    u = v / s
+    return jnp.round(jnp.clip(u, qmin, qmax)) * s
+
+
+def fake_quant_vjp_ref(v, s, qmin, qmax, g):
+    """Reference LSQ backward: returns (dL/dv, dL/ds)."""
+    s = jnp.maximum(s, 1e-9)
+    u = v / s
+    inside = (u >= qmin) & (u <= qmax)
+    g_v = jnp.where(inside, g, 0.0)
+    contrib = jnp.where(inside, jnp.round(u) - u, jnp.clip(u, qmin, qmax))
+    g_s = jnp.sum(g * contrib) * lsq_grad_scale(v.size, qmax)
+    return g_v, g_s
+
+
+def matmul_ref(a, b):
+    """Reference f32 matmul."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def qmatmul_ref(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max):
+    """Reference fused quantized matmul: fq(a) @ fq(w)."""
+    return matmul_ref(
+        fake_quant_ref(a, sa, qa_min, qa_max),
+        fake_quant_ref(w, sw, qw_min, qw_max),
+    )

@@ -1,0 +1,290 @@
+"""L2 quantized layer zoo.
+
+Every module has two phases that walk the network in the same
+deterministic order:
+
+  * ``build(builder, in_shape) -> out_shape`` — registers parameters and
+    quantized layers (shape inference, MAC counting) against a
+    :class:`~compile.params.Builder`.
+  * ``__call__(ctx, x) -> y`` — the JAX forward pass, reading parameters
+    back out of the flat buffer via :class:`~compile.params.Ctx` and
+    fake-quantizing through the L1 Pallas kernels.
+
+Normalization note (documented substitution, DESIGN.md §2): the paper's
+reference models use BatchNorm, whose running statistics would make the
+AOT artifacts stateful.  We use GroupNorm — stateless, identical at train
+and eval time — which leaves the paper's mechanism untouched: importance
+indicators live in the *quantizers*, and §3.3 of the paper explicitly
+contrasts them with norm-layer scale factors.
+
+Quantizer placement follows the paper/LSQ convention: each conv/dense
+layer carries one weight quantizer and one input-activation quantizer;
+activations reaching a quantizer are non-negative (post-ReLU or raw
+[0,1] input), matching the unsigned activation range of paper eq. (1).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+from jax import lax
+
+from .params import Builder, Ctx
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+class Module:
+    """Base class: two-phase (build / apply) network component."""
+
+    def build(self, b: Builder, in_shape):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __call__(self, ctx: Ctx, x):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class QConv2d(Module):
+    """Quantized 2-D convolution (NHWC / HWIO), optionally grouped.
+
+    ``groups == in_channels`` gives a depthwise conv (kind "dwconv");
+    ``k == 1`` gives a pointwise conv (kind "pwconv") — the distinction
+    matters for the paper's Figure-1 contrast experiment.
+    """
+
+    def __init__(self, out_c: int, k: int, stride: int = 1, groups: int = 1, name: str = "conv"):
+        self.out_c, self.k, self.stride, self.groups, self.name = out_c, k, stride, groups, name
+        self.w = None
+        self.q = None
+
+    def build(self, b: Builder, in_shape):
+        h, w, c = in_shape
+        assert c % self.groups == 0 and self.out_c % self.groups == 0, (c, self.out_c, self.groups)
+        wshape = (self.k, self.k, c // self.groups, self.out_c)
+        fan_in = self.k * self.k * (c // self.groups)
+        self.w = b.add_param(f"{self.name}.w", wshape, "he_conv", fan_in)
+        oh, ow = -(-h // self.stride), -(-w // self.stride)
+        if self.groups == c and self.groups > 1:
+            kind = "dwconv"
+        elif self.k == 1:
+            kind = "pwconv"
+        else:
+            kind = "conv"
+        macs = oh * ow * self.out_c * fan_in
+        self.q = b.add_qlayer(self.name, kind, macs, self.w.size)
+        return (oh, ow, self.out_c)
+
+    def __call__(self, ctx: Ctx, x):
+        w = ctx.param(self.w)
+        xq = ctx.act_q(self.q, x)
+        wq = ctx.weight_q(self.q, w)
+        return lax.conv_general_dilated(
+            xq, wq,
+            window_strides=(self.stride, self.stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=self.groups,
+        )
+
+
+class QDense(Module):
+    """Quantized fully-connected layer via the fused Pallas qmatmul."""
+
+    def __init__(self, out_f: int, name: str = "fc"):
+        self.out_f, self.name = out_f, name
+        self.w = self.bias = self.q = None
+
+    def build(self, b: Builder, in_shape):
+        (f,) = in_shape
+        self.w = b.add_param(f"{self.name}.w", (f, self.out_f), "he_dense", f)
+        self.bias = b.add_param(f"{self.name}.b", (self.out_f,), "zeros", f)
+        self.q = b.add_qlayer(self.name, "dense", f * self.out_f, self.w.size)
+        return (self.out_f,)
+
+    def __call__(self, ctx: Ctx, x):
+        w = ctx.param(self.w)
+        y = ctx.qmatmul(self.q, x, w)
+        return y + ctx.param(self.bias)
+
+
+class GroupNorm(Module):
+    """Stateless GroupNorm with affine (full-precision) parameters."""
+
+    def __init__(self, groups: int = 8, name: str = "gn", eps: float = 1e-5):
+        self.groups, self.name, self.eps = groups, name, eps
+        self.gamma = self.beta = None
+        self.c = None
+
+    def build(self, b: Builder, in_shape):
+        c = in_shape[-1]
+        self.c = c
+        g = self.groups
+        while c % g:
+            g -= 1
+        self.groups = max(g, 1)
+        self.gamma = b.add_param(f"{self.name}.gamma", (c,), "ones", c)
+        self.beta = b.add_param(f"{self.name}.beta", (c,), "zeros", c)
+        return in_shape
+
+    def __call__(self, ctx: Ctx, x):
+        n, h, w, c = x.shape
+        g = self.groups
+        xg = x.reshape(n, h, w, g, c // g)
+        mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+        var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+        xn = ((xg - mean) * lax.rsqrt(var + self.eps)).reshape(n, h, w, c)
+        return xn * ctx.param(self.gamma) + ctx.param(self.beta)
+
+
+class ReLU(Module):
+    def build(self, b, in_shape):
+        return in_shape
+
+    def __call__(self, ctx, x):
+        return jnp.maximum(x, 0.0)
+
+
+class GlobalAvgPool(Module):
+    def build(self, b, in_shape):
+        return (in_shape[-1],)
+
+    def __call__(self, ctx, x):
+        return jnp.mean(x, axis=(1, 2))
+
+
+class Flatten(Module):
+    def build(self, b, in_shape):
+        n = 1
+        for d in in_shape:
+            n *= d
+        return (n,)
+
+    def __call__(self, ctx, x):
+        return x.reshape(x.shape[0], -1)
+
+
+class Sequential(Module):
+    def __init__(self, mods: Sequence[Module]):
+        self.mods = list(mods)
+
+    def build(self, b, in_shape):
+        for m in self.mods:
+            in_shape = m.build(b, in_shape)
+        return in_shape
+
+    def __call__(self, ctx, x):
+        for m in self.mods:
+            x = m(ctx, x)
+        return x
+
+
+# ---------------------------------------------------------------------------
+# composite blocks
+# ---------------------------------------------------------------------------
+
+
+def conv_gn_relu(out_c: int, k: int, stride: int, name: str, groups: int = 1) -> Sequential:
+    return Sequential([
+        QConv2d(out_c, k, stride, groups=groups, name=name),
+        GroupNorm(name=f"{name}.gn"),
+        ReLU(),
+    ])
+
+
+class BasicBlock(Module):
+    """ResNet-18 style basic block: two 3x3 convs + identity/projection."""
+
+    def __init__(self, out_c: int, stride: int, name: str):
+        self.out_c, self.stride, self.name = out_c, stride, name
+        self.body: Optional[Sequential] = None
+        self.short: Optional[Sequential] = None
+
+    def build(self, b, in_shape):
+        c = in_shape[-1]
+        self.body = Sequential([
+            QConv2d(self.out_c, 3, self.stride, name=f"{self.name}.conv1"),
+            GroupNorm(name=f"{self.name}.gn1"),
+            ReLU(),
+            QConv2d(self.out_c, 3, 1, name=f"{self.name}.conv2"),
+            GroupNorm(name=f"{self.name}.gn2"),
+        ])
+        out_shape = self.body.build(b, in_shape)
+        if self.stride != 1 or c != self.out_c:
+            self.short = Sequential([
+                QConv2d(self.out_c, 1, self.stride, name=f"{self.name}.short"),
+                GroupNorm(name=f"{self.name}.gn_s"),
+            ])
+            self.short.build(b, in_shape)
+        return out_shape
+
+    def __call__(self, ctx, x):
+        y = self.body(ctx, x)
+        s = self.short(ctx, x) if self.short is not None else x
+        return jnp.maximum(y + s, 0.0)
+
+
+class Bottleneck(Module):
+    """ResNet-50 style bottleneck: 1x1 reduce, 3x3, 1x1 expand (x4)."""
+
+    EXPANSION = 4
+
+    def __init__(self, mid_c: int, stride: int, name: str):
+        self.mid_c, self.stride, self.name = mid_c, stride, name
+        self.body: Optional[Sequential] = None
+        self.short: Optional[Sequential] = None
+
+    def build(self, b, in_shape):
+        c = in_shape[-1]
+        out_c = self.mid_c * self.EXPANSION
+        self.body = Sequential([
+            QConv2d(self.mid_c, 1, 1, name=f"{self.name}.conv1"),
+            GroupNorm(name=f"{self.name}.gn1"),
+            ReLU(),
+            QConv2d(self.mid_c, 3, self.stride, name=f"{self.name}.conv2"),
+            GroupNorm(name=f"{self.name}.gn2"),
+            ReLU(),
+            QConv2d(out_c, 1, 1, name=f"{self.name}.conv3"),
+            GroupNorm(name=f"{self.name}.gn3"),
+        ])
+        out_shape = self.body.build(b, in_shape)
+        if self.stride != 1 or c != out_c:
+            self.short = Sequential([
+                QConv2d(out_c, 1, self.stride, name=f"{self.name}.short"),
+                GroupNorm(name=f"{self.name}.gn_s"),
+            ])
+            self.short.build(b, in_shape)
+        return out_shape
+
+    def __call__(self, ctx, x):
+        y = self.body(ctx, x)
+        s = self.short(ctx, x) if self.short is not None else x
+        return jnp.maximum(y + s, 0.0)
+
+
+class DWSeparable(Module):
+    """MobileNetV1 depthwise-separable unit: DW 3x3 + PW 1x1 (each quantized).
+
+    The DW and PW convs are *separate quantized layers* — the paper's
+    Figure-1 contrast experiment probes exactly this pair.
+    """
+
+    def __init__(self, out_c: int, stride: int, name: str):
+        self.out_c, self.stride, self.name = out_c, stride, name
+        self.seq: Optional[Sequential] = None
+
+    def build(self, b, in_shape):
+        c = in_shape[-1]
+        self.seq = Sequential([
+            QConv2d(c, 3, self.stride, groups=c, name=f"{self.name}.dw"),
+            GroupNorm(name=f"{self.name}.gn1"),
+            ReLU(),
+            QConv2d(self.out_c, 1, 1, name=f"{self.name}.pw"),
+            GroupNorm(name=f"{self.name}.gn2"),
+            ReLU(),
+        ])
+        return self.seq.build(b, in_shape)
+
+    def __call__(self, ctx, x):
+        return self.seq(ctx, x)

@@ -1,0 +1,13 @@
+"""L2 model zoo: scaled-down counterparts of the paper's three networks.
+
+All models share the (16, 16, 3) input / 10-class synthetic-ImageNet task
+(DESIGN.md §2).  Registry:
+
+  mlp          — 4 quantized dense layers; fast path for tests
+  mobilenetv1s — MobileNetV1-S with five equal-width DW/PW probe pairs
+  resnet18s    — ResNet18-S (basic blocks, [2,2,2,2])
+  resnet50s    — ResNet50-S (bottleneck blocks, [2,2,2,2], depth-scaled)
+"""
+from .registry import MODEL_NAMES, ModelDef, make_model
+
+__all__ = ["MODEL_NAMES", "ModelDef", "make_model"]

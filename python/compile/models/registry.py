@@ -1,0 +1,136 @@
+"""Model registry + ModelDef wrapper (definition-time build, apply fn)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from ..layers import (
+    BasicBlock,
+    Bottleneck,
+    DWSeparable,
+    Flatten,
+    GlobalAvgPool,
+    Module,
+    QDense,
+    ReLU,
+    Sequential,
+    conv_gn_relu,
+)
+from ..params import Builder, Ctx
+
+INPUT_SHAPE = (16, 16, 3)
+N_CLASSES = 10
+
+
+@dataclass
+class ModelDef:
+    """A built model: module tree + parameter/qlayer metadata + apply fn."""
+
+    name: str
+    module: Module
+    builder: Builder
+    input_shape: Tuple[int, int, int] = INPUT_SHAPE
+    n_classes: int = N_CLASSES
+
+    @property
+    def param_size(self) -> int:
+        return self.builder.param_size
+
+    @property
+    def n_qlayers(self) -> int:
+        return self.builder.n_qlayers
+
+    def apply(self, flat, sw, sa, qmax_w, qmax_a, x, quant: bool = True):
+        """Forward pass -> logits [B, n_classes].
+
+        ``sw``/``sa``/``qmax_w``/``qmax_a`` are per-layer (L,) f32 vectors;
+        with ``quant=False`` the quantizers are bypassed entirely (FP path).
+        """
+        ctx = Ctx(flat, sw, sa, qmax_w, qmax_a, quant=quant)
+        return self.module(ctx, x)
+
+    def apply_fp(self, flat, x):
+        return self.apply(flat, None, None, None, None, x, quant=False)
+
+    def meta(self) -> dict:
+        m = self.builder.meta()
+        m.update(
+            name=self.name,
+            input_shape=list(self.input_shape),
+            n_classes=self.n_classes,
+            n_qlayers=self.n_qlayers,
+        )
+        return m
+
+
+def _mlp() -> Module:
+    return Sequential([
+        Flatten(),
+        QDense(128, name="fc1"), ReLU(),
+        QDense(128, name="fc2"), ReLU(),
+        QDense(64, name="fc3"), ReLU(),
+        QDense(N_CLASSES, name="head"),
+    ])
+
+
+def _mobilenetv1s() -> Module:
+    """MobileNetV1-S.
+
+    Mirrors the paper's contrast-experiment setup: after the stem and two
+    widening units, five DW/PW pairs run at a constant 64 channels (the
+    paper used five 512-channel pairs in full MobileNetV1), so DW-vs-PW
+    sensitivity is probed with I/O channel counts held equal (paper §3.3.1).
+    """
+    mods = [conv_gn_relu(16, 3, 1, name="stem")]
+    mods.append(DWSeparable(32, 1, name="ds1"))
+    mods.append(DWSeparable(64, 2, name="ds2"))
+    for i in range(5):
+        mods.append(DWSeparable(64, 1, name=f"probe{i}"))
+    mods.append(DWSeparable(128, 2, name="ds3"))
+    mods += [GlobalAvgPool(), QDense(N_CLASSES, name="head")]
+    return Sequential(mods)
+
+
+def _resnet18s() -> Module:
+    mods = [conv_gn_relu(16, 3, 1, name="stem")]
+    widths = [16, 32, 64, 128]
+    for stage, w in enumerate(widths):
+        for blk in range(2):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            mods.append(BasicBlock(w, stride, name=f"s{stage}b{blk}"))
+    mods += [GlobalAvgPool(), QDense(N_CLASSES, name="head")]
+    return Sequential(mods)
+
+
+def _resnet50s() -> Module:
+    """Bottleneck ResNet, depth-scaled [2,2,2,2] (26 quantized layers)."""
+    mods = [conv_gn_relu(16, 3, 1, name="stem")]
+    widths = [8, 16, 32, 64]
+    for stage, w in enumerate(widths):
+        for blk in range(2):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            mods.append(Bottleneck(w, stride, name=f"s{stage}b{blk}"))
+    mods += [GlobalAvgPool(), QDense(N_CLASSES, name="head")]
+    return Sequential(mods)
+
+
+_FACTORIES = {
+    "mlp": _mlp,
+    "mobilenetv1s": _mobilenetv1s,
+    "resnet18s": _resnet18s,
+    "resnet50s": _resnet50s,
+}
+
+MODEL_NAMES = tuple(_FACTORIES)
+
+
+def make_model(name: str) -> ModelDef:
+    """Build a model definition: runs shape inference + param registration."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown model {name!r}; options: {MODEL_NAMES}")
+    module = _FACTORIES[name]()
+    b = Builder()
+    out = module.build(b, INPUT_SHAPE)
+    assert out == (N_CLASSES,), (name, out)
+    b.pin_first_last()
+    return ModelDef(name=name, module=module, builder=b)

@@ -1,0 +1,161 @@
+"""Flat-parameter bookkeeping for the L2 models.
+
+The Rust runtime (L3) owns all state as flat f32 host buffers; every HLO
+entry point takes ``params_flat`` plus the per-layer scale vectors.  This
+module is the contract between the two sides:
+
+  * :class:`Builder` is used once, at model-definition time, to register
+    every parameter (name, shape, offset into the flat buffer, init hint)
+    and every *quantized layer* (name, kind, MACs, weight element count).
+  * :class:`Ctx` is used at apply time to slice parameters back out of the
+    flat buffer and to fake-quantize weights/activations with the right
+    per-layer, per-bit scale slot.
+  * :func:`Builder.meta` serializes everything to the ``model_meta.json``
+    consumed by ``rust/src/models/`` (param init, BitOps/size cost models,
+    scale slot mapping, first/last-layer pin flags).
+
+Bit-widths are runtime data: the clip bounds arrive as per-layer f32
+vectors ``qmax_w``/``qmax_a`` (weights symmetric: qmin = -(qmax+1);
+activations unsigned: qmin = 0), so one compiled artifact serves every bit
+configuration (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from .kernels import fake_quant, qmatmul
+
+
+@dataclass
+class ParamInfo:
+    """One parameter tensor inside the flat buffer."""
+
+    name: str
+    shape: tuple
+    offset: int
+    size: int
+    init: str  # "he_conv" | "he_dense" | "zeros" | "ones"
+    fan_in: int
+
+
+@dataclass
+class QLayerInfo:
+    """One quantized layer = one (weight, activation) quantizer pair."""
+
+    index: int
+    name: str
+    kind: str  # "conv" | "dwconv" | "pwconv" | "dense"
+    macs: int  # multiply-accumulates per example (BitOps = macs*bw*ba)
+    w_numel: int  # weight element count (model size = sum w_numel*bw/8)
+    pinned: bool = False  # first/last layer pinned to 8 bits (paper §4.1)
+
+
+@dataclass
+class Builder:
+    """Definition-time registry; populated by ``Module.build``."""
+
+    params: List[ParamInfo] = field(default_factory=list)
+    qlayers: List[QLayerInfo] = field(default_factory=list)
+    offset: int = 0
+
+    def add_param(self, name: str, shape: tuple, init: str, fan_in: int) -> ParamInfo:
+        size = 1
+        for d in shape:
+            size *= int(d)
+        info = ParamInfo(name, tuple(int(d) for d in shape), self.offset, size, init, fan_in)
+        self.params.append(info)
+        self.offset += size
+        return info
+
+    def add_qlayer(self, name: str, kind: str, macs: int, w_numel: int) -> QLayerInfo:
+        info = QLayerInfo(len(self.qlayers), name, kind, int(macs), int(w_numel))
+        self.qlayers.append(info)
+        return info
+
+    @property
+    def param_size(self) -> int:
+        return self.offset
+
+    @property
+    def n_qlayers(self) -> int:
+        return len(self.qlayers)
+
+    def pin_first_last(self) -> None:
+        """Mark the first and last quantized layers as 8-bit pinned."""
+        if self.qlayers:
+            self.qlayers[0].pinned = True
+            self.qlayers[-1].pinned = True
+
+    def meta(self) -> dict:
+        return {
+            "param_size": self.param_size,
+            "params": [
+                {
+                    "name": p.name,
+                    "shape": list(p.shape),
+                    "offset": p.offset,
+                    "size": p.size,
+                    "init": p.init,
+                    "fan_in": p.fan_in,
+                }
+                for p in self.params
+            ],
+            "qlayers": [
+                {
+                    "index": q.index,
+                    "name": q.name,
+                    "kind": q.kind,
+                    "macs": q.macs,
+                    "w_numel": q.w_numel,
+                    "pinned": q.pinned,
+                }
+                for q in self.qlayers
+            ],
+        }
+
+
+class Ctx:
+    """Apply-time context: flat-buffer access + quantizer dispatch.
+
+    ``quant=False`` gives the full-precision path (FP pretraining and the
+    HAWQ-baseline Hessian, which the paper pointedly notes is computed on
+    the *unquantized* network).
+    """
+
+    def __init__(self, flat, sw=None, sa=None, qmax_w=None, qmax_a=None, quant=True):
+        self.flat = flat
+        self.sw = sw
+        self.sa = sa
+        self.qmax_w = qmax_w
+        self.qmax_a = qmax_a
+        self.quant = quant
+
+    def param(self, info: ParamInfo):
+        return self.flat[info.offset : info.offset + info.size].reshape(info.shape)
+
+    def weight_q(self, q: QLayerInfo, w):
+        """Symmetric signed fake-quant of a weight tensor."""
+        if not self.quant:
+            return w
+        qmax = self.qmax_w[q.index]
+        return fake_quant(w, self.sw[q.index], -(qmax + 1.0), qmax)
+
+    def act_q(self, q: QLayerInfo, a):
+        """Unsigned fake-quant of a (non-negative) input activation."""
+        if not self.quant:
+            return a
+        return fake_quant(a, self.sa[q.index], jnp.float32(0.0), self.qmax_a[q.index])
+
+    def qmatmul(self, q: QLayerInfo, a, w):
+        """Fused quantized GEMM through the L1 Pallas kernel."""
+        if not self.quant:
+            return jnp.matmul(a, w, preferred_element_type=jnp.float32)
+        qmw = self.qmax_w[q.index]
+        qma = self.qmax_a[q.index]
+        return qmatmul(
+            a, w, self.sa[q.index], self.sw[q.index],
+            jnp.float32(0.0), qma, -(qmw + 1.0), qmw,
+        )

@@ -1,0 +1,103 @@
+"""L2 training / evaluation / Hessian entry points (the AOT surface).
+
+Each function here becomes one HLO artifact per model (see aot.py).  The
+Rust coordinator (L3) drives them as black-box executables; all state
+(params, scale slots, optimizer moments) lives on the Rust side.
+
+Entry points:
+
+  train_step  (flat, sw, sa, qmax_w, qmax_a, x, y)
+                -> (loss, acc, g_flat, g_sw, g_sa)
+     One quantized forward/backward.  The paper's joint indicator-training
+     "atomic operation" (§3.4) is n+1 invocations of this artifact with
+     different qmax vectors (n uniform-bit passes + 1 random assignment),
+     gradients aggregated by the coordinator before one optimizer update.
+
+  eval_step   (flat, sw, sa, qmax_w, qmax_a, x, y) -> (loss_sum, correct)
+  fp_train_step (flat, x, y) -> (loss, acc, g_flat)
+  fp_eval     (flat, x, y) -> (loss_sum, correct)
+  hvp         (flat, v, x, y) -> Hv
+     Hessian-vector product on the *full-precision* network — the HAWQ /
+     HAWQv2 baseline criterion, which the paper critiques precisely for
+     being quantization-unaware (§1 "Biased approximation").
+  logits      (flat, sw, sa, qmax_w, qmax_a, x) -> logits  (serving path)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models.registry import ModelDef
+
+
+def _ce_loss(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def _acc(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def make_train_step(model: ModelDef):
+    def loss_fn(flat, sw, sa, qmax_w, qmax_a, x, y):
+        logits = model.apply(flat, sw, sa, qmax_w, qmax_a, x)
+        return _ce_loss(logits, y), logits
+
+    def train_step(flat, sw, sa, qmax_w, qmax_a, x, y):
+        (loss, logits), grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2), has_aux=True)(
+            flat, sw, sa, qmax_w, qmax_a, x, y
+        )
+        g_flat, g_sw, g_sa = grads
+        return loss, _acc(logits, y), g_flat, g_sw, g_sa
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef):
+    def eval_step(flat, sw, sa, qmax_w, qmax_a, x, y):
+        logits = model.apply(flat, sw, sa, qmax_w, qmax_a, x)
+        losses = _ce_loss(logits, y) * x.shape[0]
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return losses, correct
+
+    return eval_step
+
+
+def make_fp_train_step(model: ModelDef):
+    def loss_fn(flat, x, y):
+        logits = model.apply_fp(flat, x)
+        return _ce_loss(logits, y), logits
+
+    def fp_train_step(flat, x, y):
+        (loss, logits), g_flat = jax.value_and_grad(loss_fn, has_aux=True)(flat, x, y)
+        return loss, _acc(logits, y), g_flat
+
+    return fp_train_step
+
+
+def make_fp_eval(model: ModelDef):
+    def fp_eval(flat, x, y):
+        logits = model.apply_fp(flat, x)
+        losses = _ce_loss(logits, y) * x.shape[0]
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return losses, correct
+
+    return fp_eval
+
+
+def make_hvp(model: ModelDef):
+    def loss_fn(flat, x, y):
+        return _ce_loss(model.apply_fp(flat, x), y)
+
+    def hvp(flat, v, x, y):
+        return jax.jvp(jax.grad(lambda f: loss_fn(f, x, y)), (flat,), (v,))[1]
+
+    return hvp
+
+
+def make_logits(model: ModelDef):
+    def logits_fn(flat, sw, sa, qmax_w, qmax_a, x):
+        return model.apply(flat, sw, sa, qmax_w, qmax_a, x)
+
+    return logits_fn

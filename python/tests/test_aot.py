@@ -1,0 +1,77 @@
+"""AOT surface: HLO text round-trip, metadata contract with the Rust side."""
+import json
+import os
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import BIT_OPTIONS, EVAL_BATCH, PIN_BITS, TRAIN_BATCH, to_hlo_text
+from compile.models import MODEL_NAMES, make_model
+from compile.train import make_train_step
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_emission():
+    m = make_model("mlp")
+    L, P = m.n_qlayers, m.param_size
+    s = jax.ShapeDtypeStruct
+    lowered = jax.jit(make_train_step(m)).lower(
+        s((P,), jnp.float32), s((L,), jnp.float32), s((L,), jnp.float32),
+        s((L,), jnp.float32), s((L,), jnp.float32),
+        s((8, 16, 16, 3), jnp.float32), s((8,), jnp.int32),
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # custom-calls would be unloadable by the CPU PJRT client
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_bit_options_match_paper():
+    assert BIT_OPTIONS == [2, 3, 4, 5, 6]
+    assert PIN_BITS == 8
+    assert EVAL_BATCH % 2 == 0 and TRAIN_BATCH % 2 == 0
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_lists_all_models():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name in MODEL_NAMES:
+        assert name in man["models"], name
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_meta_matches_live_model(name):
+    meta_path = os.path.join(ART, f"{name}_meta.json")
+    if not os.path.exists(meta_path):
+        pytest.skip(f"{name} meta not built")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    m = make_model(name)
+    assert meta["param_size"] == m.param_size
+    assert meta["n_qlayers"] == m.n_qlayers
+    assert len(meta["params"]) == len(m.builder.params)
+    for got, want in zip(meta["qlayers"], m.builder.qlayers):
+        assert got["name"] == want.name
+        assert got["macs"] == want.macs
+        assert got["w_numel"] == want.w_numel
+        assert got["pinned"] == want.pinned
+    for ep in ("train_step", "eval", "fp_train_step", "fp_eval", "hvp", "logits"):
+        f = os.path.join(ART, meta["artifacts"][ep]["file"])
+        assert os.path.exists(f), f
+        with open(f) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule")

@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas fake-quant kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, scales, and bit-widths; every property asserts
+allclose against ref.py — the core correctness signal for the quantizer
+the whole paper is built on.
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, fake_quant_bwd_pallas, fake_quant_fwd_pallas
+from compile.kernels.ref import fake_quant_ref, fake_quant_vjp_ref, lsq_grad_scale
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def bounds_for(bits: int, signed: bool):
+    if signed:
+        return float(-(2 ** (bits - 1))), float(2 ** (bits - 1) - 1)
+    return 0.0, float(2**bits - 1)
+
+
+shapes = st.sampled_from([(7,), (128,), (4096,), (5000,), (3, 5), (17, 31), (2, 3, 4, 5)])
+bits = st.sampled_from([2, 3, 4, 5, 6, 8])
+scales = st.floats(1e-3, 1.0)
+signed = st.booleans()
+
+
+@given(shapes, bits, scales, signed, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_fwd_matches_ref(shape, b, s, sg, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    qmin, qmax = bounds_for(b, sg)
+    out = fake_quant_fwd_pallas(v, jnp.float32(s), jnp.float32(qmin), jnp.float32(qmax))
+    ref = fake_quant_ref(v, s, qmin, qmax)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-7)
+
+
+@given(shapes, bits, scales, signed, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_bwd_matches_ref(shape, b, s, sg, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    v = jax.random.normal(k1, shape)
+    g = jax.random.normal(k2, shape)
+    qmin, qmax = bounds_for(b, sg)
+    gv, gs = fake_quant_bwd_pallas(v, jnp.float32(s), jnp.float32(qmin), jnp.float32(qmax), g)
+    rgv, rgs = fake_quant_vjp_ref(v, s, qmin, qmax, g)
+    np.testing.assert_allclose(gv, rgv, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(gs, rgs, rtol=1e-4, atol=1e-6)
+
+
+@given(bits, scales, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_custom_vjp_equals_ref_vjp(b, s, seed):
+    """jax.grad through the custom_vjp must equal the LSQ reference vjp."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (200,))
+    qmin, qmax = bounds_for(b, True)
+
+    def f(v, s):
+        return jnp.sum(fake_quant(v, s, jnp.float32(qmin), jnp.float32(qmax)) * 3.0)
+
+    gv, gs = jax.grad(f, argnums=(0, 1))(v, jnp.float32(s))
+    rgv, rgs = fake_quant_vjp_ref(v, s, qmin, qmax, jnp.full((200,), 3.0))
+    np.testing.assert_allclose(gv, rgv, rtol=1e-5)
+    np.testing.assert_allclose(gs, rgs, rtol=1e-4, atol=1e-6)
+
+
+def test_idempotent():
+    """fq(fq(v)) == fq(v): quantized values are fixed points."""
+    v = jax.random.normal(jax.random.PRNGKey(0), (512,))
+    s, qmin, qmax = jnp.float32(0.1), jnp.float32(-8.0), jnp.float32(7.0)
+    q1 = fake_quant_fwd_pallas(v, s, qmin, qmax)
+    q2 = fake_quant_fwd_pallas(q1, s, qmin, qmax)
+    np.testing.assert_allclose(q1, q2, rtol=1e-6)
+
+
+def test_levels_are_multiples_of_scale():
+    v = jax.random.normal(jax.random.PRNGKey(1), (1000,)) * 2
+    s = 0.07
+    q = fake_quant_fwd_pallas(v, jnp.float32(s), jnp.float32(-8.0), jnp.float32(7.0))
+    levels = np.asarray(q) / s
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
+    assert levels.min() >= -8 and levels.max() <= 7
+
+
+def test_error_shrinks_with_bits():
+    """More bits -> smaller quantization error (at matched range coverage)."""
+    v = jax.random.normal(jax.random.PRNGKey(2), (4096,))
+    errs = []
+    for b in (2, 3, 4, 5, 6, 8):
+        qmax = float(2 ** (b - 1) - 1)
+        s = 3.0 / (qmax + 1)  # cover ~3 sigma
+        q = fake_quant_fwd_pallas(v, jnp.float32(s), jnp.float32(-qmax - 1), jnp.float32(qmax))
+        errs.append(float(jnp.mean((q - v) ** 2)))
+    assert all(errs[i] > errs[i + 1] for i in range(len(errs) - 1)), errs
+
+
+def test_scale_gradient_direction():
+    """If s is far too small (everything clips), g_s must push s upward
+    when the task wants larger magnitudes preserved (g = v direction)."""
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (512,))) + 1.0
+    s = jnp.float32(1e-3)  # clips everything to qmax
+    # d/ds of sum((q - v)^2)/2 has cotangent g = q - v < 0 for clipped-from-above
+    def loss(s):
+        q = fake_quant(v, s, jnp.float32(0.0), jnp.float32(15.0))
+        return 0.5 * jnp.sum((q - v) ** 2)
+
+    gs = jax.grad(loss)(s)
+    assert float(gs) < 0.0  # gradient descent increases s
+
+
+def test_zero_cotangent_for_bounds():
+    v = jax.random.normal(jax.random.PRNGKey(4), (64,))
+
+    def f(qmax):
+        return jnp.sum(fake_quant(v, jnp.float32(0.1), jnp.float32(0.0), qmax))
+
+    assert float(jax.grad(f)(jnp.float32(15.0))) == 0.0
+
+
+def test_grad_scale_value():
+    g = lsq_grad_scale(1000, jnp.float32(7.0))
+    np.testing.assert_allclose(float(g), 1.0 / np.sqrt(1000 * 7.0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 5, 4095, 4096, 4097, 12288])
+def test_padding_boundaries(n):
+    """Exact behaviour across block-size boundaries (BLOCK=4096)."""
+    v = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    out = fake_quant_fwd_pallas(v, jnp.float32(0.05), jnp.float32(-8.0), jnp.float32(7.0))
+    ref = fake_quant_ref(v, 0.05, -8.0, 7.0)
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+    gv, gs = fake_quant_bwd_pallas(
+        v, jnp.float32(0.05), jnp.float32(-8.0), jnp.float32(7.0), jnp.ones((n,))
+    )
+    rgv, rgs = fake_quant_vjp_ref(v, 0.05, -8.0, 7.0, jnp.ones((n,)))
+    np.testing.assert_allclose(gv, rgv, rtol=1e-6)
+    np.testing.assert_allclose(gs, rgs, rtol=1e-4)

@@ -1,0 +1,100 @@
+"""LSQ+ asymmetric quantizer kernel vs its oracle + reduction properties."""
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fake_quant import fake_quant_fwd_pallas
+from compile.kernels.fake_quant_asym import (
+    fake_quant_asym,
+    fake_quant_asym_bwd_pallas,
+    fake_quant_asym_fwd_pallas,
+    fake_quant_asym_ref,
+    fake_quant_asym_vjp_ref,
+)
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+shapes = st.sampled_from([(5,), (128,), (4096,), (4100,), (9, 13)])
+bits = st.sampled_from([2, 3, 4, 6, 8])
+scales = st.floats(1e-3, 0.8)
+betas = st.floats(-0.5, 0.5)
+
+
+@given(shapes, bits, scales, betas, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_fwd_matches_ref(shape, b, s, beta, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    qmin, qmax = 0.0, float(2**b - 1)
+    out = fake_quant_asym_fwd_pallas(v, jnp.float32(s), jnp.float32(beta), jnp.float32(qmin), jnp.float32(qmax))
+    ref = fake_quant_asym_ref(v, s, beta, qmin, qmax)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-7)
+
+
+@given(shapes, bits, scales, betas, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_bwd_matches_ref(shape, b, s, beta, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    v = jax.random.normal(k1, shape)
+    g = jax.random.normal(k2, shape)
+    qmin, qmax = 0.0, float(2**b - 1)
+    gv, gs, gb = fake_quant_asym_bwd_pallas(
+        v, jnp.float32(s), jnp.float32(beta), jnp.float32(qmin), jnp.float32(qmax), g
+    )
+    rgv, rgs, rgb = fake_quant_asym_vjp_ref(v, s, beta, qmin, qmax, g)
+    np.testing.assert_allclose(gv, rgv, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(gs, rgs, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(gb, rgb, rtol=1e-4, atol=1e-6)
+
+
+@given(bits, scales, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_zero_offset_reduces_to_symmetric(b, s, seed):
+    """beta = 0 must reproduce the symmetric LSQ kernel exactly."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (700,))
+    qmax = float(2 ** (b - 1) - 1)
+    sym = fake_quant_fwd_pallas(v, jnp.float32(s), jnp.float32(-qmax - 1), jnp.float32(qmax))
+    asym = fake_quant_asym_fwd_pallas(
+        v, jnp.float32(s), jnp.float32(0.0), jnp.float32(-qmax - 1), jnp.float32(qmax)
+    )
+    np.testing.assert_allclose(sym, asym, rtol=1e-6)
+
+
+def test_offset_tracks_shifted_distribution():
+    """A +mu-shifted input quantizes with less error when beta = mu."""
+    mu = 2.0
+    v = jax.random.normal(jax.random.PRNGKey(0), (4096,)) + mu
+    s, qmin, qmax = jnp.float32(0.05), jnp.float32(-8.0), jnp.float32(7.0)
+    err_nobeta = jnp.mean((fake_quant_asym_fwd_pallas(v, s, jnp.float32(0.0), qmin, qmax) - v) ** 2)
+    err_beta = jnp.mean((fake_quant_asym_fwd_pallas(v, s, jnp.float32(mu), qmin, qmax) - v) ** 2)
+    assert float(err_beta) < float(err_nobeta) / 3.0
+
+
+def test_beta_gradient_direction():
+    """All-clipped-above inputs push beta upward under squared error."""
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (512,))) + 5.0
+
+    def loss(beta):
+        q = fake_quant_asym(v, jnp.float32(0.01), beta, jnp.float32(0.0), jnp.float32(15.0))
+        return 0.5 * jnp.sum((q - v) ** 2)
+
+    g = jax.grad(loss)(jnp.float32(0.0))
+    assert float(g) < 0.0  # descent increases beta toward the data
+
+
+def test_custom_vjp_grads():
+    v = jax.random.normal(jax.random.PRNGKey(2), (300,))
+    qmin, qmax = jnp.float32(0.0), jnp.float32(15.0)
+
+    def f(v, s, beta):
+        return jnp.sum(fake_quant_asym(v, s, beta, qmin, qmax) * 2.0)
+
+    gv, gs, gb = jax.grad(f, argnums=(0, 1, 2))(v, jnp.float32(0.1), jnp.float32(0.2))
+    rgv, rgs, rgb = fake_quant_asym_vjp_ref(v, 0.1, 0.2, 0.0, 15.0, jnp.full((300,), 2.0))
+    np.testing.assert_allclose(gv, rgv, rtol=1e-5)
+    np.testing.assert_allclose(gs, rgs, rtol=1e-4)
+    np.testing.assert_allclose(gb, rgb, rtol=1e-4)

@@ -1,0 +1,176 @@
+"""L2 layer zoo unit tests: GroupNorm math, conv/dense quantizer wiring,
+block shape inference, and quantizer-placement invariants."""
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.layers import (
+    BasicBlock,
+    Bottleneck,
+    DWSeparable,
+    GroupNorm,
+    QConv2d,
+    QDense,
+    ReLU,
+    Sequential,
+)
+from compile.params import Builder, Ctx
+
+
+def build_and_ctx(mod, in_shape, seed=0, quant=True, bits=(7.0, 15.0)):
+    b = Builder()
+    out_shape = mod.build(b, in_shape)
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.normal(key, (b.param_size,)) * 0.1
+    L = max(b.n_qlayers, 1)
+    ctx = Ctx(
+        flat,
+        sw=jnp.full((L,), 0.05),
+        sa=jnp.full((L,), 0.1),
+        qmax_w=jnp.full((L,), bits[0]),
+        qmax_a=jnp.full((L,), bits[1]),
+        quant=quant,
+    )
+    return b, ctx, out_shape
+
+
+def test_groupnorm_normalizes():
+    gn = GroupNorm(groups=4, name="g")
+    b = Builder()
+    gn.build(b, (8, 8, 16))
+    # proper init: gamma = 1, beta = 0
+    ctx = Ctx(jnp.concatenate([jnp.ones(16), jnp.zeros(16)]))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 16)) * 3.0 + 5.0
+    y = gn(ctx, x)
+    # gamma=1, beta=0 at init -> each group is ~zero-mean unit-var
+    yg = np.asarray(y).reshape(2, 8, 8, 4, 4)
+    mean = yg.mean(axis=(1, 2, 4))
+    var = yg.var(axis=(1, 2, 4))
+    np.testing.assert_allclose(mean, 0.0, atol=1e-4)
+    np.testing.assert_allclose(var, 1.0, atol=1e-3)
+
+
+def test_groupnorm_group_fallback():
+    """Channels not divisible by requested groups fall back gracefully."""
+    gn = GroupNorm(groups=8, name="g")
+    gn.build(Builder(), (4, 4, 6))
+    assert 6 % gn.groups == 0
+
+
+@given(st.integers(1, 3), st.sampled_from([1, 2]), st.sampled_from([1, 3]))
+@settings(deadline=None, max_examples=10)
+def test_conv_shape_inference(stride_pow, groups_kind, k):
+    in_c, out_c = 8, 16
+    groups = 1 if groups_kind == 1 else in_c
+    out_c_eff = out_c if groups == 1 else in_c
+    stride = stride_pow
+    conv = QConv2d(out_c_eff, k, stride, groups=groups, name="c")
+    b = Builder()
+    out_shape = conv.build(b, (16, 16, in_c))
+    assert out_shape == (-(-16 // stride), -(-16 // stride), out_c_eff)
+    ctx_b, ctx, _ = build_and_ctx(QConv2d(out_c_eff, k, stride, groups=groups, name="c"), (16, 16, in_c))
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (2, 16, 16, in_c)))
+    y = QConv2d(out_c_eff, k, stride, groups=groups, name="c")
+    bb = Builder()
+    y.build(bb, (16, 16, in_c))
+    ctx2 = Ctx(
+        jax.random.normal(jax.random.PRNGKey(2), (bb.param_size,)) * 0.1,
+        sw=jnp.full((1,), 0.05),
+        sa=jnp.full((1,), 0.1),
+        qmax_w=jnp.full((1,), 7.0),
+        qmax_a=jnp.full((1,), 15.0),
+    )
+    out = y(ctx2, x)
+    assert out.shape == (2, *out_shape)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_conv_kind_classification():
+    b = Builder()
+    QConv2d(8, 3, 1, name="plain").build(b, (4, 4, 8))
+    QConv2d(8, 3, 1, groups=8, name="dw").build(b, (4, 4, 8))
+    QConv2d(16, 1, 1, name="pw").build(b, (4, 4, 8))
+    kinds = [q.kind for q in b.qlayers]
+    assert kinds == ["conv", "dwconv", "pwconv"]
+
+
+def test_dense_uses_fused_qmatmul_semantics():
+    """QDense output == fake_quant(x) @ fake_quant(w) + b (oracle check)."""
+    from compile.kernels.ref import fake_quant_ref, matmul_ref
+
+    d = QDense(5, name="fc")
+    b = Builder()
+    d.build(b, (7,))
+    flat = jax.random.normal(jax.random.PRNGKey(3), (b.param_size,)) * 0.2
+    ctx = Ctx(flat, jnp.array([0.04]), jnp.array([0.09]), jnp.array([7.0]), jnp.array([15.0]))
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (3, 7)))
+    y = d(ctx, x)
+    w = flat[: 7 * 5].reshape(7, 5)
+    bias = flat[7 * 5 : 7 * 5 + 5]
+    want = matmul_ref(fake_quant_ref(x, 0.09, 0.0, 15.0), fake_quant_ref(w, 0.04, -8.0, 7.0)) + bias
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_quant_disabled_bypasses_kernels():
+    d = QDense(4, name="fc")
+    b = Builder()
+    d.build(b, (6,))
+    flat = jax.random.normal(jax.random.PRNGKey(5), (b.param_size,)) * 0.2
+    ctx = Ctx(flat, quant=False)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (2, 6)))
+    y = d(ctx, x)
+    w = flat[:24].reshape(6, 4)
+    want = x @ w + flat[24:28]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_cls,extra", [(BasicBlock, {}), (Bottleneck, {})])
+def test_residual_blocks_shapes_and_shortcut(block_cls, extra):
+    blk = block_cls(16, 2, name="b")
+    b, ctx, out_shape = build_and_ctx(blk, (8, 8, 8))
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (2, 8, 8, 8)))
+    y = blk(ctx, x)
+    assert y.shape == (2, *out_shape)
+    # stride-2 + channel change => projection shortcut exists
+    assert blk.short is not None
+    # output is post-ReLU: non-negative (so the next quantizer is unsigned-safe)
+    assert float(jnp.min(y)) >= 0.0
+
+
+def test_identity_block_has_no_shortcut():
+    blk = BasicBlock(8, 1, name="b")
+    b = Builder()
+    blk.build(b, (8, 8, 8))
+    assert blk.short is None
+
+
+def test_dwseparable_two_quantizers():
+    ds = DWSeparable(16, 1, name="d")
+    b = Builder()
+    ds.build(b, (8, 8, 8))
+    kinds = [q.kind for q in b.qlayers]
+    assert kinds == ["dwconv", "pwconv"]
+
+
+def test_all_quantized_inputs_nonneg_through_stack():
+    """Every activation reaching a quantizer must be non-negative: build a
+    stack and check intermediate mins (the unsigned-range invariant)."""
+    seq = Sequential([
+        QConv2d(8, 3, 1, name="c1"),
+        GroupNorm(name="g1"),
+        ReLU(),
+        QConv2d(8, 3, 1, name="c2"),
+    ])
+    b, ctx, _ = build_and_ctx(seq, (8, 8, 3))
+    x = jax.random.uniform(jax.random.PRNGKey(8), (2, 8, 8, 3))
+    # input in [0,1] -> c1 sees nonneg; c2 sees post-ReLU
+    y1 = seq.mods[0](ctx, x)
+    y2 = seq.mods[2](ctx, seq.mods[1](ctx, y1))
+    assert float(jnp.min(x)) >= 0.0
+    assert float(jnp.min(y2)) >= 0.0

@@ -1,0 +1,122 @@
+"""L2 model zoo: shapes, metadata invariants, cost-model arithmetic."""
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import MODEL_NAMES, make_model
+
+
+def _rand_state(model, seed=0):
+    L = model.n_qlayers
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.normal(key, (model.param_size,)) * 0.05
+    sw = jnp.full((L,), 0.05)
+    sa = jnp.full((L,), 0.1)
+    qw = jnp.full((L,), 7.0)
+    qa = jnp.full((L,), 15.0)
+    return flat, sw, sa, qw, qa
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_forward_shapes(name):
+    m = make_model(name)
+    flat, sw, sa, qw, qa = _rand_state(m)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, *m.input_shape))
+    logits = m.apply(flat, sw, sa, qw, qa, x)
+    assert logits.shape == (4, m.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_fp_path_differs_from_quantized(name):
+    m = make_model(name)
+    flat, sw, sa, qw, qa = _rand_state(m)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, *m.input_shape))
+    lq = m.apply(flat, sw, sa, qw, qa, x)
+    lfp = m.apply_fp(flat, x)
+    assert lfp.shape == lq.shape
+    assert not np.allclose(np.asarray(lq), np.asarray(lfp), atol=1e-6)
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_param_layout_contiguous(name):
+    m = make_model(name)
+    off = 0
+    for p in m.builder.params:
+        assert p.offset == off, p.name
+        size = int(np.prod(p.shape)) if p.shape else 1
+        assert p.size == size
+        off += p.size
+    assert off == m.param_size
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_qlayer_indices_and_pins(name):
+    m = make_model(name)
+    qs = m.builder.qlayers
+    assert [q.index for q in qs] == list(range(len(qs)))
+    assert qs[0].pinned and qs[-1].pinned
+    assert sum(q.pinned for q in qs) == 2
+    for q in qs:
+        assert q.macs > 0 and q.w_numel > 0
+
+
+def test_mobilenet_probe_region():
+    """Five equal-width DW/PW pairs exist (the Fig.1 contrast region)."""
+    m = make_model("mobilenetv1s")
+    names = [q.name for q in m.builder.qlayers]
+    for i in range(5):
+        assert f"probe{i}.dw" in names and f"probe{i}.pw" in names
+    kinds = {q.name: q.kind for q in m.builder.qlayers}
+    for i in range(5):
+        assert kinds[f"probe{i}.dw"] == "dwconv"
+        assert kinds[f"probe{i}.pw"] == "pwconv"
+    # DW has far fewer weights than the paired PW at equal channels
+    w = {q.name: q.w_numel for q in m.builder.qlayers}
+    for i in range(5):
+        assert w[f"probe{i}.dw"] < w[f"probe{i}.pw"] / 4
+
+
+def test_mac_counts_hand_checked():
+    """Spot-check MAC arithmetic against hand computation."""
+    m = make_model("mlp")
+    q = {x.name: x for x in m.builder.qlayers}
+    assert q["fc1"].macs == 16 * 16 * 3 * 128
+    assert q["head"].macs == 64 * 10
+
+    m = make_model("mobilenetv1s")
+    q = {x.name: x for x in m.builder.qlayers}
+    # stem: 16x16 out, 16 out-ch, 3x3x3 fan-in
+    assert q["stem"].macs == 16 * 16 * 16 * 3 * 3 * 3
+    # probe0.dw at 16/2=8 spatial (after ds2 stride 2): 8*8 out, 64 ch, 3x3x1
+    assert q["probe0.dw"].macs == 8 * 8 * 64 * 9
+    assert q["probe0.pw"].macs == 8 * 8 * 64 * 64
+
+
+def test_deterministic_build():
+    a = make_model("resnet18s").meta()
+    b = make_model("resnet18s").meta()
+    assert a == b
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_lower_bits_hurt_more(name):
+    """2-bit uniform quantization must distort logits more than 6-bit."""
+    m = make_model(name)
+    flat, sw, sa, _, _ = _rand_state(m)
+    x = jax.random.uniform(jax.random.PRNGKey(3), (4, *m.input_shape))
+    lfp = m.apply_fp(flat, x)
+    L = m.n_qlayers
+
+    def dist(bits):
+        qw = jnp.full((L,), float(2 ** (bits - 1) - 1))
+        qa = jnp.full((L,), float(2**bits - 1))
+        lq = m.apply(flat, sw, sa, qw, qa, x)
+        return float(jnp.mean((lq - lfp) ** 2))
+
+    assert dist(2) > dist(6)

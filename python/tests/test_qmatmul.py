@@ -1,0 +1,115 @@
+"""L1 correctness: fused quantized Pallas GEMM vs the pure-jnp oracle."""
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_pallas, qmatmul, qmatmul_fwd_pallas
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.ref import fake_quant_ref, matmul_ref, qmatmul_ref
+
+SETTINGS = dict(deadline=None, max_examples=20)
+
+dims = st.integers(1, 70)
+bits = st.sampled_from([2, 3, 4, 6, 8])
+scales = st.floats(1e-2, 0.5)
+
+
+@given(dims, dims, dims, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_matmul_matches_jnp(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, k))
+    b = jax.random.normal(k2, (k, n))
+    np.testing.assert_allclose(matmul_pallas(a, b), matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@given(dims, dims, dims, bits, bits, scales, scales, st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_qmatmul_fwd_matches_ref(m, k, n, ba, bw, sa, sw, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jnp.abs(jax.random.normal(k1, (m, k)))
+    w = jax.random.normal(k2, (k, n))
+    qa_max = float(2**ba - 1)
+    qw_max = float(2 ** (bw - 1) - 1)
+    y = qmatmul_fwd_pallas(
+        a, w, jnp.float32(sa), jnp.float32(sw),
+        jnp.float32(0.0), jnp.float32(qa_max), jnp.float32(-qw_max - 1), jnp.float32(qw_max),
+    )
+    yr = qmatmul_ref(a, w, sa, sw, 0.0, qa_max, -qw_max - 1, qw_max)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+
+def _bounds():
+    return jnp.float32(0.0), jnp.float32(15.0), jnp.float32(-8.0), jnp.float32(7.0)
+
+
+def test_qmatmul_grads_match_composed_primitives():
+    """Fused kernel gradients == composing fake_quant + matmul (both
+    custom-vjp primitives already validated against the oracle)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    a = jnp.abs(jax.random.normal(k1, (33, 65)))
+    w = jax.random.normal(k2, (65, 17))
+    t = jax.random.normal(k3, (33, 17))
+    qa_min, qa_max, qw_min, qw_max = _bounds()
+
+    def loss_fused(a, w, sa, sw):
+        y = qmatmul(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max)
+        return jnp.sum((y - t) ** 2)
+
+    def loss_composed(a, w, sa, sw):
+        y = jnp.matmul(
+            fake_quant(a, sa, qa_min, qa_max), fake_quant(w, sw, qw_min, qw_max),
+            preferred_element_type=jnp.float32,
+        )
+        return jnp.sum((y - t) ** 2)
+
+    sa, sw = jnp.float32(0.08), jnp.float32(0.04)
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3))(a, w, sa, sw)
+    gc = jax.grad(loss_composed, argnums=(0, 1, 2, 3))(a, w, sa, sw)
+    for f, c in zip(gf, gc):
+        np.testing.assert_allclose(f, c, rtol=1e-3, atol=1e-4)
+
+
+def test_qmatmul_value_and_fq_consistency():
+    """y == fq(a) @ fq(w) exactly (same kernels, fused vs staged)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    a = jnp.abs(jax.random.normal(k1, (32, 64)))
+    w = jax.random.normal(k2, (64, 32))
+    qa_min, qa_max, qw_min, qw_max = _bounds()
+    sa, sw = jnp.float32(0.1), jnp.float32(0.05)
+    y_fused = qmatmul(a, w, sa, sw, qa_min, qa_max, qw_min, qw_max)
+    y_staged = matmul_ref(
+        fake_quant_ref(a, sa, qa_min, qa_max), fake_quant_ref(w, sw, qw_min, qw_max)
+    )
+    np.testing.assert_allclose(y_fused, y_staged, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (31, 33, 35), (32, 32, 32), (64, 96, 10)])
+def test_qmatmul_padding_shapes(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    a = jnp.abs(jax.random.normal(k1, (m, k)))
+    w = jax.random.normal(k2, (k, n))
+    qa_min, qa_max, qw_min, qw_max = _bounds()
+    y = qmatmul_fwd_pallas(a, w, jnp.float32(0.1), jnp.float32(0.05), qa_min, qa_max, qw_min, qw_max)
+    yr = qmatmul_ref(a, w, 0.1, 0.05, 0.0, 15.0, -8.0, 7.0)
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+
+def test_bounds_get_zero_grads():
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(12), (8, 8)))
+    w = jax.random.normal(jax.random.PRNGKey(13), (8, 8))
+
+    def f(qa_max):
+        return jnp.sum(
+            qmatmul(a, w, jnp.float32(0.1), jnp.float32(0.1),
+                    jnp.float32(0.0), qa_max, jnp.float32(-8.0), jnp.float32(7.0))
+        )
+
+    assert float(jax.grad(f)(jnp.float32(15.0))) == 0.0

@@ -1,0 +1,121 @@
+"""L2 training entry points: gradient sanity, loss descent, HVP, eval."""
+import sys
+
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import make_model
+from compile.train import (
+    make_eval_step,
+    make_fp_eval,
+    make_fp_train_step,
+    make_hvp,
+    make_logits,
+    make_train_step,
+)
+
+
+@pytest.fixture(scope="module")
+def mlp_state():
+    m = make_model("mlp")
+    L = m.n_qlayers
+    key = jax.random.PRNGKey(0)
+    flat = jax.random.normal(key, (m.param_size,)) * 0.05
+    sw = jnp.full((L,), 0.05)
+    sa = jnp.full((L,), 0.1)
+    qw = jnp.full((L,), 7.0)
+    qa = jnp.full((L,), 15.0)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (32, *m.input_shape))
+    y = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, m.n_classes)
+    return m, flat, sw, sa, qw, qa, x, y
+
+
+def test_train_step_outputs(mlp_state):
+    m, flat, sw, sa, qw, qa, x, y = mlp_state
+    loss, acc, gf, gsw, gsa = jax.jit(make_train_step(m))(flat, sw, sa, qw, qa, x, y)
+    assert gf.shape == flat.shape and gsw.shape == sw.shape and gsa.shape == sa.shape
+    assert np.isfinite(float(loss)) and 0.0 <= float(acc) <= 1.0
+    for g in (gf, gsw, gsa):
+        assert bool(jnp.all(jnp.isfinite(g)))
+    # scale gradients are not trivially zero at sane scales
+    assert float(jnp.abs(gsw).sum()) > 0 and float(jnp.abs(gsa).sum()) > 0
+
+
+def test_sgd_descends(mlp_state):
+    """A few SGD steps on the quantized model must reduce the loss."""
+    m, flat, sw, sa, qw, qa, x, y = mlp_state
+    ts = jax.jit(make_train_step(m))
+    losses = []
+    f, w, a = flat, sw, sa
+    for _ in range(12):
+        loss, _, gf, gsw, gsa = ts(f, w, a, qw, qa, x, y)
+        losses.append(float(loss))
+        f = f - 0.2 * gf
+        w = w - 0.01 * gsw
+        a = a - 0.01 * gsa
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_eval_matches_train_loss(mlp_state):
+    m, flat, sw, sa, qw, qa, x, y = mlp_state
+    loss, acc, *_ = jax.jit(make_train_step(m))(flat, sw, sa, qw, qa, x, y)
+    loss_sum, correct = jax.jit(make_eval_step(m))(flat, sw, sa, qw, qa, x, y)
+    np.testing.assert_allclose(float(loss_sum) / x.shape[0], float(loss), rtol=1e-5)
+    np.testing.assert_allclose(float(correct) / x.shape[0], float(acc), rtol=1e-6)
+
+
+def test_fp_step_and_eval(mlp_state):
+    m, flat, *_ , x, y = mlp_state[0], mlp_state[1], mlp_state[6], mlp_state[7]
+    m, flat, x, y = mlp_state[0], mlp_state[1], mlp_state[6], mlp_state[7]
+    loss, acc, gf = jax.jit(make_fp_train_step(m))(flat, x, y)
+    assert np.isfinite(float(loss)) and gf.shape == flat.shape
+    loss_sum, correct = jax.jit(make_fp_eval(m))(flat, x, y)
+    np.testing.assert_allclose(float(loss_sum) / x.shape[0], float(loss), rtol=1e-5)
+
+
+def test_hvp_linearity_and_symmetry(mlp_state):
+    m, flat, *_rest = mlp_state
+    x, y = mlp_state[6], mlp_state[7]
+    hvp = jax.jit(make_hvp(m))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    v1 = jax.random.normal(k1, flat.shape)
+    v2 = jax.random.normal(k2, flat.shape)
+    # linearity: H(av1 + bv2) = aHv1 + bHv2
+    lhs = hvp(flat, 2.0 * v1 - 3.0 * v2, x, y)
+    rhs = 2.0 * hvp(flat, v1, x, y) - 3.0 * hvp(flat, v2, x, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-5)
+    # symmetry: v2' H v1 == v1' H v2
+    np.testing.assert_allclose(
+        float(jnp.vdot(v2, hvp(flat, v1, x, y))),
+        float(jnp.vdot(v1, hvp(flat, v2, x, y))),
+        rtol=1e-3,
+    )
+
+
+def test_logits_entry_point(mlp_state):
+    m, flat, sw, sa, qw, qa, x, y = mlp_state
+    logits = jax.jit(make_logits(m))(flat, sw, sa, qw, qa, x[:8])
+    assert logits.shape == (8, m.n_classes)
+
+
+def test_solo_layer_quantization_via_qmax():
+    """The Fig.1 contrast trick: 'off' layers get a huge qmax and behave
+    like FP layers (given a reasonably small scale)."""
+    m = make_model("mlp")
+    L = m.n_qlayers
+    flat = jax.random.normal(jax.random.PRNGKey(0), (m.param_size,)) * 0.05
+    sw = jnp.full((L,), 1e-4)
+    sa = jnp.full((L,), 1e-4)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, *m.input_shape))
+    off = jnp.full((L,), 2.0**23)
+    l_off = m.apply(flat, sw, sa, off, off, x)
+    l_fp = m.apply_fp(flat, x)
+    np.testing.assert_allclose(np.asarray(l_off), np.asarray(l_fp), rtol=1e-3, atol=1e-4)
+    # now solo-quantize layer 1 hard: logits must move
+    qw2 = off.at[1].set(1.0)
+    l_solo = m.apply(flat, sw, sa, qw2, off, x)
+    assert not np.allclose(np.asarray(l_solo), np.asarray(l_fp), atol=1e-4)

@@ -1,0 +1,49 @@
+//! Data-substrate benchmarks: synthetic generation throughput and the
+//! batcher hot loop (which must never allocate per batch).
+//!
+//! Run: cargo bench --bench data_pipeline
+
+use limpq::data::batcher::{Batcher, EvalBatches};
+use limpq::data::{generate, SynthConfig};
+use limpq::util::bench::{black_box, Bench};
+
+fn main() {
+    let bench = Bench::default();
+
+    bench.run("generate_1000_imgs_16x16", || {
+        black_box(generate(&SynthConfig { n: 1000, ..Default::default() }, 0))
+    });
+
+    let data = generate(&SynthConfig { n: 8000, ..Default::default() }, 0);
+
+    let mut b64 = Batcher::new(&data, 64, 1);
+    bench.run("batcher_next_64", || {
+        let (x, y) = b64.next_batch();
+        black_box((x[0], y[0]))
+    });
+
+    let mut b256 = Batcher::new(&data, 256, 1);
+    bench.run("batcher_next_256", || {
+        let (x, y) = b256.next_batch();
+        black_box((x[0], y[0]))
+    });
+
+    bench.run("eval_batches_full_pass_250", || {
+        let mut eb = EvalBatches::new(&data, 250);
+        let mut acc = 0.0f32;
+        while let Some((x, _)) = eb.next() {
+            acc += x[0];
+        }
+        black_box(acc)
+    });
+
+    // Throughput summary: images/s through the training batcher.
+    let stats = bench.run("batcher_epoch_8000", || {
+        let mut b = Batcher::new(&data, 64, 2);
+        for _ in 0..b.batches_per_epoch() {
+            black_box(b.next_batch().1[0]);
+        }
+    });
+    let imgs_per_s = 8000.0 / stats.mean.as_secs_f64();
+    println!("batcher throughput: {imgs_per_s:.0} images/s (single thread)");
+}

@@ -1,0 +1,88 @@
+//! Micro-benchmarks for the from-scratch ILP stack: branch-and-bound vs
+//! MCKP dynamic program vs simplex relaxation, at paper-sized and larger
+//! instances.  The paper's headline is "ResNet18 search in 0.06 s on an
+//! M1" — these benches show where our solver stands on this testbed.
+//!
+//! Run: cargo bench --bench ilp_micro
+
+use limpq::search::mckp::{solve_dp, Resource};
+use limpq::search::{bb::solve_bb, LayerOption, MpqProblem};
+use limpq::util::bench::Bench;
+use limpq::util::rng::Rng;
+
+fn instance(layers: usize, opts: &[(u8, u8)], seed: u64, tightness: f64) -> MpqProblem {
+    let mut rng = Rng::new(seed);
+    let mut p = MpqProblem::default();
+    for _ in 0..layers {
+        let macs = 1_000_000 + rng.below(40_000_000) as u64;
+        let numel = 1_000 + rng.below(500_000) as u64;
+        let mut lo = Vec::new();
+        for &(wb, ab) in opts {
+            lo.push(LayerOption {
+                w_bits: wb,
+                a_bits: ab,
+                cost: rng.uniform(0.0, 1.0) / (wb as f64 * ab as f64).sqrt(),
+                bitops: macs * wb as u64 * ab as u64,
+                size_bits: numel * wb as u64,
+            });
+        }
+        p.layers.push(lo);
+    }
+    let max: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.bitops).max().unwrap()).sum();
+    let min: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.bitops).min().unwrap()).sum();
+    p.bitops_cap = Some(min + ((max - min) as f64 * tightness) as u64);
+    p
+}
+
+fn all_pairs() -> Vec<(u8, u8)> {
+    let mut v = Vec::new();
+    for &w in &[2u8, 3, 4, 5, 6] {
+        for &a in &[2u8, 3, 4, 5, 6] {
+            v.push((w, a));
+        }
+    }
+    v
+}
+
+fn main() {
+    let bench = Bench::default();
+    let pairs = all_pairs();
+
+    // Paper-sized: ResNet18 (~21 layers, 25 combos)
+    let p18 = instance(21, &pairs, 1, 0.4);
+    bench.run("bb_resnet18_sized(21L x 25opt)", || solve_bb(&p18, 10_000_000).unwrap());
+
+    // ResNet50-sized (~53 layers in the real paper)
+    let p50 = instance(53, &pairs, 2, 0.4);
+    bench.run("bb_resnet50_sized(53L x 25opt)", || solve_bb(&p50, 10_000_000).unwrap());
+
+    // A much deeper hypothetical network
+    let p200 = instance(200, &pairs, 3, 0.4);
+    bench.run("bb_deep(200L x 25opt)", || solve_bb(&p200, 10_000_000).unwrap());
+
+    // DP on a 4k grid vs BB at ResNet50 size
+    bench.run("dp4096_resnet50_sized", || solve_dp(&p50, Resource::BitOps, 4096).unwrap());
+    bench.run("dp16384_resnet50_sized", || solve_dp(&p50, Resource::BitOps, 16384).unwrap());
+
+    // Two-constraint instance (Table 3 shape)
+    let mut p2c = instance(30, &pairs, 4, 0.5);
+    let smax: u64 = p2c.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+    p2c.size_cap_bits = Some(smax / 2);
+    bench.run("bb_two_constraint(30L)", || solve_bb(&p2c, 10_000_000).unwrap());
+
+    // Tightness sweep at fixed size: constraint hardness profile.
+    for t in [0.15, 0.5, 0.85] {
+        let p = instance(30, &pairs, 5, t);
+        bench.run(&format!("bb_tightness_{t}"), || solve_bb(&p, 10_000_000).unwrap());
+    }
+
+    // Solution-quality cross-check printed alongside timing.
+    let opt = solve_bb(&p50, 10_000_000).unwrap();
+    let dp = solve_dp(&p50, Resource::BitOps, 16384).unwrap();
+    println!(
+        "quality: bb cost {:.6}, dp16384 cost {:.6} (gap {:+.3}%)",
+        opt.cost,
+        dp.cost,
+        100.0 * (dp.cost - opt.cost) / opt.cost.abs().max(1e-12)
+    );
+}

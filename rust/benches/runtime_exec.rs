@@ -1,0 +1,71 @@
+//! Runtime dispatch benchmarks: per-call cost of each AOT entry point
+//! through the PJRT CPU client (the L3 hot path), plus the host-side
+//! literal-conversion overhead in isolation.
+//!
+//! Run: make artifacts && cargo bench --bench runtime_exec
+
+use std::path::Path;
+
+use limpq::data::{generate, SynthConfig};
+use limpq::importance::IndicatorStore;
+use limpq::quant::BitConfig;
+use limpq::runtime::pjrt::{lit_f32, PjrtBackend};
+use limpq::runtime::ModelBackend;
+use limpq::util::bench::{black_box, Bench};
+use limpq::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let bench = Bench::default();
+
+    // Host-side literal conversion overhead (no execution).
+    let buf = vec![0.5f32; 64 * 16 * 16 * 3];
+    bench.run("lit_f32_convert(49k elems)", || lit_f32(&buf, &[64, 16, 16, 3]).unwrap());
+
+    for model in ["mlp", "resnet18s", "mobilenetv1s", "resnet50s"] {
+        let backend = PjrtBackend::load(dir, model).unwrap();
+        let meta = backend.meta.clone();
+        let mut rng = Rng::new(3);
+        let flat = meta.init_params(&mut rng);
+        let store = IndicatorStore::init_stats(&meta, &flat);
+        let policy = BitConfig::uniform_pinned(&meta, 4, 4);
+        let (sw, sa) = store.gather(&policy).unwrap();
+        let (qw, qa) = policy.qmax_vectors();
+        let tb = backend.train_batch();
+        let eb = backend.eval_batch();
+        let data = generate(&SynthConfig { n: eb.max(tb), ..Default::default() }, 0);
+        let e = data.image_elems();
+
+        let quick = limpq::util::bench::Bench {
+            budget: std::time::Duration::from_secs(4),
+            warmup: std::time::Duration::from_millis(600),
+            max_iters: 50,
+        };
+        quick.run(&format!("{model}_train_step(B={tb})"), || {
+            black_box(
+                backend
+                    .train_step(&flat, &sw, &sa, &qw, &qa, &data.images[..tb * e], &data.labels[..tb])
+                    .unwrap(),
+            )
+        });
+        quick.run(&format!("{model}_eval(B={eb})"), || {
+            black_box(
+                backend
+                    .eval_step(&flat, &sw, &sa, &qw, &qa, &data.images[..eb * e], &data.labels[..eb])
+                    .unwrap(),
+            )
+        });
+        quick.run(&format!("{model}_fp_train_step(B={tb})"), || {
+            black_box(backend.fp_train_step(&flat, &data.images[..tb * e], &data.labels[..tb]).unwrap())
+        });
+        let sb = meta.serve_batch;
+        quick.run(&format!("{model}_logits(B={sb})"), || {
+            black_box(backend.logits(&flat, &sw, &sa, &qw, &qa, &data.images[..sb * e]).unwrap())
+        });
+    }
+    let _ = bench;
+}

@@ -1,0 +1,60 @@
+//! §4.3 bench: MPQ policy search time on the *real* model metas
+//! (importances from stats init if no trained cache exists — solve time is
+//! importance-value independent).  Reproduces the "ILP solves in
+//! milliseconds, independent of training data" headline.
+//!
+//! Run: make artifacts && cargo bench --bench search_efficiency
+
+use std::path::Path;
+
+use limpq::coordinator::checkpoint::Cache;
+use limpq::importance::IndicatorStore;
+use limpq::models::{list_models, ModelMeta};
+use limpq::quant::cost::uniform_bitops;
+use limpq::search::{solve, MpqProblem};
+use limpq::util::bench::Bench;
+use limpq::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let bench = Bench::default();
+    let cache = Cache::new(Path::new("runs")).ok();
+
+    for model in list_models(dir).unwrap() {
+        let meta = ModelMeta::load(dir, &model).unwrap();
+        // Trained indicators when available, stats-init otherwise.
+        let store = cache
+            .as_ref()
+            .and_then(|c| c.load_indicators(&model).ok().flatten())
+            .unwrap_or_else(|| {
+                let mut rng = Rng::new(1);
+                let flat = meta.init_params(&mut rng);
+                IndicatorStore::init_stats(&meta, &flat)
+            });
+        let imp = store.importance(&meta);
+        let alpha = limpq::config::Config::paper_alpha(&model);
+
+        for (label, bits) in [("3bit", 3u8), ("4bit", 4u8)] {
+            let cap = uniform_bitops(&meta, bits, bits);
+            let p = MpqProblem::from_importance(&meta, &imp, alpha, Some(cap), None, false);
+            let stats = bench.run(&format!("ilp_{model}_{label}(L={},vars={})", meta.n_qlayers, p.n_vars()), || {
+                solve(&p).unwrap()
+            });
+            // The paper's ResNet18 number: 0.06 s. Flag regressions hard.
+            if stats.mean.as_secs_f64() > 1.0 {
+                println!("WARNING: {model} {label} ILP slower than 1 s");
+            }
+        }
+
+        // Weight-only (Table 5 shape) and two-constraint (Table 3 shape).
+        let cap = uniform_bitops(&meta, 3, 3);
+        let pw = MpqProblem::from_importance(&meta, &imp, alpha, None, Some(meta.total_weights() * 3), true);
+        bench.run(&format!("ilp_{model}_weight_only"), || solve(&pw).unwrap());
+        let p2 = MpqProblem::from_importance(&meta, &imp, alpha, Some(cap), Some(meta.total_weights() * 3), false);
+        bench.run(&format!("ilp_{model}_two_constraint"), || solve(&p2).unwrap());
+    }
+}

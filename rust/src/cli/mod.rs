@@ -1,0 +1,344 @@
+//! CLI launcher (hand-rolled arg parsing; no clap on the offline mirror).
+//!
+//! ```text
+//! limpq pipeline  [--model M] [--config F] [--set k=v]...   full e2e flow
+//! limpq exp NAME  [--set k=v]...                            one experiment
+//! limpq search    --model M (--cap-gbitops X | --size-cap-mb X)
+//!                 [--alpha A] [--weight-only]               ILP from cache
+//! limpq serve     --model M [--bind ADDR]                   fleet TCP server
+//! limpq models                                              list artifacts
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::checkpoint::Cache;
+use crate::fleet::{DeviceSpec, FleetSearcher, FleetServer};
+use crate::models::list_models;
+use crate::report::bit_chart;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, Option<String>)>,
+}
+
+const VALUE_FLAGS: &[&str] =
+    &["model", "config", "set", "cap-gbitops", "size-cap-mb", "alpha", "bind", "artifacts-dir", "out-dir", "save", "policy", "tag"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter().peekable();
+        let command = it.next().cloned().unwrap_or_else(|| "help".into());
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else if VALUE_FLAGS.contains(&name) {
+                    let v = it.next().with_context(|| format!("--{name} needs a value"))?;
+                    flags.push((name.to_string(), Some(v.clone())));
+                } else {
+                    flags.push((name.to_string(), None));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { command, positional, flags })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == name).and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == name)
+            .filter_map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    /// Build the effective Config: file -> --set overrides -> direct flags.
+    pub fn config(&self) -> Result<Config> {
+        let mut cfg = match self.get("config") {
+            Some(f) => Config::from_file(std::path::Path::new(f))?,
+            None => Config::default(),
+        };
+        cfg = cfg.apply_overrides(&self.get_all("set"))?;
+        if let Some(m) = self.get("model") {
+            cfg.model = m.to_string();
+        }
+        if let Some(d) = self.get("artifacts-dir") {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(d) = self.get("out-dir") {
+            cfg.out_dir = PathBuf::from(d);
+        }
+        Ok(cfg)
+    }
+}
+
+pub const HELP: &str = "\
+limpq — Mixed-Precision Quantization via Learned Layer-wise Importance
+
+USAGE:
+  limpq pipeline  [--model M] [--config F] [--set k=v]...  full LIMPQ flow
+  limpq exp NAME  [--set k=v]...     NAME in table1..table6, fig1..fig4,
+                                     efficiency, all
+  limpq search    --model M (--cap-gbitops X | --size-cap-mb X)
+                  [--alpha A] [--weight-only] [--save policy.json]
+  limpq serve     --model M [--bind 127.0.0.1:7070]
+  limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
+                  policy on the validation split (finetuned ckpt if cached)
+  limpq models
+  limpq help
+";
+
+/// Dispatch a parsed command. Returns process exit code.
+pub fn dispatch(args: &Args) -> Result<i32> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "models" => {
+            let cfg = args.config()?;
+            for m in list_models(&cfg.artifacts_dir)? {
+                println!("{m}");
+            }
+            Ok(0)
+        }
+        "exp" => {
+            let name = args.positional.first().context("exp needs a name (e.g. table2)")?;
+            let cfg = args.config()?;
+            crate::exp::run_experiment(name, cfg)?;
+            Ok(0)
+        }
+        "pipeline" => {
+            let cfg = args.config()?;
+            run_pipeline(cfg)?;
+            Ok(0)
+        }
+        "search" => {
+            let cfg = args.config()?;
+            run_search(args, cfg)?;
+            Ok(0)
+        }
+        "serve" => {
+            let cfg = args.config()?;
+            run_serve(args, cfg)?;
+            Ok(0)
+        }
+        "eval-policy" => {
+            let cfg = args.config()?;
+            run_eval_policy(args, cfg)?;
+            Ok(0)
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+/// The full e2e flow: pretrain -> indicators -> ILP -> finetune -> report.
+fn run_pipeline(cfg: Config) -> Result<()> {
+    use crate::exp::ExpCtx;
+    use crate::quant::cost::{total_bitops, uniform_bitops};
+    use crate::search::{solve, MpqProblem};
+
+    let ctx = ExpCtx::load(cfg)?;
+    let meta = ctx.meta().clone();
+    let t0 = std::time::Instant::now();
+
+    let (flat, fp_acc) = ctx.ensure_fp()?;
+    let store = ctx.ensure_indicators(&flat)?;
+    let imp = ctx.importance(&store);
+
+    let cap = uniform_bitops(&meta, 4, 4);
+    let prob = MpqProblem::from_importance(&meta, &imp, ctx.cfg.search.alpha, Some(cap), None, false);
+    let t_ilp = std::time::Instant::now();
+    let sol = solve(&prob)?;
+    let ilp_ms = t_ilp.elapsed().as_secs_f64() * 1e3;
+    let policy = prob.to_bit_config(&sol);
+    eprintln!(
+        "[{}] ILP solved in {ilp_ms:.2} ms: BitOps {:.3} G (cap {:.3} G)",
+        meta.name,
+        total_bitops(&meta, &policy) as f64 / 1e9,
+        cap as f64 / 1e9
+    );
+
+    let ft = ctx.finetuned("pipeline_w4", &flat, &store, &policy)?;
+    let names: Vec<String> = meta.qlayers.iter().map(|q| q.name.clone()).collect();
+    println!("{}", bit_chart(&format!("{} searched policy @4-bit level", meta.name), &names, &policy.w_bits, &policy.a_bits));
+    println!(
+        "pipeline done in {:.1} s: FP acc {:.4} -> quantized acc {:.4} (drop {:+.4}) at {:.3} G BitOps",
+        t0.elapsed().as_secs_f64(),
+        fp_acc,
+        ft.val_acc,
+        ft.val_acc - fp_acc,
+        total_bitops(&meta, &policy) as f64 / 1e9
+    );
+    Ok(())
+}
+
+fn run_search(args: &Args, cfg: Config) -> Result<()> {
+    use crate::models::ModelMeta;
+
+    let meta = ModelMeta::load(&cfg.artifacts_dir, &cfg.model)?;
+    let cache = Cache::new(&cfg.out_dir)?;
+    let store = cache
+        .load_indicators(&cfg.model)?
+        .context("no cached indicators — run `limpq pipeline` or `limpq exp` first")?;
+    let imp = store.importance(&meta);
+    let searcher = FleetSearcher::new(meta.clone(), imp);
+    let dev = DeviceSpec {
+        name: "cli".into(),
+        bitops_cap: args.get("cap-gbitops").map(|v| (v.parse::<f64>().unwrap_or(0.0) * 1e9) as u64),
+        size_cap_bytes: args.get("size-cap-mb").map(|v| (v.parse::<f64>().unwrap_or(0.0) * 1e6) as u64),
+        alpha: args
+            .get("alpha")
+            .map(|v| v.parse::<f64>())
+            .transpose()?
+            .unwrap_or_else(|| Config::paper_alpha(&cfg.model)),
+        weight_only: args.has("weight-only"),
+    };
+    let out = searcher.search(&dev)?;
+    let names: Vec<String> = meta.qlayers.iter().map(|q| q.name.clone()).collect();
+    println!("{}", bit_chart(&format!("{} policy", cfg.model), &names, &out.policy.w_bits, &out.policy.a_bits));
+    println!(
+        "cost {:.4}  bitops {:.3} G  size {:.3} MB  solved in {} us",
+        out.cost,
+        out.bitops as f64 / 1e9,
+        out.size_bits as f64 / 8e6,
+        out.solve_us
+    );
+    if let Some(path) = args.get("save") {
+        let pf = crate::quant::policy_io::PolicyFile::new(
+            &meta, out.policy.clone(), out.bitops, out.size_bits, out.cost, dev.alpha,
+        );
+        pf.save(std::path::Path::new(path))?;
+        println!("policy saved to {path}");
+    }
+    Ok(())
+}
+
+/// Evaluate a saved policy file against the synthetic validation split,
+/// preferring a cached finetuned checkpoint for its weights.
+fn run_eval_policy(args: &Args, cfg: Config) -> Result<()> {
+    use crate::coordinator::Pipeline;
+    use crate::data::train_val;
+    use crate::importance::IndicatorStore;
+    use crate::quant::policy_io::PolicyFile;
+    use crate::runtime::pjrt::PjrtBackend;
+
+    let path = args.get("policy").context("--policy FILE required")?;
+    let pf = PolicyFile::load(std::path::Path::new(path))?;
+    let backend = PjrtBackend::load(&cfg.artifacts_dir, &pf.model)?;
+    let meta = backend.meta.clone();
+    pf.check_against(&meta)?;
+    let cache = Cache::new(&cfg.out_dir)?;
+    let tag = args.get("tag").unwrap_or("pipeline_w4");
+    let (flat, sw, sa, src) = match cache.load_finetuned(&pf.model, tag)? {
+        Some((f, sw, sa, acc)) => {
+            println!("using finetuned checkpoint '{tag}' (recorded val acc {acc:.4})");
+            (f, sw, sa, "finetuned")
+        }
+        None => {
+            let (f, _) = cache
+                .load_fp(&pf.model)?
+                .context("no cached weights; run `limpq pipeline` first")?;
+            let store = cache
+                .load_indicators(&pf.model)?
+                .unwrap_or_else(|| IndicatorStore::init_stats(&meta, &f));
+            let (sw, sa) = store.gather(&pf.policy)?;
+            (f, sw, sa, "fp+indicators")
+        }
+    };
+    let (_, val) = train_val(cfg.data.train_n, cfg.data.val_n, cfg.data.seed);
+    let pipe = Pipeline::new(&backend, &meta, cfg.clone());
+    let (loss, acc) = pipe.evaluate(&flat, &sw, &sa, &pf.policy, &val)?;
+    println!(
+        "policy {} on {} ({src}): val acc {:.4}, loss {:.4}, bitops {:.4} G",
+        path, pf.model, acc, loss,
+        crate::quant::cost::total_bitops(&meta, &pf.policy) as f64 / 1e9
+    );
+    Ok(())
+}
+
+fn run_serve(args: &Args, cfg: Config) -> Result<()> {
+    use crate::models::ModelMeta;
+
+    let meta = ModelMeta::load(&cfg.artifacts_dir, &cfg.model)?;
+    let cache = Cache::new(&cfg.out_dir)?;
+    let store = cache
+        .load_indicators(&cfg.model)?
+        .context("no cached indicators — run `limpq pipeline` first")?;
+    let imp = store.importance(&meta);
+    let bind = args.get("bind").unwrap_or("127.0.0.1:7070");
+    let server = FleetServer::spawn(FleetSearcher::new(meta, imp), bind)?;
+    println!("fleet server for {} listening on {}", cfg.model, server.addr);
+    println!("protocol: one JSON request per line, e.g. {{\"cap_gbitops\": 1.5, \"alpha\": 1.0}}");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse(&["exp", "table2", "--model", "mlp", "--set", "fp.steps=5", "--set", "indicator.steps=2", "--weight-only"]);
+        assert_eq!(a.command, "exp");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_all("set"), vec!["fp.steps=5", "indicator.steps=2"]);
+        assert!(a.has("weight-only"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["search", "--cap-gbitops=1.5", "--alpha=2"]);
+        assert_eq!(a.get("cap-gbitops"), Some("1.5"));
+        assert_eq!(a.get("alpha"), Some("2"));
+    }
+
+    #[test]
+    fn config_overrides_compose() {
+        let a = parse(&["pipeline", "--model", "mlp", "--set", "finetune.steps=7"]);
+        let c = a.config().unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.finetune.steps, 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&["x".into(), "--model".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let a = parse(&["frobnicate"]);
+        assert!(dispatch(&a).is_err());
+    }
+
+    #[test]
+    fn help_works() {
+        assert_eq!(dispatch(&parse(&["help"])).unwrap(), 0);
+    }
+}

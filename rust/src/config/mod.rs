@@ -1,0 +1,259 @@
+//! Typed configuration system.
+//!
+//! One [`Config`] drives the whole pipeline (FP pretrain → indicator
+//! training → ILP search → finetune → eval).  Values come from, in
+//! priority order: CLI `--set section.key=value` overrides, a TOML-subset
+//! config file, then the defaults below (sized so the full pipeline runs
+//! in minutes on this 1-core testbed; see DESIGN.md §2 scaling note).
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use self::toml::Doc;
+
+#[derive(Debug, Clone)]
+pub struct DataCfg {
+    pub train_n: usize,
+    pub val_n: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FpTrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub warmup_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct IndicatorCfg {
+    /// Steps of joint indicator training (each = n+1 atomic passes).
+    pub steps: usize,
+    /// LR for the importance indicators (paper §4.1: 0.01).
+    pub lr: f32,
+    /// LR for weights during indicator training; 0 freezes weights
+    /// (paper §3.4 notes frozen weights work equally well).
+    pub weight_lr: f32,
+    /// Use statistics init (true, default) or the uniform s=0.1/b scheme
+    /// from the Fig. 2 ablation.
+    pub stats_init: bool,
+    /// EMA smoothing factor for the recorded indicator values.
+    pub ema: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchCfg {
+    /// Linear-combination weight α between activation and weight
+    /// importances (paper eq. 3; per-model values in §4.1).
+    pub alpha: f64,
+    /// Time limit for branch-and-bound fallback paths.
+    pub bb_node_limit: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct FinetuneCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub warmup_frac: f32,
+    pub scale_lr: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub model: String,
+    pub seed: u64,
+    pub data: DataCfg,
+    pub fp: FpTrainCfg,
+    pub indicator: IndicatorCfg,
+    pub search: SearchCfg,
+    pub finetune: FinetuneCfg,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("runs"),
+            model: "resnet18s".to_string(),
+            seed: 1234,
+            data: DataCfg { train_n: 8000, val_n: 2000, seed: 1234 },
+            fp: FpTrainCfg { steps: 500, lr: 0.05, momentum: 0.9, weight_decay: 1e-4, warmup_steps: 25 },
+            indicator: IndicatorCfg { steps: 60, lr: 0.01, weight_lr: 0.0, stats_init: true, ema: 0.9 },
+            search: SearchCfg { alpha: 3.0, bb_node_limit: 2_000_000 },
+            finetune: FinetuneCfg {
+                steps: 400,
+                lr: 0.04,
+                momentum: 0.9,
+                weight_decay: 2.5e-5,
+                warmup_frac: 0.05,
+                scale_lr: 0.01,
+            },
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML-subset file, falling back to defaults per key.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_doc(&Doc::parse(&text)?)
+    }
+
+    /// Apply `section.key=value` override strings on top of `self`.
+    pub fn apply_overrides(self, overrides: &[String]) -> Result<Config> {
+        if overrides.is_empty() {
+            return Ok(self);
+        }
+        let mut doc = self.to_doc();
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .with_context(|| format!("override {ov:?} not of form key=value"))?;
+            let parsed = Doc::parse(&format!("{} = {}", k.trim(), v.trim()))
+                .or_else(|_| Doc::parse(&format!("{} = \"{}\"", k.trim(), v.trim())))?;
+            for (pk, pv) in parsed.entries {
+                doc.entries.insert(pk, pv);
+            }
+        }
+        Self::from_doc(&doc)
+    }
+
+    fn to_doc(&self) -> Doc {
+        use self::toml::Value as V;
+        let mut doc = Doc::default();
+        let mut put = |k: &str, v: V| {
+            doc.entries.insert(k.to_string(), v);
+        };
+        put("artifacts_dir", V::Str(self.artifacts_dir.display().to_string()));
+        put("out_dir", V::Str(self.out_dir.display().to_string()));
+        put("model", V::Str(self.model.clone()));
+        put("seed", V::Int(self.seed as i64));
+        put("data.train_n", V::Int(self.data.train_n as i64));
+        put("data.val_n", V::Int(self.data.val_n as i64));
+        put("data.seed", V::Int(self.data.seed as i64));
+        put("fp.steps", V::Int(self.fp.steps as i64));
+        put("fp.lr", V::Float(self.fp.lr as f64));
+        put("fp.momentum", V::Float(self.fp.momentum as f64));
+        put("fp.weight_decay", V::Float(self.fp.weight_decay as f64));
+        put("fp.warmup_steps", V::Int(self.fp.warmup_steps as i64));
+        put("indicator.steps", V::Int(self.indicator.steps as i64));
+        put("indicator.lr", V::Float(self.indicator.lr as f64));
+        put("indicator.weight_lr", V::Float(self.indicator.weight_lr as f64));
+        put("indicator.stats_init", V::Bool(self.indicator.stats_init));
+        put("indicator.ema", V::Float(self.indicator.ema as f64));
+        put("search.alpha", V::Float(self.search.alpha));
+        put("search.bb_node_limit", V::Int(self.search.bb_node_limit as i64));
+        put("finetune.steps", V::Int(self.finetune.steps as i64));
+        put("finetune.lr", V::Float(self.finetune.lr as f64));
+        put("finetune.momentum", V::Float(self.finetune.momentum as f64));
+        put("finetune.weight_decay", V::Float(self.finetune.weight_decay as f64));
+        put("finetune.warmup_frac", V::Float(self.finetune.warmup_frac as f64));
+        put("finetune.scale_lr", V::Float(self.finetune.scale_lr as f64));
+        doc
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Config> {
+        let d = Config::default();
+        Ok(Config {
+            artifacts_dir: PathBuf::from(doc.str_or("artifacts_dir", &d.artifacts_dir.display().to_string())?),
+            out_dir: PathBuf::from(doc.str_or("out_dir", &d.out_dir.display().to_string())?),
+            model: doc.str_or("model", &d.model)?,
+            seed: doc.u64_or("seed", d.seed)?,
+            data: DataCfg {
+                train_n: doc.usize_or("data.train_n", d.data.train_n)?,
+                val_n: doc.usize_or("data.val_n", d.data.val_n)?,
+                seed: doc.u64_or("data.seed", d.data.seed)?,
+            },
+            fp: FpTrainCfg {
+                steps: doc.usize_or("fp.steps", d.fp.steps)?,
+                lr: doc.f32_or("fp.lr", d.fp.lr)?,
+                momentum: doc.f32_or("fp.momentum", d.fp.momentum)?,
+                weight_decay: doc.f32_or("fp.weight_decay", d.fp.weight_decay)?,
+                warmup_steps: doc.usize_or("fp.warmup_steps", d.fp.warmup_steps)?,
+            },
+            indicator: IndicatorCfg {
+                steps: doc.usize_or("indicator.steps", d.indicator.steps)?,
+                lr: doc.f32_or("indicator.lr", d.indicator.lr)?,
+                weight_lr: doc.f32_or("indicator.weight_lr", d.indicator.weight_lr)?,
+                stats_init: doc.bool_or("indicator.stats_init", d.indicator.stats_init)?,
+                ema: doc.f32_or("indicator.ema", d.indicator.ema)?,
+            },
+            search: SearchCfg {
+                alpha: doc.f64_or("search.alpha", d.search.alpha)?,
+                bb_node_limit: doc.usize_or("search.bb_node_limit", d.search.bb_node_limit)?,
+            },
+            finetune: FinetuneCfg {
+                steps: doc.usize_or("finetune.steps", d.finetune.steps)?,
+                lr: doc.f32_or("finetune.lr", d.finetune.lr)?,
+                momentum: doc.f32_or("finetune.momentum", d.finetune.momentum)?,
+                weight_decay: doc.f32_or("finetune.weight_decay", d.finetune.weight_decay)?,
+                warmup_frac: doc.f32_or("finetune.warmup_frac", d.finetune.warmup_frac)?,
+                scale_lr: doc.f32_or("finetune.scale_lr", d.finetune.scale_lr)?,
+            },
+        })
+    }
+
+    /// Per-model α defaults from the paper §4.1 (ResNet18: 3, ResNet50: 2,
+    /// MobileNetV1: 1) when the config didn't override it.
+    pub fn paper_alpha(model: &str) -> f64 {
+        match model {
+            "resnet50s" => 2.0,
+            "mobilenetv1s" => 1.0,
+            _ => 3.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_through_doc() {
+        let c = Config::default();
+        let c2 = Config::from_doc(&c.to_doc()).unwrap();
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.fp.steps, c.fp.steps);
+        assert_eq!(c2.search.alpha, c.search.alpha);
+    }
+
+    #[test]
+    fn file_overrides_defaults() {
+        let doc = Doc::parse("model = \"mlp\"\n[indicator]\nsteps = 5\n").unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.indicator.steps, 5);
+        assert_eq!(c.fp.steps, Config::default().fp.steps);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let c = Config::default()
+            .apply_overrides(&["indicator.steps=9".into(), "model=mlp".into(), "search.alpha=1.5".into()])
+            .unwrap();
+        assert_eq!(c.indicator.steps, 9);
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.search.alpha, 1.5);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        assert!(Config::default().apply_overrides(&["nonsense".into()]).is_err());
+    }
+
+    #[test]
+    fn paper_alphas() {
+        assert_eq!(Config::paper_alpha("resnet18s"), 3.0);
+        assert_eq!(Config::paper_alpha("resnet50s"), 2.0);
+        assert_eq!(Config::paper_alpha("mobilenetv1s"), 1.0);
+    }
+}

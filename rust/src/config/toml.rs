@@ -1,0 +1,233 @@
+//! Minimal TOML-subset parser (no `toml` crate on the offline mirror).
+//!
+//! Supported grammar — everything the limpq config files use:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = "string" | 123 | 1.5 | true | false | [1, 2, 3]`
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `section.key -> Value` map; typed accessors with
+//! defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("not an integer: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: `"section.key" -> Value` (top-level keys have no dot).
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", ln + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", ln + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", ln + 1))?;
+            entries.insert(key, value);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map(|v| v.as_f64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(key, default as f64)? as f32)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key)
+            .map(|v| v.as_i64())
+            .transpose()?
+            .map(|i| usize::try_from(i).context("negative"))
+            .transpose()
+            .map(|o| o.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.get(key)
+            .map(|v| v.as_i64())
+            .transpose()?
+            .map(|i| u64::try_from(i).context("negative"))
+            .transpose()
+            .map(|o| o.unwrap_or(default))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        self.get(key)
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()
+            .map(|o| o.unwrap_or_else(|| default.to_string()))
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.get(key).map(|v| v.as_bool()).transpose().map(|o| o.unwrap_or(default))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        return inner.split(',').map(|p| parse_value(p.trim())).collect::<Result<Vec<_>>>().map(Value::Arr);
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+seed = 42
+name = "run-1"  # trailing comment
+[train]
+lr = 0.04
+steps = 500
+warm = true
+bits = [2, 3, 4]
+[search.ilp]
+alpha = 3.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "run-1");
+        assert_eq!(doc.f64_or("train.lr", 0.0).unwrap(), 0.04);
+        assert_eq!(doc.usize_or("train.steps", 0).unwrap(), 500);
+        assert!(doc.bool_or("train.warm", false).unwrap());
+        assert_eq!(doc.f64_or("search.ilp.alpha", 0.0).unwrap(), 3.0);
+        match doc.get("train.bits").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.usize_or("x", 7).unwrap(), 7);
+        assert_eq!(doc.str_or("y", "d").unwrap(), "d");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = @@").is_err());
+        assert!(Doc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = Doc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,201 @@
+//! Stage checkpointing: caches the expensive pipeline stages (FP
+//! pretraining, indicator training, finetuned models) so experiment
+//! drivers and benches share them instead of re-training.
+//!
+//! Layout under `<out_dir>/cache/`:
+//!   `<model>_fp.lts`          — FP params (+ `meta.json` sidecar with val acc)
+//!   `<model>_indicators.lts`  — indicator slots (sw/sa per layer)
+//!   `<model>_ft_<tag>.lts`    — finetuned params + scales for a policy tag
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::importance::IndicatorStore;
+use crate::tensor::io::{load_tensors, save_tensors};
+use crate::tensor::HostTensor;
+use crate::util::json::Json;
+
+pub struct Cache {
+    pub dir: PathBuf,
+}
+
+impl Cache {
+    pub fn new(out_dir: &Path) -> Result<Cache> {
+        let dir = out_dir.join("cache");
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        Ok(Cache { dir })
+    }
+
+    fn sidecar(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.json"))
+    }
+
+    fn tensors(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.lts"))
+    }
+
+    pub fn has(&self, stem: &str) -> bool {
+        self.tensors(stem).exists() && self.sidecar(stem).exists()
+    }
+
+    // -- FP params ---------------------------------------------------------
+
+    pub fn save_fp(&self, model: &str, flat: &[f32], val_acc: f64) -> Result<()> {
+        let stem = format!("{model}_fp");
+        let t = HostTensor::from_vec(flat.to_vec());
+        save_tensors(&self.tensors(&stem), &[("flat", &t)])?;
+        let meta = Json::obj(vec![("val_acc", Json::Num(val_acc)), ("model", Json::from(model))]);
+        std::fs::write(self.sidecar(&stem), meta.to_string())?;
+        Ok(())
+    }
+
+    pub fn load_fp(&self, model: &str) -> Result<Option<(Vec<f32>, f64)>> {
+        let stem = format!("{model}_fp");
+        if !self.has(&stem) {
+            return Ok(None);
+        }
+        let tensors = load_tensors(&self.tensors(&stem))?;
+        let flat = tensors
+            .into_iter()
+            .find(|(n, _)| n == "flat")
+            .context("fp checkpoint missing 'flat'")?
+            .1
+            .data;
+        let meta = Json::parse(&std::fs::read_to_string(self.sidecar(&stem))?)?;
+        Ok(Some((flat, meta.get("val_acc")?.as_f64()?)))
+    }
+
+    // -- indicator store ----------------------------------------------------
+
+    pub fn save_indicators(&self, model: &str, store: &IndicatorStore) -> Result<()> {
+        let stem = format!("{model}_indicators");
+        let l = store.n_layers();
+        let s = store.n_slots();
+        let flatten = |m: &Vec<Vec<f32>>| -> Vec<f32> { m.iter().flatten().cloned().collect() };
+        let sw = HostTensor::new(flatten(&store.sw), vec![l, s])?;
+        let sa = HostTensor::new(flatten(&store.sa), vec![l, s])?;
+        let bits = HostTensor::from_vec(store.slot_bits.iter().map(|&b| b as f32).collect());
+        save_tensors(&self.tensors(&stem), &[("sw", &sw), ("sa", &sa), ("slot_bits", &bits)])?;
+        std::fs::write(self.sidecar(&stem), Json::obj(vec![("model", Json::from(model))]).to_string())?;
+        Ok(())
+    }
+
+    pub fn load_indicators(&self, model: &str) -> Result<Option<IndicatorStore>> {
+        let stem = format!("{model}_indicators");
+        if !self.has(&stem) {
+            return Ok(None);
+        }
+        let tensors = load_tensors(&self.tensors(&stem))?;
+        let find = |name: &str| -> Result<HostTensor> {
+            tensors
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, t)| t.clone())
+                .with_context(|| format!("indicator checkpoint missing {name:?}"))
+        };
+        let sw = find("sw")?;
+        let sa = find("sa")?;
+        let bits = find("slot_bits")?;
+        let (l, s) = (sw.shape[0], sw.shape[1]);
+        let unflatten = |t: &HostTensor| -> Vec<Vec<f32>> {
+            (0..l).map(|i| t.data[i * s..(i + 1) * s].to_vec()).collect()
+        };
+        Ok(Some(IndicatorStore {
+            slot_bits: bits.data.iter().map(|&b| b as u8).collect(),
+            sw: unflatten(&sw),
+            sa: unflatten(&sa),
+        }))
+    }
+
+    // -- finetuned model -----------------------------------------------------
+
+    pub fn save_finetuned(
+        &self,
+        model: &str,
+        tag: &str,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        val_acc: f64,
+    ) -> Result<()> {
+        let stem = format!("{model}_ft_{tag}");
+        let tf = HostTensor::from_vec(flat.to_vec());
+        let tw = HostTensor::from_vec(sw.to_vec());
+        let ta = HostTensor::from_vec(sa.to_vec());
+        save_tensors(&self.tensors(&stem), &[("flat", &tf), ("sw", &tw), ("sa", &ta)])?;
+        let meta = Json::obj(vec![("val_acc", Json::Num(val_acc)), ("tag", Json::from(tag))]);
+        std::fs::write(self.sidecar(&stem), meta.to_string())?;
+        Ok(())
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn load_finetuned(
+        &self,
+        model: &str,
+        tag: &str,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>, Vec<f32>, f64)>> {
+        let stem = format!("{model}_ft_{tag}");
+        if !self.has(&stem) {
+            return Ok(None);
+        }
+        let tensors = load_tensors(&self.tensors(&stem))?;
+        let find = |name: &str| -> Result<Vec<f32>> {
+            tensors
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, t)| t.data.clone())
+                .with_context(|| format!("finetune checkpoint missing {name:?}"))
+        };
+        let meta = Json::parse(&std::fs::read_to_string(self.sidecar(&stem))?)?;
+        Ok(Some((find("flat")?, find("sw")?, find("sa")?, meta.get("val_acc")?.as_f64()?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("limpq_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fp_roundtrip() {
+        let c = Cache::new(&tmp()).unwrap();
+        assert!(c.load_fp("m1").unwrap().is_none());
+        c.save_fp("m1", &[1.0, 2.0, 3.0], 0.77).unwrap();
+        let (flat, acc) = c.load_fp("m1").unwrap().unwrap();
+        assert_eq!(flat, vec![1.0, 2.0, 3.0]);
+        assert!((acc - 0.77).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indicator_roundtrip() {
+        let c = Cache::new(&tmp()).unwrap();
+        let store = IndicatorStore {
+            slot_bits: vec![2, 4, 8],
+            sw: vec![vec![0.1, 0.2, 0.3], vec![0.4, 0.5, 0.6]],
+            sa: vec![vec![1.1, 1.2, 1.3], vec![1.4, 1.5, 1.6]],
+        };
+        c.save_indicators("m2", &store).unwrap();
+        let loaded = c.load_indicators("m2").unwrap().unwrap();
+        assert_eq!(loaded.slot_bits, store.slot_bits);
+        assert_eq!(loaded.sw, store.sw);
+        assert_eq!(loaded.sa, store.sa);
+    }
+
+    #[test]
+    fn finetuned_roundtrip() {
+        let c = Cache::new(&tmp()).unwrap();
+        c.save_finetuned("m3", "w4a4", &[9.0], &[0.1, 0.2], &[0.3], 0.5).unwrap();
+        let (flat, sw, sa, acc) = c.load_finetuned("m3", "w4a4").unwrap().unwrap();
+        assert_eq!(flat, vec![9.0]);
+        assert_eq!(sw, vec![0.1, 0.2]);
+        assert_eq!(sa, vec![0.3]);
+        assert_eq!(acc, 0.5);
+        assert!(c.load_finetuned("m3", "other").unwrap().is_none());
+    }
+}

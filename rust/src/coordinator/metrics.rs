@@ -1,0 +1,100 @@
+//! Metrics registry + CSV emission for training curves and experiment
+//! series (the raw data behind every figure).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// An append-only named series of (step, value) points.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    series: BTreeMap<String, Vec<(usize, f64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn push(&mut self, name: &str, step: usize, value: f64) {
+        self.series.entry(name.to_string()).or_default().push((step, value));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[(usize, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(|s| s.as_str())
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.series.get(name).and_then(|v| v.last()).map(|&(_, v)| v)
+    }
+
+    /// Long-format CSV: series,step,value.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        writeln!(f, "series,step,value")?;
+        for (name, pts) in &self.series {
+            for (step, v) in pts {
+                writeln!(f, "{name},{step},{v}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Write a rectangular CSV from headers + rows.
+pub fn write_table_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut m = Metrics::new();
+        m.push("loss", 0, 2.3);
+        m.push("loss", 1, 2.1);
+        m.push("acc", 0, 0.1);
+        assert_eq!(m.get("loss").unwrap().len(), 2);
+        assert_eq!(m.last("loss"), Some(2.1));
+        assert_eq!(m.names().count(), 2);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = Metrics::new();
+        m.push("a", 0, 1.0);
+        m.push("a", 1, 2.0);
+        let p = std::env::temp_dir().join(format!("limpq_metrics_{}.csv", std::process::id()));
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("series,step,value"));
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn table_csv() {
+        let p = std::env::temp_dir().join(format!("limpq_table_{}.csv", std::process::id()));
+        write_table_csv(&p, &["x", "y"], &[vec!["1".into(), "2".into()]]).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "x,y\n1,2\n");
+    }
+}

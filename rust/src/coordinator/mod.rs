@@ -1,0 +1,348 @@
+//! L3 pipeline coordinator: the end-to-end LIMPQ flow.
+//!
+//! ```text
+//! FP pretrain ──> joint indicator training ──> ILP search ──> QAT finetune ──> eval
+//!    (fp_train_step)     (§3.4, n+1 passes)      (eq. 3)       (train_step)   (eval)
+//! ```
+//!
+//! Every stage is an explicit, resumable function over host state; results
+//! cache to disk (`checkpoint`) so the experiment drivers and benches can
+//! share the expensive stages.  The coordinator is generic over
+//! [`ModelBackend`], so the whole flow also runs against the analytic mock
+//! in tests.
+
+pub mod checkpoint;
+pub mod metrics;
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::data::batcher::{Batcher, EvalBatches};
+use crate::data::Dataset;
+use crate::importance::{IndicatorStore, JointTrainer, TrainedIndicators};
+use crate::models::ModelMeta;
+use crate::optim::{clip_grad_norm, CosineLr, Sgd};
+use crate::quant::BitConfig;
+use crate::runtime::ModelBackend;
+use crate::util::rng::Rng;
+
+/// Loss/accuracy curve point.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Full-precision pretraining result.
+pub struct FpResult {
+    pub flat: Vec<f32>,
+    pub curve: Vec<CurvePoint>,
+    pub val_acc: f64,
+    pub val_loss: f64,
+}
+
+/// QAT finetuning result.
+pub struct FinetuneResult {
+    pub flat: Vec<f32>,
+    pub sw: Vec<f32>,
+    pub sa: Vec<f32>,
+    pub curve: Vec<CurvePoint>,
+    pub best_val_acc: f64,
+    pub final_val_acc: f64,
+}
+
+/// The pipeline driver.
+pub struct Pipeline<'a, B: ModelBackend + ?Sized> {
+    pub backend: &'a B,
+    pub meta: &'a ModelMeta,
+    pub cfg: Config,
+    pub rng: Rng,
+    /// Progress logging (stderr) on/off.
+    pub verbose: bool,
+}
+
+impl<'a, B: ModelBackend + ?Sized> Pipeline<'a, B> {
+    pub fn new(backend: &'a B, meta: &'a ModelMeta, cfg: Config) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Pipeline { backend, meta, cfg, rng, verbose: true }
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            eprintln!("[{}] {msg}", self.meta.name);
+        }
+    }
+
+    /// Stage 1: full-precision pretraining (the "pre-trained model as
+    /// initialization" of §4.1).
+    pub fn fp_pretrain(&mut self, train: &Dataset, val: &Dataset) -> Result<FpResult> {
+        let fpc = self.cfg.fp.clone();
+        let mut flat = self.meta.init_params(&mut self.rng.child(1));
+        let mut opt = Sgd::new(flat.len(), fpc.momentum, fpc.weight_decay);
+        let sched = CosineLr::new(fpc.lr, fpc.warmup_steps, fpc.steps);
+        let mut batcher = Batcher::new(train, self.backend.train_batch(), self.rng.child(2).next_u64());
+        let mut curve = Vec::new();
+        for step in 0..fpc.steps {
+            let (x, y) = batcher.next_batch();
+            let (loss, acc, mut g) = self.backend.fp_train_step(&flat, x, y)?;
+            clip_grad_norm(&mut g, 5.0);
+            opt.step(&mut flat, &g, sched.lr_at(step));
+            if step % 10 == 0 || step + 1 == fpc.steps {
+                curve.push(CurvePoint { step, loss, acc });
+            }
+            if self.verbose && (step % 100 == 0 || step + 1 == fpc.steps) {
+                self.log(&format!("fp step {step}/{} loss {loss:.4} acc {acc:.3}", fpc.steps));
+            }
+        }
+        let (val_loss, val_acc) = self.fp_evaluate(&flat, val)?;
+        self.log(&format!("fp pretrain done: val acc {val_acc:.4}"));
+        Ok(FpResult { flat, curve, val_acc, val_loss })
+    }
+
+    /// Stage 2: joint importance-indicator training (§3.4).
+    pub fn train_indicators(&mut self, flat: &[f32], train: &Dataset) -> Result<TrainedIndicators> {
+        let mut batcher = Batcher::new(train, self.backend.train_batch(), self.rng.child(3).next_u64());
+        let mut trainer = JointTrainer::new(
+            self.backend,
+            self.meta,
+            self.cfg.indicator.clone(),
+            self.rng.child(4),
+        );
+        let out = trainer.train(flat, &mut batcher)?;
+        self.log(&format!(
+            "indicator training done: {} steps x {} passes",
+            self.cfg.indicator.steps,
+            self.meta.bit_options.len() + 1
+        ));
+        Ok(out)
+    }
+
+    /// Stage 4: QAT finetuning under a fixed policy (§4.1 hyperparams).
+    pub fn finetune(
+        &mut self,
+        flat_init: &[f32],
+        store: &IndicatorStore,
+        policy: &BitConfig,
+        train: &Dataset,
+        val: &Dataset,
+    ) -> Result<FinetuneResult> {
+        let ftc = self.cfg.finetune.clone();
+        let (mut sw, mut sa) = store.gather(policy)?;
+        let (qw, qa) = policy.qmax_vectors();
+        let mut flat = flat_init.to_vec();
+        let mut opt = Sgd::new(flat.len(), ftc.momentum, ftc.weight_decay);
+        let mut opt_s = Sgd::new(sw.len() + sa.len(), 0.9, 0.0);
+        let warmup = ((ftc.steps as f32) * ftc.warmup_frac) as usize;
+        let sched = CosineLr::new(ftc.lr, warmup, ftc.steps);
+        let sched_s = CosineLr::new(ftc.scale_lr, warmup, ftc.steps);
+        let mut batcher = Batcher::new(train, self.backend.train_batch(), self.rng.child(5).next_u64());
+
+        let mut curve = Vec::new();
+        let mut best_val = f64::MIN;
+        let mut best_state: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        let eval_every = (ftc.steps / 6).max(1);
+
+        for step in 0..ftc.steps {
+            let (x, y) = batcher.next_batch();
+            let out = self.backend.train_step(&flat, &sw, &sa, &qw, &qa, x, y)?;
+            let mut g = out.g_flat;
+            clip_grad_norm(&mut g, 5.0);
+            opt.step(&mut flat, &g, sched.lr_at(step));
+            // joint scale update (single buffer through opt_s)
+            let mut svec: Vec<f32> = sw.iter().chain(sa.iter()).cloned().collect();
+            let gs: Vec<f32> = out.g_sw.iter().chain(out.g_sa.iter()).cloned().collect();
+            opt_s.step(&mut svec, &gs, sched_s.lr_at(step));
+            for (i, v) in svec.iter().enumerate() {
+                if i < sw.len() {
+                    sw[i] = v.max(1e-6);
+                } else {
+                    sa[i - sw.len()] = v.max(1e-6);
+                }
+            }
+            if step % 10 == 0 {
+                curve.push(CurvePoint { step, loss: out.loss, acc: out.acc });
+            }
+            if (step + 1) % eval_every == 0 || step + 1 == ftc.steps {
+                let (_, vacc) = self.evaluate(&flat, &sw, &sa, policy, val)?;
+                if vacc > best_val {
+                    best_val = vacc;
+                    best_state = Some((flat.clone(), sw.clone(), sa.clone()));
+                }
+                if self.verbose {
+                    self.log(&format!(
+                        "finetune step {}/{} loss {:.4} val acc {vacc:.4}",
+                        step + 1,
+                        ftc.steps,
+                        out.loss
+                    ));
+                }
+            }
+        }
+        let (final_flat, final_sw, final_sa) = best_state.unwrap_or((flat, sw, sa));
+        let (_, final_val) = self.evaluate(&final_flat, &final_sw, &final_sa, policy, val)?;
+        Ok(FinetuneResult {
+            flat: final_flat,
+            sw: final_sw,
+            sa: final_sa,
+            curve,
+            best_val_acc: best_val.max(final_val),
+            final_val_acc: final_val,
+        })
+    }
+
+    /// Quantized evaluation over a full dataset: (mean loss, accuracy).
+    pub fn evaluate(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        policy: &BitConfig,
+        data: &Dataset,
+    ) -> Result<(f64, f64)> {
+        let (qw, qa) = policy.qmax_vectors();
+        let mut eb = EvalBatches::new(data, self.backend.eval_batch());
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0usize;
+        while let Some((x, y)) = eb.next() {
+            let out = self.backend.eval_step(flat, sw, sa, &qw, &qa, x, y)?;
+            loss_sum += out.loss_sum as f64;
+            correct += out.correct as f64;
+            n += self.backend.eval_batch();
+        }
+        anyhow::ensure!(n > 0, "dataset smaller than one eval batch");
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+
+    /// Full-precision evaluation: (mean loss, accuracy).
+    pub fn fp_evaluate(&self, flat: &[f32], data: &Dataset) -> Result<(f64, f64)> {
+        let mut eb = EvalBatches::new(data, self.backend.eval_batch());
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0usize;
+        while let Some((x, y)) = eb.next() {
+            let out = self.backend.fp_eval(flat, x, y)?;
+            loss_sum += out.loss_sum as f64;
+            correct += out.correct as f64;
+            n += self.backend.eval_batch();
+        }
+        anyhow::ensure!(n > 0, "dataset smaller than one eval batch");
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, SynthConfig};
+    use crate::importance::IndicatorStore;
+    use crate::runtime::mock::MockBackend;
+    use crate::search::{solve, MpqProblem};
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn mock_meta(l: usize, p: usize) -> ModelMeta {
+        let per = p / l;
+        let mut params = String::new();
+        let mut qlayers = String::new();
+        for i in 0..l {
+            if i > 0 {
+                params.push(',');
+                qlayers.push(',');
+            }
+            params.push_str(&format!(
+                r#"{{"name":"l{i}.w","shape":[{per}],"offset":{},"size":{per},"init":"he_dense","fan_in":4}}"#,
+                per * i
+            ));
+            qlayers.push_str(&format!(
+                r#"{{"index":{i},"name":"l{i}","kind":"dense","macs":{},"w_numel":{per},"pinned":{}}}"#,
+                5000 * (i + 1),
+                i == 0 || i + 1 == l
+            ));
+        }
+        let text = format!(
+            r#"{{"name":"mock","param_size":{p},"n_qlayers":{l},
+              "input_shape":[2,2,1],"n_classes":4,
+              "train_batch":4,"eval_batch":8,"serve_batch":2,
+              "bit_options":[2,3,4,5,6],"pin_bits":8,
+              "params":[{params}],"qlayers":[{qlayers}],"artifacts":{{}}}}"#
+        );
+        ModelMeta::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp")).unwrap()
+    }
+
+    fn small_cfg() -> Config {
+        let mut c = Config::default();
+        c.fp.steps = 40;
+        c.indicator.steps = 40;
+        c.indicator.lr = 0.1;
+        c.finetune.steps = 30;
+        c
+    }
+
+    fn tiny_data() -> (Dataset, Dataset) {
+        let base = SynthConfig { n: 40, h: 2, w: 2, n_classes: 4, ..Default::default() };
+        (generate(&base, 0), generate(&SynthConfig { n: 16, ..base }, 1))
+    }
+
+    #[test]
+    fn full_mock_pipeline_end_to_end() {
+        let (l, p) = (6, 120);
+        let meta = mock_meta(l, p);
+        let backend = MockBackend::new(l, p);
+        let (train, val) = tiny_data();
+        let mut pipe = Pipeline::new(&backend, &meta, small_cfg());
+        pipe.verbose = false;
+
+        // Stage 1: FP loss decreases.
+        let fp = pipe.fp_pretrain(&train, &val).unwrap();
+        assert!(fp.curve.last().unwrap().loss < fp.curve[0].loss);
+
+        // Stage 2: indicators ordered by mock ground truth.
+        let ind = pipe.train_indicators(&fp.flat, &train).unwrap();
+        let imp = ind.store.importance(&meta);
+        assert!(imp.w[1][0] > imp.w[1][4]); // fewer bits -> larger scale
+
+        // Stage 3: ILP at a 4-bit-level cap.
+        let cap = crate::quant::cost::uniform_bitops(&meta, 4, 4);
+        let prob = MpqProblem::from_importance(&meta, &imp, 1.0, Some(cap), None, false);
+        let sol = solve(&prob).unwrap();
+        let policy = prob.to_bit_config(&sol);
+        policy.validate(&meta).unwrap();
+        assert!(crate::quant::cost::total_bitops(&meta, &policy) <= cap);
+
+        // Stage 4: finetune runs and evaluates.
+        let ft = pipe.finetune(&fp.flat, &ind.store, &policy, &train, &val).unwrap();
+        assert!(ft.final_val_acc > 0.0);
+        assert!(ft.best_val_acc >= ft.final_val_acc - 1e-9);
+
+        // Ours beats reversed at the same cap (the Table-6 ordering) on
+        // the mock's analytic accuracy.
+        let (rev_policy, _) =
+            crate::search::baselines::reversed_policy(&meta, &imp, 1.0, Some(cap), None).unwrap();
+        let (sw, sa) = ind.store.gather(&policy).unwrap();
+        let (_, ours_acc) = pipe.evaluate(&ft.flat, &sw, &sa, &policy, &val).unwrap();
+        let (rsw, rsa) = ind.store.gather(&rev_policy).unwrap();
+        let (_, rev_acc) = pipe.evaluate(&ft.flat, &rsw, &rsa, &rev_policy, &val).unwrap();
+        assert!(
+            ours_acc >= rev_acc,
+            "ours {ours_acc} should be >= reversed {rev_acc} at equal BitOps"
+        );
+    }
+
+    #[test]
+    fn evaluate_counts_batches() {
+        let (l, p) = (4, 40);
+        let meta = mock_meta(l, p);
+        let backend = MockBackend::new(l, p);
+        let (_, val) = tiny_data();
+        let pipe = Pipeline::new(&backend, &meta, small_cfg());
+        let store = IndicatorStore::init_uniform(&meta);
+        let policy = BitConfig::uniform_pinned(&meta, 4, 4);
+        let (sw, sa) = store.gather(&policy).unwrap();
+        let flat = vec![0.1; p];
+        let (loss, acc) = pipe.evaluate(&flat, &sw, &sa, &policy, &val).unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,180 @@
+//! Batching pipeline: deterministic shuffling epochs over a [`Dataset`],
+//! yielding contiguous NHWC batches ready for literal conversion.
+//!
+//! Gathers into reusable buffers — no per-batch allocation on the training
+//! hot path (see EXPERIMENTS.md §Perf).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Epoch-based shuffling batcher.
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    /// Reused output buffers.
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+    pub epoch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> Batcher<'a> {
+        assert!(batch > 0 && batch <= data.n, "batch {} vs n {}", batch, data.n);
+        let mut b = Batcher {
+            data,
+            batch,
+            order: (0..data.n).collect(),
+            cursor: 0,
+            rng: Rng::new(seed),
+            xbuf: vec![0.0; batch * data.image_elems()],
+            ybuf: vec![0; batch],
+            epoch: 0,
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    /// Batches per epoch (drop-last semantics).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.n / self.batch
+    }
+
+    /// Fill the internal buffers with the next batch and return views.
+    /// Reshuffles at epoch boundaries.
+    pub fn next_batch(&mut self) -> (&[f32], &[i32]) {
+        if self.cursor + self.batch > self.data.n {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let e = self.data.image_elems();
+        for (bi, &idx) in self.order[self.cursor..self.cursor + self.batch].iter().enumerate() {
+            self.xbuf[bi * e..(bi + 1) * e].copy_from_slice(self.data.image(idx));
+            self.ybuf[bi] = self.data.labels[idx];
+        }
+        self.cursor += self.batch;
+        (&self.xbuf, &self.ybuf)
+    }
+}
+
+/// Sequential (unshuffled) full-coverage batches for evaluation.
+/// The final ragged remainder (if any) is dropped; use an eval batch that
+/// divides the dataset (the default artifacts use 250 | 2000).
+pub struct EvalBatches<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    cursor: usize,
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(data: &'a Dataset, batch: usize) -> EvalBatches<'a> {
+        EvalBatches { data, batch, cursor: 0, xbuf: vec![0.0; batch * data.image_elems()], ybuf: vec![0; batch] }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.data.n / self.batch
+    }
+
+    pub fn next(&mut self) -> Option<(&[f32], &[i32])> {
+        if self.cursor + self.batch > self.data.n {
+            return None;
+        }
+        let e = self.data.image_elems();
+        let start = self.cursor;
+        self.xbuf.copy_from_slice(&self.data.images[start * e..(start + self.batch) * e]);
+        self.ybuf.copy_from_slice(&self.data.labels[start..start + self.batch]);
+        self.cursor += self.batch;
+        Some((&self.xbuf, &self.ybuf))
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthConfig;
+
+    fn ds(n: usize) -> Dataset {
+        crate::data::generate(&SynthConfig { n, h: 4, w: 4, ..Default::default() }, 0)
+    }
+
+    #[test]
+    fn covers_epoch_exactly_once() {
+        let d = ds(12);
+        let mut b = Batcher::new(&d, 4, 7);
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..b.batches_per_epoch() {
+            let (x, y) = b.next_batch();
+            assert_eq!(x.len(), 4 * d.image_elems());
+            for &l in y {
+                *seen.entry(l).or_insert(0) += 1;
+            }
+        }
+        // 12 samples, balanced: label histogram must match dataset's
+        let mut want = std::collections::HashMap::new();
+        for &l in &d.labels {
+            *want.entry(l).or_insert(0) += 1;
+        }
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let d = ds(40);
+        let mut b = Batcher::new(&d, 8, 7);
+        let first: Vec<i32> = {
+            let (_, y) = b.next_batch();
+            y.to_vec()
+        };
+        for _ in 0..b.batches_per_epoch() {
+            b.next_batch();
+        }
+        assert_eq!(b.epoch, 1);
+        let second: Vec<i32> = {
+            let (_, y) = b.next_batch();
+            y.to_vec()
+        };
+        // Overwhelmingly likely to differ (deterministic given seeds).
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = ds(20);
+        let mut a = Batcher::new(&d, 5, 3);
+        let mut b = Batcher::new(&d, 5, 3);
+        for _ in 0..8 {
+            let (xa, ya) = a.next_batch();
+            let (xa, ya) = (xa.to_vec(), ya.to_vec());
+            let (xb, yb) = b.next_batch();
+            assert_eq!(xa, xb.to_vec());
+            assert_eq!(ya, yb.to_vec());
+        }
+    }
+
+    #[test]
+    fn eval_batches_sequential_and_complete() {
+        let d = ds(20);
+        let mut e = EvalBatches::new(&d, 5);
+        assert_eq!(e.n_batches(), 4);
+        let mut total = 0;
+        let mut labels = Vec::new();
+        while let Some((x, y)) = e.next() {
+            assert_eq!(x.len(), 5 * d.image_elems());
+            labels.extend_from_slice(y);
+            total += 1;
+        }
+        assert_eq!(total, 4);
+        assert_eq!(labels, d.labels);
+        e.reset();
+        assert!(e.next().is_some());
+    }
+}

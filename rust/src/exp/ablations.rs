@@ -1,0 +1,122 @@
+//! Ablation benches for the design choices DESIGN.md calls out.
+//!
+//! All rows here are *search + direct evaluation* (no per-row finetune),
+//! so the sweep stays cheap; the finetuned orderings live in Tables 2-6.
+//!
+//! * α sweep — the weight/activation importance trade-off of eq. 3
+//!   (paper §4.1 picks 3/2/1 per model without ablating; we sweep it).
+//! * init-scheme — statistics vs uniform `0.1/b` indicator init (paper
+//!   Fig. 2 claims both work; we quantify the policy difference).
+//! * solver — exact ILP vs greedy vs Pareto-frontier on the same learned
+//!   importances: how much does exactness buy?
+
+use anyhow::Result;
+
+use super::ExpCtx;
+use crate::config::Config;
+use crate::coordinator::metrics::write_table_csv;
+use crate::importance::IndicatorStore;
+use crate::quant::cost::{total_bitops, uniform_bitops};
+use crate::report::{pct, Table};
+use crate::search::baselines::greedy_policy;
+use crate::search::pareto::solve_pareto;
+use crate::search::{solve, MpqProblem};
+use crate::util::json::Json;
+
+pub fn run(cfg: Config) -> Result<()> {
+    let ctx = ExpCtx::load(cfg)?;
+    let meta = ctx.meta();
+    let (flat, fp_acc) = ctx.ensure_fp()?;
+    let store = ctx.ensure_indicators(&flat)?;
+    let imp = ctx.importance(&store);
+    let cap = uniform_bitops(meta, 4, 4);
+    let pipe = ctx.pipeline();
+
+    let eval_policy = |policy: &crate::quant::BitConfig| -> Result<f64> {
+        let (sw, sa) = store.gather(policy)?;
+        let (_, acc) = pipe.evaluate(&flat, &sw, &sa, policy, &ctx.val)?;
+        Ok(acc)
+    };
+
+    // --- α sweep ----------------------------------------------------------
+    let mut t = Table::new(
+        &format!("Ablation: α sweep on {} (@4-bit level, no finetune; FP {:.2}%)", meta.name, 100.0 * fp_acc),
+        &["alpha", "acc(no-ft)", "bitops_g", "mean_w_bits"],
+    );
+    let mut csv = Vec::new();
+    let mut alpha_rows = Vec::new();
+    for alpha in [0.5, 1.0, 2.0, 3.0, 5.0] {
+        let p = MpqProblem::from_importance(meta, &imp, alpha, Some(cap), None, false);
+        let policy = p.to_bit_config(&solve(&p)?);
+        let acc = eval_policy(&policy)?;
+        let cells = vec![
+            format!("{alpha}"),
+            pct(acc),
+            format!("{:.4}", total_bitops(meta, &policy) as f64 / 1e9),
+            format!("{:.2}", policy.avg_w_bits(meta)),
+        ];
+        csv.push(cells.clone());
+        t.row(cells);
+        alpha_rows.push(Json::obj(vec![("alpha", Json::Num(alpha)), ("acc", Json::Num(acc))]));
+    }
+    println!("{}", t.render());
+
+    // --- init scheme --------------------------------------------------------
+    // Compare the *search result* from stats-init-trained indicators (the
+    // cache) against a policy searched from untrained uniform-init values:
+    // quantifies how much the joint training itself matters.
+    let untrained = IndicatorStore::init_uniform(meta).importance(meta);
+    let p_tr = MpqProblem::from_importance(meta, &imp, ctx.cfg.search.alpha, Some(cap), None, false);
+    let p_un = MpqProblem::from_importance(meta, &untrained, ctx.cfg.search.alpha, Some(cap), None, false);
+    let pol_tr = p_tr.to_bit_config(&solve(&p_tr)?);
+    let pol_un = p_un.to_bit_config(&solve(&p_un)?);
+    let acc_tr = eval_policy(&pol_tr)?;
+    let acc_un = eval_policy(&pol_un)?;
+    let mut t2 = Table::new("Ablation: trained vs untrained indicators", &["indicators", "acc(no-ft)"]);
+    t2.row(vec!["trained (joint QAT)".into(), pct(acc_tr)]);
+    t2.row(vec!["untrained uniform init".into(), pct(acc_un)]);
+    println!("{}", t2.render());
+
+    // --- solver -------------------------------------------------------------
+    let sol_ilp = solve(&p_tr)?;
+    let sol_par = solve_pareto(&p_tr, 200);
+    let pol_greedy = greedy_policy(meta, &imp, ctx.cfg.search.alpha, cap)?;
+    let mut t3 = Table::new("Ablation: solver choice on identical importances", &["solver", "obj cost", "acc(no-ft)"]);
+    t3.row(vec!["exact ILP (B&B)".into(), format!("{:.5}", sol_ilp.cost), pct(eval_policy(&p_tr.to_bit_config(&sol_ilp))?)]);
+    if let Ok(sp) = sol_par {
+        t3.row(vec!["Pareto frontier (HAWQv2-style)".into(), format!("{:.5}", sp.cost), pct(eval_policy(&p_tr.to_bit_config(&sp))?)]);
+    }
+    let greedy_cost: f64 = {
+        // objective of the greedy policy under the same cost table
+        let mut c = 0.0;
+        for q in meta.qlayers.iter().filter(|q| !q.pinned) {
+            let wi = meta.bit_options.iter().position(|&b| b == pol_greedy.w_bits[q.index]).unwrap();
+            let ai = meta.bit_options.iter().position(|&b| b == pol_greedy.a_bits[q.index]).unwrap();
+            c += imp.a[q.index][ai] as f64 + ctx.cfg.search.alpha * imp.w[q.index][wi] as f64;
+        }
+        c
+    };
+    t3.row(vec!["greedy descent".into(), format!("{greedy_cost:.5}"), pct(eval_policy(&pol_greedy)?)]);
+    println!("{}", t3.render());
+
+    let dir = ctx.exp_dir("ablation")?;
+    write_table_csv(&dir.join("alpha_sweep.csv"), &["alpha", "acc", "bitops_g", "mean_w_bits"], &csv)?;
+    ctx.save_result(
+        "ablation",
+        &Json::obj(vec![
+            ("model", Json::from(meta.name.as_str())),
+            ("alpha_rows", Json::Arr(alpha_rows)),
+            ("acc_trained", Json::Num(acc_tr)),
+            ("acc_untrained", Json::Num(acc_un)),
+            ("ilp_cost", Json::Num(sol_ilp.cost)),
+            ("greedy_cost", Json::Num(greedy_cost)),
+        ]),
+    )?;
+    println!(
+        "EXPECT trained indicators >= untrained: {:.2}% vs {:.2}% -> {}",
+        100.0 * acc_tr,
+        100.0 * acc_un,
+        if acc_tr >= acc_un { "OK" } else { "VIOLATED (noise possible without finetune)" }
+    );
+    Ok(())
+}

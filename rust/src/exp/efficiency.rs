@@ -1,0 +1,136 @@
+//! §4.3: MPQ policy search efficiency.
+//!
+//! Three measured quantities, mirroring the paper's accounting:
+//!   1. indicator-training cost (one-time; measured per atomic step and
+//!      reported as total for the configured run),
+//!   2. ILP solve time per device (the 0.06 s / 0.35 s headline),
+//!   3. the iterative-search proxy cost: one policy evaluation on the
+//!      training set (finetune-k-steps + train-set eval), times the 600
+//!      rounds AutoQ/HAQ-style methods need.
+//!
+//! The z-device amortization table reproduces the paper's
+//! `50 + 0.35/60·z minutes vs 1000·z GPU-hours` argument on this testbed.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::ExpCtx;
+use crate::config::Config;
+use crate::coordinator::metrics::write_table_csv;
+use crate::data::batcher::Batcher;
+use crate::fleet::{DeviceSpec, FleetSearcher};
+use crate::quant::cost::uniform_bitops;
+use crate::report::Table;
+use crate::runtime::ModelBackend;
+use crate::search::baselines::random_policy;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Iterative-proxy evaluation rounds (AutoQ reports ~600 DRL episodes).
+const ITERATIVE_ROUNDS: usize = 600;
+/// Steps one candidate-policy evaluation trains for in the proxy.
+const PROXY_EVAL_STEPS: usize = 10;
+
+pub fn run(cfg: Config) -> Result<()> {
+    let ctx = ExpCtx::load(cfg)?;
+    let meta = ctx.meta();
+    let (flat, _) = ctx.ensure_fp()?;
+    let store = ctx.ensure_indicators(&flat)?;
+    let imp = ctx.importance(&store);
+
+    // (1) indicator training cost: time one atomic step, scale by steps.
+    let step_time = {
+        let mut icfg = ctx.cfg.indicator.clone();
+        icfg.steps = 2;
+        let mut batcher = Batcher::new(&ctx.train, ctx.backend.train_batch(), 5);
+        let mut tr = crate::importance::JointTrainer::new(&ctx.backend, meta, icfg, Rng::new(5));
+        let t = Instant::now();
+        tr.train(&flat, &mut batcher)?;
+        t.elapsed().as_secs_f64() / 2.0
+    };
+    let t_indicators = step_time * ctx.cfg.indicator.steps as f64;
+
+    // (2) ILP solve time (averaged).
+    let searcher = FleetSearcher::new(meta.clone(), imp);
+    let cap = uniform_bitops(meta, 4, 4);
+    let dev = DeviceSpec { name: "d".into(), bitops_cap: Some(cap), size_cap_bytes: None, alpha: ctx.cfg.search.alpha, weight_only: false };
+    let t = Instant::now();
+    let reps = 20;
+    for _ in 0..reps {
+        searcher.search(&dev)?;
+    }
+    let t_ilp = t.elapsed().as_secs_f64() / reps as f64;
+
+    // (3) one iterative-proxy policy evaluation.
+    let mut rng = Rng::new(9);
+    let cand = random_policy(meta, cap, &mut rng)?;
+    let (sw, sa) = store.gather(&cand)?;
+    let (qw, qa) = cand.qmax_vectors();
+    let mut batcher = Batcher::new(&ctx.train, ctx.backend.train_batch(), 6);
+    let t = Instant::now();
+    let mut f = flat.clone();
+    for _ in 0..PROXY_EVAL_STEPS {
+        let (x, y) = batcher.next_batch();
+        let out = ctx.backend.train_step(&f, &sw, &sa, &qw, &qa, x, y)?;
+        for (p, g) in f.iter_mut().zip(&out.g_flat) {
+            *p -= 0.01 * g;
+        }
+    }
+    let pipe = ctx.pipeline();
+    pipe.evaluate(&f, &sw, &sa, &cand, &ctx.val)?;
+    let t_eval = t.elapsed().as_secs_f64();
+    let t_iterative_search = t_eval * ITERATIVE_ROUNDS as f64;
+
+    let mut t1 = Table::new(
+        &format!("§4.3 search efficiency — {} (measured, this testbed)", meta.name),
+        &["quantity", "seconds"],
+    );
+    t1.row(vec!["indicator training (one-time)".into(), format!("{t_indicators:.1}")]);
+    t1.row(vec!["ILP solve per device".into(), format!("{t_ilp:.4}")]);
+    t1.row(vec!["one iterative policy evaluation".into(), format!("{t_eval:.2}")]);
+    t1.row(vec![format!("iterative search ({ITERATIVE_ROUNDS} rounds)"), format!("{t_iterative_search:.0}")]);
+    t1.row(vec!["speedup (1 device)".into(), format!("{:.0}x", t_iterative_search / (t_indicators + t_ilp))]);
+    println!("{}", t1.render());
+
+    // z-device amortization sweep.
+    let mut t2 = Table::new(
+        "§4.3 z-device amortization (seconds; ours = one-time + z ILP solves)",
+        &["z", "ours", "iterative", "speedup"],
+    );
+    let mut csv = Vec::new();
+    for z in [1usize, 4, 16, 64] {
+        let ours = t_indicators + z as f64 * t_ilp;
+        let iterative = z as f64 * t_iterative_search;
+        let cells = vec![z.to_string(), format!("{ours:.1}"), format!("{iterative:.0}"), format!("{:.0}x", iterative / ours)];
+        csv.push(cells.clone());
+        t2.row(cells);
+    }
+    println!("{}", t2.render());
+
+    println!(
+        "EXPECT ILP < 1 s (paper: 0.06-0.35 s): {:.4} s -> {}",
+        t_ilp,
+        if t_ilp < 1.0 { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "EXPECT 1-device speedup >> 100x (paper: ~330x): {:.0}x -> {}",
+        t_iterative_search / (t_indicators + t_ilp),
+        if t_iterative_search / (t_indicators + t_ilp) > 100.0 { "OK" } else { "NOTE: below 100x on this testbed" }
+    );
+
+    let dir = ctx.exp_dir("efficiency")?;
+    write_table_csv(&dir.join("amortization.csv"), &["z", "ours_s", "iterative_s", "speedup"], &csv)?;
+    ctx.save_result(
+        "efficiency",
+        &Json::obj(vec![
+            ("model", Json::from(meta.name.as_str())),
+            ("t_indicators_s", Json::Num(t_indicators)),
+            ("t_ilp_s", Json::Num(t_ilp)),
+            ("t_policy_eval_s", Json::Num(t_eval)),
+            ("iterative_rounds", Json::from(ITERATIVE_ROUNDS)),
+            ("speedup_1dev", Json::Num(t_iterative_search / (t_indicators + t_ilp))),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Experiment drivers: one function per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver
+//!   1. loads (or reuses from the stage cache) the FP model and the jointly
+//!      trained indicators for the model(s) it needs,
+//!   2. runs its searches/finetunes,
+//!   3. prints the paper-style table/figure to stdout, and
+//!   4. writes machine-readable results to `<out_dir>/<exp>/` (CSV + JSON)
+//!      — the data EXPERIMENTS.md and the `paper_tables` bench consume.
+//!
+//! Experiments share expensive stages through `coordinator::checkpoint`,
+//! so the full suite costs one FP pretrain + one indicator training per
+//! model plus the per-row finetunes.
+
+pub mod ablations;
+pub mod efficiency;
+pub mod figs;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::checkpoint::Cache;
+use crate::coordinator::Pipeline;
+use crate::data::{train_val, Dataset};
+use crate::importance::{Importance, IndicatorStore};
+use crate::models::ModelMeta;
+use crate::quant::BitConfig;
+use crate::runtime::pjrt::PjrtBackend;
+use crate::util::json::Json;
+
+/// Shared per-model experiment context.
+pub struct ExpCtx {
+    pub cfg: Config,
+    pub backend: PjrtBackend,
+    pub train: Dataset,
+    pub val: Dataset,
+    pub cache: Cache,
+}
+
+impl ExpCtx {
+    /// Load the backend + data for `cfg.model`, with paper-α defaulting.
+    pub fn load(mut cfg: Config) -> Result<ExpCtx> {
+        if cfg.search.alpha == Config::default().search.alpha && cfg.model != "resnet18s" {
+            cfg.search.alpha = Config::paper_alpha(&cfg.model);
+        }
+        let backend = PjrtBackend::load(&cfg.artifacts_dir, &cfg.model)
+            .with_context(|| format!("load artifacts for {} (run `make artifacts`)", cfg.model))?;
+        let (train, val) = train_val(cfg.data.train_n, cfg.data.val_n, cfg.data.seed);
+        let cache = Cache::new(&cfg.out_dir)?;
+        Ok(ExpCtx { cfg, backend, train, val, cache })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.backend.meta
+    }
+
+    pub fn pipeline(&self) -> Pipeline<'_, PjrtBackend> {
+        Pipeline::new(&self.backend, &self.backend.meta, self.cfg.clone())
+    }
+
+    /// FP params, training if not cached.  Returns (flat, val_acc).
+    pub fn ensure_fp(&self) -> Result<(Vec<f32>, f64)> {
+        if let Some(hit) = self.cache.load_fp(&self.cfg.model)? {
+            eprintln!("[{}] fp checkpoint reused (val acc {:.4})", self.cfg.model, hit.1);
+            return Ok(hit);
+        }
+        let mut pipe = self.pipeline();
+        let fp = pipe.fp_pretrain(&self.train, &self.val)?;
+        self.cache.save_fp(&self.cfg.model, &fp.flat, fp.val_acc)?;
+        Ok((fp.flat, fp.val_acc))
+    }
+
+    /// Indicator store, training if not cached.
+    pub fn ensure_indicators(&self, flat: &[f32]) -> Result<IndicatorStore> {
+        if let Some(store) = self.cache.load_indicators(&self.cfg.model)? {
+            eprintln!("[{}] indicator checkpoint reused", self.cfg.model);
+            return Ok(store);
+        }
+        let mut pipe = self.pipeline();
+        let out = pipe.train_indicators(flat, &self.train)?;
+        self.cache.save_indicators(&self.cfg.model, &out.store)?;
+        Ok(out.store)
+    }
+
+    pub fn importance(&self, store: &IndicatorStore) -> Importance {
+        store.importance(self.meta())
+    }
+
+    /// Finetune + evaluate a policy, cached under `tag`.
+    /// Returns (val_acc, sw, sa, flat).
+    pub fn finetuned(
+        &self,
+        tag: &str,
+        flat: &[f32],
+        store: &IndicatorStore,
+        policy: &BitConfig,
+    ) -> Result<FinetunedRow> {
+        if let Some((f, sw, sa, acc)) = self.cache.load_finetuned(&self.cfg.model, tag)? {
+            eprintln!("[{}] finetune '{tag}' reused (val acc {acc:.4})", self.cfg.model);
+            return Ok(FinetunedRow { val_acc: acc, flat: f, sw, sa });
+        }
+        let mut pipe = self.pipeline();
+        let ft = pipe.finetune(flat, store, policy, &self.train, &self.val)?;
+        self.cache
+            .save_finetuned(&self.cfg.model, tag, &ft.flat, &ft.sw, &ft.sa, ft.best_val_acc)?;
+        Ok(FinetunedRow { val_acc: ft.best_val_acc, flat: ft.flat, sw: ft.sw, sa: ft.sa })
+    }
+
+    /// Output directory for an experiment.
+    pub fn exp_dir(&self, exp: &str) -> Result<PathBuf> {
+        let d = self.cfg.out_dir.join(exp);
+        std::fs::create_dir_all(&d)?;
+        Ok(d)
+    }
+
+    /// Persist an experiment result JSON (consumed by EXPERIMENTS.md and
+    /// the `paper_tables` bench).
+    pub fn save_result(&self, exp: &str, result: &Json) -> Result<()> {
+        let d = self.exp_dir(exp)?;
+        std::fs::write(d.join("result.json"), result.to_string())?;
+        Ok(())
+    }
+}
+
+pub struct FinetunedRow {
+    pub val_acc: f64,
+    pub flat: Vec<f32>,
+    pub sw: Vec<f32>,
+    pub sa: Vec<f32>,
+}
+
+/// Registry of experiment names -> driver.
+pub fn run_experiment(name: &str, cfg: Config) -> Result<()> {
+    match name {
+        "table1" => tables::table1(&cfg),
+        "table2" => tables::table2(cfg),
+        "table3" => tables::table3(cfg),
+        "table4" => tables::table4(cfg),
+        "table5" => tables::table5(cfg),
+        "table6" => tables::table6(cfg),
+        "fig1" => figs::fig1(cfg),
+        "fig2" => figs::fig2(cfg),
+        "fig3" => figs::fig3(cfg),
+        "fig4" => figs::fig4(cfg),
+        "efficiency" => efficiency::run(cfg),
+        "ablation" => ablations::run(cfg),
+        "all" => {
+            for e in ["table1", "fig2", "fig3", "table2", "table3", "table4", "table5", "table6", "fig1", "fig4", "efficiency", "ablation"] {
+                eprintln!("=== experiment {e} ===");
+                run_experiment(e, cfg_for(e, &cfg))?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (try table1..6, fig1..4, efficiency, all)"),
+    }
+}
+
+/// Per-experiment model override (each paper table targets one network).
+fn cfg_for(exp: &str, base: &Config) -> Config {
+    let mut c = base.clone();
+    c.model = match exp {
+        "table2" | "fig2" => "resnet18s",
+        "table3" => "resnet50s",
+        "table4" | "table5" | "table6" | "fig1" => "mobilenetv1s",
+        _ => return c,
+    }
+    .to_string();
+    c
+}

@@ -1,0 +1,329 @@
+//! Fleet search service — the §4.3 deployment story, as a real server.
+//!
+//! The paper's efficiency argument: indicator training is a *one-time*
+//! cost, after which the MPQ policy for each of `z` deployment devices is
+//! a sub-second data-free ILP solve.  This module makes that concrete:
+//! a [`FleetSearcher`] holds the learned importances and answers
+//! per-device constraint queries; [`serve`] exposes it over a TCP
+//! line-delimited JSON protocol (one request JSON per line, one response
+//! JSON per line), threaded per connection.
+//!
+//! Request fields:
+//!   `{"cap_gbitops": 23.07, "size_cap_mb": 8.0, "alpha": 3.0,
+//!     "weight_only": false}`  (all optional except at least one cap)
+//! Response:
+//!   `{"ok": true, "w_bits": [...], "a_bits": [...], "bitops_g": ...,
+//!     "size_mb": ..., "cost": ..., "solve_us": ...}`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::importance::Importance;
+use crate::models::ModelMeta;
+use crate::quant::BitConfig;
+use crate::search::{solve, MpqProblem};
+use crate::util::json::Json;
+
+/// A deployment-device constraint set.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub bitops_cap: Option<u64>,
+    pub size_cap_bytes: Option<u64>,
+    pub alpha: f64,
+    pub weight_only: bool,
+}
+
+/// Search result for one device.
+#[derive(Debug, Clone)]
+pub struct DevicePolicy {
+    pub device: String,
+    pub policy: BitConfig,
+    pub cost: f64,
+    pub bitops: u64,
+    pub size_bits: u64,
+    pub solve_us: u128,
+}
+
+/// Holds the one-time-trained importances; answers per-device queries.
+#[derive(Clone)]
+pub struct FleetSearcher {
+    pub meta: Arc<ModelMeta>,
+    pub importance: Arc<Importance>,
+}
+
+impl FleetSearcher {
+    pub fn new(meta: ModelMeta, importance: Importance) -> FleetSearcher {
+        FleetSearcher { meta: Arc::new(meta), importance: Arc::new(importance) }
+    }
+
+    pub fn search(&self, dev: &DeviceSpec) -> Result<DevicePolicy> {
+        anyhow::ensure!(
+            dev.bitops_cap.is_some() || dev.size_cap_bytes.is_some(),
+            "device {} has no constraint",
+            dev.name
+        );
+        let t = Instant::now();
+        let p = MpqProblem::from_importance(
+            &self.meta,
+            &self.importance,
+            dev.alpha,
+            dev.bitops_cap,
+            dev.size_cap_bytes.map(|b| b * 8),
+            dev.weight_only,
+        );
+        let s = solve(&p).with_context(|| format!("device {}", dev.name))?;
+        Ok(DevicePolicy {
+            device: dev.name.clone(),
+            policy: p.to_bit_config(&s),
+            cost: s.cost,
+            bitops: s.bitops,
+            size_bits: s.size_bits,
+            solve_us: t.elapsed().as_micros(),
+        })
+    }
+
+    /// Batch search for a whole fleet (the `z`-device sweep of §4.3).
+    pub fn search_fleet(&self, devices: &[DeviceSpec]) -> Result<Vec<DevicePolicy>> {
+        devices.iter().map(|d| self.search(d)).collect()
+    }
+
+    fn handle_line(&self, line: &str) -> String {
+        match self.handle_request(line) {
+            Ok(resp) => resp.to_string(),
+            Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(format!("{e:#}").as_str()))])
+                .to_string(),
+        }
+    }
+
+    fn handle_request(&self, line: &str) -> Result<Json> {
+        let req = Json::parse(line)?;
+        let dev = DeviceSpec {
+            name: req.opt("name").and_then(|v| v.as_str().ok().map(str::to_string)).unwrap_or_else(|| "dev".into()),
+            bitops_cap: match req.opt("cap_gbitops") {
+                Some(v) => Some((v.as_f64()? * 1e9) as u64),
+                None => None,
+            },
+            size_cap_bytes: match req.opt("size_cap_mb") {
+                Some(v) => Some((v.as_f64()? * 1e6) as u64),
+                None => None,
+            },
+            alpha: match req.opt("alpha") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
+            weight_only: match req.opt("weight_only") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
+        };
+        let out = self.search(&dev)?;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("device", Json::from(out.device.as_str())),
+            ("w_bits", Json::arr_usize(&out.policy.w_bits.iter().map(|&b| b as usize).collect::<Vec<_>>())),
+            ("a_bits", Json::arr_usize(&out.policy.a_bits.iter().map(|&b| b as usize).collect::<Vec<_>>())),
+            ("cost", Json::Num(out.cost)),
+            ("bitops_g", Json::Num(out.bitops as f64 / 1e9)),
+            ("size_mb", Json::Num(out.size_bits as f64 / 8e6)),
+            ("solve_us", Json::Num(out.solve_us as f64)),
+        ]))
+    }
+}
+
+/// Server handle: join or signal shutdown.
+pub struct FleetServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub served: Arc<AtomicUsize>,
+}
+
+impl FleetServer {
+    /// Bind and serve on a background thread.
+    pub fn spawn(searcher: FleetSearcher, bind: &str) -> Result<FleetServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicUsize::new(0));
+        let stop2 = stop.clone();
+        let served2 = served.clone();
+        let handle = std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let s = searcher.clone();
+                        let served3 = served2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, s, served3);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(FleetServer { addr, stop, handle: Some(handle), served })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, searcher: FleetSearcher, served: Arc<AtomicUsize>) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = searcher.handle_line(&line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        served.fetch_add(1, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Simple blocking client for tests/examples.
+pub fn query(addr: &std::net::SocketAddr, request: &Json) -> Result<Json> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(request.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(line.trim()).context("parse fleet response")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::importance::IndicatorStore;
+    use crate::quant::cost::uniform_bitops;
+
+    fn meta6() -> ModelMeta {
+        let mut params = String::new();
+        let mut qlayers = String::new();
+        for i in 0..6 {
+            if i > 0 {
+                params.push(',');
+                qlayers.push(',');
+            }
+            params.push_str(&format!(
+                r#"{{"name":"l{i}.w","shape":[10],"offset":{},"size":10,"init":"he_dense","fan_in":4}}"#,
+                10 * i
+            ));
+            qlayers.push_str(&format!(
+                r#"{{"index":{i},"name":"l{i}","kind":"conv","macs":{},"w_numel":10,"pinned":{}}}"#,
+                100_000 * (i + 1),
+                i == 0 || i == 5
+            ));
+        }
+        let text = format!(
+            r#"{{"name":"m","param_size":60,"n_qlayers":6,
+              "input_shape":[2,2,1],"n_classes":4,
+              "train_batch":4,"eval_batch":8,"serve_batch":2,
+              "bit_options":[2,3,4,5,6],"pin_bits":8,
+              "params":[{params}],"qlayers":[{qlayers}],"artifacts":{{}}}}"#
+        );
+        ModelMeta::from_json(&Json::parse(&text).unwrap(), std::path::Path::new("/tmp")).unwrap()
+    }
+
+    fn searcher() -> FleetSearcher {
+        let meta = meta6();
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        FleetSearcher::new(meta, imp)
+    }
+
+    #[test]
+    fn direct_search_feasible() {
+        let s = searcher();
+        let cap = uniform_bitops(&s.meta, 4, 4);
+        let out = s
+            .search(&DeviceSpec {
+                name: "edge".into(),
+                bitops_cap: Some(cap),
+                size_cap_bytes: None,
+                alpha: 2.0,
+                weight_only: false,
+            })
+            .unwrap();
+        assert!(out.bitops <= cap);
+        assert_eq!(out.policy.w_bits.len(), 6);
+    }
+
+    #[test]
+    fn fleet_sweep_many_devices() {
+        let s = searcher();
+        let base = uniform_bitops(&s.meta, 6, 6);
+        let devices: Vec<DeviceSpec> = (0..8)
+            .map(|i| DeviceSpec {
+                name: format!("dev{i}"),
+                bitops_cap: Some(base * (60 + 5 * i as u64) / 100),
+                size_cap_bytes: None,
+                alpha: 1.0,
+                weight_only: false,
+            })
+            .collect();
+        let out = s.search_fleet(&devices).unwrap();
+        assert_eq!(out.len(), 8);
+        // looser budgets never cost more importance
+        for w in out.windows(2) {
+            assert!(w[1].cost <= w[0].cost + 1e-9);
+        }
+    }
+
+    #[test]
+    fn no_constraint_rejected() {
+        let s = searcher();
+        assert!(s
+            .search(&DeviceSpec {
+                name: "x".into(),
+                bitops_cap: None,
+                size_cap_bytes: None,
+                alpha: 1.0,
+                weight_only: false
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let s = searcher();
+        let cap_g = uniform_bitops(&s.meta, 4, 4) as f64 / 1e9;
+        let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
+        let req = Json::obj(vec![
+            ("name", Json::from("phone")),
+            ("cap_gbitops", Json::Num(cap_g)),
+            ("alpha", Json::Num(3.0)),
+        ]);
+        let resp = query(&server.addr, &req).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(resp.get("w_bits").unwrap().as_arr().unwrap().len(), 6);
+        assert!(resp.get("solve_us").unwrap().as_f64().unwrap() >= 0.0);
+        // malformed request gets an error response, not a hang
+        let bad = query(&server.addr, &Json::obj(vec![("alpha", Json::Num(1.0))])).unwrap();
+        assert!(!bad.get("ok").unwrap().as_bool().unwrap());
+        server.shutdown();
+    }
+}

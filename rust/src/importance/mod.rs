@@ -1,0 +1,421 @@
+//! Learned layer-wise importance indicators (the paper's §3.3-§3.4).
+//!
+//! * [`IndicatorStore`] holds the bit-specific scale factors
+//!   `s_{w,i}^{(l)}`, `s_{a,j}^{(l)}` — one slot per (layer, bit option),
+//!   plus a slot for the 8-bit pin — with both initialization schemes
+//!   (statistics-based, and the uniform `s_b = 0.1/b` of the Fig. 2
+//!   ablation).
+//! * [`JointTrainer`] implements the one-time training scheme of §3.4:
+//!   each optimizer step is an *atomic operation* of `n+1` forward/backward
+//!   passes — `n` uniform-bit passes (one per option) plus one random
+//!   per-layer assignment pass — whose indicator gradients are scattered
+//!   into the matching slots, aggregated, and applied in a single update.
+//!   Weights may train at their own LR or stay frozen (§3.4 notes frozen
+//!   weights give near-identical indicators).
+//! * [`Importance`] is the extracted result the ILP consumes (eq. 3).
+
+use anyhow::{ensure, Result};
+
+use crate::config::IndicatorCfg;
+use crate::data::batcher::Batcher;
+use crate::models::ModelMeta;
+use crate::quant::{act_qmax, act_scale_init, scale_init_stats, scale_init_uniform, weight_qmax, BitConfig};
+use crate::runtime::ModelBackend;
+use crate::tensor::accumulate;
+use crate::util::rng::Rng;
+
+/// Extracted layer-wise importances: `[layer][bit_option]`.
+#[derive(Debug, Clone)]
+pub struct Importance {
+    pub bits: Vec<u8>,
+    pub w: Vec<Vec<f32>>,
+    pub a: Vec<Vec<f32>>,
+}
+
+impl Importance {
+    /// Reversed variant for the Table-6 "Ours-R" ablation: negate the
+    /// values so the ILP prefers exactly the opposite assignment.
+    pub fn reversed(&self) -> Importance {
+        Importance {
+            bits: self.bits.clone(),
+            w: self.w.iter().map(|r| r.iter().map(|&v| -v).collect()).collect(),
+            a: self.a.iter().map(|r| r.iter().map(|&v| -v).collect()).collect(),
+        }
+    }
+}
+
+/// Bit-specific scale-factor store: `[layer][slot]` for weights and acts.
+#[derive(Debug, Clone)]
+pub struct IndicatorStore {
+    /// Slot bit values: the searchable options followed (if absent) by the
+    /// pin bit-width, so pinned layers train an indicator too.
+    pub slot_bits: Vec<u8>,
+    pub sw: Vec<Vec<f32>>,
+    pub sa: Vec<Vec<f32>>,
+}
+
+impl IndicatorStore {
+    fn slots_for(meta: &ModelMeta) -> Vec<u8> {
+        let mut bits = meta.bit_options.clone();
+        if !bits.contains(&meta.pin_bits) {
+            bits.push(meta.pin_bits);
+        }
+        bits
+    }
+
+    /// Statistics init (LSQ): weights from 2·E|w|/sqrt(qmax) per layer,
+    /// activations from the post-ReLU prior (paper §3.3.2 keeps this as
+    /// the default because it converges faster).
+    pub fn init_stats(meta: &ModelMeta, flat: &[f32]) -> IndicatorStore {
+        let slot_bits = Self::slots_for(meta);
+        let mut sw = Vec::with_capacity(meta.n_qlayers);
+        let mut sa = Vec::with_capacity(meta.n_qlayers);
+        for q in &meta.qlayers {
+            let wslice = meta.weight_slice(q, flat);
+            let mut rw = Vec::with_capacity(slot_bits.len());
+            let mut ra = Vec::with_capacity(slot_bits.len());
+            for &b in &slot_bits {
+                let qw = weight_qmax(b);
+                rw.push(match wslice {
+                    Some(ws) => scale_init_stats(ws, qw),
+                    None => scale_init_uniform(b),
+                });
+                ra.push(act_scale_init(act_qmax(b)));
+            }
+            sw.push(rw);
+            sa.push(ra);
+        }
+        IndicatorStore { slot_bits, sw, sa }
+    }
+
+    /// The same-value init scheme from the Fig. 2 ablation: s_b = 0.1/b
+    /// for every layer (erases per-layer initialization differences).
+    pub fn init_uniform(meta: &ModelMeta) -> IndicatorStore {
+        let slot_bits = Self::slots_for(meta);
+        let row: Vec<f32> = slot_bits.iter().map(|&b| scale_init_uniform(b)).collect();
+        IndicatorStore {
+            slot_bits: slot_bits.clone(),
+            sw: vec![row.clone(); meta.n_qlayers],
+            sa: vec![row; meta.n_qlayers],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sw.len()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slot_bits.len()
+    }
+
+    pub fn slot_of(&self, bits: u8) -> Option<usize> {
+        self.slot_bits.iter().position(|&b| b == bits)
+    }
+
+    /// Per-layer scale vectors for a concrete bit config (the runtime
+    /// inputs of one pass).
+    pub fn gather(&self, cfg: &BitConfig) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(cfg.len() == self.n_layers(), "config/store layer mismatch");
+        let mut w = Vec::with_capacity(cfg.len());
+        let mut a = Vec::with_capacity(cfg.len());
+        for l in 0..cfg.len() {
+            let si = self
+                .slot_of(cfg.w_bits[l])
+                .ok_or_else(|| anyhow::anyhow!("no slot for {} bits", cfg.w_bits[l]))?;
+            let sj = self
+                .slot_of(cfg.a_bits[l])
+                .ok_or_else(|| anyhow::anyhow!("no slot for {} bits", cfg.a_bits[l]))?;
+            w.push(self.sw[l][si].max(1e-6));
+            a.push(self.sa[l][sj].max(1e-6));
+        }
+        Ok((w, a))
+    }
+
+    /// Extract the searchable importances `[layer][bit_option]`.
+    pub fn importance(&self, meta: &ModelMeta) -> Importance {
+        let idx: Vec<usize> =
+            meta.bit_options.iter().map(|&b| self.slot_of(b).expect("option slot")).collect();
+        Importance {
+            bits: meta.bit_options.clone(),
+            w: self.sw.iter().map(|r| idx.iter().map(|&i| r[i]).collect()).collect(),
+            a: self.sa.iter().map(|r| idx.iter().map(|&i| r[i]).collect()).collect(),
+        }
+    }
+}
+
+/// Per-step record for the Fig. 2 training curves.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub mean_loss: f32,
+    pub mean_acc: f32,
+    /// Snapshot of sw (EMA-smoothed) — `[layer][slot]`.
+    pub sw: Vec<Vec<f32>>,
+}
+
+/// Result of a joint training run.
+pub struct TrainedIndicators {
+    pub store: IndicatorStore,
+    pub history: Vec<StepRecord>,
+    /// Possibly-updated weights (identical to input when weight_lr = 0).
+    pub flat: Vec<f32>,
+}
+
+/// The §3.4 joint trainer.
+pub struct JointTrainer<'a, B: ModelBackend + ?Sized> {
+    pub backend: &'a B,
+    pub meta: &'a ModelMeta,
+    pub cfg: IndicatorCfg,
+    pub rng: Rng,
+}
+
+impl<'a, B: ModelBackend + ?Sized> JointTrainer<'a, B> {
+    pub fn new(backend: &'a B, meta: &'a ModelMeta, cfg: IndicatorCfg, rng: Rng) -> Self {
+        JointTrainer { backend, meta, cfg, rng }
+    }
+
+    /// A uniform-bit config at option `b` (pins applied).
+    fn uniform_cfg(&self, b: u8) -> BitConfig {
+        BitConfig::uniform_pinned(self.meta, b, b)
+    }
+
+    /// The random per-layer assignment pass (one-shot-NAS style, §3.4).
+    fn random_cfg(&mut self) -> BitConfig {
+        let opts = &self.meta.bit_options;
+        let mut c = BitConfig {
+            w_bits: (0..self.meta.n_qlayers).map(|_| opts[self.rng.below(opts.len())]).collect(),
+            a_bits: (0..self.meta.n_qlayers).map(|_| opts[self.rng.below(opts.len())]).collect(),
+        };
+        c.apply_pins(self.meta);
+        c
+    }
+
+    /// Run joint training for `cfg.steps` atomic operations.
+    pub fn train(&mut self, flat_init: &[f32], batcher: &mut Batcher) -> Result<TrainedIndicators> {
+        let meta = self.meta;
+        let mut flat = flat_init.to_vec();
+        let mut store = if self.cfg.stats_init {
+            IndicatorStore::init_stats(meta, &flat)
+        } else {
+            IndicatorStore::init_uniform(meta)
+        };
+        let l = meta.n_qlayers;
+        let slots = store.n_slots();
+        let mut history = Vec::with_capacity(self.cfg.steps);
+        // EMA of the store for smoother recorded indicators.
+        let mut ema_sw = store.sw.clone();
+        let ema = self.cfg.ema.clamp(0.0, 0.9999);
+
+        let mut gw_acc = vec![vec![0.0f32; slots]; l];
+        let mut ga_acc = vec![vec![0.0f32; slots]; l];
+        let mut gflat_acc = vec![0.0f32; flat.len()];
+
+        for step in 0..self.cfg.steps {
+            for row in gw_acc.iter_mut().chain(ga_acc.iter_mut()) {
+                row.fill(0.0);
+            }
+            gflat_acc.fill(0.0);
+
+            // The n+1 passes of one atomic operation.
+            let mut configs: Vec<BitConfig> =
+                meta.bit_options.iter().map(|&b| self.uniform_cfg(b)).collect();
+            configs.push(self.random_cfg());
+
+            let mut loss_sum = 0.0f32;
+            let mut acc_sum = 0.0f32;
+            let n_passes = configs.len() as f32;
+            for cfg in &configs {
+                let (sw, sa) = store.gather(cfg)?;
+                let (qw, qa) = cfg.qmax_vectors();
+                let (x, y) = batcher.next_batch();
+                let out = self.backend.train_step(&flat, &sw, &sa, &qw, &qa, x, y)?;
+                loss_sum += out.loss;
+                acc_sum += out.acc;
+                // Scatter the per-layer scale grads into the active slots.
+                for li in 0..l {
+                    let si = store.slot_of(cfg.w_bits[li]).unwrap();
+                    let sj = store.slot_of(cfg.a_bits[li]).unwrap();
+                    gw_acc[li][si] += out.g_sw[li] / n_passes;
+                    ga_acc[li][sj] += out.g_sa[li] / n_passes;
+                }
+                if self.cfg.weight_lr > 0.0 {
+                    accumulate(&mut gflat_acc, &out.g_flat);
+                }
+            }
+
+            // One aggregated update (the indicators were frozen during the
+            // atomic operation, per §3.4).
+            for li in 0..l {
+                for s in 0..slots {
+                    store.sw[li][s] = (store.sw[li][s] - self.cfg.lr * gw_acc[li][s]).max(1e-6);
+                    store.sa[li][s] = (store.sa[li][s] - self.cfg.lr * ga_acc[li][s]).max(1e-6);
+                    ema_sw[li][s] = ema * ema_sw[li][s] + (1.0 - ema) * store.sw[li][s];
+                }
+            }
+            if self.cfg.weight_lr > 0.0 {
+                let scale = self.cfg.weight_lr / n_passes;
+                for (p, g) in flat.iter_mut().zip(&gflat_acc) {
+                    *p -= scale * g;
+                }
+            }
+
+            history.push(StepRecord {
+                step,
+                mean_loss: loss_sum / n_passes,
+                mean_acc: acc_sum / n_passes,
+                sw: ema_sw.clone(),
+            });
+        }
+
+        Ok(TrainedIndicators { store, history, flat })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndicatorCfg;
+    use crate::data::{generate, SynthConfig};
+    use crate::models::ModelMeta;
+    use crate::runtime::mock::MockBackend;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn mock_meta(l: usize, p: usize) -> ModelMeta {
+        // Build a meta matching MockBackend's geometry.
+        let mut params = String::new();
+        let mut qlayers = String::new();
+        let per = p / l;
+        for i in 0..l {
+            if i > 0 {
+                params.push(',');
+                qlayers.push(',');
+            }
+            let size = if i + 1 == l { p - per * (l - 1) } else { per };
+            params.push_str(&format!(
+                r#"{{"name":"l{i}.w","shape":[{size}],"offset":{},"size":{size},"init":"he_dense","fan_in":4}}"#,
+                per * i
+            ));
+            qlayers.push_str(&format!(
+                r#"{{"index":{i},"name":"l{i}","kind":"dense","macs":{},"w_numel":{size},"pinned":{}}}"#,
+                1000 * (i + 1),
+                i == 0 || i + 1 == l
+            ));
+        }
+        let text = format!(
+            r#"{{"name":"mock","param_size":{p},"n_qlayers":{l},
+              "input_shape":[2,2,1],"n_classes":4,
+              "train_batch":4,"eval_batch":8,"serve_batch":2,
+              "bit_options":[2,3,4,5,6],"pin_bits":8,
+              "params":[{params}],"qlayers":[{qlayers}],"artifacts":{{}}}}"#
+        );
+        ModelMeta::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp")).unwrap()
+    }
+
+    fn cfg(steps: usize) -> IndicatorCfg {
+        IndicatorCfg { steps, lr: 0.1, weight_lr: 0.0, stats_init: true, ema: 0.5 }
+    }
+
+    #[test]
+    fn store_has_pin_slot() {
+        let meta = mock_meta(6, 60);
+        let s = IndicatorStore::init_uniform(&meta);
+        assert_eq!(s.slot_bits, vec![2, 3, 4, 5, 6, 8]);
+        assert!(s.slot_of(8).is_some());
+        assert_eq!(s.n_layers(), 6);
+    }
+
+    #[test]
+    fn uniform_init_matches_ablation_formula() {
+        let meta = mock_meta(4, 40);
+        let s = IndicatorStore::init_uniform(&meta);
+        for l in 0..4 {
+            assert!((s.sw[l][0] - 0.05).abs() < 1e-7); // 0.1/2
+            assert!((s.sw[l][2] - 0.025).abs() < 1e-7); // 0.1/4
+        }
+    }
+
+    #[test]
+    fn gather_respects_config() {
+        let meta = mock_meta(4, 40);
+        let mut s = IndicatorStore::init_uniform(&meta);
+        s.sw[1][0] = 0.7; // layer 1, 2-bit slot
+        let mut cfg = BitConfig::uniform(4, 2, 3);
+        cfg.apply_pins(&meta);
+        let (w, a) = s.gather(&cfg).unwrap();
+        assert_eq!(w.len(), 4);
+        assert!((w[1] - 0.7).abs() < 1e-7);
+        // pinned layer 0 reads the 8-bit slot
+        assert!((w[0] - 0.1 / 8.0).abs() < 1e-7);
+        assert!((a[1] - 0.1 / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn joint_training_recovers_mock_sensitivity_order() {
+        let l = 6;
+        let meta = mock_meta(l, 60);
+        let backend = MockBackend::new(l, 60);
+        let data = generate(&SynthConfig { n: 40, h: 2, w: 2, n_classes: 4, ..Default::default() }, 0);
+        let mut batcher = Batcher::new(&data, 4, 3);
+        let flat = vec![0.05f32; 60];
+        let mut tr = JointTrainer::new(&backend, &meta, cfg(300), Rng::new(9));
+        let out = tr.train(&flat, &mut batcher).unwrap();
+        let imp = out.store.importance(&meta);
+
+        // (a) learned scales approach the mock's ground-truth targets
+        for li in 1..l - 1 {
+            for (bi, &b) in meta.bit_options.iter().enumerate() {
+                let target = backend.target_scale(li, crate::quant::weight_qmax(b));
+                assert!(
+                    (imp.w[li][bi] - target).abs() < 0.05 * target.max(0.1),
+                    "layer {li} bits {b}: {} vs {}",
+                    imp.w[li][bi],
+                    target
+                );
+            }
+        }
+        // (b) within a layer, lower bits -> larger importance (Fig. 1/3)
+        for li in 1..l - 1 {
+            assert!(imp.w[li][0] > imp.w[li][4], "layer {li}: {:?}", imp.w[li]);
+        }
+        // (c) across layers at fixed bits, ordering matches ground truth
+        for bi in 0..5 {
+            let (hi, lo) = (1usize, 4usize);
+            assert_eq!(
+                backend.sens[hi] > backend.sens[lo],
+                imp.w[hi][bi] > imp.w[lo][bi],
+                "bit idx {bi}"
+            );
+        }
+        // (d) history recorded every step
+        assert_eq!(out.history.len(), 300);
+        assert!(out.history.iter().all(|r| r.mean_loss.is_finite()));
+    }
+
+    #[test]
+    fn frozen_weights_stay_frozen() {
+        let meta = mock_meta(4, 40);
+        let backend = MockBackend::new(4, 40);
+        let data = generate(&SynthConfig { n: 20, h: 2, w: 2, n_classes: 4, ..Default::default() }, 0);
+        let mut batcher = Batcher::new(&data, 4, 3);
+        let flat = vec![0.3f32; 40];
+        let mut tr = JointTrainer::new(&backend, &meta, cfg(5), Rng::new(1));
+        let out = tr.train(&flat, &mut batcher).unwrap();
+        assert_eq!(out.flat, flat);
+        // with weight_lr > 0 they move
+        let mut c = cfg(5);
+        c.weight_lr = 0.5;
+        let mut tr2 = JointTrainer::new(&backend, &meta, c, Rng::new(1));
+        let out2 = tr2.train(&flat, &mut batcher).unwrap();
+        assert_ne!(out2.flat, flat);
+    }
+
+    #[test]
+    fn reversed_importance_negates() {
+        let meta = mock_meta(4, 40);
+        let s = IndicatorStore::init_uniform(&meta);
+        let imp = s.importance(&meta);
+        let rev = imp.reversed();
+        assert_eq!(rev.w[0][0], -imp.w[0][0]);
+    }
+}

@@ -1,0 +1,30 @@
+//! # limpq — Mixed-Precision Quantization via Learned Layer-wise Importance
+//!
+//! Production-shaped reproduction of Tang et al., *"Mixed-Precision Neural
+//! Network Quantization via Learned Layer-wise Importance"* (cs.LG 2022).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **L1/L2 (build time, Python)**: Pallas LSQ fake-quant kernels + JAX
+//!   QAT models, AOT-lowered to HLO-text artifacts.
+//! - **L3 (this crate)**: the coordinator — PJRT runtime, synthetic data
+//!   substrate, joint importance-indicator training, the from-scratch ILP
+//!   stack (simplex / branch-and-bound / MCKP DP), baselines (HAWQ-style
+//!   Hessian, random, reversed, greedy), pipeline orchestration, fleet
+//!   search service, and the experiment drivers regenerating every table
+//!   and figure in the paper.
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fleet;
+pub mod hessian;
+pub mod importance;
+pub mod models;
+pub mod optim;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod exp;
+pub mod cli;
+pub mod util;

@@ -1,0 +1,17 @@
+//! limpq binary entrypoint: the L3 coordinator launcher.
+use limpq::cli::{dispatch, Args, HELP};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{HELP}");
+        std::process::exit(2);
+    }
+    let code = Args::parse(&argv)
+        .and_then(|args| dispatch(&args))
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e:#}");
+            1
+        });
+    std::process::exit(code);
+}

@@ -1,0 +1,293 @@
+//! Model metadata: the contract with the Python build side.
+//!
+//! `python/compile/aot.py` emits one `<model>_meta.json` per model; this
+//! module parses it into typed structs, initializes the flat parameter
+//! buffer (He-normal convs/dense, ones/zeros for norm affine), and exposes
+//! the per-layer quantities the cost models and searchers consume (MACs,
+//! weight counts, pin flags).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One parameter tensor's slot in the flat buffer.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String,
+    pub fan_in: usize,
+}
+
+/// One quantized layer (weight quantizer + activation quantizer pair).
+#[derive(Debug, Clone)]
+pub struct QLayerMeta {
+    pub index: usize,
+    pub name: String,
+    pub kind: String, // conv | dwconv | pwconv | dense
+    pub macs: u64,
+    pub w_numel: u64,
+    /// First/last layer: pinned at 8 bits (paper §4.1).
+    pub pinned: bool,
+}
+
+/// A lowered artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub bytes: usize,
+}
+
+/// Full model metadata (one per `<model>_meta.json`).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_size: usize,
+    pub n_qlayers: usize,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub serve_batch: usize,
+    pub bit_options: Vec<u8>,
+    pub pin_bits: u8,
+    pub params: Vec<ParamMeta>,
+    pub qlayers: Vec<QLayerMeta>,
+    pub artifacts: Vec<(String, ArtifactMeta)>,
+    /// Directory the meta was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelMeta> {
+        let path = artifacts_dir.join(format!("{model}_meta.json"));
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        Self::from_json(&j, artifacts_dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<ModelMeta> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    offset: p.get("offset")?.as_usize()?,
+                    size: p.get("size")?.as_usize()?,
+                    init: p.get("init")?.as_str()?.to_string(),
+                    fan_in: p.get("fan_in")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let qlayers = j
+            .get("qlayers")?
+            .as_arr()?
+            .iter()
+            .map(|q| {
+                Ok(QLayerMeta {
+                    index: q.get("index")?.as_usize()?,
+                    name: q.get("name")?.as_str()?.to_string(),
+                    kind: q.get("kind")?.as_str()?.to_string(),
+                    macs: q.get("macs")?.as_i64()? as u64,
+                    w_numel: q.get("w_numel")?.as_i64()? as u64,
+                    pinned: q.get("pinned")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .get("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    ArtifactMeta {
+                        file: v.get("file")?.as_str()?.to_string(),
+                        bytes: v.get("bytes")?.as_usize()?,
+                    },
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let meta = ModelMeta {
+            name: j.get("name")?.as_str()?.to_string(),
+            param_size: j.get("param_size")?.as_usize()?,
+            n_qlayers: j.get("n_qlayers")?.as_usize()?,
+            input_shape: j.get("input_shape")?.usize_vec()?,
+            n_classes: j.get("n_classes")?.as_usize()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            serve_batch: j.get("serve_batch")?.as_usize()?,
+            bit_options: j
+                .get("bit_options")?
+                .usize_vec()?
+                .into_iter()
+                .map(|b| b as u8)
+                .collect(),
+            pin_bits: j.get("pin_bits")?.as_usize()? as u8,
+            params,
+            qlayers,
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.qlayers.len() != self.n_qlayers {
+            bail!("{}: qlayer count mismatch", self.name);
+        }
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                bail!("{}: param {} not contiguous (offset {} != {})", self.name, p.name, p.offset, off);
+            }
+            let n: usize = p.shape.iter().product();
+            if n != p.size {
+                bail!("{}: param {} size mismatch", self.name, p.name);
+            }
+            off += p.size;
+        }
+        if off != self.param_size {
+            bail!("{}: param_size {} != sum {}", self.name, self.param_size, off);
+        }
+        for (i, q) in self.qlayers.iter().enumerate() {
+            if q.index != i {
+                bail!("{}: qlayer index gap at {}", self.name, i);
+            }
+        }
+        if self.bit_options.is_empty() {
+            bail!("{}: empty bit options", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn artifact_path(&self, entry: &str) -> Result<PathBuf> {
+        let a = self
+            .artifacts
+            .iter()
+            .find(|(k, _)| k == entry)
+            .with_context(|| format!("{}: no artifact {entry:?}", self.name))?;
+        Ok(self.dir.join(&a.1.file))
+    }
+
+    /// Initialize the flat parameter buffer per the init hints.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.param_size];
+        for p in &self.params {
+            let s = &mut flat[p.offset..p.offset + p.size];
+            match p.init.as_str() {
+                "he_conv" | "he_dense" => crate::tensor::HostTensor::he_init(s, p.fan_in, rng),
+                "ones" => s.fill(1.0),
+                "zeros" => s.fill(0.0),
+                other => {
+                    // Unknown hints: zero-init (forward-compatible).
+                    debug_assert!(false, "unknown init hint {other}");
+                    s.fill(0.0);
+                }
+            }
+        }
+        flat
+    }
+
+    /// Weight slices per q-layer, for statistics-based scale init.
+    /// Relies on the Python-side convention that q-layer `name` owns the
+    /// parameter `"<name>.w"`.
+    pub fn weight_slice<'a>(&self, q: &QLayerMeta, flat: &'a [f32]) -> Option<&'a [f32]> {
+        let pname = format!("{}.w", q.name);
+        self.params
+            .iter()
+            .find(|p| p.name == pname)
+            .map(|p| &flat[p.offset..p.offset + p.size])
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.qlayers.iter().map(|q| q.macs).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.qlayers.iter().map(|q| q.w_numel).sum()
+    }
+}
+
+/// Load the top-level manifest and list available models.
+pub fn list_models(artifacts_dir: &Path) -> Result<Vec<String>> {
+    let path = artifacts_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+    let j = Json::parse(&text)?;
+    Ok(j.get("models")?.as_obj()?.keys().cloned().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta_json() -> String {
+        r#"{
+          "name": "tiny", "param_size": 10, "n_qlayers": 2,
+          "input_shape": [2,2,1], "n_classes": 2,
+          "train_batch": 4, "eval_batch": 8, "serve_batch": 2,
+          "bit_options": [2,3,4,5,6], "pin_bits": 8,
+          "params": [
+            {"name":"l0.w","shape":[2,3],"offset":0,"size":6,"init":"he_dense","fan_in":2},
+            {"name":"l0.b","shape":[3],"offset":6,"size":3,"init":"zeros","fan_in":2},
+            {"name":"g.gamma","shape":[1],"offset":9,"size":1,"init":"ones","fan_in":1}
+          ],
+          "qlayers": [
+            {"index":0,"name":"l0","kind":"dense","macs":100,"w_numel":6,"pinned":true},
+            {"index":1,"name":"l1","kind":"conv","macs":300,"w_numel":4,"pinned":true}
+          ],
+          "artifacts": {"train_step": {"file":"tiny_train_step.hlo.txt","sha256":"x","bytes":5}}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let j = Json::parse(&fake_meta_json()).unwrap();
+        let m = ModelMeta::from_json(&j, Path::new("/tmp")).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.qlayers[1].kind, "conv");
+        assert_eq!(m.total_macs(), 400);
+        assert_eq!(m.total_weights(), 10);
+        assert!(m.artifact_path("train_step").unwrap().ends_with("tiny_train_step.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn init_respects_hints() {
+        let j = Json::parse(&fake_meta_json()).unwrap();
+        let m = ModelMeta::from_json(&j, Path::new("/tmp")).unwrap();
+        let flat = m.init_params(&mut Rng::new(1));
+        assert_eq!(flat.len(), 10);
+        assert!(flat[0..6].iter().any(|&v| v != 0.0)); // he
+        assert!(flat[6..9].iter().all(|&v| v == 0.0)); // zeros
+        assert_eq!(flat[9], 1.0); // ones
+    }
+
+    #[test]
+    fn validate_catches_gaps() {
+        let bad = fake_meta_json().replace("\"offset\":6", "\"offset\":7");
+        let j = Json::parse(&bad).unwrap();
+        assert!(ModelMeta::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn weight_slice_lookup() {
+        let j = Json::parse(&fake_meta_json()).unwrap();
+        let m = ModelMeta::from_json(&j, Path::new("/tmp")).unwrap();
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let w = m.weight_slice(&m.qlayers[0], &flat).unwrap();
+        assert_eq!(w, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(m.weight_slice(&m.qlayers[1], &flat).is_none());
+    }
+}

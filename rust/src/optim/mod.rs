@@ -1,0 +1,147 @@
+//! Optimizer substrate: SGD + momentum + weight decay on flat buffers,
+//! with the cosine LR schedule + linear warmup the paper fine-tunes with
+//! (§4.1: SGD, cosine scheduler, warmup epochs).
+
+/// Cosine learning-rate schedule with linear warmup.
+#[derive(Debug, Clone)]
+pub struct CosineLr {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr: f32,
+}
+
+impl CosineLr {
+    pub fn new(base_lr: f32, warmup_steps: usize, total_steps: usize) -> CosineLr {
+        CosineLr { base_lr, warmup_steps, total_steps: total_steps.max(1), min_lr: 0.0 }
+    }
+
+    pub fn constant(lr: f32) -> CosineLr {
+        CosineLr { base_lr: lr, warmup_steps: 0, total_steps: usize::MAX, min_lr: lr }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps == usize::MAX {
+            return self.base_lr;
+        }
+        let t = (step - self.warmup_steps) as f32
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+        let t = t.clamp(0.0, 1.0);
+        self.min_lr
+            + 0.5 * (self.base_lr - self.min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// SGD with classical momentum and decoupled weight decay.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<f32>,
+    pub steps: usize,
+}
+
+impl Sgd {
+    pub fn new(n: usize, momentum: f32, weight_decay: f32) -> Sgd {
+        Sgd { momentum, weight_decay, velocity: vec![0.0; n], steps: 0 }
+    }
+
+    /// One update: v = m·v + g + wd·p ; p -= lr·v
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grads.len());
+        debug_assert_eq!(params.len(), self.velocity.len());
+        let m = self.momentum;
+        let wd = self.weight_decay;
+        for ((p, &g), v) in params.iter_mut().zip(grads).zip(self.velocity.iter_mut()) {
+            *v = m * *v + g + wd * *p;
+            *p -= lr * *v;
+        }
+        self.steps += 1;
+    }
+
+    pub fn reset(&mut self) {
+        self.velocity.fill(0.0);
+        self.steps = 0;
+    }
+}
+
+/// Gradient clipping by global L2 norm; returns the pre-clip norm.
+pub fn clip_grad_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = crate::tensor::l2_norm(grads) as f32;
+    if norm > max_norm && norm > 0.0 {
+        crate::tensor::scale(max_norm / norm, grads);
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_shape() {
+        let s = CosineLr::new(1.0, 10, 110);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6); // warmup start
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-6); // warmup end
+        assert!(s.lr_at(30) > s.lr_at(80)); // decays
+        assert!(s.lr_at(109) < 0.01); // near zero at end
+        let c = CosineLr::constant(0.5);
+        assert_eq!(c.lr_at(0), 0.5);
+        assert_eq!(c.lr_at(10_000), 0.5);
+    }
+
+    #[test]
+    fn sgd_minimizes_quadratic() {
+        // f(p) = 0.5*||p - t||^2, grad = p - t
+        let t = [1.0f32, -2.0, 3.0];
+        let mut p = [0.0f32; 3];
+        let mut opt = Sgd::new(3, 0.9, 0.0);
+        for _ in 0..200 {
+            let g: Vec<f32> = p.iter().zip(&t).map(|(pi, ti)| pi - ti).collect();
+            opt.step(&mut p, &g, 0.05);
+        }
+        for (pi, ti) in p.iter().zip(&t) {
+            assert!((pi - ti).abs() < 1e-3, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut p = [10.0f32];
+        let mut opt = Sgd::new(1, 0.0, 0.1);
+        for _ in 0..50 {
+            opt.step(&mut p, &[0.0], 0.1);
+        }
+        assert!(p[0] < 10.0 && p[0] > 0.0);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |m: f32| {
+            let mut p = [5.0f32];
+            let mut opt = Sgd::new(1, m, 0.0);
+            let mut steps = 0;
+            while p[0].abs() > 0.1 && steps < 1000 {
+                let g = [p[0]];
+                opt.step(&mut p, &g, 0.01);
+                steps += 1;
+            }
+            steps
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn clip_norm() {
+        let mut g = vec![3.0f32, 4.0];
+        let pre = clip_grad_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((crate::tensor::l2_norm(&g) - 1.0).abs() < 1e-6);
+        let mut g2 = vec![0.3f32, 0.4];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]); // untouched below threshold
+    }
+}

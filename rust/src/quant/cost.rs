@@ -1,0 +1,112 @@
+//! Cost models: BitOps and model size (the paper's two constraint types).
+//!
+//! BitOps(l, b_w, b_a) = MACs_l · b_w · b_a           (paper eq. 2b / 3b)
+//! size(l, b_w)        = w_numel_l · b_w / 8 bytes    (Table 3/5 "Size")
+
+use crate::models::ModelMeta;
+use crate::quant::BitConfig;
+
+/// BitOps of one layer at a (w, a) bit pair.
+pub fn layer_bitops(macs: u64, w_bits: u8, a_bits: u8) -> u64 {
+    macs * w_bits as u64 * a_bits as u64
+}
+
+/// Total BitOps of a policy (per example).
+pub fn total_bitops(meta: &ModelMeta, cfg: &BitConfig) -> u64 {
+    meta.qlayers
+        .iter()
+        .map(|q| layer_bitops(q.macs, cfg.w_bits[q.index], cfg.a_bits[q.index]))
+        .sum()
+}
+
+/// Total BitOps in G (the unit the paper's tables report).
+pub fn total_bitops_g(meta: &ModelMeta, cfg: &BitConfig) -> f64 {
+    total_bitops(meta, cfg) as f64 / 1e9
+}
+
+/// Quantized weight bytes of one layer.
+pub fn layer_size_bits(w_numel: u64, w_bits: u8) -> u64 {
+    w_numel * w_bits as u64
+}
+
+/// Quantized model size in bytes.
+pub fn model_size_bytes(meta: &ModelMeta, cfg: &BitConfig) -> u64 {
+    let bits: u64 = meta
+        .qlayers
+        .iter()
+        .map(|q| layer_size_bits(q.w_numel, cfg.w_bits[q.index]))
+        .sum();
+    bits.div_ceil(8)
+}
+
+/// FP32 model size in bytes (weights of quantized layers only — matches
+/// how the paper computes compression rate).
+pub fn fp_size_bytes(meta: &ModelMeta) -> u64 {
+    meta.total_weights() * 4
+}
+
+/// Weight compression rate ("W-C" column of Table 3).
+pub fn compression_rate(meta: &ModelMeta, cfg: &BitConfig) -> f64 {
+    fp_size_bytes(meta) as f64 / model_size_bytes(meta, cfg) as f64
+}
+
+/// BitOps of the uniform (fixed-precision) baseline at w/a bits, with
+/// first/last pinned — the reference constraint levels in Tables 2/4
+/// ("3-bit level", "4-bit level").
+pub fn uniform_bitops(meta: &ModelMeta, w: u8, a: u8) -> u64 {
+    total_bitops(meta, &BitConfig::uniform_pinned(meta, w, a))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelMeta;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn meta2() -> ModelMeta {
+        let j = Json::parse(
+            r#"{
+          "name": "t", "param_size": 10, "n_qlayers": 2,
+          "input_shape": [2,2,1], "n_classes": 2,
+          "train_batch": 4, "eval_batch": 8, "serve_batch": 2,
+          "bit_options": [2,3,4,5,6], "pin_bits": 8,
+          "params": [
+            {"name":"l0.w","shape":[10],"offset":0,"size":10,"init":"zeros","fan_in":2}
+          ],
+          "qlayers": [
+            {"index":0,"name":"l0","kind":"dense","macs":1000,"w_numel":100,"pinned":false},
+            {"index":1,"name":"l1","kind":"conv","macs":500,"w_numel":50,"pinned":false}
+          ],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap();
+        ModelMeta::from_json(&j, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn bitops_formula() {
+        assert_eq!(layer_bitops(1000, 4, 4), 16000);
+        let m = meta2();
+        let c = BitConfig { w_bits: vec![4, 2], a_bits: vec![4, 3] };
+        assert_eq!(total_bitops(&m, &c), 1000 * 16 + 500 * 6);
+    }
+
+    #[test]
+    fn size_and_compression() {
+        let m = meta2();
+        let c = BitConfig::uniform(2, 4, 4);
+        assert_eq!(model_size_bytes(&m, &c), (150 * 4_u64).div_ceil(8));
+        assert_eq!(fp_size_bytes(&m), 600);
+        assert!((compression_rate(&m, &c) - 8.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn more_bits_cost_more() {
+        let m = meta2();
+        for b in 2..6u8 {
+            assert!(uniform_bitops(&m, b, b) < uniform_bitops(&m, b + 1, b + 1));
+        }
+    }
+}

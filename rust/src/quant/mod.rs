@@ -1,0 +1,192 @@
+//! Quantization host math: bit-width bookkeeping, clip bounds, scale
+//! initialization, and the reference fake-quantizer used by unit tests.
+//!
+//! The quantizer semantics mirror `python/compile/kernels/ref.py`
+//! (LSQ, paper eq. 1): weights symmetric signed, activations unsigned.
+
+pub mod cost;
+pub mod int_infer;
+pub mod policy_io;
+
+use anyhow::{bail, Result};
+
+use crate::models::ModelMeta;
+use crate::tensor::mean_abs;
+
+/// The effective "off" qmax: ~2^23 keeps round(v/s) exact in f32, so a
+/// layer quantized with this bound behaves like a full-precision layer
+/// (used by the Fig.1 solo-quantization contrast experiment).
+pub const QMAX_OFF: f32 = 8_388_607.0;
+
+/// Clip bounds for a weight quantizer at `bits` (symmetric signed).
+pub fn weight_bounds(bits: u8) -> (f32, f32) {
+    let qmax = ((1u32 << (bits - 1)) - 1) as f32;
+    (-(qmax + 1.0), qmax)
+}
+
+/// Clip bounds for an activation quantizer at `bits` (unsigned).
+pub fn act_bounds(bits: u8) -> (f32, f32) {
+    (0.0, ((1u32 << bits) - 1) as f32)
+}
+
+/// qmax for weights at `bits`.
+pub fn weight_qmax(bits: u8) -> f32 {
+    weight_bounds(bits).1
+}
+
+/// qmax for activations at `bits`.
+pub fn act_qmax(bits: u8) -> f32 {
+    act_bounds(bits).1
+}
+
+/// A full per-layer bit assignment (the MPQ policy "S" of the paper).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitConfig {
+    pub w_bits: Vec<u8>,
+    pub a_bits: Vec<u8>,
+}
+
+impl BitConfig {
+    pub fn uniform(n_layers: usize, w: u8, a: u8) -> BitConfig {
+        BitConfig { w_bits: vec![w; n_layers], a_bits: vec![a; n_layers] }
+    }
+
+    /// Uniform config with first/last pinned to `pin_bits`.
+    pub fn uniform_pinned(meta: &ModelMeta, w: u8, a: u8) -> BitConfig {
+        let mut c = Self::uniform(meta.n_qlayers, w, a);
+        c.apply_pins(meta);
+        c
+    }
+
+    pub fn apply_pins(&mut self, meta: &ModelMeta) {
+        for q in &meta.qlayers {
+            if q.pinned {
+                self.w_bits[q.index] = meta.pin_bits;
+                self.a_bits[q.index] = meta.pin_bits;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.w_bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.w_bits.is_empty()
+    }
+
+    /// Per-layer qmax vectors — the runtime inputs carrying the bit-widths
+    /// into the static HLO (DESIGN.md §3).
+    pub fn qmax_vectors(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.w_bits.iter().map(|&b| weight_qmax(b)).collect(),
+            self.a_bits.iter().map(|&b| act_qmax(b)).collect(),
+        )
+    }
+
+    pub fn validate(&self, meta: &ModelMeta) -> Result<()> {
+        if self.w_bits.len() != meta.n_qlayers || self.a_bits.len() != meta.n_qlayers {
+            bail!("bit config length {} != {} layers", self.w_bits.len(), meta.n_qlayers);
+        }
+        for q in &meta.qlayers {
+            let (w, a) = (self.w_bits[q.index], self.a_bits[q.index]);
+            if q.pinned {
+                if w != meta.pin_bits || a != meta.pin_bits {
+                    bail!("layer {} is pinned to {} bits, got W{w}A{a}", q.name, meta.pin_bits);
+                }
+            } else if !meta.bit_options.contains(&w) || !meta.bit_options.contains(&a) {
+                bail!("layer {}: W{w}A{a} outside options {:?}", q.name, meta.bit_options);
+            }
+        }
+        Ok(())
+    }
+
+    /// Average weight bit-width over non-pinned layers (weighted by size).
+    pub fn avg_w_bits(&self, meta: &ModelMeta) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for q in &meta.qlayers {
+            num += self.w_bits[q.index] as f64 * q.w_numel as f64;
+            den += q.w_numel as f64;
+        }
+        num / den
+    }
+}
+
+/// Reference host-side fake-quantizer (for tests / sanity checks only;
+/// the real path runs inside the AOT artifacts).
+pub fn fake_quant_host(v: &[f32], s: f32, qmin: f32, qmax: f32) -> Vec<f32> {
+    let s = s.max(1e-9);
+    v.iter().map(|&x| (x / s).clamp(qmin, qmax).round_ties_even() * s).collect()
+}
+
+/// LSQ statistics-based scale init (paper §3.3.2 / LSQ+):
+/// s0 = 2·E|w| / sqrt(qmax).
+pub fn scale_init_stats(values: &[f32], qmax: f32) -> f32 {
+    (2.0 * mean_abs(values) as f32 / qmax.sqrt()).max(1e-6)
+}
+
+/// Uniform-value init scheme from the paper's Fig. 2 ablation:
+/// s_b = 0.1 / b.
+pub fn scale_init_uniform(bits: u8) -> f32 {
+    0.1 / bits as f32
+}
+
+/// Activation scale init when no calibration data is available:
+/// assume post-ReLU activations with E|a| ≈ 0.5.
+pub fn act_scale_init(qmax: f32) -> f32 {
+    (2.0 * 0.5 / qmax.sqrt()).max(1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_match_paper_eq1() {
+        assert_eq!(weight_bounds(2), (-2.0, 1.0));
+        assert_eq!(weight_bounds(4), (-8.0, 7.0));
+        assert_eq!(weight_bounds(8), (-128.0, 127.0));
+        assert_eq!(act_bounds(2), (0.0, 3.0));
+        assert_eq!(act_bounds(4), (0.0, 15.0));
+        assert_eq!(act_bounds(8), (0.0, 255.0));
+    }
+
+    #[test]
+    fn fake_quant_host_matches_semantics() {
+        let v = [0.26, -0.26, 10.0, -10.0];
+        let q = fake_quant_host(&v, 0.1, -8.0, 7.0);
+        // 0.26/0.1=2.6 -> 3 -> 0.3 ; 10/0.1=100 -> clip 7 -> 0.7
+        assert!((q[0] - 0.3).abs() < 1e-6);
+        assert!((q[1] + 0.3).abs() < 1e-6);
+        assert!((q[2] - 0.7).abs() < 1e-6);
+        assert!((q[3] + 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_inits() {
+        let w = [0.1f32, -0.1, 0.2, -0.2];
+        let s = scale_init_stats(&w, 7.0);
+        assert!((s - 2.0 * 0.15 / 7f32.sqrt()).abs() < 1e-6);
+        assert!((scale_init_uniform(2) - 0.05).abs() < 1e-9);
+        assert!(scale_init_uniform(2) > scale_init_uniform(6)); // grows as bits shrink
+        assert!(act_scale_init(3.0) > act_scale_init(255.0));
+    }
+
+    #[test]
+    fn qmax_off_is_fp_like() {
+        let v = [0.123456f32, -3.14159];
+        let q = fake_quant_host(&v, 1e-4, -QMAX_OFF - 1.0, QMAX_OFF);
+        for (a, b) in q.iter().zip(v.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bitconfig_qmax_vectors() {
+        let c = BitConfig { w_bits: vec![2, 8], a_bits: vec![3, 4] };
+        let (qw, qa) = c.qmax_vectors();
+        assert_eq!(qw, vec![1.0, 127.0]);
+        assert_eq!(qa, vec![7.0, 15.0]);
+    }
+}

@@ -1,0 +1,184 @@
+//! MPQ policy (de)serialization — the deployment artifact.
+//!
+//! A searched policy is the *product* of this whole system: a per-layer
+//! (w_bits, a_bits) assignment plus provenance (model, constraint, cost).
+//! This module defines the JSON wire format the CLI emits
+//! (`limpq search --save`), the fleet server speaks, and downstream
+//! deployment tooling would consume.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::models::ModelMeta;
+use crate::quant::BitConfig;
+use crate::util::json::Json;
+
+/// A policy plus provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyFile {
+    pub model: String,
+    pub policy: BitConfig,
+    pub layer_names: Vec<String>,
+    pub bitops: u64,
+    pub size_bits: u64,
+    pub objective: f64,
+    pub alpha: f64,
+}
+
+impl PolicyFile {
+    pub fn new(
+        meta: &ModelMeta,
+        policy: BitConfig,
+        bitops: u64,
+        size_bits: u64,
+        objective: f64,
+        alpha: f64,
+    ) -> PolicyFile {
+        PolicyFile {
+            model: meta.name.clone(),
+            layer_names: meta.qlayers.iter().map(|q| q.name.clone()).collect(),
+            policy,
+            bitops,
+            size_bits,
+            objective,
+            alpha,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::from("limpq-policy-v1")),
+            ("model", Json::from(self.model.as_str())),
+            ("layers", Json::Arr(self.layer_names.iter().map(|n| Json::from(n.as_str())).collect())),
+            ("w_bits", Json::arr_usize(&self.policy.w_bits.iter().map(|&b| b as usize).collect::<Vec<_>>())),
+            ("a_bits", Json::arr_usize(&self.policy.a_bits.iter().map(|&b| b as usize).collect::<Vec<_>>())),
+            ("bitops", Json::Num(self.bitops as f64)),
+            ("size_bits", Json::Num(self.size_bits as f64)),
+            ("objective", Json::Num(self.objective)),
+            ("alpha", Json::Num(self.alpha)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PolicyFile> {
+        ensure!(
+            j.get("format")?.as_str()? == "limpq-policy-v1",
+            "unknown policy format {:?}",
+            j.get("format")?
+        );
+        let w_bits: Vec<u8> = j.get("w_bits")?.usize_vec()?.into_iter().map(|b| b as u8).collect();
+        let a_bits: Vec<u8> = j.get("a_bits")?.usize_vec()?.into_iter().map(|b| b as u8).collect();
+        ensure!(w_bits.len() == a_bits.len(), "w/a length mismatch");
+        let layer_names = j
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(layer_names.len() == w_bits.len(), "layer-name count mismatch");
+        Ok(PolicyFile {
+            model: j.get("model")?.as_str()?.to_string(),
+            policy: BitConfig { w_bits, a_bits },
+            layer_names,
+            bitops: j.get("bitops")?.as_f64()? as u64,
+            size_bits: j.get("size_bits")?.as_f64()? as u64,
+            objective: j.get("objective")?.as_f64()?,
+            alpha: j.get("alpha")?.as_f64()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string()).with_context(|| format!("write {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<PolicyFile> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Validate against a model's metadata before deployment.
+    pub fn check_against(&self, meta: &ModelMeta) -> Result<()> {
+        ensure!(self.model == meta.name, "policy for {:?}, model is {:?}", self.model, meta.name);
+        ensure!(self.policy.len() == meta.n_qlayers, "layer count mismatch");
+        for (i, q) in meta.qlayers.iter().enumerate() {
+            ensure!(self.layer_names[i] == q.name, "layer {} name mismatch", i);
+        }
+        self.policy.validate(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn meta() -> ModelMeta {
+        let text = r#"{"name":"m","param_size":10,"n_qlayers":2,
+          "input_shape":[2,2,1],"n_classes":2,
+          "train_batch":4,"eval_batch":8,"serve_batch":2,
+          "bit_options":[2,3,4,5,6],"pin_bits":8,
+          "params":[{"name":"a.w","shape":[10],"offset":0,"size":10,"init":"zeros","fan_in":1}],
+          "qlayers":[
+            {"index":0,"name":"a","kind":"conv","macs":10,"w_numel":10,"pinned":true},
+            {"index":1,"name":"b","kind":"conv","macs":10,"w_numel":10,"pinned":true}],
+          "artifacts":{}}"#;
+        ModelMeta::from_json(&Json::parse(text).unwrap(), Path::new("/tmp")).unwrap()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("limpq_pol_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = meta();
+        let pf = PolicyFile::new(
+            &m,
+            BitConfig { w_bits: vec![8, 8], a_bits: vec![8, 8] },
+            1280,
+            160,
+            0.25,
+            3.0,
+        );
+        let p = tmp("rt.json");
+        pf.save(&p).unwrap();
+        let loaded = PolicyFile::load(&p).unwrap();
+        assert_eq!(loaded, pf);
+        loaded.check_against(&m).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_model() {
+        let m = meta();
+        let mut pf = PolicyFile::new(
+            &m,
+            BitConfig { w_bits: vec![8, 8], a_bits: vec![8, 8] },
+            0,
+            0,
+            0.0,
+            1.0,
+        );
+        pf.model = "other".into();
+        assert!(pf.check_against(&m).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let j = Json::parse(r#"{"format":"nope"}"#).unwrap();
+        assert!(PolicyFile::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_pin_violation() {
+        let m = meta();
+        let pf = PolicyFile::new(
+            &m,
+            BitConfig { w_bits: vec![4, 8], a_bits: vec![8, 8] }, // layer 0 pinned to 8
+            0,
+            0,
+            0.0,
+            1.0,
+        );
+        assert!(pf.check_against(&m).is_err());
+    }
+}

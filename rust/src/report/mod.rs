@@ -1,0 +1,130 @@
+//! Report rendering: aligned ASCII tables (the paper-table emitters) and
+//! bit-assignment "figures" (Fig. 4 style bar charts) for the terminal,
+//! plus CSV sidecars via `coordinator::metrics`.
+
+use std::fmt::Write as _;
+
+/// A simple rectangular table with aligned column rendering.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String| {
+            let total: usize = width.iter().sum::<usize>() + 3 * ncol + 1;
+            let _ = writeln!(out, "{}", "-".repeat(total));
+        };
+        line(&mut out);
+        let _ = write!(out, "|");
+        for (i, h) in self.headers.iter().enumerate() {
+            let _ = write!(out, " {:>w$} |", h, w = width[i]);
+        }
+        let _ = writeln!(out);
+        line(&mut out);
+        for row in &self.rows {
+            let _ = write!(out, "|");
+            for (i, c) in row.iter().enumerate() {
+                let _ = write!(out, " {:>w$} |", c, w = width[i]);
+            }
+            let _ = writeln!(out);
+        }
+        line(&mut out);
+        out
+    }
+}
+
+/// Fig.-4 style per-layer bit-assignment chart.
+pub fn bit_chart(title: &str, names: &[String], w_bits: &[u8], a_bits: &[u8]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let wmax = names.iter().map(|n| n.len()).max().unwrap_or(4).max(5);
+    let _ = writeln!(out, "{:<wmax$}  {:>2} {:<10}  {:>2} {:<10}", "layer", "W", "", "A", "");
+    for (i, n) in names.iter().enumerate() {
+        let bw = "#".repeat(w_bits[i] as usize);
+        let ba = "*".repeat(a_bits[i] as usize);
+        let _ = writeln!(out, "{n:<wmax$}  {:>2} {bw:<10}  {:>2} {ba:<10}", w_bits[i], a_bits[i]);
+    }
+    out
+}
+
+/// Format helpers for paper-style cells.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}", 100.0 * v)
+}
+
+pub fn gops(bitops: u64) -> String {
+    format!("{:.3}", bitops as f64 / 1e9)
+}
+
+pub fn mbytes(bytes: u64) -> String {
+    format!("{:.3}", bytes as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["method", "acc"]);
+        t.row(vec!["ours".into(), "71.8".into()]);
+        t.row(vec!["uniform-long-name".into(), "69.1".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("ours"));
+        let widths: Vec<usize> =
+            r.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn chart_contains_bits() {
+        let c = bit_chart("bits", &["conv1".into(), "conv2".into()], &[4, 2], &[6, 3]);
+        assert!(c.contains("####"));
+        assert!(c.contains("***"));
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(pct(0.71845), "71.84"); // rounds toward nearest repr
+        assert_eq!(gops(23_070_000_000), "23.070");
+        assert_eq!(mbytes(7_970_000), "7.970");
+    }
+}

@@ -1,0 +1,97 @@
+//! Runtime: executes the AOT-compiled HLO artifacts from the L3 hot path.
+//!
+//! Two implementations of [`ModelBackend`]:
+//!
+//! * [`pjrt::PjrtBackend`] — the real thing: PJRT CPU client via the `xla`
+//!   crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `compile` → `execute`), one compiled executable per entry point.
+//! * [`mock::MockBackend`] — an analytic stand-in with *known* layer
+//!   sensitivities, so the coordinator / importance-trainer / pipeline are
+//!   unit-testable without artifacts and their convergence can be asserted
+//!   against ground truth.
+//!
+//! Python never appears here; after `make artifacts` the binary is
+//! self-contained.
+
+pub mod mock;
+pub mod pjrt;
+
+use anyhow::Result;
+
+/// Output of one quantized forward/backward pass.
+#[derive(Debug, Clone)]
+pub struct TrainOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub g_flat: Vec<f32>,
+    pub g_sw: Vec<f32>,
+    pub g_sa: Vec<f32>,
+}
+
+/// Output of one evaluation batch.
+#[derive(Debug, Clone, Default)]
+pub struct EvalOut {
+    pub loss_sum: f32,
+    pub correct: f32,
+}
+
+/// Model-level execution interface the coordinator programs against.
+///
+/// All tensors are flat host `f32`/`i32` slices; shapes are fixed by the
+/// artifact (batch sizes from the model meta).  Bit-widths travel as
+/// per-layer `qmax` vectors (see DESIGN.md §3 "Static-HLO trick").
+pub trait ModelBackend {
+    fn n_layers(&self) -> usize;
+    fn param_size(&self) -> usize;
+    fn train_batch(&self) -> usize;
+    fn eval_batch(&self) -> usize;
+    fn input_elems(&self) -> usize;
+    fn n_classes(&self) -> usize;
+
+    /// Quantized forward/backward (one of the paper's n+1 atomic passes).
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        qmax_w: &[f32],
+        qmax_a: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<TrainOut>;
+
+    /// Quantized eval batch: (summed loss, correct count).
+    #[allow(clippy::too_many_arguments)]
+    fn eval_step(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        qmax_w: &[f32],
+        qmax_a: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOut>;
+
+    /// Full-precision forward/backward: (loss, acc, g_flat).
+    fn fp_train_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32, Vec<f32>)>;
+
+    /// Full-precision eval batch.
+    fn fp_eval(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut>;
+
+    /// Hessian-vector product on the FP loss (HAWQ baseline).
+    fn hvp(&self, flat: &[f32], v: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>>;
+
+    /// Quantized inference logits for a serve-sized batch.
+    #[allow(clippy::too_many_arguments)]
+    fn logits(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        qmax_w: &[f32],
+        qmax_a: &[f32],
+        x: &[f32],
+    ) -> Result<Vec<f32>>;
+}

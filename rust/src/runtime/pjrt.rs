@@ -1,0 +1,255 @@
+//! PJRT-backed [`ModelBackend`]: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, and executes them with host buffers.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* interchange
+//! (`HloModuleProto::from_text_file` reassigns 64-bit jax instruction ids
+//! that xla_extension 0.5.1 would otherwise reject), `return_tuple=True`
+//! lowering unwrapped with `decompose_tuple`.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{EvalOut, ModelBackend, TrainOut};
+use crate::models::ModelMeta;
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(client: &PjRtClient, path: &Path) -> Result<Executable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+
+    /// Execute with the given literals; unwrap the output tuple into flat
+    /// f32 vectors (scalars become length-1 vectors).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("{}: output conversion: {e}", self.name)))
+            .collect()
+    }
+}
+
+/// f32 literal with shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal with shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// All six entry points of one model, compiled and ready.
+pub struct PjrtBackend {
+    pub meta: ModelMeta,
+    train: Executable,
+    eval: Executable,
+    fp_train: Executable,
+    fp_eval: Executable,
+    hvp: Executable,
+    logits: Executable,
+    /// PJRT CPU executions are not re-entrant per executable in this build;
+    /// serialize dispatch (single-device CPU anyway).
+    gate: Mutex<()>,
+}
+
+impl PjrtBackend {
+    /// Compile all entry points of `model` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let meta = ModelMeta::load(artifacts_dir, model)?;
+        let get = |entry: &str| -> Result<Executable> {
+            Executable::load(&client, &meta.artifact_path(entry)?)
+        };
+        Ok(PjrtBackend {
+            train: get("train_step")?,
+            eval: get("eval")?,
+            fp_train: get("fp_train_step")?,
+            fp_eval: get("fp_eval")?,
+            hvp: get("hvp")?,
+            logits: get("logits")?,
+            meta,
+            gate: Mutex::new(()),
+        })
+    }
+
+    fn img_dims(&self, batch: usize) -> Vec<usize> {
+        let mut d = vec![batch];
+        d.extend_from_slice(&self.meta.input_shape);
+        d
+    }
+
+    fn svec(&self, v: &[f32]) -> Result<Literal> {
+        lit_f32(v, &[self.meta.n_qlayers])
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn n_layers(&self) -> usize {
+        self.meta.n_qlayers
+    }
+    fn param_size(&self) -> usize {
+        self.meta.param_size
+    }
+    fn train_batch(&self) -> usize {
+        self.meta.train_batch
+    }
+    fn eval_batch(&self) -> usize {
+        self.meta.eval_batch
+    }
+    fn input_elems(&self) -> usize {
+        self.meta.input_shape.iter().product()
+    }
+    fn n_classes(&self) -> usize {
+        self.meta.n_classes
+    }
+
+    fn train_step(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        qmax_w: &[f32],
+        qmax_a: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<TrainOut> {
+        let b = self.meta.train_batch;
+        let inputs = [
+            lit_f32(flat, &[self.meta.param_size])?,
+            self.svec(sw)?,
+            self.svec(sa)?,
+            self.svec(qmax_w)?,
+            self.svec(qmax_a)?,
+            lit_f32(x, &self.img_dims(b))?,
+            lit_i32(y, &[b])?,
+        ];
+        let _g = self.gate.lock().unwrap();
+        let out = self.train.run(&inputs)?;
+        let [loss, acc, g_flat, g_sw, g_sa]: [Vec<f32>; 5] =
+            out.try_into().map_err(|v: Vec<_>| anyhow!("train_step: {} outputs", v.len()))?;
+        Ok(TrainOut { loss: loss[0], acc: acc[0], g_flat, g_sw, g_sa })
+    }
+
+    fn eval_step(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        qmax_w: &[f32],
+        qmax_a: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOut> {
+        let b = self.meta.eval_batch;
+        let inputs = [
+            lit_f32(flat, &[self.meta.param_size])?,
+            self.svec(sw)?,
+            self.svec(sa)?,
+            self.svec(qmax_w)?,
+            self.svec(qmax_a)?,
+            lit_f32(x, &self.img_dims(b))?,
+            lit_i32(y, &[b])?,
+        ];
+        let _g = self.gate.lock().unwrap();
+        let out = self.eval.run(&inputs)?;
+        Ok(EvalOut { loss_sum: out[0][0], correct: out[1][0] })
+    }
+
+    fn fp_train_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32, Vec<f32>)> {
+        let b = self.meta.train_batch;
+        let inputs = [
+            lit_f32(flat, &[self.meta.param_size])?,
+            lit_f32(x, &self.img_dims(b))?,
+            lit_i32(y, &[b])?,
+        ];
+        let _g = self.gate.lock().unwrap();
+        let mut out = self.fp_train.run(&inputs)?;
+        let g_flat = out.pop().ok_or_else(|| anyhow!("fp_train_step: empty output"))?;
+        Ok((out[0][0], out[1][0], g_flat))
+    }
+
+    fn fp_eval(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let b = self.meta.eval_batch;
+        let inputs = [
+            lit_f32(flat, &[self.meta.param_size])?,
+            lit_f32(x, &self.img_dims(b))?,
+            lit_i32(y, &[b])?,
+        ];
+        let _g = self.gate.lock().unwrap();
+        let out = self.fp_eval.run(&inputs)?;
+        Ok(EvalOut { loss_sum: out[0][0], correct: out[1][0] })
+    }
+
+    fn hvp(&self, flat: &[f32], v: &[f32], x: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let b = self.meta.train_batch;
+        let inputs = [
+            lit_f32(flat, &[self.meta.param_size])?,
+            lit_f32(v, &[self.meta.param_size])?,
+            lit_f32(x, &self.img_dims(b))?,
+            lit_i32(y, &[b])?,
+        ];
+        let _g = self.gate.lock().unwrap();
+        let mut out = self.hvp.run(&inputs)?;
+        out.pop().ok_or_else(|| anyhow!("hvp: empty output"))
+    }
+
+    fn logits(
+        &self,
+        flat: &[f32],
+        sw: &[f32],
+        sa: &[f32],
+        qmax_w: &[f32],
+        qmax_a: &[f32],
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = self.meta.serve_batch;
+        let inputs = [
+            lit_f32(flat, &[self.meta.param_size])?,
+            self.svec(sw)?,
+            self.svec(sa)?,
+            self.svec(qmax_w)?,
+            self.svec(qmax_a)?,
+            lit_f32(x, &self.img_dims(b))?,
+        ];
+        let _g = self.gate.lock().unwrap();
+        let mut out = self.logits.run(&inputs)?;
+        out.pop().ok_or_else(|| anyhow!("logits: empty output"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_shape_check() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(lit_f32(&[1.0; 3], &[2, 2]).is_err());
+        let i = lit_i32(&[1, 2], &[2]).unwrap();
+        assert_eq!(i.element_count(), 2);
+    }
+}

@@ -1,0 +1,366 @@
+//! Dense two-phase primal simplex LP solver (from scratch — the paper
+//! outsources its ILP to PuLP/CBC; we build the substrate).
+//!
+//! Solves  min c·x  s.t.  A_ub x ≤ b_ub,  A_eq x = b_eq,  x ≥ 0.
+//!
+//! Small and dense on purpose: MPQ relaxations have ≤ a few hundred
+//! columns (L layers × ≤26 bit combos) and a handful of rows, where a
+//! dense tableau beats any sparse machinery.  Bland's rule guards against
+//! cycling.  Used for the branch-and-bound relaxation bound cross-check
+//! and tested against hand-solved LPs + random-instance duality checks.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+/// An LP in the form: min c·x  s.t.  A_ub x ≤ b_ub,  A_eq x = b_eq,  x ≥ 0.
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    pub c: Vec<f64>,
+    pub a_ub: Vec<Vec<f64>>,
+    pub b_ub: Vec<f64>,
+    pub a_eq: Vec<Vec<f64>>,
+    pub b_eq: Vec<f64>,
+}
+
+const EPS: f64 = 1e-9;
+
+impl Lp {
+    pub fn n(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn solve(&self) -> Result<LpOutcome> {
+        for row in self.a_ub.iter().chain(self.a_eq.iter()) {
+            if row.len() != self.n() {
+                bail!("row width {} != {}", row.len(), self.n());
+            }
+        }
+        // Standard form: slacks for ≤ rows, artificials for = rows and for
+        // ≤ rows with negative rhs (after sign normalization).
+        let n = self.n();
+        let m = self.a_ub.len() + self.a_eq.len();
+        // rows: [A | slack | artificial] x = b with b ≥ 0
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(m);
+        let mut rhs: Vec<f64> = Vec::with_capacity(m);
+        let mut slack_of_row: Vec<Option<usize>> = Vec::with_capacity(m);
+        for (i, row) in self.a_ub.iter().enumerate() {
+            let (mut r, mut b) = (row.clone(), self.b_ub[i]);
+            let mut slack = 1.0;
+            if b < 0.0 {
+                for v in r.iter_mut() {
+                    *v = -*v;
+                }
+                b = -b;
+                slack = -1.0;
+            }
+            rows.push(r);
+            rhs.push(b);
+            slack_of_row.push(Some(if slack > 0.0 { 1 } else { 0 }));
+            // encode sign in the option: 1 => +slack basic-feasible; 0 => -slack (needs artificial)
+        }
+        for (i, row) in self.a_eq.iter().enumerate() {
+            let (mut r, mut b) = (row.clone(), self.b_eq[i]);
+            if b < 0.0 {
+                for v in r.iter_mut() {
+                    *v = -*v;
+                }
+                b = -b;
+            }
+            rows.push(r);
+            rhs.push(b);
+            slack_of_row.push(None);
+        }
+
+        // Column layout: n structural, then one slack per ub row, then one
+        // artificial per row that needs one.
+        let n_slack = self.a_ub.len();
+        let mut needs_art: Vec<bool> = vec![false; m];
+        for (i, s) in slack_of_row.iter().enumerate() {
+            match s {
+                Some(1) => needs_art[i] = false,
+                _ => needs_art[i] = true, // negative slack or equality
+            }
+        }
+        let n_art: usize = needs_art.iter().filter(|&&b| b).count();
+        let total = n + n_slack + n_art;
+
+        // Build tableau.
+        let mut t = vec![vec![0.0f64; total + 1]; m];
+        let mut basis = vec![0usize; m];
+        let mut art_col = n + n_slack;
+        for i in 0..m {
+            t[i][..n].copy_from_slice(&rows[i]);
+            if i < n_slack {
+                let sign = if slack_of_row[i] == Some(1) { 1.0 } else { -1.0 };
+                t[i][n + i] = sign;
+            }
+            if needs_art[i] {
+                t[i][art_col] = 1.0;
+                basis[i] = art_col;
+                art_col += 1;
+            } else {
+                basis[i] = n + i; // positive slack
+            }
+            t[i][total] = rhs[i];
+        }
+
+        // Phase 1: minimize sum of artificials.
+        if n_art > 0 {
+            let mut cost = vec![0.0f64; total];
+            for col in (n + n_slack)..total {
+                cost[col] = 1.0;
+            }
+            let obj = simplex_core(&mut t, &mut basis, &cost, total)?;
+            if obj > 1e-7 {
+                return Ok(LpOutcome::Infeasible);
+            }
+            // Drive any artificial still in basis out (degenerate).
+            for i in 0..m {
+                if basis[i] >= n + n_slack {
+                    if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > EPS) {
+                        pivot(&mut t, &mut basis, i, j, total);
+                    }
+                }
+            }
+        }
+
+        // Phase 2: original objective (artificial columns frozen at 0).
+        let mut cost = vec![0.0f64; total];
+        cost[..n].copy_from_slice(&self.c);
+        // Forbid artificials from re-entering by pricing them +inf-ish.
+        for c in cost.iter_mut().take(total).skip(n + n_slack) {
+            *c = 1e18;
+        }
+        let obj = match simplex_core(&mut t, &mut basis, &cost, total) {
+            Ok(o) => o,
+            Err(e) if e.to_string() == "unbounded" => return Ok(LpOutcome::Unbounded),
+            Err(e) => return Err(e),
+        };
+
+        let mut x = vec![0.0f64; n];
+        for i in 0..m {
+            if basis[i] < n {
+                x[basis[i]] = t[i][total];
+            }
+        }
+        Ok(LpOutcome::Optimal { x, obj })
+    }
+}
+
+/// Primal simplex on an existing basic-feasible tableau; returns objective.
+fn simplex_core(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    cost: &[f64],
+    total: usize,
+) -> Result<f64> {
+    let m = t.len();
+    for _iter in 0..50_000 {
+        // Reduced costs: r_j = c_j - c_B B^-1 A_j (computed from tableau).
+        let mut entering = None;
+        for j in 0..total {
+            let mut r = cost[j];
+            for i in 0..m {
+                r -= cost[basis[i]] * t[i][j];
+            }
+            if r < -1e-9 {
+                entering = Some(j); // Bland: first improving column
+                break;
+            }
+        }
+        let Some(j) = entering else {
+            let mut obj = 0.0;
+            for i in 0..m {
+                obj += cost[basis[i]] * t[i][total];
+            }
+            return Ok(obj);
+        };
+        // Ratio test (Bland: smallest basis index on ties).
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            if t[i][j] > EPS {
+                let ratio = t[i][total] / t[i][j];
+                if ratio < best - EPS || (ratio < best + EPS && leave.map_or(true, |l| basis[i] < basis[l])) {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(i) = leave else { bail!("unbounded") };
+        pivot(t, basis, i, j, total);
+    }
+    bail!("simplex iteration limit")
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let p = t[row][col];
+    for v in t[row].iter_mut() {
+        *v /= p;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=total {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(lp: &Lp) -> LpOutcome {
+        lp.solve().unwrap()
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => (2,6), obj 36
+        let lp = Lp {
+            c: vec![-3.0, -5.0],
+            a_ub: vec![vec![1.0, 0.0], vec![0.0, 2.0], vec![3.0, 2.0]],
+            b_ub: vec![4.0, 12.0, 18.0],
+            ..Default::default()
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 6.0).abs() < 1e-6);
+                assert!((obj + 36.0).abs() < 1e-6);
+            }
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x+2y s.t. x+y = 3, x<=1  => x=1,y=2, obj 5
+        let lp = Lp {
+            c: vec![1.0, 2.0],
+            a_ub: vec![vec![1.0, 0.0]],
+            b_ub: vec![1.0],
+            a_eq: vec![vec![1.0, 1.0]],
+            b_eq: vec![3.0],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((x[0] - 1.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+                assert!((obj - 5.0).abs() < 1e-6);
+            }
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x <= -1, x >= 0 infeasible
+        let lp = Lp { c: vec![1.0], a_ub: vec![vec![1.0]], b_ub: vec![-1.0], ..Default::default() };
+        assert_eq!(solve(&lp), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // min -x, x unconstrained above
+        let lp = Lp { c: vec![-1.0], ..Default::default() };
+        assert_eq!(solve(&lp), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // -x <= -2  (i.e. x >= 2); min x => 2
+        let lp = Lp { c: vec![1.0], a_ub: vec![vec![-1.0]], b_ub: vec![-2.0], ..Default::default() };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((x[0] - 2.0).abs() < 1e-6);
+                assert!((obj - 2.0).abs() < 1e-6);
+            }
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn mckp_relaxation_shape() {
+        // Two layers, two options each; choose-one equality rows; budget row.
+        // Costs: L0 {10, 4}, L1 {8, 3}; weights {1,3},{1,3}; budget 4.
+        // LP opt: fractional mix; obj must be <= any integer solution (13).
+        let lp = Lp {
+            c: vec![10.0, 4.0, 8.0, 3.0],
+            a_ub: vec![vec![1.0, 3.0, 1.0, 3.0]],
+            b_ub: vec![4.0],
+            a_eq: vec![vec![1.0, 1.0, 0.0, 0.0], vec![0.0, 0.0, 1.0, 1.0]],
+            b_eq: vec![1.0, 1.0],
+        };
+        match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => {
+                assert!(obj <= 13.0 + 1e-6, "obj {obj}");
+                // each layer's selection sums to 1
+                assert!((x[0] + x[1] - 1.0).abs() < 1e-6);
+                assert!((x[2] + x[3] - 1.0).abs() < 1e-6);
+            }
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn random_instances_lp_below_integer_optimum() {
+        // Property: LP relaxation of random MCKPs lower-bounds the
+        // brute-force integer optimum.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        for trial in 0..30 {
+            let layers = 3;
+            let opts = 3;
+            let mut c = Vec::new();
+            let mut w = Vec::new();
+            for _ in 0..layers * opts {
+                c.push(rng.uniform(1.0, 10.0));
+                w.push(rng.uniform(1.0, 5.0));
+            }
+            let budget = rng.uniform(6.0, 12.0);
+            // brute force integer optimum
+            let mut best = f64::INFINITY;
+            for i in 0..opts {
+                for j in 0..opts {
+                    for k in 0..opts {
+                        let idx = [i, j + opts, k + 2 * opts];
+                        let wt: f64 = idx.iter().map(|&q| w[q]).sum();
+                        if wt <= budget {
+                            best = best.min(idx.iter().map(|&q| c[q]).sum());
+                        }
+                    }
+                }
+            }
+            let mut a_eq = vec![vec![0.0; layers * opts]; layers];
+            for l in 0..layers {
+                for o in 0..opts {
+                    a_eq[l][l * opts + o] = 1.0;
+                }
+            }
+            let lp = Lp {
+                c: c.clone(),
+                a_ub: vec![w.clone()],
+                b_ub: vec![budget],
+                a_eq,
+                b_eq: vec![1.0; layers],
+            };
+            match lp.solve().unwrap() {
+                LpOutcome::Optimal { obj, .. } => {
+                    if best.is_finite() {
+                        assert!(obj <= best + 1e-6, "trial {trial}: lp {obj} > ilp {best}");
+                    }
+                }
+                LpOutcome::Infeasible => assert!(!best.is_finite(), "trial {trial}"),
+                o => panic!("{o:?}"),
+            }
+        }
+    }
+}

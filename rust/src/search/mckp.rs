@@ -1,0 +1,169 @@
+//! Dynamic-programming MCKP solver (single resource constraint).
+//!
+//! Exact when the constraint values fit the integer grid directly
+//! (`unit == 1`); otherwise weights are rounded *up* to grid units, which
+//! keeps every returned solution feasible (conservative) at a bounded
+//! optimality gap of one grid unit per layer.  Complements the exact
+//! branch-and-bound: O(L · grid · options) time, fully predictable — the
+//! profile used in the `ilp_micro` bench comparison.
+
+use anyhow::{bail, Result};
+
+use super::{MpqProblem, Solution};
+
+/// Which resource the DP runs against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    BitOps,
+    SizeBits,
+}
+
+/// Solve via DP on the given resource with at most `grid` budget cells.
+pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solution> {
+    let cap = match resource {
+        Resource::BitOps => p.bitops_cap,
+        Resource::SizeBits => p.size_cap_bits,
+    };
+    let Some(cap) = cap else { bail!("DP requires a cap on the chosen resource") };
+    match resource {
+        Resource::BitOps if p.size_cap_bits.is_some() => {
+            bail!("DP handles a single constraint; use branch-and-bound for two")
+        }
+        Resource::SizeBits if p.bitops_cap.is_some() => {
+            bail!("DP handles a single constraint; use branch-and-bound for two")
+        }
+        _ => {}
+    }
+    if p.layers.is_empty() {
+        return Ok(Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 });
+    }
+
+    let weight_of = |o: &super::LayerOption| match resource {
+        Resource::BitOps => o.bitops,
+        Resource::SizeBits => o.size_bits,
+    };
+
+    let unit = (cap / grid as u64).max(1);
+    let cells = (cap / unit) as usize + 1;
+    const INF: f64 = f64::INFINITY;
+
+    // dp[j] = min cost using exactly ≤ j units; parent pointers per layer.
+    let mut dp = vec![INF; cells];
+    dp[0] = 0.0;
+    // parent[l][j] = option chosen at layer l to reach state j (u16), or u16::MAX
+    let mut parent: Vec<Vec<u16>> = Vec::with_capacity(p.layers.len());
+
+    let mut next = vec![INF; cells];
+    for opts in &p.layers {
+        next.fill(INF);
+        let mut par = vec![u16::MAX; cells];
+        for (c, o) in opts.iter().enumerate() {
+            let w = weight_of(o).div_ceil(unit) as usize;
+            if w >= cells {
+                continue;
+            }
+            for j in 0..cells - w {
+                let base = dp[j];
+                if base.is_finite() {
+                    let cand = base + o.cost;
+                    if cand < next[j + w] {
+                        next[j + w] = cand;
+                        par[j + w] = c as u16;
+                    }
+                }
+            }
+        }
+        parent.push(par);
+        std::mem::swap(&mut dp, &mut next);
+    }
+
+    // Best terminal state.
+    let (mut j, _) = dp
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_finite())
+        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .ok_or_else(|| anyhow::anyhow!("infeasible under cap {cap}"))?;
+
+    // Backtrack.
+    let mut choice = vec![0usize; p.layers.len()];
+    for l in (0..p.layers.len()).rev() {
+        let c = parent[l][j];
+        if c == u16::MAX {
+            bail!("DP backtrack inconsistency at layer {l}");
+        }
+        choice[l] = c as usize;
+        let w = weight_of(&p.layers[l][c as usize]).div_ceil(unit) as usize;
+        j -= w;
+    }
+    let sol = p.evaluate(&choice)?;
+    debug_assert!(p.feasible(&sol));
+    Ok(sol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::bb::solve_bb;
+    use crate::search::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_on_unit_grid_matches_brute_force() {
+        let mut rng = Rng::new(21);
+        for trial in 0..50 {
+            let (layers, opts, tight) = (2 + rng.below(4), 2 + rng.below(3), rng.uniform(0.1, 0.9));
+            let p = random_problem(&mut rng, layers, opts, tight);
+            let cap = p.bitops_cap.unwrap();
+            let bf = p.brute_force();
+            // unit grid: cells = cap+1 (cap is small in these instances)
+            let dp = solve_dp(&p, Resource::BitOps, cap as usize + 1);
+            match (bf, dp) {
+                (Some(b), Ok(s)) => {
+                    assert!(p.feasible(&s));
+                    assert!((s.cost - b.cost).abs() < 1e-9, "trial {trial}: dp {} bf {}", s.cost, b.cost);
+                }
+                (None, Err(_)) => {}
+                (bf, dp) => panic!("trial {trial}: bf={bf:?} dp={dp:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_grid_stays_feasible_and_near_optimal() {
+        let mut rng = Rng::new(31);
+        for _ in 0..20 {
+            let p = random_problem(&mut rng, 6, 5, 0.5);
+            let opt = solve_bb(&p, 1_000_000);
+            let dp = solve_dp(&p, Resource::BitOps, 512);
+            if let (Ok(o), Ok(s)) = (opt, dp) {
+                assert!(p.feasible(&s));
+                assert!(s.cost >= o.cost - 1e-9);
+                // conservative rounding gap should be small on 512 cells
+                assert!(s.cost <= o.cost + 2.0, "dp {} vs opt {}", s.cost, o.cost);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_two_constraints() {
+        let mut rng = Rng::new(3);
+        let mut p = random_problem(&mut rng, 3, 3, 0.5);
+        p.size_cap_bits = Some(1 << 30);
+        assert!(solve_dp(&p, Resource::BitOps, 100).is_err());
+    }
+
+    #[test]
+    fn size_resource_works() {
+        let mut rng = Rng::new(4);
+        let mut p = random_problem(&mut rng, 4, 4, 0.9);
+        let min_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+        let max_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+        p.bitops_cap = None;
+        p.size_cap_bits = Some((min_s + max_s) / 2);
+        let s = solve_dp(&p, Resource::SizeBits, (min_s + max_s) as usize / 2 + 1).unwrap();
+        assert!(p.feasible(&s));
+        let bf = p.brute_force().unwrap();
+        assert!((s.cost - bf.cost).abs() < 1e-9);
+    }
+}

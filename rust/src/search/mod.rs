@@ -1,0 +1,265 @@
+//! MPQ policy search: the paper's one-time ILP (eq. 3) + every baseline.
+//!
+//! The search problem is a Multiple-Choice Knapsack: each layer picks
+//! exactly one (w_bits, a_bits) combination; the summed importance
+//! objective is minimized under a BitOps cap and/or a model-size cap.
+//!
+//! Solvers (all from scratch, cross-validated against each other and
+//! brute force in tests):
+//!   * [`bb`]    — exact branch-and-bound with Lagrangian bounds (default)
+//!   * [`mckp`]  — dynamic program (exact on an integer grid)
+//!   * [`lp`]    — dense two-phase simplex (relaxation bounds / checks)
+//!   * [`baselines`] — uniform, random, reversed, greedy, Hessian-Pareto
+//!
+//! No training data is touched here — that is the paper's headline
+//! efficiency claim (§4.3), measured by `search_efficiency.rs`.
+
+pub mod baselines;
+pub mod bb;
+pub mod lp;
+pub mod mckp;
+pub mod pareto;
+
+use anyhow::{bail, Result};
+
+use crate::importance::Importance;
+use crate::models::ModelMeta;
+use crate::quant::cost::{layer_bitops, layer_size_bits};
+use crate::quant::BitConfig;
+
+/// One candidate (w_bits, a_bits) combination for a layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerOption {
+    pub w_bits: u8,
+    pub a_bits: u8,
+    /// Objective contribution s_a + α·s_w (paper eq. 3).
+    pub cost: f64,
+    pub bitops: u64,
+    pub size_bits: u64,
+}
+
+/// The MCKP instance.
+#[derive(Debug, Clone, Default)]
+pub struct MpqProblem {
+    /// Options per layer (pinned layers have exactly one option).
+    pub layers: Vec<Vec<LayerOption>>,
+    pub bitops_cap: Option<u64>,
+    pub size_cap_bits: Option<u64>,
+}
+
+/// A solved policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    /// Chosen option index per layer.
+    pub choice: Vec<usize>,
+    pub cost: f64,
+    pub bitops: u64,
+    pub size_bits: u64,
+}
+
+impl MpqProblem {
+    /// Build the paper's eq.-3 instance from learned importances.
+    ///
+    /// `alpha` linearly combines activation and weight importances; when
+    /// `weight_only` is set the activation bit-width is pinned to 8
+    /// (Table 5's weight-only MPQ setting).
+    pub fn from_importance(
+        meta: &ModelMeta,
+        imp: &Importance,
+        alpha: f64,
+        bitops_cap: Option<u64>,
+        size_cap_bits: Option<u64>,
+        weight_only: bool,
+    ) -> MpqProblem {
+        let mut layers = Vec::with_capacity(meta.n_qlayers);
+        for q in &meta.qlayers {
+            let mut opts = Vec::new();
+            if q.pinned {
+                let b = meta.pin_bits;
+                opts.push(LayerOption {
+                    w_bits: b,
+                    a_bits: b,
+                    cost: 0.0,
+                    bitops: layer_bitops(q.macs, b, b),
+                    size_bits: layer_size_bits(q.w_numel, b),
+                });
+            } else {
+                for (wi, &wb) in meta.bit_options.iter().enumerate() {
+                    let a_opts: Vec<(usize, u8)> = if weight_only {
+                        vec![(usize::MAX, 8u8)]
+                    } else {
+                        meta.bit_options.iter().cloned().enumerate().collect()
+                    };
+                    for (ai, ab) in a_opts {
+                        let s_w = imp.w[q.index][wi];
+                        let s_a = if ai == usize::MAX { 0.0 } else { imp.a[q.index][ai] };
+                        opts.push(LayerOption {
+                            w_bits: wb,
+                            a_bits: ab,
+                            cost: s_a as f64 + alpha * s_w as f64,
+                            bitops: layer_bitops(q.macs, wb, ab),
+                            size_bits: layer_size_bits(q.w_numel, wb),
+                        });
+                    }
+                }
+            }
+            layers.push(opts);
+        }
+        MpqProblem { layers, bitops_cap, size_cap_bits }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total option count (ILP variable count).
+    pub fn n_vars(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn evaluate(&self, choice: &[usize]) -> Result<Solution> {
+        if choice.len() != self.layers.len() {
+            bail!("choice length mismatch");
+        }
+        let mut cost = 0.0;
+        let mut bitops = 0u64;
+        let mut size = 0u64;
+        for (l, &c) in choice.iter().enumerate() {
+            let Some(o) = self.layers[l].get(c) else { bail!("layer {l}: option {c} out of range") };
+            cost += o.cost;
+            bitops += o.bitops;
+            size += o.size_bits;
+        }
+        Ok(Solution { choice: choice.to_vec(), cost, bitops, size_bits: size })
+    }
+
+    pub fn feasible(&self, s: &Solution) -> bool {
+        self.bitops_cap.map_or(true, |c| s.bitops <= c)
+            && self.size_cap_bits.map_or(true, |c| s.size_bits <= c)
+    }
+
+    /// Convert a solution into the runtime [`BitConfig`].
+    pub fn to_bit_config(&self, s: &Solution) -> BitConfig {
+        let mut w = Vec::with_capacity(self.layers.len());
+        let mut a = Vec::with_capacity(self.layers.len());
+        for (l, &c) in s.choice.iter().enumerate() {
+            w.push(self.layers[l][c].w_bits);
+            a.push(self.layers[l][c].a_bits);
+        }
+        BitConfig { w_bits: w, a_bits: a }
+    }
+
+    /// Exhaustive optimum — exponential; tests only.
+    pub fn brute_force(&self) -> Option<Solution> {
+        fn rec(p: &MpqProblem, l: usize, choice: &mut Vec<usize>, best: &mut Option<Solution>) {
+            if l == p.layers.len() {
+                let s = p.evaluate(choice).unwrap();
+                if p.feasible(&s) && best.as_ref().map_or(true, |b| s.cost < b.cost - 1e-12) {
+                    *best = Some(s);
+                }
+                return;
+            }
+            for c in 0..p.layers[l].len() {
+                choice.push(c);
+                rec(p, l + 1, choice, best);
+                choice.pop();
+            }
+        }
+        let mut best = None;
+        rec(self, 0, &mut Vec::new(), &mut best);
+        best
+    }
+}
+
+/// Solve with the default exact solver (branch-and-bound).
+pub fn solve(problem: &MpqProblem) -> Result<Solution> {
+    bb::solve_bb(problem, 2_000_000)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Random MCKP instance for cross-validation tests.
+    pub fn random_problem(rng: &mut Rng, layers: usize, opts: usize, tightness: f64) -> MpqProblem {
+        let mut p = MpqProblem::default();
+        let mut max_bitops = 0u64;
+        let mut min_bitops = 0u64;
+        for _ in 0..layers {
+            let mut lo = Vec::new();
+            let macs = rng.below(1000) as u64 + 10;
+            for (oi, &b) in [2u8, 3, 4, 5, 6][..opts].iter().enumerate() {
+                lo.push(LayerOption {
+                    w_bits: b,
+                    a_bits: b,
+                    cost: rng.uniform(0.1, 5.0) / (oi + 1) as f64,
+                    bitops: macs * (b as u64) * (b as u64),
+                    size_bits: macs * b as u64,
+                });
+            }
+            max_bitops += lo.iter().map(|o| o.bitops).max().unwrap();
+            min_bitops += lo.iter().map(|o| o.bitops).min().unwrap();
+            p.layers.push(lo);
+        }
+        let cap = min_bitops as f64 + tightness * (max_bitops - min_bitops) as f64;
+        p.bitops_cap = Some(cap as u64);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MpqProblem {
+        MpqProblem {
+            layers: vec![
+                vec![
+                    LayerOption { w_bits: 2, a_bits: 2, cost: 5.0, bitops: 4, size_bits: 2 },
+                    LayerOption { w_bits: 4, a_bits: 4, cost: 1.0, bitops: 16, size_bits: 4 },
+                ],
+                vec![
+                    LayerOption { w_bits: 2, a_bits: 2, cost: 3.0, bitops: 8, size_bits: 4 },
+                    LayerOption { w_bits: 4, a_bits: 4, cost: 0.5, bitops: 32, size_bits: 8 },
+                ],
+            ],
+            bitops_cap: Some(24),
+            size_cap_bits: None,
+        }
+    }
+
+    #[test]
+    fn evaluate_and_feasible() {
+        let p = tiny();
+        let s = p.evaluate(&[1, 0]).unwrap();
+        assert_eq!(s.bitops, 24);
+        assert!((s.cost - 4.0).abs() < 1e-12);
+        assert!(p.feasible(&s));
+        let s2 = p.evaluate(&[1, 1]).unwrap();
+        assert!(!p.feasible(&s2));
+    }
+
+    #[test]
+    fn brute_force_picks_optimum() {
+        let p = tiny();
+        let b = p.brute_force().unwrap();
+        assert_eq!(b.choice, vec![1, 0]);
+    }
+
+    #[test]
+    fn to_bit_config_roundtrip() {
+        let p = tiny();
+        let s = p.evaluate(&[1, 0]).unwrap();
+        let c = p.to_bit_config(&s);
+        assert_eq!(c.w_bits, vec![4, 2]);
+        assert_eq!(c.a_bits, vec![4, 2]);
+    }
+
+    #[test]
+    fn evaluate_rejects_bad_choice() {
+        let p = tiny();
+        assert!(p.evaluate(&[0]).is_err());
+        assert!(p.evaluate(&[0, 9]).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! HAWQ-v2-style Pareto-frontier search baseline.
+//!
+//! HAWQ-v2 picks bit-widths by sweeping the Pareto frontier of
+//! (model perturbation, cost): for each candidate budget it takes the
+//! assignment minimizing the summed sensitivity perturbation.  We
+//! reproduce that procedure generically over any per-layer cost table
+//! (Hessian traces or learned importances):
+//!
+//!   1. enumerate per-layer (perturbation, bitops) options,
+//!   2. sweep a scalar trade-off λ over a log grid; for each λ take the
+//!      per-layer argmin of `perturbation + λ·bitops` (this traces the
+//!      lower convex hull of the frontier — exactly the achievable
+//!      Lagrangian points),
+//!   3. keep the frontier point with the best perturbation that fits the
+//!      budget.
+//!
+//! Because it only reaches *convex-hull* points, it can miss interior
+//! optima the exact ILP finds — the gap is measured in `ilp_micro` and is
+//! one more quantitative argument for the paper's one-time ILP.
+
+use anyhow::{bail, Result};
+
+use super::{MpqProblem, Solution};
+
+/// One frontier point.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub lambda: f64,
+    pub solution: Solution,
+}
+
+/// Trace the Lagrangian frontier over `steps` log-spaced λ values.
+pub fn frontier(p: &MpqProblem, steps: usize) -> Result<Vec<FrontierPoint>> {
+    if p.layers.is_empty() {
+        bail!("empty problem");
+    }
+    // λ range: from "bitops free" to "bitops dominate".
+    let cost_scale: f64 = p
+        .layers
+        .iter()
+        .map(|o| o.iter().map(|x| x.cost.abs()).fold(0.0f64, f64::max))
+        .sum::<f64>()
+        .max(1e-9);
+    let bitops_scale: f64 = p
+        .layers
+        .iter()
+        .map(|o| o.iter().map(|x| x.bitops).max().unwrap() as f64)
+        .sum::<f64>()
+        .max(1.0);
+    let lo = 1e-4 * cost_scale / bitops_scale;
+    let hi = 1e4 * cost_scale / bitops_scale;
+    let mut out = Vec::with_capacity(steps);
+    for i in 0..steps {
+        let t = i as f64 / (steps - 1).max(1) as f64;
+        let lambda = lo * (hi / lo).powf(t);
+        let choice: Vec<usize> = p
+            .layers
+            .iter()
+            .map(|opts| {
+                opts.iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        let pa = a.cost + lambda * a.bitops as f64;
+                        let pb = b.cost + lambda * b.bitops as f64;
+                        pa.partial_cmp(&pb).unwrap()
+                    })
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        out.push(FrontierPoint { lambda, solution: p.evaluate(&choice)? });
+    }
+    Ok(out)
+}
+
+/// HAWQ-v2-style selection: best frontier point under the problem's caps.
+pub fn solve_pareto(p: &MpqProblem, steps: usize) -> Result<Solution> {
+    let pts = frontier(p, steps)?;
+    pts.into_iter()
+        .map(|f| f.solution)
+        .filter(|s| p.feasible(s))
+        .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+        .ok_or_else(|| anyhow::anyhow!("no frontier point satisfies the caps"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::bb::solve_bb;
+    use crate::search::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frontier_is_monotone_in_lambda() {
+        let mut rng = Rng::new(8);
+        let p = random_problem(&mut rng, 6, 5, 0.5);
+        let pts = frontier(&p, 40).unwrap();
+        // larger λ never increases bitops
+        for w in pts.windows(2) {
+            assert!(w[1].solution.bitops <= w[0].solution.bitops);
+        }
+    }
+
+    #[test]
+    fn pareto_feasible_but_never_beats_exact_ilp() {
+        let mut rng = Rng::new(9);
+        let mut dominated = 0;
+        for _ in 0..25 {
+            let p = random_problem(&mut rng, 5, 5, 0.5);
+            let ilp = solve_bb(&p, 1_000_000);
+            let par = solve_pareto(&p, 120);
+            match (ilp, par) {
+                (Ok(opt), Ok(s)) => {
+                    assert!(p.feasible(&s));
+                    assert!(s.cost >= opt.cost - 1e-9, "pareto {} < ilp {}", s.cost, opt.cost);
+                    if s.cost > opt.cost + 1e-9 {
+                        dominated += 1;
+                    }
+                }
+                (Err(_), Err(_)) => {}
+                (Ok(_), Err(_)) => {} // frontier may miss feasible interior pts
+                (Err(_), Ok(_)) => panic!("pareto found solution where exact says infeasible"),
+            }
+        }
+        // the ILP should strictly win at least sometimes (the paper's point)
+        assert!(dominated >= 1, "pareto matched ILP everywhere — suspicious");
+    }
+
+    #[test]
+    fn unconstrained_frontier_endpoint_is_min_cost() {
+        let mut rng = Rng::new(10);
+        let mut p = random_problem(&mut rng, 4, 4, 1.0);
+        p.bitops_cap = None;
+        let s = solve_pareto(&p, 60).unwrap();
+        let want: f64 =
+            p.layers.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
+        assert!((s.cost - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! Binary tensor (de)serialization — the checkpoint wire format.
+//!
+//! Format `LTS1` (limpq tensor store, version 1), little-endian:
+//!
+//! ```text
+//! magic  b"LTS1"
+//! u32    entry count
+//! per entry:
+//!   u32        name length, then name bytes (utf-8)
+//!   u32        rank, then rank * u64 dims
+//!   f32 * n    data
+//! ```
+//!
+//! Deterministic (entries written in given order), self-describing, and
+//! resilient: loads verify magic, lengths, and trailing bytes.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::HostTensor;
+
+const MAGIC: &[u8; 4] = b"LTS1";
+
+pub fn save_tensors(path: &Path, entries: &[(&str, &HostTensor)]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, t) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_tensors(path: &Path) -> Result<Vec<(String, HostTensor)>> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("{path:?}: implausible name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 16 {
+            bail!("{path:?}: implausible rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data = bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        out.push((String::from_utf8(name)?, HostTensor::new(data, shape)?));
+    }
+    let mut trailing = [0u8; 1];
+    if r.read(&mut trailing)? != 0 {
+        bail!("{path:?}: trailing bytes after last tensor");
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("limpq_io_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let a = HostTensor::new((0..24).map(|i| i as f32 * 0.5).collect(), vec![2, 3, 4]).unwrap();
+        let b = HostTensor::from_vec(vec![-1.0, f32::MIN_POSITIVE, 3.25e7]);
+        let p = tmp("rt.lts");
+        save_tensors(&p, &[("params", &a), ("scales", &b)]).unwrap();
+        let loaded = load_tensors(&p).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "params");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let p = tmp("empty.lts");
+        save_tensors(&p, &[]).unwrap();
+        assert!(load_tensors(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.lts");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load_tensors(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let a = HostTensor::zeros(&[10]);
+        let p = tmp("trunc.lts");
+        save_tensors(&p, &[("x", &a)]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_tensors(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let a = HostTensor::zeros(&[2]);
+        let p = tmp("trail.lts");
+        save_tensors(&p, &[("x", &a)]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_tensors(&p).is_err());
+    }
+}

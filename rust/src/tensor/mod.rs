@@ -1,0 +1,164 @@
+//! Host tensor substrate: flat f32 buffers + the math the coordinator
+//! needs on them (optimizer updates, Hutchinson accumulation, stats).
+//!
+//! All network state lives on the host as flat `f32` vectors (the AOT
+//! artifacts take/return flat buffers — see `python/compile/params.py`);
+//! nothing here ever touches the device.
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// A dense host tensor: flat f32 storage + shape metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(HostTensor { data, shape })
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> HostTensor {
+        HostTensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> HostTensor {
+        let n = data.len();
+        HostTensor { data, shape: vec![n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// He-normal init over an arbitrary slice given a fan-in.
+    pub fn he_init(slice: &mut [f32], fan_in: usize, rng: &mut Rng) {
+        let std = (2.0 / fan_in.max(1) as f64).sqrt();
+        for v in slice {
+            *v = (rng.normal() * std) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat-buffer math
+// ---------------------------------------------------------------------------
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// x *= alpha
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+pub fn l2_norm(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+pub fn mean_abs(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| (v as f64).abs()).sum::<f64>() / x.len() as f64
+}
+
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+pub fn all_finite(x: &[f32]) -> bool {
+    x.iter().all(|v| v.is_finite())
+}
+
+/// Elementwise accumulate: acc += x (used for gradient aggregation across
+/// the paper's n+1 atomic passes).
+pub fn accumulate(acc: &mut [f32], x: &[f32]) {
+    axpy(1.0, x, acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::new(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(HostTensor::new(vec![0.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_full() {
+        let t = HostTensor::zeros(&[3, 4]);
+        assert_eq!(t.len(), 12);
+        let f = HostTensor::full(&[2], 1.5);
+        assert_eq!(f.data, vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn axpy_scale_dot() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [1.5, 2.5, 3.5]);
+        assert!((dot(&x, &x) - 14.0).abs() < 1e-9);
+        assert!((l2_norm(&x) - 14f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats() {
+        let x = [-2.0, 0.0, 2.0];
+        assert_eq!(mean(&x), 0.0);
+        assert!((mean_abs(&x) - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(max_abs(&x), 2.0);
+        assert!(all_finite(&x));
+        assert!(!all_finite(&[f32::NAN]));
+    }
+
+    #[test]
+    fn he_init_variance() {
+        let mut rng = Rng::new(0);
+        let mut buf = vec![0.0f32; 20000];
+        HostTensor::he_init(&mut buf, 50, &mut rng);
+        let var = dot(&buf, &buf) / buf.len() as f64;
+        assert!((var - 2.0 / 50.0).abs() < 0.005, "{var}");
+    }
+}

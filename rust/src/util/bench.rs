@@ -1,0 +1,151 @@
+//! Micro-benchmark harness (criterion is not on the offline mirror).
+//!
+//! Provides warmup, adaptive iteration-count calibration, and robust
+//! statistics (mean / median / p95 / std-dev), printed in a stable
+//! machine-greppable format:
+//!
+//! ```text
+//! bench <name>: mean=1.234ms median=1.20ms p95=1.4ms sd=0.05ms iters=812
+//! ```
+//!
+//! Used by every `rust/benches/*.rs` target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub sd: Duration,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {}: mean={} median={} p95={} sd={} iters={}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.p95),
+            fmt_dur(self.sd),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a total time budget per benchmark.
+pub struct Bench {
+    /// Target total measurement time.
+    pub budget: Duration,
+    /// Warmup time before measuring.
+    pub warmup: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget: Duration::from_secs(2), warmup: Duration::from_millis(300), max_iters: 10_000 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { budget: Duration::from_millis(500), warmup: Duration::from_millis(50), max_iters: 2_000 }
+    }
+
+    /// Time `f`, which must do one unit of work per call.  The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup + calibration.
+        let wstart = Instant::now();
+        let mut wcount = 0usize;
+        while wstart.elapsed() < self.warmup || wcount == 0 {
+            black_box(f());
+            wcount += 1;
+            if wcount >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / wcount as f64;
+        let iters = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        let stats = stats_of(name, &mut samples);
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+fn stats_of(name: &str, samples: &mut [Duration]) -> BenchStats {
+    samples.sort_unstable();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        mean,
+        median: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        sd: Duration::from_secs_f64(var.sqrt()),
+        iters: n,
+    }
+}
+
+/// Opaque value sink (std::hint::black_box re-export for older call sites).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench { budget: Duration::from_millis(30), warmup: Duration::from_millis(5), max_iters: 1000 };
+        let s = b.run("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(s.iters >= 5);
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.p95 >= s.median);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

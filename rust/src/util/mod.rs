@@ -1,0 +1,5 @@
+//! From-scratch substrates the offline mirror cannot provide:
+//! JSON, deterministic RNG, micro-bench harness (see Cargo.toml note).
+pub mod bench;
+pub mod json;
+pub mod rng;

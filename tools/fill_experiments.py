@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md placeholders from runs/<exp>/ outputs.
+
+Each `<!-- NAME -->` marker is replaced by a markdown rendering of the
+corresponding experiment's CSV/JSON results (idempotent: re-running
+regenerates the block between the marker and the following blank-marker
+fence we insert).
+
+Usage: python tools/fill_experiments.py [--runs runs] [--file EXPERIMENTS.md]
+"""
+import argparse
+import csv
+import json
+import os
+import re
+
+
+def md_table(headers, rows):
+    out = ["| " + " | ".join(headers) + " |", "|" + "---|" * len(headers)]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def from_csv(path, limit=None):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rows = list(csv.reader(f))
+    if not rows:
+        return None
+    body = rows[1 : 1 + limit] if limit else rows[1:]
+    return md_table(rows[0], body)
+
+
+def efficiency_block(runs):
+    p = os.path.join(runs, "efficiency", "result.json")
+    if not os.path.exists(p):
+        return None
+    j = json.load(open(p))
+    lines = [
+        md_table(
+            ["quantity", "value"],
+            [
+                ["model", j.get("model", "?")],
+                ["indicator training (one-time)", f"{j['t_indicators_s']:.1f} s"],
+                ["ILP solve per device", f"{j['t_ilp_s'] * 1e3:.2f} ms"],
+                ["one iterative policy evaluation", f"{j['t_policy_eval_s']:.2f} s"],
+                ["iterative rounds modeled", j["iterative_rounds"]],
+                ["**1-device speedup**", f"**{j['speedup_1dev']:.0f}x** (paper ~330x)"],
+            ],
+        )
+    ]
+    amort = from_csv(os.path.join(runs, "efficiency", "amortization.csv"))
+    if amort:
+        lines.append("\nz-device amortization:\n\n" + amort)
+    return "\n".join(lines)
+
+
+def fig2_block(runs):
+    p = os.path.join(runs, "fig2", "result.json")
+    if not os.path.exists(p):
+        return None
+    j = json.load(open(p))
+    return (
+        f"Uniform-init indicator spread across 4 tracked layers: "
+        f"start {j['uniform_spread_start']:.5f} → end {j['uniform_spread_end']:.5f} "
+        f"({'separates, as the paper observes' if j['uniform_spread_end'] > j['uniform_spread_start'] else 'DID NOT separate'}). "
+        f"Full curves: `runs/fig2/curves.csv`."
+    )
+
+
+def ablation_block(runs):
+    p = os.path.join(runs, "ablation", "result.json")
+    if not os.path.exists(p):
+        return None
+    j = json.load(open(p))
+    rows = [[r["alpha"], f"{100 * r['acc']:.2f}%"] for r in j["alpha_rows"]]
+    parts = [md_table(["alpha", "acc (no finetune)"], rows)]
+    parts.append(
+        f"\nTrained vs untrained indicators (no finetune): "
+        f"{100 * j['acc_trained']:.2f}% vs {100 * j['acc_untrained']:.2f}%. "
+        f"ILP objective {j['ilp_cost']:.5f} vs greedy {j['greedy_cost']:.5f}."
+    )
+    return "\n".join(parts)
+
+
+def fig3_block(runs):
+    parts = []
+    for model in ("resnet18s", "resnet50s"):
+        p = os.path.join(runs, "fig3", f"{model}_importance.csv")
+        t = from_csv(p, limit=10)
+        if t:
+            parts.append(f"**{model}** (first 10 rows; full file in runs/fig3/):\n\n{t}")
+    return "\n\n".join(parts) or None
+
+
+def fig4_block(runs):
+    parts = []
+    for model in ("mobilenetv1s", "resnet50s"):
+        t = from_csv(os.path.join(runs, "fig4", f"{model}_bits.csv"))
+        if t:
+            parts.append(f"**{model}**:\n\n{t}")
+    return "\n\n".join(parts) or None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", default="runs")
+    ap.add_argument("--file", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    blocks = {
+        "TABLE2": from_csv(os.path.join(args.runs, "table2", "table.csv")),
+        "TABLE3": from_csv(os.path.join(args.runs, "table3", "table.csv")),
+        "TABLE4": from_csv(os.path.join(args.runs, "table4", "table.csv")),
+        "TABLE5": from_csv(os.path.join(args.runs, "table5", "table.csv")),
+        "TABLE6": from_csv(os.path.join(args.runs, "table6", "table.csv")),
+        "FIG1": from_csv(os.path.join(args.runs, "fig1", "contrast.csv")),
+        "FIG2": fig2_block(args.runs),
+        "FIG3": fig3_block(args.runs),
+        "FIG4": fig4_block(args.runs),
+        "EFFICIENCY": efficiency_block(args.runs),
+        "ABLATION": ablation_block(args.runs),
+    }
+
+    text = open(args.file).read()
+    for name, content in blocks.items():
+        if content is None:
+            content = "_(not yet generated — run `cargo run --release -- exp " + name.lower() + "`)_"
+        # replace "<!-- NAME -->" and any previously filled block following it
+        pattern = re.compile(
+            r"<!-- " + name + r" -->\n(?:<!-- begin:" + name + r" -->.*?<!-- end:" + name + r" -->\n?)?",
+            re.S,
+        )
+        repl = (
+            f"<!-- {name} -->\n<!-- begin:{name} -->\n{content}\n<!-- end:{name} -->\n"
+        )
+        text, n = pattern.subn(repl, text)
+        if n == 0:
+            print(f"warning: marker {name} not found")
+    open(args.file, "w").write(text)
+    print(f"filled {args.file}")
+
+
+if __name__ == "__main__":
+    main()
