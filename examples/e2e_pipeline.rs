@@ -19,8 +19,8 @@ use limpq::coordinator::Pipeline;
 use limpq::data::train_val;
 use limpq::quant::cost::{total_bitops, uniform_bitops};
 use limpq::report::bit_chart;
+use limpq::engine::{PolicyEngine, SearchRequest};
 use limpq::runtime::pjrt::PjrtBackend;
-use limpq::search::{solve, MpqProblem};
 
 fn main() -> Result<()> {
     let model = std::env::var("E2E_MODEL").unwrap_or_else(|_| "resnet18s".into());
@@ -59,16 +59,18 @@ fn main() -> Result<()> {
     let ind = pipe.train_indicators(&fp.flat, &train)?;
     let imp = ind.store.importance(&meta);
 
-    // Stage 3: the one-time ILP at the 4-bit-level BitOps budget.
+    // Stage 3: the one-time engine solve at the 4-bit-level BitOps budget.
     let cap = uniform_bitops(&meta, 4, 4);
-    let problem = MpqProblem::from_importance(&meta, &imp, cfg.search.alpha, Some(cap), None, false);
-    let t_ilp = std::time::Instant::now();
-    let sol = solve(&problem)?;
-    let policy = problem.to_bit_config(&sol);
+    let engine = PolicyEngine::new(meta.clone(), imp);
+    let req = SearchRequest::builder().alpha(cfg.search.alpha).bitops_cap(cap).build()?;
+    let out = engine.solve_uncached(&req)?;
+    let policy = out.policy;
     println!(
-        "ILP search: {:?} for {} vars; policy BitOps {:.4} G (cap {:.4} G)",
-        t_ilp.elapsed(),
-        problem.n_vars(),
+        "{} search: {} us ({} nodes) for {} vars; policy BitOps {:.4} G (cap {:.4} G)",
+        out.stats.solver,
+        out.stats.wall_us,
+        out.stats.nodes,
+        out.stats.n_vars,
         total_bitops(&meta, &policy) as f64 / 1e9,
         cap as f64 / 1e9
     );

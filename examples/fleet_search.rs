@@ -6,6 +6,7 @@
 
 use anyhow::Result;
 use limpq::data::{generate, SynthConfig};
+use limpq::engine::SearchRequest;
 use limpq::fleet::{query, DeviceSpec, FleetSearcher, FleetServer};
 use limpq::importance::IndicatorStore;
 use limpq::models::ModelMeta;
@@ -24,30 +25,44 @@ fn main() -> Result<()> {
 
     let searcher = FleetSearcher::new(meta.clone(), imp);
 
-    // In-process sweep over a fleet of devices with diverse budgets.
+    // In-process sweep over a fleet of devices with diverse budgets,
+    // fanned out across the engine's thread pool.
     let base = uniform_bitops(&meta, 6, 6);
     let fleet: Vec<DeviceSpec> = (0..6)
-        .map(|i| DeviceSpec {
-            name: format!("device-{i} ({}% budget)", 55 + 8 * i),
-            bitops_cap: Some(base * (55 + 8 * i as u64) / 100),
-            size_cap_bytes: None,
-            alpha: 1.0,
-            weight_only: false,
+        .map(|i| -> Result<DeviceSpec> {
+            Ok(DeviceSpec {
+                name: format!("device-{i} ({}% budget)", 55 + 8 * i),
+                request: SearchRequest::builder()
+                    .alpha(1.0)
+                    .bitops_cap(base * (55 + 8 * i as u64) / 100)
+                    .build()?,
+            })
         })
-        .collect();
+        .collect::<Result<_>>()?;
     let t = std::time::Instant::now();
     let policies = searcher.search_fleet(&fleet)?;
     println!("fleet of {} devices searched in {:?} total:", fleet.len(), t.elapsed());
     for p in &policies {
         println!(
-            "  {:<24} bitops {:.4} G  cost {:.4}  solve {} us  W{:?}",
+            "  {:<24} bitops {:.4} G  cost {:.4}  solve {} us  [{}{}]  W{:?}",
             p.device,
             p.bitops as f64 / 1e9,
             p.cost,
             p.solve_us,
+            p.solver,
+            if p.cache_hit { ", cached" } else { "" },
             p.policy.w_bits
         );
     }
+    // Re-running the identical sweep hits the policy cache everywhere.
+    let policies2 = searcher.search_fleet(&fleet)?;
+    let hits = policies2.iter().filter(|p| p.cache_hit).count();
+    let stats = searcher.cache_stats();
+    println!(
+        "repeat sweep: {hits}/{} cached ({:.0}% overall hit rate)",
+        policies2.len(),
+        100.0 * stats.hit_rate()
+    );
 
     // Same thing over the wire.
     let server = FleetServer::spawn(searcher, "127.0.0.1:0")?;

@@ -8,11 +8,11 @@
 
 use anyhow::Result;
 use limpq::data::{generate, SynthConfig};
+use limpq::engine::{PolicyEngine, SearchRequest};
 use limpq::importance::IndicatorStore;
 use limpq::quant::cost::{total_bitops, uniform_bitops};
 use limpq::quant::BitConfig;
 use limpq::runtime::{pjrt::PjrtBackend, ModelBackend};
-use limpq::search::{solve, MpqProblem};
 use limpq::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -36,21 +36,27 @@ fn main() -> Result<()> {
     let out = backend.train_step(&flat, &sw, &sa, &qw, &qa, &data.images[..b * e], &data.labels[..b])?;
     println!("train_step: loss {:.4}, acc {:.3}, |g| {:.4}", out.loss, out.acc, limpq::tensor::l2_norm(&out.g_flat));
 
-    // 4. The one-time ILP search (paper eq. 3) at a 4-bit-level budget.
+    // 4. The one-time search (paper eq. 3) at a 4-bit-level budget,
+    //    through the PolicyEngine front door.
     let imp = store.importance(&meta);
     let cap = uniform_bitops(&meta, 4, 4);
-    let problem = MpqProblem::from_importance(&meta, &imp, 3.0, Some(cap), None, false);
-    let t = std::time::Instant::now();
-    let sol = solve(&problem)?;
-    let searched = problem.to_bit_config(&sol);
+    let engine = PolicyEngine::new(meta.clone(), imp);
+    let req = SearchRequest::builder().alpha(3.0).bitops_cap(cap).build()?;
+    let out = engine.solve(&req)?.outcome;
+    let searched = out.policy.clone();
     println!(
-        "ILP: {} vars solved in {:?}; policy W{:?} A{:?} at {:.4} GBitOps (cap {:.4})",
-        problem.n_vars(),
-        t.elapsed(),
+        "{}: {} vars solved in {} us ({} nodes); policy W{:?} A{:?} at {:.4} GBitOps (cap {:.4})",
+        out.stats.solver,
+        out.stats.n_vars,
+        out.stats.wall_us,
+        out.stats.nodes,
         searched.w_bits,
         searched.a_bits,
         total_bitops(&meta, &searched) as f64 / 1e9,
         cap as f64 / 1e9,
     );
+    // A second identical deployment query is served from the LRU cache.
+    let again = engine.solve(&req)?;
+    println!("repeat query: cache_hit = {}", again.cache_hit);
     Ok(())
 }

@@ -1,10 +1,16 @@
 //! Micro-benchmarks for the from-scratch ILP stack: branch-and-bound vs
 //! MCKP dynamic program vs simplex relaxation, at paper-sized and larger
-//! instances.  The paper's headline is "ResNet18 search in 0.06 s on an
-//! M1" — these benches show where our solver stands on this testbed.
+//! instances, plus the PolicyEngine front-end cold vs cached (the
+//! memoized fleet-query path).  The paper's headline is "ResNet18 search
+//! in 0.06 s on an M1" — these benches show where our solver stands on
+//! this testbed.
 //!
 //! Run: cargo bench --bench ilp_micro
 
+use limpq::engine::{PolicyEngine, SearchRequest, SolveBudget, SolverPref};
+use limpq::importance::IndicatorStore;
+use limpq::models::ModelMeta;
+use limpq::quant::cost::uniform_bitops;
 use limpq::search::mckp::{solve_dp, Resource};
 use limpq::search::{bb::solve_bb, LayerOption, MpqProblem};
 use limpq::util::bench::Bench;
@@ -42,6 +48,13 @@ fn all_pairs() -> Vec<(u8, u8)> {
         }
     }
     v
+}
+
+/// ResNet18-shaped synthetic model meta (21 quantized layers) for the
+/// engine front-end benches, which need a real `ModelMeta`.
+fn synthetic_meta(layers: usize) -> ModelMeta {
+    let mut rng = Rng::new(17);
+    limpq::models::synthetic_meta(layers, move |_| 1_000_000 + rng.below(30_000_000) as u64)
 }
 
 fn main() {
@@ -84,5 +97,43 @@ fn main() {
         opt.cost,
         dp.cost,
         100.0 * (dp.cost - opt.cost) / opt.cost.abs().max(1e-12)
+    );
+
+    // ------------------------------------------------------------------
+    // PolicyEngine front-end: cold solve vs memoized repeat of the same
+    // fleet query — the serving-path win the LRU policy cache buys.
+    // ------------------------------------------------------------------
+    let meta = synthetic_meta(21);
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let engine = PolicyEngine::new(meta.clone(), imp);
+    let cap = uniform_bitops(&meta, 4, 4);
+    let req = SearchRequest::builder().alpha(3.0).bitops_cap(cap).build().unwrap();
+
+    let cold = bench.run("engine_cold(21L, bb via registry)", || {
+        engine.solve_uncached(&req).unwrap()
+    });
+    engine.solve(&req).unwrap(); // warm the cache
+    let cached = bench.run("engine_cached(identical request)", || {
+        let resp = engine.solve(&req).unwrap();
+        assert!(resp.cache_hit);
+        resp
+    });
+    println!(
+        "memoization: cold mean {:?} vs cached mean {:?} ({}x)",
+        cold.mean,
+        cached.mean,
+        (cold.mean.as_nanos().max(1) / cached.mean.as_nanos().max(1))
+    );
+
+    // Raw-problem path through the registry (what exp/hessian flows use).
+    let (sol, stats) = limpq::engine::solve_problem(
+        &p18,
+        &SolverPref::Auto,
+        &SolveBudget { node_limit: 10_000_000, ..SolveBudget::default() },
+    )
+    .unwrap();
+    println!(
+        "registry auto on p18: solver={} nodes={} gap={:?} cost={:.6}",
+        stats.solver, stats.nodes, stats.bound_gap, sol.cost
     );
 }

@@ -1,17 +1,19 @@
 //! §4.3 bench: MPQ policy search time on the *real* model metas
 //! (importances from stats init if no trained cache exists — solve time is
 //! importance-value independent).  Reproduces the "ILP solves in
-//! milliseconds, independent of training data" headline.
+//! milliseconds, independent of training data" headline, now through the
+//! PolicyEngine front-end: cold solves per constraint shape plus the
+//! memoized repeat-query path a fleet server actually serves.
 //!
 //! Run: make artifacts && cargo bench --bench search_efficiency
 
 use std::path::Path;
 
 use limpq::coordinator::checkpoint::Cache;
+use limpq::engine::{PolicyEngine, SearchRequest};
 use limpq::importance::IndicatorStore;
 use limpq::models::{list_models, ModelMeta};
 use limpq::quant::cost::uniform_bitops;
-use limpq::search::{solve, MpqProblem};
 use limpq::util::bench::Bench;
 use limpq::util::rng::Rng;
 
@@ -37,13 +39,16 @@ fn main() {
             });
         let imp = store.importance(&meta);
         let alpha = limpq::config::Config::paper_alpha(&model);
+        let engine = PolicyEngine::new(meta.clone(), imp);
 
         for (label, bits) in [("3bit", 3u8), ("4bit", 4u8)] {
             let cap = uniform_bitops(&meta, bits, bits);
-            let p = MpqProblem::from_importance(&meta, &imp, alpha, Some(cap), None, false);
-            let stats = bench.run(&format!("ilp_{model}_{label}(L={},vars={})", meta.n_qlayers, p.n_vars()), || {
-                solve(&p).unwrap()
-            });
+            let req = SearchRequest::builder().alpha(alpha).bitops_cap(cap).build().unwrap();
+            let n_vars = engine.problem(&req).n_vars();
+            let stats = bench.run(
+                &format!("ilp_{model}_{label}(L={},vars={n_vars})", meta.n_qlayers),
+                || engine.solve_uncached(&req).unwrap(),
+            );
             // The paper's ResNet18 number: 0.06 s. Flag regressions hard.
             if stats.mean.as_secs_f64() > 1.0 {
                 println!("WARNING: {model} {label} ILP slower than 1 s");
@@ -52,9 +57,37 @@ fn main() {
 
         // Weight-only (Table 5 shape) and two-constraint (Table 3 shape).
         let cap = uniform_bitops(&meta, 3, 3);
-        let pw = MpqProblem::from_importance(&meta, &imp, alpha, None, Some(meta.total_weights() * 3), true);
-        bench.run(&format!("ilp_{model}_weight_only"), || solve(&pw).unwrap());
-        let p2 = MpqProblem::from_importance(&meta, &imp, alpha, Some(cap), Some(meta.total_weights() * 3), false);
-        bench.run(&format!("ilp_{model}_two_constraint"), || solve(&p2).unwrap());
+        let req_w = SearchRequest::builder()
+            .alpha(alpha)
+            .size_cap_bits(meta.total_weights() * 3)
+            .weight_only(true)
+            .build()
+            .unwrap();
+        bench.run(&format!("ilp_{model}_weight_only"), || engine.solve_uncached(&req_w).unwrap());
+        let req_2 = SearchRequest::builder()
+            .alpha(alpha)
+            .bitops_cap(cap)
+            .size_cap_bits(meta.total_weights() * 3)
+            .build()
+            .unwrap();
+        bench.run(&format!("ilp_{model}_two_constraint"), || {
+            engine.solve_uncached(&req_2).unwrap()
+        });
+
+        // The fleet serving path: identical repeated query, memoized.
+        let req = SearchRequest::builder()
+            .alpha(alpha)
+            .bitops_cap(uniform_bitops(&meta, 4, 4))
+            .build()
+            .unwrap();
+        engine.solve(&req).unwrap(); // warm
+        bench.run(&format!("ilp_{model}_cached_repeat"), || engine.solve(&req).unwrap());
+        let c = engine.cache_stats();
+        println!(
+            "cache[{model}]: {} hits / {} solves ({:.1}% hit rate)",
+            c.hits,
+            c.hits + c.misses,
+            100.0 * c.hit_rate()
+        );
     }
 }

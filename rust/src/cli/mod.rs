@@ -27,8 +27,23 @@ pub struct Args {
     pub flags: Vec<(String, Option<String>)>,
 }
 
-const VALUE_FLAGS: &[&str] =
-    &["model", "config", "set", "cap-gbitops", "size-cap-mb", "alpha", "bind", "artifacts-dir", "out-dir", "save", "policy", "tag"];
+const VALUE_FLAGS: &[&str] = &[
+    "model",
+    "config",
+    "set",
+    "cap-gbitops",
+    "size-cap-mb",
+    "alpha",
+    "bind",
+    "artifacts-dir",
+    "out-dir",
+    "save",
+    "policy",
+    "tag",
+    "solver",
+    "node-limit",
+    "time-limit-ms",
+];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -98,11 +113,31 @@ USAGE:
                                      efficiency, all
   limpq search    --model M (--cap-gbitops X | --size-cap-mb X)
                   [--alpha A] [--weight-only] [--save policy.json]
-  limpq serve     --model M [--bind 127.0.0.1:7070]
+                  [--solver S] [--node-limit N] [--time-limit-ms T]
+  limpq serve     --model M [--bind 127.0.0.1:7070]   fleet TCP server;
+                  reports policy-cache hit rate while serving
   limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
                   policy on the validation split (finetuned ckpt if cached)
   limpq models
   limpq help
+
+ENGINE (policy search):
+  Every search runs through the PolicyEngine: a registry of Solver
+  implementations with automatic fallback and an LRU cache over
+  canonicalized requests (repeated identical queries are O(1)).
+    --solver S         auto (default; exact-first fallback chain) or a
+                       specific solver: bb (exact branch-and-bound),
+                       mckp (DP, single constraint), lp-round (simplex
+                       relaxation + guided rounding), pareto (frontier
+                       sweep), greedy (constructive repair)
+    --node-limit N     branch-and-bound node budget (default 2000000)
+    --time-limit-ms T  wall-clock deadline for the exact B&B search; on
+                       expiry the best feasible incumbent is returned
+                       (optimality unproven).  Other solvers run to
+                       completion and ignore the deadline.
+  The fleet line protocol accepts the same controls as JSON fields
+  (\"solver\", \"node_limit\", \"time_limit_ms\") and reports
+  \"solver\" and \"cache_hit\" in every response.
 ";
 
 /// Dispatch a parsed command. Returns process exit code.
@@ -151,9 +186,9 @@ pub fn dispatch(args: &Args) -> Result<i32> {
 
 /// The full e2e flow: pretrain -> indicators -> ILP -> finetune -> report.
 fn run_pipeline(cfg: Config) -> Result<()> {
+    use crate::engine::{PolicyEngine, SearchRequest};
     use crate::exp::ExpCtx;
     use crate::quant::cost::{total_bitops, uniform_bitops};
-    use crate::search::{solve, MpqProblem};
 
     let ctx = ExpCtx::load(cfg)?;
     let meta = ctx.meta().clone();
@@ -164,14 +199,16 @@ fn run_pipeline(cfg: Config) -> Result<()> {
     let imp = ctx.importance(&store);
 
     let cap = uniform_bitops(&meta, 4, 4);
-    let prob = MpqProblem::from_importance(&meta, &imp, ctx.cfg.search.alpha, Some(cap), None, false);
-    let t_ilp = std::time::Instant::now();
-    let sol = solve(&prob)?;
-    let ilp_ms = t_ilp.elapsed().as_secs_f64() * 1e3;
-    let policy = prob.to_bit_config(&sol);
+    let engine = PolicyEngine::new(meta.clone(), imp);
+    let req = SearchRequest::builder().alpha(ctx.cfg.search.alpha).bitops_cap(cap).build()?;
+    let out = engine.solve_uncached(&req)?;
+    let policy = out.policy;
     eprintln!(
-        "[{}] ILP solved in {ilp_ms:.2} ms: BitOps {:.3} G (cap {:.3} G)",
+        "[{}] {} solved in {:.2} ms ({} nodes): BitOps {:.3} G (cap {:.3} G)",
         meta.name,
+        out.stats.solver,
+        out.stats.wall_us as f64 / 1e3,
+        out.stats.nodes,
         total_bitops(&meta, &policy) as f64 / 1e9,
         cap as f64 / 1e9
     );
@@ -190,6 +227,35 @@ fn run_pipeline(cfg: Config) -> Result<()> {
     Ok(())
 }
 
+/// Build the engine [`SearchRequest`] from `search`/`serve`-style flags.
+fn request_from_args(args: &Args, cfg: &Config) -> Result<crate::engine::SearchRequest> {
+    let mut b = crate::engine::SearchRequest::builder().alpha(
+        args.get("alpha")
+            .map(|v| v.parse::<f64>())
+            .transpose()?
+            .unwrap_or_else(|| Config::paper_alpha(&cfg.model)),
+    );
+    if let Some(v) = args.get("cap-gbitops") {
+        b = b.bitops_cap((v.parse::<f64>()? * 1e9) as u64);
+    }
+    if let Some(v) = args.get("size-cap-mb") {
+        b = b.size_cap_bytes((v.parse::<f64>()? * 1e6) as u64);
+    }
+    if args.has("weight-only") {
+        b = b.weight_only(true);
+    }
+    if let Some(v) = args.get("solver") {
+        b = b.solver_name(v);
+    }
+    if let Some(v) = args.get("node-limit") {
+        b = b.node_limit(v.parse::<usize>()?);
+    }
+    if let Some(v) = args.get("time-limit-ms") {
+        b = b.time_limit(std::time::Duration::from_millis(v.parse::<u64>()?));
+    }
+    b.build()
+}
+
 fn run_search(args: &Args, cfg: Config) -> Result<()> {
     use crate::models::ModelMeta;
 
@@ -200,30 +266,24 @@ fn run_search(args: &Args, cfg: Config) -> Result<()> {
         .context("no cached indicators — run `limpq pipeline` or `limpq exp` first")?;
     let imp = store.importance(&meta);
     let searcher = FleetSearcher::new(meta.clone(), imp);
-    let dev = DeviceSpec {
-        name: "cli".into(),
-        bitops_cap: args.get("cap-gbitops").map(|v| (v.parse::<f64>().unwrap_or(0.0) * 1e9) as u64),
-        size_cap_bytes: args.get("size-cap-mb").map(|v| (v.parse::<f64>().unwrap_or(0.0) * 1e6) as u64),
-        alpha: args
-            .get("alpha")
-            .map(|v| v.parse::<f64>())
-            .transpose()?
-            .unwrap_or_else(|| Config::paper_alpha(&cfg.model)),
-        weight_only: args.has("weight-only"),
-    };
+    let request = request_from_args(args, &cfg)?;
+    let alpha = request.alpha;
+    let dev = DeviceSpec { name: "cli".into(), request };
     let out = searcher.search(&dev)?;
     let names: Vec<String> = meta.qlayers.iter().map(|q| q.name.clone()).collect();
     println!("{}", bit_chart(&format!("{} policy", cfg.model), &names, &out.policy.w_bits, &out.policy.a_bits));
     println!(
-        "cost {:.4}  bitops {:.3} G  size {:.3} MB  solved in {} us",
+        "cost {:.4}  bitops {:.3} G  size {:.3} MB  solved in {} us by {} (cache_hit {})",
         out.cost,
         out.bitops as f64 / 1e9,
         out.size_bits as f64 / 8e6,
-        out.solve_us
+        out.solve_us,
+        out.solver,
+        out.cache_hit
     );
     if let Some(path) = args.get("save") {
         let pf = crate::quant::policy_io::PolicyFile::new(
-            &meta, out.policy.clone(), out.bitops, out.size_bits, out.cost, dev.alpha,
+            &meta, out.policy.clone(), out.bitops, out.size_bits, out.cost, alpha,
         );
         pf.save(std::path::Path::new(path))?;
         println!("policy saved to {path}");
@@ -284,12 +344,27 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
         .context("no cached indicators — run `limpq pipeline` first")?;
     let imp = store.importance(&meta);
     let bind = args.get("bind").unwrap_or("127.0.0.1:7070");
-    let server = FleetServer::spawn(FleetSearcher::new(meta, imp), bind)?;
+    let searcher = FleetSearcher::new(meta, imp);
+    let stats_view = searcher.clone();
+    let server = FleetServer::spawn(searcher, bind)?;
     println!("fleet server for {} listening on {}", cfg.model, server.addr);
-    println!("protocol: one JSON request per line, e.g. {{\"cap_gbitops\": 1.5, \"alpha\": 1.0}}");
-    // Serve until killed.
+    println!("protocol: one JSON request per line, e.g. {{\"cap_gbitops\": 1.5, \"alpha\": 1.0, \"solver\": \"auto\"}}");
+    // Serve until killed, reporting policy-cache effectiveness.
+    let mut last_total = 0usize;
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(std::time::Duration::from_secs(30));
+        let s = stats_view.cache_stats();
+        let total = s.hits + s.misses;
+        if total != last_total {
+            last_total = total;
+            println!(
+                "cache: {} hits / {} solves ({:.1}% hit rate), {} policies cached",
+                s.hits,
+                total,
+                100.0 * s.hit_rate(),
+                s.entries
+            );
+        }
     }
 }
 
@@ -329,6 +404,31 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(&["x".into(), "--model".into()]).is_err());
+    }
+
+    #[test]
+    fn engine_flags_parse() {
+        let a = parse(&[
+            "search",
+            "--cap-gbitops",
+            "1.5",
+            "--solver",
+            "mckp",
+            "--node-limit",
+            "1000",
+            "--time-limit-ms",
+            "250",
+        ]);
+        assert_eq!(a.get("solver"), Some("mckp"));
+        assert_eq!(a.get("node-limit"), Some("1000"));
+        assert_eq!(a.get("time-limit-ms"), Some("250"));
+    }
+
+    #[test]
+    fn help_documents_the_engine() {
+        assert!(HELP.contains("--solver"));
+        assert!(HELP.contains("node-limit"));
+        assert!(HELP.contains("cache_hit"));
     }
 
     #[test]

@@ -238,7 +238,8 @@ mod tests {
     use crate::data::{generate, SynthConfig};
     use crate::importance::IndicatorStore;
     use crate::runtime::mock::MockBackend;
-    use crate::search::{solve, MpqProblem};
+    use crate::engine::solve_auto;
+    use crate::search::MpqProblem;
     use crate::util::json::Json;
     use std::path::Path;
 
@@ -306,7 +307,7 @@ mod tests {
         // Stage 3: ILP at a 4-bit-level cap.
         let cap = crate::quant::cost::uniform_bitops(&meta, 4, 4);
         let prob = MpqProblem::from_importance(&meta, &imp, 1.0, Some(cap), None, false);
-        let sol = solve(&prob).unwrap();
+        let sol = solve_auto(&prob).unwrap();
         let policy = prob.to_bit_config(&sol);
         policy.validate(&meta).unwrap();
         assert!(crate::quant::cost::total_bitops(&meta, &policy) <= cap);

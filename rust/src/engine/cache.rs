@@ -1,0 +1,97 @@
+//! Small LRU map used by [`super::PolicyEngine`] to memoize solved
+//! policies keyed on canonicalized [`super::SearchRequest`]s.
+//!
+//! From scratch (the offline mirror has no `lru` crate): a `HashMap`
+//! carrying a monotonically increasing recency stamp per entry.  Hits
+//! bump the stamp; inserts beyond capacity evict the stalest entry.
+//! Lookups are O(1); eviction is O(n) but only runs on insert once the
+//! cache is full, and fleet caches are small (hundreds of entries).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[derive(Debug)]
+pub struct LruCache<K, V> {
+    map: HashMap<K, (u64, V)>,
+    stamp: u64,
+    capacity: usize,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> LruCache<K, V> {
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        LruCache { map: HashMap::new(), stamp: 0, capacity: capacity.max(1) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up `key`, refreshing its recency on hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        self.map.get_mut(key).map(|(s, v)| {
+            *s = stamp;
+            v.clone()
+        })
+    }
+
+    /// Insert, evicting the least-recently-used entry when full.
+    pub fn insert(&mut self, key: K, value: V) {
+        self.stamp += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (s, _))| *s).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (self.stamp, value));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss() {
+        let mut c: LruCache<u32, &'static str> = LruCache::new(4);
+        assert!(c.get(&1).is_none());
+        c.insert(1, "a");
+        assert_eq!(c.get(&1), Some("a"));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(10)); // refresh 1 -> 2 is now LRU
+        c.insert(3, 30);
+        assert!(c.get(&2).is_none(), "2 should have been evicted");
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinsert_updates_value_without_evicting() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&1), Some(11));
+        assert_eq!(c.get(&2), Some(20));
+    }
+}

@@ -1,0 +1,506 @@
+//! # PolicyEngine — the unified MPQ search API
+//!
+//! The paper's deployment story (§4.3) makes policy search the
+//! production hot path: once importances are learned, every device
+//! constraint is answered by a sub-second data-free solve.  This module
+//! is the one front door to that path:
+//!
+//! * [`Solver`] — trait over every solver family (`bb`, `mckp`,
+//!   `lp-round`, `pareto`, `greedy`), each reporting effort and bound
+//!   telemetry through [`SolveOutcome`];
+//! * [`SearchRequest`] — a validated builder replacing the positional
+//!   sprawl of `MpqProblem::from_importance` + `solve`;
+//! * [`SolverRegistry`] — named lookup plus an automatic fallback chain
+//!   (exact B&B → MCKP DP → LP-guided rounding → Pareto → greedy);
+//! * [`PolicyEngine`] — the memoizing fleet front-end: model + learned
+//!   importances + registry + an LRU policy cache keyed on
+//!   canonicalized requests, so repeated fleet/device queries are O(1).
+//!
+//! Every consumer (fleet server, CLI, coordinator, experiment drivers,
+//! benches) goes through this module; `search::` keeps only the raw
+//! problem substrate and algorithms.
+//!
+//! ```no_run
+//! # use limpq::engine::{PolicyEngine, SearchRequest};
+//! # fn demo(meta: limpq::models::ModelMeta, imp: limpq::importance::Importance) -> anyhow::Result<()> {
+//! let engine = PolicyEngine::new(meta, imp);
+//! let req = SearchRequest::builder().alpha(3.0).bitops_cap(23_070_000_000).build()?;
+//! let resp = engine.solve(&req)?;            // cold: runs the registry
+//! let again = engine.solve(&req)?;           // hot: LRU cache, O(1)
+//! assert!(again.cache_hit);
+//! assert_eq!(resp.outcome.policy, again.outcome.policy);
+//! # Ok(()) }
+//! ```
+
+pub mod cache;
+pub mod request;
+pub mod solvers;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+pub use self::request::{
+    CanonicalKey, SearchRequest, SearchRequestBuilder, SolveBudget, SolverPref,
+};
+pub use self::solvers::{
+    BranchAndBound, GreedyRepair, MckpDp, ParetoFrontier, SimplexRelax, SolveOutcome, Solver,
+};
+
+use self::cache::LruCache;
+use crate::importance::Importance;
+use crate::models::ModelMeta;
+use crate::quant::BitConfig;
+use crate::search::{MpqProblem, Solution};
+
+/// Telemetry for one engine solve.
+#[derive(Debug, Clone)]
+pub struct SolveStats {
+    /// The solver that produced the solution (after any fallback).
+    pub solver: String,
+    /// ILP variable count of the solved problem (total options).
+    pub n_vars: usize,
+    /// Solver-native effort units (B&B nodes, DP cell relaxations).
+    pub nodes: u64,
+    /// `cost − lower_bound` when the solver certified a bound.
+    pub bound_gap: Option<f64>,
+    pub proven_optimal: bool,
+    /// Wall time of the winning solver's run.
+    pub wall_us: u128,
+    /// How many solvers failed before one succeeded (Auto mode).
+    pub fallbacks: u32,
+}
+
+/// A solved policy plus everything a caller may want to report.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub policy: BitConfig,
+    pub solution: Solution,
+    pub stats: SolveStats,
+}
+
+/// What [`PolicyEngine::solve`] returns: the (possibly shared) outcome
+/// and whether this particular call was served from the policy cache.
+#[derive(Debug, Clone)]
+pub struct EngineResponse {
+    pub outcome: Arc<PolicyOutcome>,
+    pub cache_hit: bool,
+}
+
+/// Cache counters for operator dashboards (`limpq serve`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Ordered solver registry with named lookup and automatic fallback.
+pub struct SolverRegistry {
+    solvers: Vec<Arc<dyn Solver>>,
+}
+
+impl SolverRegistry {
+    /// The standard chain: exact first, heuristics as last resorts.
+    pub fn standard() -> SolverRegistry {
+        SolverRegistry {
+            solvers: vec![
+                Arc::new(BranchAndBound),
+                Arc::new(MckpDp),
+                Arc::new(SimplexRelax),
+                Arc::new(ParetoFrontier),
+                Arc::new(GreedyRepair),
+            ],
+        }
+    }
+
+    /// A registry with a custom chain (tests, experiments).
+    pub fn with_solvers(solvers: Vec<Arc<dyn Solver>>) -> SolverRegistry {
+        SolverRegistry { solvers }
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.solvers.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<dyn Solver>> {
+        self.solvers.iter().find(|s| s.name() == name).cloned()
+    }
+
+    /// Solve a raw problem honoring the preference: `Named` runs exactly
+    /// that solver; `Auto` walks the chain, skipping solvers that do not
+    /// support the constraint shape and falling back past failures.
+    pub fn solve(
+        &self,
+        p: &MpqProblem,
+        pref: &SolverPref,
+        budget: &SolveBudget,
+    ) -> Result<(Solution, SolveStats)> {
+        // Defense in depth for hand-built requests: Named("auto") means
+        // the fallback chain, never a lookup (build() also normalizes).
+        let auto = SolverPref::Auto;
+        let pref = match pref {
+            SolverPref::Named(n) if n == "auto" || n.is_empty() => &auto,
+            other => other,
+        };
+        match pref {
+            SolverPref::Named(name) => {
+                let Some(s) = self.get(name) else {
+                    bail!("unknown solver {name:?} (registered: {})", self.names().join(", "));
+                };
+                if !s.supports(p) {
+                    bail!(
+                        "solver {name:?} does not support this problem's constraint shape \
+                         (bitops cap: {}, size cap: {})",
+                        p.bitops_cap.is_some(),
+                        p.size_cap_bits.is_some()
+                    );
+                }
+                let t = Instant::now();
+                let out = s.solve_full(p, budget)?;
+                Ok((out.solution.clone(), stats_of(s.name(), p.n_vars(), &out, t, 0)))
+            }
+            SolverPref::Auto => {
+                let mut failures: Vec<String> = Vec::new();
+                for s in &self.solvers {
+                    if !s.supports(p) {
+                        continue;
+                    }
+                    let t = Instant::now();
+                    match s.solve_full(p, budget) {
+                        Ok(out) => {
+                            let stats =
+                                stats_of(s.name(), p.n_vars(), &out, t, failures.len() as u32);
+                            return Ok((out.solution, stats));
+                        }
+                        Err(e) => failures.push(format!("{}: {e:#}", s.name())),
+                    }
+                }
+                bail!("every solver failed — {}", failures.join("; "))
+            }
+        }
+    }
+}
+
+fn stats_of(
+    name: &str,
+    n_vars: usize,
+    out: &SolveOutcome,
+    started: Instant,
+    fallbacks: u32,
+) -> SolveStats {
+    SolveStats {
+        solver: name.to_string(),
+        n_vars,
+        nodes: out.nodes,
+        bound_gap: out.lower_bound.map(|lb| out.solution.cost - lb),
+        proven_optimal: out.proven_optimal,
+        wall_us: started.elapsed().as_micros(),
+        fallbacks,
+    }
+}
+
+/// Process-wide standard registry (solvers are stateless).
+pub fn standard_registry() -> &'static SolverRegistry {
+    static REG: OnceLock<SolverRegistry> = OnceLock::new();
+    REG.get_or_init(SolverRegistry::standard)
+}
+
+/// Solve a raw [`MpqProblem`] through the standard registry — the
+/// replacement for the old `search::solve()` free function wherever a
+/// problem is built by hand (Hessian baselines, synthetic benches).
+pub fn solve_problem(
+    p: &MpqProblem,
+    pref: &SolverPref,
+    budget: &SolveBudget,
+) -> Result<(Solution, SolveStats)> {
+    standard_registry().solve(p, pref, budget)
+}
+
+/// Shorthand: solve a raw problem with the default chain and budget.
+pub fn solve_auto(p: &MpqProblem) -> Result<Solution> {
+    solve_problem(p, &SolverPref::Auto, &SolveBudget::default()).map(|(s, _)| s)
+}
+
+// ---------------------------------------------------------------------------
+// PolicyEngine
+// ---------------------------------------------------------------------------
+
+/// Default LRU capacity for the policy cache.
+const DEFAULT_CACHE_CAPACITY: usize = 512;
+
+/// The memoizing search front-end: owns the model meta and the one-time
+/// learned importances, builds eq.-3 problems from [`SearchRequest`]s,
+/// solves through the registry, and caches outcomes by canonical key.
+/// Shareable across threads (`Arc<PolicyEngine>`): the cache sits behind
+/// a mutex that is never held during a solve.
+pub struct PolicyEngine {
+    pub meta: Arc<ModelMeta>,
+    pub importance: Arc<Importance>,
+    registry: &'static SolverRegistry,
+    policy_cache: Mutex<LruCache<CanonicalKey, Arc<PolicyOutcome>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PolicyEngine {
+    pub fn new(meta: ModelMeta, importance: Importance) -> PolicyEngine {
+        Self::with_cache_capacity(meta, importance, DEFAULT_CACHE_CAPACITY)
+    }
+
+    pub fn with_cache_capacity(
+        meta: ModelMeta,
+        importance: Importance,
+        capacity: usize,
+    ) -> PolicyEngine {
+        PolicyEngine {
+            meta: Arc::new(meta),
+            importance: Arc::new(importance),
+            registry: standard_registry(),
+            policy_cache: Mutex::new(LruCache::new(capacity)),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Materialize the eq.-3 MCKP instance for a request.
+    pub fn problem(&self, req: &SearchRequest) -> MpqProblem {
+        MpqProblem::from_importance(
+            &self.meta,
+            &self.importance,
+            req.alpha,
+            req.bitops_cap,
+            req.size_cap_bits,
+            req.weight_only,
+        )
+    }
+
+    /// Memoized solve: identical canonical requests after the first are
+    /// served from the LRU cache in O(1) without touching a solver.
+    pub fn solve(&self, req: &SearchRequest) -> Result<EngineResponse> {
+        let key = req.canonical_key();
+        if let Some(outcome) = self.policy_cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(EngineResponse { outcome, cache_hit: true });
+        }
+        // Miss: solve without holding the lock (concurrent identical
+        // misses may race the solve; last insert wins, results identical).
+        let outcome = Arc::new(self.solve_uncached(req)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.policy_cache.lock().unwrap().insert(key, outcome.clone());
+        Ok(EngineResponse { outcome, cache_hit: false })
+    }
+
+    /// Always run the solver (bench cold paths, accuracy measurements).
+    pub fn solve_uncached(&self, req: &SearchRequest) -> Result<PolicyOutcome> {
+        let p = self.problem(req);
+        let (solution, stats) = self.registry.solve(&p, &req.solver, &req.budget)?;
+        Ok(PolicyOutcome { policy: p.to_bit_config(&solution), solution, stats })
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        let cache = self.policy_cache.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: cache.len(),
+            capacity: cache.capacity(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::importance::IndicatorStore;
+    use crate::quant::cost::uniform_bitops;
+    use crate::search::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    fn meta6() -> ModelMeta {
+        crate::models::synthetic_meta(6, |i| 100_000 * (i as u64 + 1))
+    }
+
+    fn engine() -> PolicyEngine {
+        let meta = meta6();
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        PolicyEngine::new(meta, imp)
+    }
+
+    #[test]
+    fn second_identical_request_is_a_cache_hit_with_identical_policy() {
+        let e = engine();
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder().alpha(2.0).bitops_cap(cap).build().unwrap();
+        let first = e.solve(&req).unwrap();
+        assert!(!first.cache_hit);
+        let second = e.solve(&req).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(first.outcome.policy, second.outcome.policy);
+        assert_eq!(first.outcome.solution, second.outcome.solution);
+        let stats = e.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+
+        // A separately built but canonically equal request also hits.
+        let rebuilt = SearchRequest::builder().alpha(2.0).bitops_cap(cap).build().unwrap();
+        assert!(e.solve(&rebuilt).unwrap().cache_hit);
+        // A different constraint misses.
+        let other = SearchRequest::builder().alpha(2.0).bitops_cap(cap + 1).build().unwrap();
+        assert!(!e.solve(&other).unwrap().cache_hit);
+    }
+
+    #[test]
+    fn named_solver_runs_and_reports_itself() {
+        let e = engine();
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        for name in ["bb", "mckp", "lp-round", "pareto", "greedy"] {
+            let req = SearchRequest::builder()
+                .bitops_cap(cap)
+                .solver_name(name)
+                .build()
+                .unwrap();
+            match e.solve_uncached(&req) {
+                Ok(out) => {
+                    assert_eq!(out.stats.solver, name);
+                    assert!(out.solution.bitops <= cap);
+                }
+                // frontier heuristics may miss on some shapes; exacts may not
+                Err(e) => assert!(
+                    matches!(name, "pareto" | "lp-round"),
+                    "{name} should not fail: {e:#}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn named_unknown_solver_is_an_error() {
+        let e = engine();
+        let req = SearchRequest::builder()
+            .bitops_cap(1 << 40)
+            .solver_name("cplex")
+            .build()
+            .unwrap();
+        let err = e.solve(&req).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown solver"), "{err:#}");
+    }
+
+    #[test]
+    fn named_mckp_rejects_two_constraint_requests() {
+        let e = engine();
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder()
+            .bitops_cap(cap)
+            .size_cap_bits(1 << 40)
+            .solver_name("mckp")
+            .build()
+            .unwrap();
+        assert!(e.solve(&req).is_err());
+        // Auto handles the same shape via branch-and-bound.
+        let auto = SearchRequest::builder()
+            .bitops_cap(cap)
+            .size_cap_bits(1 << 40)
+            .build()
+            .unwrap();
+        let out = e.solve(&auto).unwrap();
+        assert_eq!(out.outcome.stats.solver, "bb");
+        assert!(out.outcome.stats.proven_optimal);
+    }
+
+    #[test]
+    fn auto_falls_through_unsupported_solvers() {
+        // Custom registry of [mckp, greedy] only: a two-constraint
+        // problem skips mckp (unsupported shape) and falls through to
+        // greedy, which must then produce the answer.
+        let reg = SolverRegistry::with_solvers(vec![
+            Arc::new(MckpDp),
+            Arc::new(GreedyRepair),
+        ]);
+        let mut rng = Rng::new(31);
+        let mut p = random_problem(&mut rng, 4, 3, 0.7);
+        let min_s: u64 =
+            p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+        let max_s: u64 =
+            p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+        p.size_cap_bits = Some(min_s + (max_s - min_s) * 8 / 10);
+        let (sol, stats) = reg.solve(&p, &SolverPref::Auto, &SolveBudget::default()).unwrap();
+        assert_eq!(stats.solver, "greedy");
+        assert!(p.feasible(&sol));
+    }
+
+    #[test]
+    fn exact_solvers_agree_through_the_engine() {
+        // Tiny MACs keep the cap small enough for a unit DP grid, so the
+        // DP is provably exact rather than accidentally lossless.
+        let meta = crate::models::synthetic_meta(6, |i| 10 * (i as u64 + 1));
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        let e = PolicyEngine::new(meta, imp);
+        let cap = uniform_bitops(&e.meta, 3, 3);
+        let bb = SearchRequest::builder().bitops_cap(cap).solver_name("bb").build().unwrap();
+        let dp = SearchRequest::builder()
+            .bitops_cap(cap)
+            .solver_name("mckp")
+            .dp_grid(cap as usize + 1)
+            .build()
+            .unwrap();
+        let a = e.solve_uncached(&bb).unwrap();
+        let b = e.solve_uncached(&dp).unwrap();
+        assert!(b.stats.proven_optimal, "unit-grid DP must be exact");
+        assert!(
+            (a.solution.cost - b.solution.cost).abs() < 1e-9,
+            "bb {} vs dp {}",
+            a.solution.cost,
+            b.solution.cost
+        );
+    }
+
+    #[test]
+    fn stats_carry_bound_gap_and_effort() {
+        let e = engine();
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder().bitops_cap(cap).build().unwrap();
+        let out = e.solve_uncached(&req).unwrap();
+        assert_eq!(out.stats.solver, "bb");
+        assert!(out.stats.nodes >= 1);
+        assert!(out.stats.proven_optimal);
+        let gap = out.stats.bound_gap.expect("bb certifies a root bound");
+        assert!(gap >= -1e-9, "negative bound gap {gap}");
+    }
+
+    #[test]
+    fn lru_evicts_under_many_distinct_requests() {
+        let meta = meta6();
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        let e = PolicyEngine::with_cache_capacity(meta, imp, 4);
+        let base = uniform_bitops(&e.meta, 4, 4);
+        for i in 0..8u64 {
+            let req = SearchRequest::builder().bitops_cap(base + i).build().unwrap();
+            e.solve(&req).unwrap();
+        }
+        let stats = e.cache_stats();
+        assert_eq!(stats.entries, 4);
+        assert_eq!(stats.misses, 8);
+        // oldest request was evicted -> re-solving it is a miss
+        let req = SearchRequest::builder().bitops_cap(base).build().unwrap();
+        assert!(!e.solve(&req).unwrap().cache_hit);
+    }
+}

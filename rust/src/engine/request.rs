@@ -1,0 +1,307 @@
+//! [`SearchRequest`]: the one way to ask for an MPQ policy.
+//!
+//! Replaces the positional-argument sprawl of
+//! `MpqProblem::from_importance(meta, imp, alpha, bitops_cap, size_cap,
+//! weight_only)` + `solve(&p)` with a validated builder, and carries
+//! everything a solve needs besides the model itself: constraint set,
+//! objective mix (α), solver preference, and time/node budget.
+//!
+//! Requests canonicalize to a hashable [`CanonicalKey`] so the
+//! [`super::PolicyEngine`] can memoize repeated fleet queries.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Resource limits for one solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveBudget {
+    /// Branch-and-bound node budget.
+    pub node_limit: usize,
+    /// Optional wall-clock deadline; exceeding it returns the incumbent.
+    /// Honored by the exact B&B solver only — the DP/LP/heuristic
+    /// solvers run to completion (they are polynomial and fast).
+    pub time_limit: Option<Duration>,
+    /// Budget cells for the MCKP dynamic program's resource grid.
+    pub dp_grid: usize,
+}
+
+impl Default for SolveBudget {
+    fn default() -> SolveBudget {
+        SolveBudget { node_limit: 2_000_000, time_limit: None, dp_grid: 16_384 }
+    }
+}
+
+impl SolveBudget {
+    /// Materialize the relative time limit into an absolute deadline.
+    pub fn deadline(&self) -> Option<std::time::Instant> {
+        self.time_limit.map(|t| std::time::Instant::now() + t)
+    }
+}
+
+/// Which solver the engine should use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolverPref {
+    /// Registry order with automatic fallback: exact B&B → MCKP DP →
+    /// LP-guided rounding → Pareto frontier → greedy repair.
+    Auto,
+    /// A specific registered solver by name (`bb`, `mckp`, `lp-round`,
+    /// `pareto`, `greedy`); no fallback.
+    Named(String),
+}
+
+impl SolverPref {
+    /// Parse a CLI/JSON solver string (`"auto"` or a registered name).
+    pub fn parse(s: &str) -> SolverPref {
+        match s {
+            "auto" | "" => SolverPref::Auto,
+            name => SolverPref::Named(name.to_string()),
+        }
+    }
+
+    /// Fold `Named("auto")`/`Named("")` onto `Auto` so a directly
+    /// constructed preference cannot alias Auto's cache key while
+    /// behaving differently at the registry.
+    pub fn normalized(self) -> SolverPref {
+        match self {
+            SolverPref::Named(n) if n == "auto" || n.is_empty() => SolverPref::Auto,
+            other => other,
+        }
+    }
+
+    pub fn canonical(&self) -> &str {
+        match self {
+            SolverPref::Auto => "auto",
+            SolverPref::Named(n) => n,
+        }
+    }
+}
+
+/// A fully specified policy-search request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRequest {
+    /// Weight-importance mix of eq. 3: cost = s_a + α·s_w.
+    pub alpha: f64,
+    /// BitOps cap (raw ops, not G).
+    pub bitops_cap: Option<u64>,
+    /// Model-size cap in bits.
+    pub size_cap_bits: Option<u64>,
+    /// Pin activations to 8 bits, search weights only (Table 5 setting).
+    pub weight_only: bool,
+    pub solver: SolverPref,
+    pub budget: SolveBudget,
+}
+
+impl SearchRequest {
+    pub fn builder() -> SearchRequestBuilder {
+        SearchRequestBuilder::default()
+    }
+
+    /// Hashable identity for memoization.  Two requests that would produce
+    /// byte-identical solves share a key (−0.0 α folds onto 0.0; the time
+    /// limit canonicalizes to nanoseconds).
+    pub fn canonical_key(&self) -> CanonicalKey {
+        let alpha = if self.alpha == 0.0 { 0.0 } else { self.alpha };
+        CanonicalKey {
+            alpha_bits: alpha.to_bits(),
+            bitops_cap: self.bitops_cap,
+            size_cap_bits: self.size_cap_bits,
+            weight_only: self.weight_only,
+            solver: self.solver.canonical().to_string(),
+            node_limit: self.budget.node_limit,
+            time_limit_ns: self.budget.time_limit.map(|t| t.as_nanos()),
+            dp_grid: self.budget.dp_grid,
+        }
+    }
+}
+
+/// Canonicalized request identity — the policy-cache key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CanonicalKey {
+    alpha_bits: u64,
+    bitops_cap: Option<u64>,
+    size_cap_bits: Option<u64>,
+    weight_only: bool,
+    solver: String,
+    node_limit: usize,
+    time_limit_ns: Option<u128>,
+    dp_grid: usize,
+}
+
+/// Builder for [`SearchRequest`].  All fields default sanely: α = 1,
+/// no caps (validated by the consumer if one is required), full-precision
+/// + activation search, `auto` solver, default budget.
+#[derive(Debug, Clone)]
+pub struct SearchRequestBuilder {
+    alpha: f64,
+    bitops_cap: Option<u64>,
+    size_cap_bits: Option<u64>,
+    weight_only: bool,
+    solver: SolverPref,
+    budget: SolveBudget,
+}
+
+impl Default for SearchRequestBuilder {
+    fn default() -> SearchRequestBuilder {
+        SearchRequestBuilder {
+            alpha: 1.0,
+            bitops_cap: None,
+            size_cap_bits: None,
+            weight_only: false,
+            solver: SolverPref::Auto,
+            budget: SolveBudget::default(),
+        }
+    }
+}
+
+impl SearchRequestBuilder {
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn bitops_cap(mut self, cap: u64) -> Self {
+        self.bitops_cap = Some(cap);
+        self
+    }
+
+    pub fn bitops_cap_opt(mut self, cap: Option<u64>) -> Self {
+        self.bitops_cap = cap;
+        self
+    }
+
+    pub fn size_cap_bits(mut self, cap: u64) -> Self {
+        self.size_cap_bits = Some(cap);
+        self
+    }
+
+    pub fn size_cap_bits_opt(mut self, cap: Option<u64>) -> Self {
+        self.size_cap_bits = cap;
+        self
+    }
+
+    /// Size cap given in bytes (fleet requests arrive in MB/bytes).
+    pub fn size_cap_bytes(mut self, cap: u64) -> Self {
+        self.size_cap_bits = Some(cap.saturating_mul(8));
+        self
+    }
+
+    pub fn weight_only(mut self, on: bool) -> Self {
+        self.weight_only = on;
+        self
+    }
+
+    pub fn solver(mut self, pref: SolverPref) -> Self {
+        self.solver = pref;
+        self
+    }
+
+    /// Convenience: solver by name string (`"auto"`, `"bb"`, ...).
+    pub fn solver_name(mut self, name: &str) -> Self {
+        self.solver = SolverPref::parse(name);
+        self
+    }
+
+    pub fn node_limit(mut self, n: usize) -> Self {
+        self.budget.node_limit = n;
+        self
+    }
+
+    pub fn time_limit(mut self, t: Duration) -> Self {
+        self.budget.time_limit = Some(t);
+        self
+    }
+
+    pub fn dp_grid(mut self, cells: usize) -> Self {
+        self.budget.dp_grid = cells;
+        self
+    }
+
+    pub fn budget(mut self, b: SolveBudget) -> Self {
+        self.budget = b;
+        self
+    }
+
+    pub fn build(self) -> Result<SearchRequest> {
+        if !self.alpha.is_finite() {
+            bail!("alpha must be finite, got {}", self.alpha);
+        }
+        if self.alpha < 0.0 {
+            bail!("alpha must be ≥ 0, got {}", self.alpha);
+        }
+        if self.budget.node_limit == 0 {
+            bail!("node_limit must be positive");
+        }
+        if self.budget.dp_grid < 2 {
+            bail!("dp_grid must be at least 2 cells");
+        }
+        Ok(SearchRequest {
+            alpha: self.alpha,
+            bitops_cap: self.bitops_cap,
+            size_cap_bits: self.size_cap_bits,
+            weight_only: self.weight_only,
+            solver: self.solver.normalized(),
+            budget: self.budget,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let r = SearchRequest::builder().build().unwrap();
+        assert_eq!(r.alpha, 1.0);
+        assert_eq!(r.bitops_cap, None);
+        assert_eq!(r.size_cap_bits, None);
+        assert!(!r.weight_only);
+        assert_eq!(r.solver, SolverPref::Auto);
+        assert_eq!(r.budget, SolveBudget::default());
+    }
+
+    #[test]
+    fn builder_rejects_bad_inputs() {
+        assert!(SearchRequest::builder().alpha(f64::NAN).build().is_err());
+        assert!(SearchRequest::builder().alpha(-1.0).build().is_err());
+        assert!(SearchRequest::builder().node_limit(0).build().is_err());
+        assert!(SearchRequest::builder().dp_grid(1).build().is_err());
+    }
+
+    #[test]
+    fn canonical_key_identity_and_negative_zero() {
+        let a = SearchRequest::builder().alpha(3.0).bitops_cap(100).build().unwrap();
+        let b = SearchRequest::builder().alpha(3.0).bitops_cap(100).build().unwrap();
+        assert_eq!(a.canonical_key(), b.canonical_key());
+        let z1 = SearchRequest::builder().alpha(0.0).build().unwrap();
+        let z2 = SearchRequest::builder().alpha(-0.0).build().unwrap();
+        assert_eq!(z1.canonical_key(), z2.canonical_key());
+        let c = SearchRequest::builder().alpha(3.0).bitops_cap(101).build().unwrap();
+        assert_ne!(a.canonical_key(), c.canonical_key());
+    }
+
+    #[test]
+    fn solver_pref_parses() {
+        assert_eq!(SolverPref::parse("auto"), SolverPref::Auto);
+        assert_eq!(SolverPref::parse("mckp"), SolverPref::Named("mckp".into()));
+        assert_eq!(SolverPref::parse("bb").canonical(), "bb");
+    }
+
+    #[test]
+    fn named_auto_normalizes_to_auto_at_build() {
+        let r = SearchRequest::builder()
+            .solver(SolverPref::Named("auto".into()))
+            .build()
+            .unwrap();
+        assert_eq!(r.solver, SolverPref::Auto);
+        let r2 = SearchRequest::builder().solver(SolverPref::Named(String::new())).build().unwrap();
+        assert_eq!(r2.solver, SolverPref::Auto);
+    }
+
+    #[test]
+    fn size_cap_bytes_converts_to_bits() {
+        let r = SearchRequest::builder().size_cap_bytes(1000).build().unwrap();
+        assert_eq!(r.size_cap_bits, Some(8000));
+    }
+}

@@ -1,0 +1,447 @@
+//! The [`Solver`] trait and its implementations — one per solver family
+//! in the from-scratch ILP stack:
+//!
+//! * [`BranchAndBound`] (`bb`) — exact Lagrangian B&B, any constraint set
+//! * [`MckpDp`] (`mckp`) — dynamic program, exactly one constraint
+//! * [`SimplexRelax`] (`lp-round`) — LP relaxation + guided rounding,
+//!   reports the relaxation value as a certified lower bound
+//! * [`ParetoFrontier`] (`pareto`) — HAWQ-v2-style frontier sweep
+//! * [`GreedyRepair`] (`greedy`) — constructive argmin + ratio repair
+//!
+//! All are stateless and `Send + Sync`, so one registry instance serves
+//! every fleet thread.  Cross-validated against `brute_force` through
+//! trait objects in the tests below.
+
+use anyhow::{bail, Result};
+
+use super::request::SolveBudget;
+use crate::search::lp::{Lp, LpOutcome};
+use crate::search::mckp::{solve_dp_stats, Resource};
+use crate::search::pareto::solve_pareto;
+use crate::search::{bb::solve_bb_stats, MpqProblem, Solution};
+
+/// What a solver hands back besides the solution itself.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub solution: Solution,
+    /// Search effort in solver-native units (B&B nodes, DP cell
+    /// relaxations; 0 where the notion does not apply).
+    pub nodes: u64,
+    /// Certified lower bound on the optimal cost, when the solver proves
+    /// one (B&B root bound, LP relaxation value).
+    pub lower_bound: Option<f64>,
+    /// True when the returned solution is provably optimal.
+    pub proven_optimal: bool,
+}
+
+/// A pluggable MPQ policy solver.
+pub trait Solver: Send + Sync {
+    /// Registry name (also the CLI `--solver` / fleet `"solver"` value).
+    fn name(&self) -> &'static str;
+
+    /// Whether this solver can handle the problem's constraint shape.
+    fn supports(&self, p: &MpqProblem) -> bool;
+
+    /// Solve within the budget (the narrow, issue-facing entry point).
+    fn solve(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<Solution> {
+        self.solve_full(p, budget).map(|o| o.solution)
+    }
+
+    /// Solve and report effort/bound telemetry.
+    fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome>;
+}
+
+// ---------------------------------------------------------------------------
+// bb
+// ---------------------------------------------------------------------------
+
+/// Exact branch-and-bound (`search::bb`) behind the trait.
+pub struct BranchAndBound;
+
+impl Solver for BranchAndBound {
+    fn name(&self) -> &'static str {
+        "bb"
+    }
+
+    fn supports(&self, _p: &MpqProblem) -> bool {
+        true
+    }
+
+    fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
+        let (solution, stats) = solve_bb_stats(p, budget.node_limit, budget.deadline())?;
+        Ok(SolveOutcome {
+            solution,
+            nodes: stats.nodes,
+            lower_bound: Some(stats.root_bound),
+            proven_optimal: stats.proven_optimal,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mckp
+// ---------------------------------------------------------------------------
+
+/// MCKP dynamic program (`search::mckp`); single-constraint problems only.
+pub struct MckpDp;
+
+impl Solver for MckpDp {
+    fn name(&self) -> &'static str {
+        "mckp"
+    }
+
+    fn supports(&self, p: &MpqProblem) -> bool {
+        p.bitops_cap.is_some() != p.size_cap_bits.is_some()
+    }
+
+    fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
+        let resource = match (p.bitops_cap, p.size_cap_bits) {
+            (Some(_), None) => Resource::BitOps,
+            (None, Some(_)) => Resource::SizeBits,
+            _ => bail!("mckp DP needs exactly one constraint"),
+        };
+        let (solution, dp) = solve_dp_stats(p, resource, budget.dp_grid)?;
+        Ok(SolveOutcome {
+            solution,
+            nodes: dp.cells as u64 * p.n_vars() as u64,
+            lower_bound: None,
+            // Exact whenever the cap fits the grid without rounding.
+            proven_optimal: dp.unit == 1,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lp-round
+// ---------------------------------------------------------------------------
+
+/// LP relaxation (two-phase simplex) + guided rounding.  The relaxation
+/// value is a certified lower bound; the rounded policy is repaired to
+/// feasibility with the same ratio-greedy move the B&B incumbent uses.
+pub struct SimplexRelax;
+
+impl SimplexRelax {
+    /// Build the MCKP LP relaxation: one column per option, choose-one
+    /// equality row per layer, one ≤ row per active cap (normalized to
+    /// rhs 1 for conditioning).
+    fn relaxation(p: &MpqProblem) -> Lp {
+        let n: usize = p.n_vars();
+        let mut c = Vec::with_capacity(n);
+        let mut a_eq = Vec::with_capacity(p.layers.len());
+        let mut col = 0usize;
+        for opts in &p.layers {
+            let mut row = vec![0.0; n];
+            for o in opts {
+                c.push(o.cost);
+                row[col] = 1.0;
+                col += 1;
+            }
+            a_eq.push(row);
+        }
+        let mut a_ub = Vec::new();
+        let mut b_ub = Vec::new();
+        if let Some(cap) = p.bitops_cap {
+            let cap = cap.max(1) as f64;
+            let mut row = Vec::with_capacity(n);
+            for opts in &p.layers {
+                for o in opts {
+                    row.push(o.bitops as f64 / cap);
+                }
+            }
+            a_ub.push(row);
+            b_ub.push(1.0);
+        }
+        if let Some(cap) = p.size_cap_bits {
+            let cap = cap.max(1) as f64;
+            let mut row = Vec::with_capacity(n);
+            for opts in &p.layers {
+                for o in opts {
+                    row.push(o.size_bits as f64 / cap);
+                }
+            }
+            a_ub.push(row);
+            b_ub.push(1.0);
+        }
+        let b_eq = vec![1.0; p.layers.len()];
+        Lp { c, a_ub, b_ub, a_eq, b_eq }
+    }
+}
+
+impl Solver for SimplexRelax {
+    fn name(&self) -> &'static str {
+        "lp-round"
+    }
+
+    fn supports(&self, p: &MpqProblem) -> bool {
+        !p.layers.is_empty()
+    }
+
+    fn solve_full(&self, p: &MpqProblem, _budget: &SolveBudget) -> Result<SolveOutcome> {
+        if p.layers.iter().any(|o| o.is_empty()) {
+            bail!("a layer has no options");
+        }
+        let (x, lp_obj) = match Self::relaxation(p).solve()? {
+            LpOutcome::Optimal { x, obj } => (x, obj),
+            LpOutcome::Infeasible => bail!("LP relaxation infeasible"),
+            LpOutcome::Unbounded => bail!("LP relaxation unbounded (malformed problem)"),
+        };
+        // Round: per layer take the option with the largest fractional
+        // mass (ties to the lighter option so rounding leans feasible).
+        let mut choice = Vec::with_capacity(p.layers.len());
+        let mut col = 0usize;
+        for opts in &p.layers {
+            let mut best = 0usize;
+            let mut best_mass = f64::MIN;
+            for (i, o) in opts.iter().enumerate() {
+                let mass = x[col + i];
+                let better = mass > best_mass + 1e-12
+                    || ((mass - best_mass).abs() <= 1e-12 && o.bitops < opts[best].bitops);
+                if better {
+                    best = i;
+                    best_mass = mass;
+                }
+            }
+            choice.push(best);
+            col += opts.len();
+        }
+        let solution = repair_to_feasible(p, &choice)
+            .ok_or_else(|| anyhow::anyhow!("could not repair LP rounding to feasibility"))?;
+        let proven = p.feasible(&solution) && (solution.cost - lp_obj).abs() <= 1e-9;
+        Ok(SolveOutcome {
+            solution,
+            nodes: 0,
+            lower_bound: Some(lp_obj),
+            proven_optimal: proven,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pareto
+// ---------------------------------------------------------------------------
+
+/// HAWQ-v2-style Lagrangian frontier sweep (`search::pareto`).  Reaches
+/// convex-hull points only, so it can miss interior optima — in the
+/// fallback chain it sits after the exact solvers.
+pub struct ParetoFrontier;
+
+/// Frontier sweep resolution (log-spaced λ points).
+const PARETO_STEPS: usize = 200;
+
+impl Solver for ParetoFrontier {
+    fn name(&self) -> &'static str {
+        "pareto"
+    }
+
+    fn supports(&self, p: &MpqProblem) -> bool {
+        !p.layers.is_empty()
+    }
+
+    fn solve_full(&self, p: &MpqProblem, _budget: &SolveBudget) -> Result<SolveOutcome> {
+        let solution = solve_pareto(p, PARETO_STEPS)?;
+        Ok(SolveOutcome {
+            solution,
+            nodes: PARETO_STEPS as u64,
+            lower_bound: None,
+            proven_optimal: false,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// greedy
+// ---------------------------------------------------------------------------
+
+/// Constructive heuristic: per-layer cost argmin, then ratio-greedy
+/// repair toward the caps.  Never optimal by proof, but always fast and
+/// supports every constraint shape — the registry's last resort.
+pub struct GreedyRepair;
+
+impl Solver for GreedyRepair {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn supports(&self, p: &MpqProblem) -> bool {
+        !p.layers.is_empty()
+    }
+
+    fn solve_full(&self, p: &MpqProblem, _budget: &SolveBudget) -> Result<SolveOutcome> {
+        if p.layers.iter().any(|o| o.is_empty()) {
+            bail!("a layer has no options");
+        }
+        let choice: Vec<usize> = p
+            .layers
+            .iter()
+            .map(|opts| {
+                opts.iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| a.cost.partial_cmp(&b.cost).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect();
+        let solution = repair_to_feasible(p, &choice)
+            .ok_or_else(|| anyhow::anyhow!("greedy repair could not reach feasibility"))?;
+        Ok(SolveOutcome { solution, nodes: 0, lower_bound: None, proven_optimal: false })
+    }
+}
+
+/// Shared repair: while a cap is violated, take the move with the best
+/// constraint-reduction per unit cost increase.  Returns None when no
+/// move helps (genuinely infeasible or stuck).
+/// TODO(next PR): `bb::greedy_incumbent` carries the same repair loop —
+/// fold both onto one `search::repair_to_feasible` helper.
+fn repair_to_feasible(p: &MpqProblem, choice: &[usize]) -> Option<Solution> {
+    let mut sol = p.evaluate(choice).ok()?;
+    let n = p.layers.len();
+    let mut guard = 0usize;
+    while !p.feasible(&sol) && guard < 10 * n + 10 {
+        guard += 1;
+        let need_b = p.bitops_cap.map_or(false, |cap| sol.bitops > cap);
+        let need_s = p.size_cap_bits.map_or(false, |cap| sol.size_bits > cap);
+        let mut best: Option<(usize, usize, f64)> = None;
+        for l in 0..n {
+            let cur = &p.layers[l][sol.choice[l]];
+            for (c, o) in p.layers[l].iter().enumerate() {
+                let db = cur.bitops as f64 - o.bitops as f64;
+                let ds = cur.size_bits as f64 - o.size_bits as f64;
+                let gain = (if need_b { db } else { 0.0 }) + (if need_s { ds } else { 0.0 });
+                if gain <= 0.0 {
+                    continue;
+                }
+                let ratio = (o.cost - cur.cost) / gain;
+                if best.map_or(true, |(_, _, r)| ratio < r) {
+                    best = Some((l, c, ratio));
+                }
+            }
+        }
+        let (l, c, _) = best?;
+        sol.choice[l] = c;
+        sol = p.evaluate(&sol.choice).ok()?;
+    }
+    p.feasible(&sol).then_some(sol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    fn all_solvers() -> Vec<Box<dyn Solver>> {
+        vec![
+            Box::new(BranchAndBound),
+            Box::new(MckpDp),
+            Box::new(SimplexRelax),
+            Box::new(ParetoFrontier),
+            Box::new(GreedyRepair),
+        ]
+    }
+
+    /// Every solver, through the trait object, against brute force: exact
+    /// solvers must match the optimum; heuristics must stay feasible and
+    /// never beat it.
+    #[test]
+    fn all_impls_cross_validate_against_brute_force() {
+        let mut rng = Rng::new(2024);
+        let solvers = all_solvers();
+        let mut solved = vec![0usize; solvers.len()];
+        for trial in 0..40 {
+            let layers = 2 + rng.below(4);
+            let opts = 2 + rng.below(3);
+            let tight = rng.uniform(0.1, 0.95);
+            let p = random_problem(&mut rng, layers, opts, tight);
+            let Some(bf) = p.brute_force() else { continue };
+            // unit-grid DP stays exact on these small caps
+            let budget = SolveBudget {
+                dp_grid: p.bitops_cap.unwrap() as usize + 1,
+                ..SolveBudget::default()
+            };
+            for (si, s) in solvers.iter().enumerate() {
+                if !s.supports(&p) {
+                    continue;
+                }
+                let out = match s.solve_full(&p, &budget) {
+                    Ok(o) => o,
+                    // heuristics may legitimately miss a feasible point
+                    Err(_) if matches!(s.name(), "pareto" | "greedy" | "lp-round") => continue,
+                    Err(e) => panic!("trial {trial}: {} failed: {e:#}", s.name()),
+                };
+                solved[si] += 1;
+                assert!(p.feasible(&out.solution), "trial {trial}: {} infeasible", s.name());
+                assert!(
+                    out.solution.cost >= bf.cost - 1e-9,
+                    "trial {trial}: {} beat brute force ({} < {})",
+                    s.name(),
+                    out.solution.cost,
+                    bf.cost
+                );
+                if let Some(lb) = out.lower_bound {
+                    assert!(
+                        lb <= bf.cost + 1e-6,
+                        "trial {trial}: {} lower bound {lb} above optimum {}",
+                        s.name(),
+                        bf.cost
+                    );
+                }
+                if out.proven_optimal || matches!(s.name(), "bb" | "mckp") {
+                    assert!(
+                        (out.solution.cost - bf.cost).abs() < 1e-9,
+                        "trial {trial}: {} cost {} vs optimum {}",
+                        s.name(),
+                        out.solution.cost,
+                        bf.cost
+                    );
+                }
+            }
+        }
+        // every solver must have actually exercised its solve path
+        for (si, s) in solvers.iter().enumerate() {
+            assert!(solved[si] > 0, "{} never solved an instance", s.name());
+        }
+    }
+
+    #[test]
+    fn narrow_solve_entry_matches_full() {
+        let mut rng = Rng::new(7);
+        let p = random_problem(&mut rng, 4, 4, 0.6);
+        let b = SolveBudget::default();
+        let full = BranchAndBound.solve_full(&p, &b).unwrap();
+        let narrow = BranchAndBound.solve(&p, &b).unwrap();
+        assert_eq!(narrow, full.solution);
+    }
+
+    #[test]
+    fn mckp_declines_two_constraint_problems() {
+        let mut rng = Rng::new(8);
+        let mut p = random_problem(&mut rng, 3, 3, 0.5);
+        p.size_cap_bits = Some(1 << 40);
+        assert!(!MckpDp.supports(&p));
+        assert!(BranchAndBound.supports(&p));
+        assert!(SimplexRelax.supports(&p));
+    }
+
+    #[test]
+    fn lp_round_bound_gap_is_nonnegative() {
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let p = random_problem(&mut rng, 5, 4, 0.5);
+            if let Ok(out) = SimplexRelax.solve_full(&p, &SolveBudget::default()) {
+                let lb = out.lower_bound.unwrap();
+                assert!(out.solution.cost >= lb - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_unconstrained_is_min_cost() {
+        let mut rng = Rng::new(10);
+        let mut p = random_problem(&mut rng, 5, 4, 1.0);
+        p.bitops_cap = None;
+        let out = GreedyRepair.solve_full(&p, &SolveBudget::default()).unwrap();
+        let want: f64 =
+            p.layers.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
+        assert!((out.solution.cost - want).abs() < 1e-9);
+    }
+}

@@ -18,9 +18,9 @@ use crate::coordinator::metrics::write_table_csv;
 use crate::importance::IndicatorStore;
 use crate::quant::cost::{total_bitops, uniform_bitops};
 use crate::report::{pct, Table};
+use crate::engine::{PolicyEngine, SearchRequest};
 use crate::search::baselines::greedy_policy;
 use crate::search::pareto::solve_pareto;
-use crate::search::{solve, MpqProblem};
 use crate::util::json::Json;
 
 pub fn run(cfg: Config) -> Result<()> {
@@ -38,6 +38,10 @@ pub fn run(cfg: Config) -> Result<()> {
         Ok(acc)
     };
 
+    // One engine over the trained importances serves the whole sweep —
+    // each α is just a different SearchRequest.
+    let engine = PolicyEngine::new(meta.clone(), imp.clone());
+
     // --- α sweep ----------------------------------------------------------
     let mut t = Table::new(
         &format!("Ablation: α sweep on {} (@4-bit level, no finetune; FP {:.2}%)", meta.name, 100.0 * fp_acc),
@@ -46,8 +50,8 @@ pub fn run(cfg: Config) -> Result<()> {
     let mut csv = Vec::new();
     let mut alpha_rows = Vec::new();
     for alpha in [0.5, 1.0, 2.0, 3.0, 5.0] {
-        let p = MpqProblem::from_importance(meta, &imp, alpha, Some(cap), None, false);
-        let policy = p.to_bit_config(&solve(&p)?);
+        let req = SearchRequest::builder().alpha(alpha).bitops_cap(cap).build()?;
+        let policy = engine.solve(&req)?.outcome.policy.clone();
         let acc = eval_policy(&policy)?;
         let cells = vec![
             format!("{alpha}"),
@@ -66,10 +70,11 @@ pub fn run(cfg: Config) -> Result<()> {
     // cache) against a policy searched from untrained uniform-init values:
     // quantifies how much the joint training itself matters.
     let untrained = IndicatorStore::init_uniform(meta).importance(meta);
-    let p_tr = MpqProblem::from_importance(meta, &imp, ctx.cfg.search.alpha, Some(cap), None, false);
-    let p_un = MpqProblem::from_importance(meta, &untrained, ctx.cfg.search.alpha, Some(cap), None, false);
-    let pol_tr = p_tr.to_bit_config(&solve(&p_tr)?);
-    let pol_un = p_un.to_bit_config(&solve(&p_un)?);
+    let untrained_engine = PolicyEngine::new(meta.clone(), untrained);
+    let req = SearchRequest::builder().alpha(ctx.cfg.search.alpha).bitops_cap(cap).build()?;
+    let out_tr = engine.solve(&req)?;
+    let pol_tr = out_tr.outcome.policy.clone();
+    let pol_un = untrained_engine.solve(&req)?.outcome.policy.clone();
     let acc_tr = eval_policy(&pol_tr)?;
     let acc_un = eval_policy(&pol_un)?;
     let mut t2 = Table::new("Ablation: trained vs untrained indicators", &["indicators", "acc(no-ft)"]);
@@ -78,11 +83,19 @@ pub fn run(cfg: Config) -> Result<()> {
     println!("{}", t2.render());
 
     // --- solver -------------------------------------------------------------
-    let sol_ilp = solve(&p_tr)?;
+    let p_tr = engine.problem(&req);
+    let sol_ilp = out_tr.outcome.solution.clone();
     let sol_par = solve_pareto(&p_tr, 200);
     let pol_greedy = greedy_policy(meta, &imp, ctx.cfg.search.alpha, cap)?;
     let mut t3 = Table::new("Ablation: solver choice on identical importances", &["solver", "obj cost", "acc(no-ft)"]);
-    t3.row(vec!["exact ILP (B&B)".into(), format!("{:.5}", sol_ilp.cost), pct(eval_policy(&p_tr.to_bit_config(&sol_ilp))?)]);
+    // Label from the engine's own telemetry: Auto may have fallen back
+    // or returned an unproven incumbent, and the table must say so.
+    let ilp_label = format!(
+        "engine: {}{}",
+        out_tr.outcome.stats.solver,
+        if out_tr.outcome.stats.proven_optimal { " (exact)" } else { " (unproven)" }
+    );
+    t3.row(vec![ilp_label, format!("{:.5}", sol_ilp.cost), pct(eval_policy(&p_tr.to_bit_config(&sol_ilp))?)]);
     if let Ok(sp) = sol_par {
         t3.row(vec!["Pareto frontier (HAWQv2-style)".into(), format!("{:.5}", sp.cost), pct(eval_policy(&p_tr.to_bit_config(&sp))?)]);
     }

@@ -10,7 +10,7 @@ use crate::importance::JointTrainer;
 use crate::quant::{BitConfig, QMAX_OFF};
 use crate::report::{bit_chart, pct, Table};
 use crate::runtime::ModelBackend;
-use crate::search::{solve, MpqProblem};
+use crate::engine::{PolicyEngine, SearchRequest};
 use crate::quant::cost::uniform_bitops;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -262,9 +262,9 @@ pub fn fig4(cfg: Config) -> Result<()> {
         let store = ctx.ensure_indicators(&flat)?;
         let imp = ctx.importance(&store);
         let cap = uniform_bitops(meta, level, level);
-        let p = MpqProblem::from_importance(meta, &imp, ctx.cfg.search.alpha, Some(cap), None, false);
-        let s = solve(&p)?;
-        let policy = p.to_bit_config(&s);
+        let engine = PolicyEngine::new(meta.clone(), imp.clone());
+        let req = SearchRequest::builder().alpha(ctx.cfg.search.alpha).bitops_cap(cap).build()?;
+        let policy = engine.solve_uncached(&req)?.policy;
         let names: Vec<String> = meta.qlayers.iter().map(|q| q.name.clone()).collect();
         println!("{}", bit_chart(&format!("Figure 4: {model} bit assignment @{level}-bit level"), &names, &policy.w_bits, &policy.a_bits));
 

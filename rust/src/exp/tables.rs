@@ -11,8 +11,8 @@ use crate::quant::cost::{compression_rate, fp_size_bytes, model_size_bytes, tota
 use crate::quant::BitConfig;
 use crate::report::{gops, mbytes, pct, Table};
 use crate::runtime::ModelBackend;
+use crate::engine::{solve_auto, PolicyEngine, SearchRequest};
 use crate::search::baselines::{hessian_problem, random_policy, reversed_policy};
-use crate::search::{solve, MpqProblem};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -104,7 +104,7 @@ fn hawq_traces(ctx: &ExpCtx, flat: &[f32]) -> Result<Vec<f64>> {
     layer_traces(&ctx.backend, ctx.meta(), flat, &mut batches, &HutchinsonCfg::default(), &mut rng)
 }
 
-/// Ours: ILP policy at a BitOps cap (optionally size cap / weight-only).
+/// Ours: engine policy at a BitOps cap (optionally size cap / weight-only).
 fn ours_policy(
     ctx: &ExpCtx,
     imp: &crate::importance::Importance,
@@ -112,9 +112,14 @@ fn ours_policy(
     size_cap_bits: Option<u64>,
     weight_only: bool,
 ) -> Result<BitConfig> {
-    let p = MpqProblem::from_importance(ctx.meta(), imp, ctx.cfg.search.alpha, bitops_cap, size_cap_bits, weight_only);
-    let s = solve(&p)?;
-    Ok(p.to_bit_config(&s))
+    let engine = PolicyEngine::new(ctx.meta().clone(), imp.clone());
+    let req = SearchRequest::builder()
+        .alpha(ctx.cfg.search.alpha)
+        .bitops_cap_opt(bitops_cap)
+        .size_cap_bits_opt(size_cap_bits)
+        .weight_only(weight_only)
+        .build()?;
+    Ok(engine.solve_uncached(&req)?.policy)
 }
 
 /// Table 2: ResNet18-S under BitOps constraints (2.5/3/4-bit levels) vs
@@ -145,7 +150,7 @@ pub fn table2(cfg: Config) -> Result<()> {
 
     let traces = hawq_traces(&ctx, &flat)?;
     let hp = hessian_problem(meta, &traces, Some(b3), None);
-    run("hawq3", "HAWQ-style MP @3-bit level", hp.to_bit_config(&solve(&hp)?), &mut rows)?;
+    run("hawq3", "HAWQ-style MP @3-bit level", hp.to_bit_config(&solve_auto(&hp)?), &mut rows)?;
 
     run("ours25", "Ours @2.5-bit level", ours_policy(&ctx, &imp, Some(b25), None, false)?, &mut rows)?;
     run("ours3", "Ours @3-bit level", ours_policy(&ctx, &imp, Some(b3), None, false)?, &mut rows)?;
@@ -177,7 +182,7 @@ pub fn table3(cfg: Config) -> Result<()> {
 
     let traces = hawq_traces(&ctx, &flat)?;
     let hp = hessian_problem(meta, &traces, Some(b3), Some(size_cap_bits));
-    let hawq = hp.to_bit_config(&solve(&hp)?);
+    let hawq = hp.to_bit_config(&solve_auto(&hp)?);
     let ft_h = ctx.finetuned("hawq_sz", &flat, &store, &hawq)?;
     rows.push(Row { method: "HAWQ-style @12.2x".into(), policy: hawq, quant_acc: ft_h.val_acc });
 

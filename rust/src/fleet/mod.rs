@@ -2,41 +2,47 @@
 //!
 //! The paper's efficiency argument: indicator training is a *one-time*
 //! cost, after which the MPQ policy for each of `z` deployment devices is
-//! a sub-second data-free ILP solve.  This module makes that concrete:
-//! a [`FleetSearcher`] holds the learned importances and answers
-//! per-device constraint queries; [`serve`] exposes it over a TCP
-//! line-delimited JSON protocol (one request JSON per line, one response
-//! JSON per line), threaded per connection.
+//! a sub-second data-free solve.  This module makes that concrete: a
+//! [`FleetSearcher`] wraps a memoizing [`PolicyEngine`] (learned
+//! importances + solver registry + LRU policy cache) and answers
+//! per-device constraint queries; [`serve`](FleetServer::spawn) exposes
+//! it over a TCP line-delimited JSON protocol (one request JSON per
+//! line, one response JSON per line), threaded per connection.  Batch
+//! sweeps fan out across a thread pool, and repeated identical queries
+//! are served from the policy cache in O(1).
 //!
-//! Request fields:
-//!   `{"cap_gbitops": 23.07, "size_cap_mb": 8.0, "alpha": 3.0,
-//!     "weight_only": false}`  (all optional except at least one cap)
+//! Request fields (any other key is rejected with an error naming it):
+//!   `{"name": "phone", "cap_gbitops": 23.07, "size_cap_mb": 8.0,
+//!     "alpha": 3.0, "weight_only": false, "solver": "auto",
+//!     "node_limit": 2000000, "time_limit_ms": 500}`
+//!   (all optional except at least one cap)
 //! Response:
 //!   `{"ok": true, "w_bits": [...], "a_bits": [...], "bitops_g": ...,
-//!     "size_mb": ..., "cost": ..., "solve_us": ...}`
+//!     "size_mb": ..., "cost": ..., "solve_us": ...,
+//!     "solver": "bb", "cache_hit": false}`
+//! where `solver` is the registry solver that produced the policy (after
+//! any automatic fallback) and `cache_hit` reports whether the response
+//! came from the engine's policy cache rather than a fresh solve.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::engine::{CacheStats, PolicyEngine, SearchRequest};
 use crate::importance::Importance;
 use crate::models::ModelMeta;
 use crate::quant::BitConfig;
-use crate::search::{solve, MpqProblem};
 use crate::util::json::Json;
 
-/// A deployment-device constraint set.
+/// A deployment-device constraint set: a name plus a full engine request.
 #[derive(Debug, Clone)]
 pub struct DeviceSpec {
     pub name: String,
-    pub bitops_cap: Option<u64>,
-    pub size_cap_bytes: Option<u64>,
-    pub alpha: f64,
-    pub weight_only: bool,
+    pub request: SearchRequest,
 }
 
 /// Search result for one device.
@@ -48,80 +54,111 @@ pub struct DevicePolicy {
     pub bitops: u64,
     pub size_bits: u64,
     pub solve_us: u128,
+    /// Which registry solver produced the policy.
+    pub solver: String,
+    /// Whether the engine served this query from its policy cache.
+    pub cache_hit: bool,
 }
 
-/// Holds the one-time-trained importances; answers per-device queries.
+/// Holds the one-time-trained importances behind a memoizing engine;
+/// answers per-device queries.
 #[derive(Clone)]
 pub struct FleetSearcher {
-    pub meta: Arc<ModelMeta>,
-    pub importance: Arc<Importance>,
+    engine: Arc<PolicyEngine>,
 }
 
 impl FleetSearcher {
     pub fn new(meta: ModelMeta, importance: Importance) -> FleetSearcher {
-        FleetSearcher { meta: Arc::new(meta), importance: Arc::new(importance) }
+        FleetSearcher { engine: Arc::new(PolicyEngine::new(meta, importance)) }
+    }
+
+    /// The underlying engine (cache stats, raw solves).
+    pub fn engine(&self) -> &PolicyEngine {
+        &self.engine
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.engine.meta
+    }
+
+    /// Policy-cache counters for operator reporting.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.engine.cache_stats()
     }
 
     pub fn search(&self, dev: &DeviceSpec) -> Result<DevicePolicy> {
         anyhow::ensure!(
-            dev.bitops_cap.is_some() || dev.size_cap_bytes.is_some(),
+            dev.request.bitops_cap.is_some() || dev.request.size_cap_bits.is_some(),
             "device {} has no constraint",
             dev.name
         );
         let t = Instant::now();
-        let p = MpqProblem::from_importance(
-            &self.meta,
-            &self.importance,
-            dev.alpha,
-            dev.bitops_cap,
-            dev.size_cap_bytes.map(|b| b * 8),
-            dev.weight_only,
-        );
-        let s = solve(&p).with_context(|| format!("device {}", dev.name))?;
+        let resp = self
+            .engine
+            .solve(&dev.request)
+            .with_context(|| format!("device {}", dev.name))?;
+        let out = &resp.outcome;
         Ok(DevicePolicy {
             device: dev.name.clone(),
-            policy: p.to_bit_config(&s),
-            cost: s.cost,
-            bitops: s.bitops,
-            size_bits: s.size_bits,
+            policy: out.policy.clone(),
+            cost: out.solution.cost,
+            bitops: out.solution.bitops,
+            size_bits: out.solution.size_bits,
             solve_us: t.elapsed().as_micros(),
+            solver: out.stats.solver.clone(),
+            cache_hit: resp.cache_hit,
         })
     }
 
-    /// Batch search for a whole fleet (the `z`-device sweep of §4.3).
+    /// Batch search for a whole fleet (the `z`-device sweep of §4.3),
+    /// fanned out across a thread pool.  Results keep request order.
+    /// Identical constraint sets already in the cache are served from
+    /// it; identical *cold* queries running concurrently may each solve
+    /// (the cache lock is not held during a solve — last insert wins,
+    /// results are identical).
     pub fn search_fleet(&self, devices: &[DeviceSpec]) -> Result<Vec<DevicePolicy>> {
-        devices.iter().map(|d| self.search(d)).collect()
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(devices.len().max(1));
+        if workers <= 1 || devices.len() <= 1 {
+            return devices.iter().map(|d| self.search(d)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<DevicePolicy>>>> =
+            devices.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= devices.len() {
+                        break;
+                    }
+                    let result = self.search(&devices[i]);
+                    *slots[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every slot is filled by a worker"))
+            .collect()
     }
 
     fn handle_line(&self, line: &str) -> String {
         match self.handle_request(line) {
             Ok(resp) => resp.to_string(),
-            Err(e) => Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(format!("{e:#}").as_str()))])
-                .to_string(),
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::from(format!("{e:#}").as_str())),
+            ])
+            .to_string(),
         }
     }
 
     fn handle_request(&self, line: &str) -> Result<Json> {
         let req = Json::parse(line)?;
-        let dev = DeviceSpec {
-            name: req.opt("name").and_then(|v| v.as_str().ok().map(str::to_string)).unwrap_or_else(|| "dev".into()),
-            bitops_cap: match req.opt("cap_gbitops") {
-                Some(v) => Some((v.as_f64()? * 1e9) as u64),
-                None => None,
-            },
-            size_cap_bytes: match req.opt("size_cap_mb") {
-                Some(v) => Some((v.as_f64()? * 1e6) as u64),
-                None => None,
-            },
-            alpha: match req.opt("alpha") {
-                Some(v) => v.as_f64()?,
-                None => 1.0,
-            },
-            weight_only: match req.opt("weight_only") {
-                Some(v) => v.as_bool()?,
-                None => false,
-            },
-        };
+        let dev = parse_device_request(&req)?;
         let out = self.search(&dev)?;
         Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -132,8 +169,64 @@ impl FleetSearcher {
             ("bitops_g", Json::Num(out.bitops as f64 / 1e9)),
             ("size_mb", Json::Num(out.size_bits as f64 / 8e6)),
             ("solve_us", Json::Num(out.solve_us as f64)),
+            ("solver", Json::from(out.solver.as_str())),
+            ("cache_hit", Json::Bool(out.cache_hit)),
         ]))
     }
+}
+
+/// Every key the line protocol accepts; anything else is a typo we must
+/// surface instead of silently ignoring (`cap_gbitop` once cost a user a
+/// completely unconstrained policy).
+const KNOWN_FIELDS: &[&str] = &[
+    "name",
+    "cap_gbitops",
+    "size_cap_mb",
+    "alpha",
+    "weight_only",
+    "solver",
+    "node_limit",
+    "time_limit_ms",
+];
+
+/// Parse a line-protocol request, rejecting unknown fields by name.
+fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
+    let obj = req.as_obj().context("request must be a JSON object")?;
+    for key in obj.keys() {
+        if !KNOWN_FIELDS.contains(&key.as_str()) {
+            bail!(
+                "unknown field {key:?} (known fields: {})",
+                KNOWN_FIELDS.join(", ")
+            );
+        }
+    }
+    let name = req
+        .opt("name")
+        .and_then(|v| v.as_str().ok().map(str::to_string))
+        .unwrap_or_else(|| "dev".into());
+    let mut b = SearchRequest::builder();
+    if let Some(v) = req.opt("cap_gbitops") {
+        b = b.bitops_cap((v.as_f64()? * 1e9) as u64);
+    }
+    if let Some(v) = req.opt("size_cap_mb") {
+        b = b.size_cap_bytes((v.as_f64()? * 1e6) as u64);
+    }
+    if let Some(v) = req.opt("alpha") {
+        b = b.alpha(v.as_f64()?);
+    }
+    if let Some(v) = req.opt("weight_only") {
+        b = b.weight_only(v.as_bool()?);
+    }
+    if let Some(v) = req.opt("solver") {
+        b = b.solver_name(v.as_str()?);
+    }
+    if let Some(v) = req.opt("node_limit") {
+        b = b.node_limit(v.as_usize()?);
+    }
+    if let Some(v) = req.opt("time_limit_ms") {
+        b = b.time_limit(std::time::Duration::from_millis(v.as_usize()? as u64));
+    }
+    Ok(DeviceSpec { name, request: b.build()? })
 }
 
 /// Server handle: join or signal shutdown.
@@ -222,31 +315,7 @@ mod tests {
     use crate::quant::cost::uniform_bitops;
 
     fn meta6() -> ModelMeta {
-        let mut params = String::new();
-        let mut qlayers = String::new();
-        for i in 0..6 {
-            if i > 0 {
-                params.push(',');
-                qlayers.push(',');
-            }
-            params.push_str(&format!(
-                r#"{{"name":"l{i}.w","shape":[10],"offset":{},"size":10,"init":"he_dense","fan_in":4}}"#,
-                10 * i
-            ));
-            qlayers.push_str(&format!(
-                r#"{{"index":{i},"name":"l{i}","kind":"conv","macs":{},"w_numel":10,"pinned":{}}}"#,
-                100_000 * (i + 1),
-                i == 0 || i == 5
-            ));
-        }
-        let text = format!(
-            r#"{{"name":"m","param_size":60,"n_qlayers":6,
-              "input_shape":[2,2,1],"n_classes":4,
-              "train_batch":4,"eval_batch":8,"serve_batch":2,
-              "bit_options":[2,3,4,5,6],"pin_bits":8,
-              "params":[{params}],"qlayers":[{qlayers}],"artifacts":{{}}}}"#
-        );
-        ModelMeta::from_json(&Json::parse(&text).unwrap(), std::path::Path::new("/tmp")).unwrap()
+        crate::models::synthetic_meta(6, |i| 100_000 * (i as u64 + 1))
     }
 
     fn searcher() -> FleetSearcher {
@@ -255,62 +324,89 @@ mod tests {
         FleetSearcher::new(meta, imp)
     }
 
+    fn dev(name: &str, cap: u64, alpha: f64) -> DeviceSpec {
+        DeviceSpec {
+            name: name.into(),
+            request: SearchRequest::builder().alpha(alpha).bitops_cap(cap).build().unwrap(),
+        }
+    }
+
     #[test]
     fn direct_search_feasible() {
         let s = searcher();
-        let cap = uniform_bitops(&s.meta, 4, 4);
-        let out = s
-            .search(&DeviceSpec {
-                name: "edge".into(),
-                bitops_cap: Some(cap),
-                size_cap_bytes: None,
-                alpha: 2.0,
-                weight_only: false,
-            })
-            .unwrap();
+        let cap = uniform_bitops(s.meta(), 4, 4);
+        let out = s.search(&dev("edge", cap, 2.0)).unwrap();
         assert!(out.bitops <= cap);
         assert_eq!(out.policy.w_bits.len(), 6);
+        assert!(!out.cache_hit);
+        assert!(!out.solver.is_empty());
+    }
+
+    #[test]
+    fn second_identical_query_is_a_cache_hit_with_identical_policy() {
+        let s = searcher();
+        let cap = uniform_bitops(s.meta(), 4, 4);
+        let first = s.search(&dev("edge", cap, 2.0)).unwrap();
+        assert!(!first.cache_hit);
+        // same constraints, different device name: the policy is the same
+        let second = s.search(&dev("edge-clone", cap, 2.0)).unwrap();
+        assert!(second.cache_hit, "identical constraint set must hit the cache");
+        assert_eq!(first.policy, second.policy);
+        assert_eq!(first.cost, second.cost);
+        assert_eq!(s.cache_stats().hits, 1);
     }
 
     #[test]
     fn fleet_sweep_many_devices() {
         let s = searcher();
-        let base = uniform_bitops(&s.meta, 6, 6);
+        let base = uniform_bitops(s.meta(), 6, 6);
         let devices: Vec<DeviceSpec> = (0..8)
-            .map(|i| DeviceSpec {
-                name: format!("dev{i}"),
-                bitops_cap: Some(base * (60 + 5 * i as u64) / 100),
-                size_cap_bytes: None,
-                alpha: 1.0,
-                weight_only: false,
-            })
+            .map(|i| dev(&format!("dev{i}"), base * (60 + 5 * i as u64) / 100, 1.0))
             .collect();
         let out = s.search_fleet(&devices).unwrap();
         assert_eq!(out.len(), 8);
+        // order preserved across the thread pool
+        for (i, p) in out.iter().enumerate() {
+            assert_eq!(p.device, format!("dev{i}"));
+        }
         // looser budgets never cost more importance
         for w in out.windows(2) {
             assert!(w[1].cost <= w[0].cost + 1e-9);
+        }
+        // a repeated sweep is served from the cache
+        let again = s.search_fleet(&devices).unwrap();
+        assert!(again.iter().all(|p| p.cache_hit));
+        for (a, b) in out.iter().zip(&again) {
+            assert_eq!(a.policy, b.policy);
         }
     }
 
     #[test]
     fn no_constraint_rejected() {
         let s = searcher();
-        assert!(s
-            .search(&DeviceSpec {
-                name: "x".into(),
-                bitops_cap: None,
-                size_cap_bytes: None,
-                alpha: 1.0,
-                weight_only: false
-            })
-            .is_err());
+        let unconstrained = DeviceSpec {
+            name: "x".into(),
+            request: SearchRequest::builder().alpha(1.0).build().unwrap(),
+        };
+        assert!(s.search(&unconstrained).is_err());
+    }
+
+    #[test]
+    fn unknown_json_field_is_rejected_by_name() {
+        let s = searcher();
+        // classic typo: cap_gbitop (missing the final s)
+        let line = r#"{"cap_gbitop": 1.5, "alpha": 1.0}"#;
+        let resp = Json::parse(&s.handle_line(line)).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        let err = resp.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("cap_gbitop"), "error must name the bad key: {err}");
+        assert!(err.contains("unknown field"), "{err}");
     }
 
     #[test]
     fn tcp_roundtrip() {
         let s = searcher();
-        let cap_g = uniform_bitops(&s.meta, 4, 4) as f64 / 1e9;
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
         let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
         let req = Json::obj(vec![
             ("name", Json::from("phone")),
@@ -321,9 +417,25 @@ mod tests {
         assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
         assert_eq!(resp.get("w_bits").unwrap().as_arr().unwrap().len(), 6);
         assert!(resp.get("solve_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(!resp.get("cache_hit").unwrap().as_bool().unwrap());
+        assert!(!resp.get("solver").unwrap().as_str().unwrap().is_empty());
+        // the identical query over the wire hits the policy cache
+        let resp2 = query(&server.addr, &req).unwrap();
+        assert!(resp2.get("cache_hit").unwrap().as_bool().unwrap());
+        assert_eq!(resp.get("w_bits").unwrap(), resp2.get("w_bits").unwrap());
         // malformed request gets an error response, not a hang
         let bad = query(&server.addr, &Json::obj(vec![("alpha", Json::Num(1.0))])).unwrap();
         assert!(!bad.get("ok").unwrap().as_bool().unwrap());
         server.shutdown();
+    }
+
+    #[test]
+    fn request_can_pick_a_solver() {
+        let s = searcher();
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+        let line = format!(r#"{{"cap_gbitops": {cap_g}, "solver": "mckp"}}"#);
+        let resp = Json::parse(&s.handle_line(&line)).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "mckp");
     }
 }

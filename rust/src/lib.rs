@@ -12,9 +12,29 @@
 //!   Hessian, random, reversed, greedy), pipeline orchestration, fleet
 //!   search service, and the experiment drivers regenerating every table
 //!   and figure in the paper.
+//!
+//! ## Policy search: the [`engine`] module
+//!
+//! All policy search goes through [`engine::PolicyEngine`] — the unified
+//! front door over the raw algorithms in [`search`]:
+//!
+//! - [`engine::Solver`] is the trait every solver family implements
+//!   (`bb`, `mckp`, `lp-round`, `pareto`, `greedy`);
+//! - [`engine::SearchRequest`] (builder) specifies constraint set, α,
+//!   weight-only mode, solver preference, and node/time budget;
+//! - [`engine::SolverRegistry`] resolves names and runs the automatic
+//!   fallback chain (exact → DP → LP-guided rounding → heuristics);
+//! - every solve returns [`engine::SolveStats`] (solver, nodes, bound
+//!   gap, wall time), and an LRU cache keyed on canonicalized requests
+//!   makes repeated fleet/device queries O(1) ([`engine::CacheStats`]
+//!   reports hit rates for `limpq serve`).
+//!
+//! [`fleet::FleetSearcher`] is a thin fleet-facing wrapper: named device
+//! requests, a thread-pooled batch sweep, and the TCP line protocol.
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod fleet;
 pub mod hessian;
 pub mod importance;

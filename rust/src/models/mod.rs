@@ -63,6 +63,40 @@ pub struct ModelMeta {
     pub dir: PathBuf,
 }
 
+/// Synthetic in-memory meta for tests and benches (no artifacts on
+/// disk): `layers` conv layers with `macs(i)` MACs each, 10-element
+/// weight tensors, first/last pinned at 8 bits, bit options 2..6.
+/// Shared by the engine/fleet test fixtures and the `ilp_micro` bench
+/// so the schema lives in one place.
+pub fn synthetic_meta(layers: usize, mut macs: impl FnMut(usize) -> u64) -> ModelMeta {
+    let mut params = String::new();
+    let mut qlayers = String::new();
+    for i in 0..layers {
+        if i > 0 {
+            params.push(',');
+            qlayers.push(',');
+        }
+        params.push_str(&format!(
+            r#"{{"name":"l{i}.w","shape":[10],"offset":{},"size":10,"init":"he_dense","fan_in":4}}"#,
+            10 * i
+        ));
+        qlayers.push_str(&format!(
+            r#"{{"index":{i},"name":"l{i}","kind":"conv","macs":{},"w_numel":10,"pinned":{}}}"#,
+            macs(i),
+            i == 0 || i + 1 == layers
+        ));
+    }
+    let text = format!(
+        r#"{{"name":"synthetic","param_size":{},"n_qlayers":{layers},
+          "input_shape":[2,2,1],"n_classes":4,
+          "train_batch":4,"eval_batch":8,"serve_batch":2,
+          "bit_options":[2,3,4,5,6],"pin_bits":8,
+          "params":[{params}],"qlayers":[{qlayers}],"artifacts":{{}}}}"#,
+        10 * layers
+    );
+    ModelMeta::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp")).unwrap()
+}
+
 impl ModelMeta {
     pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelMeta> {
         let path = artifacts_dir.join(format!("{model}_meta.json"));

@@ -14,7 +14,8 @@
 
 use anyhow::Result;
 
-use super::{solve, LayerOption, MpqProblem, Solution};
+use super::{LayerOption, MpqProblem, Solution};
+use crate::engine::solve_auto;
 use crate::importance::Importance;
 use crate::models::ModelMeta;
 use crate::quant::cost::{layer_bitops, layer_size_bits, total_bitops};
@@ -68,7 +69,7 @@ pub fn reversed_policy(
     size_cap_bits: Option<u64>,
 ) -> Result<(BitConfig, Solution)> {
     let p = MpqProblem::from_importance(meta, &imp.reversed(), alpha, bitops_cap, size_cap_bits, false);
-    let s = solve(&p)?;
+    let s = solve_auto(&p)?;
     Ok((p.to_bit_config(&s), s))
 }
 
@@ -304,7 +305,7 @@ mod tests {
         }
         let cap = Some(uniform_bitops(&m, 3, 3));
         let p = MpqProblem::from_importance(&m, &imp, 1.0, cap, None, false);
-        let ours = p.to_bit_config(&solve(&p).unwrap());
+        let ours = p.to_bit_config(&solve_auto(&p).unwrap());
         let (rev, _) = reversed_policy(&m, &imp, 1.0, cap, None).unwrap();
         // ours gives the sensitive layer >= bits than reversed does
         assert!(
@@ -322,7 +323,7 @@ mod tests {
         traces[2] = 50.0; // very sensitive per Hessian
         let cap = uniform_bitops(&m, 3, 3);
         let p = hessian_problem(&m, &traces, Some(cap), None);
-        let s = solve(&p).unwrap();
+        let s = solve_auto(&p).unwrap();
         let c = p.to_bit_config(&s);
         assert!(total_bitops(&m, &c) <= cap);
         // the high-trace layer should not sit at the minimum bits

@@ -17,10 +17,37 @@ use anyhow::{bail, Result};
 
 use super::{MpqProblem, Solution};
 
+/// Per-solve telemetry from the branch-and-bound search.
+#[derive(Debug, Clone, Default)]
+pub struct BbStats {
+    /// Nodes expanded in the DFS.
+    pub nodes: u64,
+    /// Root Lagrangian lower bound (valid for any multipliers ≥ 0).
+    pub root_bound: f64,
+    /// False when the node limit / deadline cut the search short and the
+    /// returned incumbent's optimality is unproven.
+    pub proven_optimal: bool,
+}
+
 /// Solve exactly; errs if infeasible or the node budget is exhausted.
 pub fn solve_bb(p: &MpqProblem, node_limit: usize) -> Result<Solution> {
+    solve_bb_stats(p, node_limit, None).map(|(s, _)| s)
+}
+
+/// [`solve_bb`] with telemetry and an optional wall-clock deadline.  When
+/// the deadline or node limit is hit, the best feasible incumbent is
+/// returned with `proven_optimal == false` (time-limited-solver
+/// semantics); with no incumbent the solve errs.
+pub fn solve_bb_stats(
+    p: &MpqProblem,
+    node_limit: usize,
+    deadline: Option<std::time::Instant>,
+) -> Result<(Solution, BbStats)> {
     if p.layers.is_empty() {
-        return Ok(Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 });
+        return Ok((
+            Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 },
+            BbStats { nodes: 0, root_bound: 0.0, proven_optimal: true },
+        ));
     }
     for (l, opts) in p.layers.iter().enumerate() {
         if opts.is_empty() {
@@ -71,6 +98,13 @@ pub fn solve_bb(p: &MpqProblem, node_limit: usize) -> Result<Solution> {
         suffix_min_s[d] = suffix_min_s[d + 1] + opts.iter().map(|o| o.size_bits).min().unwrap();
     }
 
+    // Root Lagrangian bound (node with nothing chosen yet).
+    let root_bound = {
+        let slack = lambda * (0.0 - cb.unwrap_or(f64::INFINITY).min(1e30))
+            + mu * (0.0 - cs.unwrap_or(f64::INFINITY).min(1e30));
+        suffix_pen[0] + slack.max(-1e30)
+    };
+
     // Incumbent: greedy penalized assignment (always feasible? verify; if
     // not, fall back to min-bitops assignment).
     let mut incumbent = greedy_incumbent(p, &order, lambda, mu);
@@ -89,17 +123,22 @@ pub fn solve_bb(p: &MpqProblem, node_limit: usize) -> Result<Solution> {
 
     while let Some(node) = stack.pop() {
         nodes += 1;
-        if nodes > node_limit {
+        let expired =
+            nodes % 1024 == 0 && deadline.map_or(false, |d| std::time::Instant::now() >= d);
+        if nodes > node_limit || expired {
+            let why = if expired { "deadline" } else { "node limit" };
             // Time-limited-solver semantics: return the best feasible
             // incumbent instead of failing (its bound-gap is unproven).
             if let Some(inc) = incumbent {
                 eprintln!(
-                    "[bb] node limit {node_limit} reached; returning incumbent cost {:.6} (optimality unproven)",
+                    "[bb] {why} reached after {nodes} nodes; returning incumbent cost {:.6} (optimality unproven)",
                     inc.cost
                 );
-                return Ok(inc);
+                let stats =
+                    BbStats { nodes: nodes as u64, root_bound, proven_optimal: false };
+                return Ok((inc, stats));
             }
-            bail!("branch-and-bound node limit {node_limit} exceeded with no feasible incumbent");
+            bail!("branch-and-bound {why} hit after {nodes} nodes (limit {node_limit}) with no feasible incumbent");
         }
         let d = node.depth;
         if d == n {
@@ -157,7 +196,10 @@ pub fn solve_bb(p: &MpqProblem, node_limit: usize) -> Result<Solution> {
         }
     }
 
-    incumbent.ok_or_else(|| anyhow::anyhow!("no feasible solution found"))
+    let stats = BbStats { nodes: nodes as u64, root_bound, proven_optimal: true };
+    incumbent
+        .map(|s| (s, stats))
+        .ok_or_else(|| anyhow::anyhow!("no feasible solution found"))
 }
 
 /// Short subgradient ascent on (λ, μ) at the root.
@@ -330,6 +372,24 @@ mod tests {
         let p = MpqProblem::default();
         let s = solve_bb(&p, 10).unwrap();
         assert!(s.choice.is_empty());
+    }
+
+    #[test]
+    fn stats_prove_optimality_and_bound_the_cost() {
+        let mut rng = Rng::new(55);
+        for _ in 0..10 {
+            let p = random_problem(&mut rng, 5, 4, 0.5);
+            if let Ok((s, st)) = solve_bb_stats(&p, 1_000_000, None) {
+                assert!(st.proven_optimal);
+                assert!(st.nodes >= 1);
+                assert!(
+                    st.root_bound <= s.cost + 1e-9,
+                    "root bound {} above optimum {}",
+                    st.root_bound,
+                    s.cost
+                );
+            }
+        }
     }
 
     #[test]

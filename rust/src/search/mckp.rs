@@ -18,8 +18,27 @@ pub enum Resource {
     SizeBits,
 }
 
+/// Grid telemetry from one DP solve — the single source of truth for
+/// whether the grid rounding made the solve approximate.
+#[derive(Debug, Clone, Copy)]
+pub struct DpStats {
+    /// Resource units per cell; `1` means the DP ran on the exact grid.
+    pub unit: u64,
+    /// Number of budget cells actually used.
+    pub cells: usize,
+}
+
 /// Solve via DP on the given resource with at most `grid` budget cells.
 pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solution> {
+    solve_dp_stats(p, resource, grid).map(|(s, _)| s)
+}
+
+/// [`solve_dp`] plus the grid telemetry it ran with.
+pub fn solve_dp_stats(
+    p: &MpqProblem,
+    resource: Resource,
+    grid: usize,
+) -> Result<(Solution, DpStats)> {
     let cap = match resource {
         Resource::BitOps => p.bitops_cap,
         Resource::SizeBits => p.size_cap_bits,
@@ -34,8 +53,11 @@ pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solut
         }
         _ => {}
     }
+    let unit = (cap / grid as u64).max(1);
+    let cells = (cap / unit) as usize + 1;
+    let stats = DpStats { unit, cells };
     if p.layers.is_empty() {
-        return Ok(Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 });
+        return Ok((Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 }, stats));
     }
 
     let weight_of = |o: &super::LayerOption| match resource {
@@ -43,8 +65,6 @@ pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solut
         Resource::SizeBits => o.size_bits,
     };
 
-    let unit = (cap / grid as u64).max(1);
-    let cells = (cap / unit) as usize + 1;
     const INF: f64 = f64::INFINITY;
 
     // dp[j] = min cost using exactly ≤ j units; parent pointers per layer.
@@ -98,7 +118,7 @@ pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solut
     }
     let sol = p.evaluate(&choice)?;
     debug_assert!(p.feasible(&sol));
-    Ok(sol)
+    Ok((sol, stats))
 }
 
 #[cfg(test)]

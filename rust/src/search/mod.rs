@@ -11,6 +11,13 @@
 //!   * [`lp`]    — dense two-phase simplex (relaxation bounds / checks)
 //!   * [`baselines`] — uniform, random, reversed, greedy, Hessian-Pareto
 //!
+//! This module holds the problem substrate and the raw algorithms; the
+//! public entry point is [`crate::engine::PolicyEngine`], which wraps
+//! every solver behind the [`crate::engine::Solver`] trait with
+//! automatic fallback, per-solve stats, and a memoizing request cache.
+//! (The old `search::solve()` free function is gone — build a
+//! [`crate::engine::SearchRequest`] instead.)
+//!
 //! No training data is touched here — that is the paper's headline
 //! efficiency claim (§4.3), measured by `search_efficiency.rs`.
 
@@ -169,11 +176,6 @@ impl MpqProblem {
         rec(self, 0, &mut Vec::new(), &mut best);
         best
     }
-}
-
-/// Solve with the default exact solver (branch-and-bound).
-pub fn solve(problem: &MpqProblem) -> Result<Solution> {
-    bb::solve_bb(problem, 2_000_000)
 }
 
 #[cfg(test)]

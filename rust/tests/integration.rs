@@ -16,7 +16,7 @@ use limpq::models::{list_models, ModelMeta};
 use limpq::quant::cost::{total_bitops, uniform_bitops};
 use limpq::quant::BitConfig;
 use limpq::runtime::{pjrt::PjrtBackend, ModelBackend};
-use limpq::search::{solve, MpqProblem};
+use limpq::engine::{PolicyEngine, SearchRequest};
 use limpq::util::rng::Rng;
 
 fn artifacts_dir() -> PathBuf {
@@ -222,11 +222,17 @@ fn pjrt_full_mini_pipeline_mlp() {
     assert!(grew * 2 >= meta.n_qlayers, "low-bit importances unexpectedly small");
 
     let cap = uniform_bitops(&meta, 4, 4);
-    let p = MpqProblem::from_importance(&meta, &imp, alpha, Some(cap), None, false);
-    let sol = solve(&p).unwrap();
-    let policy = p.to_bit_config(&sol);
+    let engine = PolicyEngine::new(meta.clone(), imp);
+    let req = SearchRequest::builder().alpha(alpha).bitops_cap(cap).build().unwrap();
+    let out = engine.solve(&req).unwrap();
+    assert!(!out.cache_hit);
+    let policy = out.outcome.policy.clone();
     assert!(total_bitops(&meta, &policy) <= cap);
     policy.validate(&meta).unwrap();
+    // identical deployment query: served from the policy cache
+    let again = engine.solve(&req).unwrap();
+    assert!(again.cache_hit);
+    assert_eq!(again.outcome.policy, policy);
 
     let ft = pipe.finetune(&fp.flat, &ind.store, &policy, &train, &val).unwrap();
     assert!(ft.final_val_acc.is_finite());

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: release build, full test suite, formatting.
+# Run from anywhere; operates on the workspace root.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt not installed; skipping format check"
+fi
+
+echo "CI OK"
