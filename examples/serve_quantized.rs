@@ -58,12 +58,7 @@ fn main() -> Result<()> {
         lat_us.push(t.elapsed().as_micros());
         for i in 0..b {
             let row = &logits[i * meta.n_classes..(i + 1) * meta.n_classes];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+            let pred = limpq::tensor::argmax_total(row);
             if pred as i32 == data.labels[batch * b + i] {
                 correct += 1;
             }

@@ -5,10 +5,11 @@
 
 use limpq::data::batcher::{Batcher, EvalBatches};
 use limpq::data::{generate, SynthConfig};
+use limpq::kernels::with_thread_scratch;
 use limpq::util::bench::{black_box, Bench};
 
 fn main() {
-    let bench = Bench::default();
+    let bench = if std::env::var("BENCH_QUICK").is_ok() { Bench::quick() } else { Bench::default() };
 
     bench.run("generate_1000_imgs_16x16", || {
         black_box(generate(&SynthConfig { n: 1000, ..Default::default() }, 0))
@@ -35,6 +36,27 @@ fn main() {
             acc += x[0];
         }
         black_box(acc)
+    });
+
+    // Owned-buffer batch draws (the joint trainer's pre-draw path): must
+    // stay allocation-free at steady state.
+    let mut b_into = Batcher::new(&data, 64, 1);
+    let mut xbuf = Vec::new();
+    let mut ybuf = Vec::new();
+    bench.run("batcher_next_into_64", || {
+        b_into.next_batch_into(&mut xbuf, &mut ybuf);
+        black_box((xbuf[0], ybuf[0]))
+    });
+
+    // Scratch-arena checkout/return round trip (the forward hot path's
+    // allocation amortizer).
+    bench.run("scratch_take_put_16k", || {
+        with_thread_scratch(|s| {
+            let v = s.take_f32(16 * 1024);
+            let first = v[0];
+            s.put_f32(v);
+            black_box(first)
+        })
     });
 
     // Throughput summary: images/s through the training batcher.

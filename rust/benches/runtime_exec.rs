@@ -1,26 +1,182 @@
-//! Runtime dispatch benchmarks: per-call cost of each AOT entry point
-//! through the PJRT CPU client (the L3 hot path), plus the host-side
-//! literal-conversion overhead in isolation.
+//! Runtime dispatch benchmarks.
 //!
-//! Run: make artifacts && cargo bench --bench runtime_exec
+//! Three tiers, the first two artifact-free (they always run):
+//!
+//! 1. **Kernel-level**: packed/blocked GEMM (f32 and the i64-accumulating
+//!    integer path) against the pre-PR naive strided loops, single- and
+//!    multi-threaded — the >= 4x packed-vs-naive int-GEMM speedup
+//!    criterion is read off these lines.
+//! 2. **End-to-end joint training**: wall-clock per atomic operation
+//!    (the n+1 concurrent passes) on the analytic mock backend at 1
+//!    thread vs all cores.
+//! 3. **PJRT entry points** (needs `make artifacts`): per-call cost of
+//!    each AOT entry point, as before.
+//!
+//! Run: cargo bench --bench runtime_exec [-- --json BENCH_kernels.json]
+//!
+//! `--json PATH` writes the kernel records as machine-readable JSON
+//! (op, size, threads, ns/iter, throughput) — `tools/bench.sh` uses it to
+//! track the perf trajectory across PRs.  Set `BENCH_QUICK=1` for the CI
+//! smoke run (shorter budgets).
 
 use std::path::Path;
 
+use limpq::config::IndicatorCfg;
+use limpq::data::batcher::Batcher;
 use limpq::data::{generate, SynthConfig};
-use limpq::importance::IndicatorStore;
+use limpq::importance::{IndicatorStore, JointTrainer};
+use limpq::kernels::gemm::{
+    gemm_f32, gemm_f32_naive, gemm_i64, gemm_i64_naive, PackedF32, PackedI32,
+};
+use limpq::kernels::WorkerPool;
+use limpq::models::synthetic_meta;
 use limpq::quant::BitConfig;
+use limpq::runtime::mock::MockBackend;
 use limpq::runtime::pjrt::{lit_f32, PjrtBackend};
 use limpq::runtime::ModelBackend;
-use limpq::util::bench::{black_box, Bench};
+use limpq::util::bench::{black_box, Bench, BenchStats};
+use limpq::util::json::Json;
 use limpq::util::rng::Rng;
 
+/// One machine-readable bench record for BENCH_kernels.json.
+fn record(op: &str, size: &str, threads: usize, stats: &BenchStats, ops_per_iter: f64) -> Json {
+    let ns = stats.mean.as_nanos() as f64;
+    Json::obj(vec![
+        ("op", Json::Str(op.to_string())),
+        ("size", Json::Str(size.to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("ns_per_iter", Json::Num(ns)),
+        // ops/s at the measured mean (GEMM records count MACs here)
+        ("throughput", Json::Num(ops_per_iter / (ns / 1e9))),
+    ])
+}
+
+fn gemm_benches(bench: &Bench, records: &mut Vec<Json>) {
+    let n_threads = WorkerPool::global().threads();
+    for &(batch, in_f, out_f) in &[(8usize, 256usize, 256usize), (32, 512, 512)] {
+        let size = format!("{batch}x{in_f}x{out_f}");
+        let macs = (batch * in_f * out_f) as f64;
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..batch * in_f).map(|_| rng.normal_f32()).collect();
+        let w: Vec<f32> = (0..in_f * out_f).map(|_| rng.normal_f32()).collect();
+        let codes: Vec<i64> = (0..batch * in_f).map(|_| (rng.below(255) as i64) - 127).collect();
+        let wq: Vec<i32> = (0..in_f * out_f).map(|_| (rng.below(255) as i32) - 127).collect();
+        let pw = PackedF32::from_row_major(&w, in_f, out_f);
+        let pq = PackedI32::from_row_major(&wq, in_f, out_f);
+        let mut y = vec![0.0f32; batch * out_f];
+        let mut acc = vec![0i64; batch * out_f];
+        let one = WorkerPool::new(1);
+        let all = WorkerPool::global();
+
+        let s_naive_f = bench.run(&format!("gemm_f32_naive_{size}"), || {
+            gemm_f32_naive(&x, batch, &w, in_f, out_f, &mut y);
+            black_box(y[0])
+        });
+        records.push(record("gemm_f32_naive", &size, 1, &s_naive_f, macs));
+        let s_packed_f = bench.run(&format!("gemm_f32_packed_{size}_t1"), || {
+            gemm_f32(&x, batch, &pw, &mut y, &one);
+            black_box(y[0])
+        });
+        records.push(record("gemm_f32_packed", &size, 1, &s_packed_f, macs));
+        let s_packed_f_mt = bench.run(&format!("gemm_f32_packed_{size}_t{n_threads}"), || {
+            gemm_f32(&x, batch, &pw, &mut y, &all);
+            black_box(y[0])
+        });
+        records.push(record("gemm_f32_packed", &size, n_threads, &s_packed_f_mt, macs));
+
+        let s_naive_i = bench.run(&format!("int_gemm_naive_{size}"), || {
+            gemm_i64_naive(&codes, batch, &wq, in_f, out_f, &mut acc);
+            black_box(acc[0])
+        });
+        records.push(record("int_gemm_naive", &size, 1, &s_naive_i, macs));
+        let s_packed_i = bench.run(&format!("int_gemm_packed_{size}_t1"), || {
+            gemm_i64(&codes, batch, &pq, &mut acc, &one);
+            black_box(acc[0])
+        });
+        records.push(record("int_gemm_packed", &size, 1, &s_packed_i, macs));
+        let s_packed_i_mt = bench.run(&format!("int_gemm_packed_{size}_t{n_threads}"), || {
+            gemm_i64(&codes, batch, &pq, &mut acc, &all);
+            black_box(acc[0])
+        });
+        records.push(record("int_gemm_packed", &size, n_threads, &s_packed_i_mt, macs));
+
+        println!(
+            "kernel speedup {size}: f32 packed/naive {:.2}x (1 thread), int packed/naive {:.2}x (1 thread), int packed x{n_threads} threads {:.2}x",
+            s_naive_f.mean.as_secs_f64() / s_packed_f.mean.as_secs_f64(),
+            s_naive_i.mean.as_secs_f64() / s_packed_i.mean.as_secs_f64(),
+            s_naive_i.mean.as_secs_f64() / s_packed_i_mt.mean.as_secs_f64(),
+        );
+    }
+}
+
+fn joint_training_benches(bench: &Bench, records: &mut Vec<Json>) {
+    // Mock backend sized so one pass does real work (~120k-param grads).
+    let layers = 6;
+    let param_size = 120_000;
+    let meta = synthetic_meta(layers, |i| 1000 * (i as u64 + 1));
+    let backend = MockBackend::new(layers, param_size);
+    let data = generate(&SynthConfig { n: 64, h: 2, w: 2, n_classes: 4, ..Default::default() }, 0);
+    let flat = vec![0.01f32; param_size];
+    let steps = 8;
+    let cfg = IndicatorCfg { steps, lr: 0.05, weight_lr: 0.1, stats_init: true, ema: 0.9 };
+    let n_threads = WorkerPool::global().threads();
+
+    let mut run_at = |threads: usize, label: &str| -> BenchStats {
+        let stats = bench.run(label, || {
+            let mut batcher = Batcher::new(&data, 4, 3);
+            let mut tr = JointTrainer::new(&backend, &meta, cfg.clone(), Rng::new(7));
+            tr.pool = WorkerPool::new(threads);
+            black_box(tr.train(&flat, &mut batcher).unwrap().store.sw[0][0])
+        });
+        records.push(record(
+            "joint_train_atomic_op",
+            &format!("{layers}L_{param_size}p"),
+            threads,
+            &stats,
+            steps as f64, // atomic ops per iteration
+        ));
+        stats
+    };
+    let seq = run_at(1, "joint_train_8steps_t1");
+    let par = run_at(n_threads, &format!("joint_train_8steps_t{n_threads}"));
+    println!(
+        "joint training: {:.2}ms/atomic-op sequential, {:.2}ms/atomic-op at {n_threads} threads ({:.2}x, bit-identical indicators)",
+        seq.mean.as_secs_f64() * 1e3 / steps as f64,
+        par.mean.as_secs_f64() * 1e3 / steps as f64,
+        seq.mean.as_secs_f64() / par.mean.as_secs_f64(),
+    );
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--json" && i + 1 < argv.len() {
+            json_path = Some(argv[i + 1].clone());
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    let quick_mode = std::env::var("BENCH_QUICK").is_ok();
+    let bench = if quick_mode { Bench::quick() } else { Bench::default() };
+
+    let mut records: Vec<Json> = Vec::new();
+    gemm_benches(&bench, &mut records);
+    joint_training_benches(&bench, &mut records);
+
+    if let Some(path) = &json_path {
+        std::fs::write(path, Json::Arr(records).to_string()).expect("write bench json");
+        println!("kernel bench records -> {path}");
+    }
+
+    // ---- PJRT entry points (artifact-gated, unchanged) ----
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("SKIP: artifacts not built (run `make artifacts`)");
+        println!("SKIP pjrt tier: artifacts not built (run `make artifacts`)");
         return;
     }
-    let bench = Bench::default();
 
     // Host-side literal conversion overhead (no execution).
     let buf = vec![0.5f32; 64 * 16 * 16 * 3];
@@ -67,5 +223,4 @@ fn main() {
             black_box(backend.logits(&flat, &sw, &sa, &qw, &qa, &data.images[..sb * e]).unwrap())
         });
     }
-    let _ = bench;
 }

@@ -43,6 +43,7 @@ const VALUE_FLAGS: &[&str] = &[
     "solver",
     "node-limit",
     "time-limit-ms",
+    "threads",
 ];
 
 impl Args {
@@ -138,10 +139,30 @@ ENGINE (policy search):
   The fleet line protocol accepts the same controls as JSON fields
   (\"solver\", \"node_limit\", \"time_limit_ms\") and reports
   \"solver\" and \"cache_hit\" in every response.
+
+KERNELS (compute):
+  All dense math runs through the shared kernels subsystem: blocked GEMM
+  over weights pre-transposed/packed once per model, a per-thread scratch
+  arena (allocation-free forwards), and one crate-wide worker pool that
+  shards batch rows, runs the joint trainer's n+1 atomic passes
+  concurrently, fans out Hutchinson probes, and powers fleet sweeps.
+    --threads N        worker threads for every parallel region (default:
+                       all cores; env LIMPQ_THREADS).  Results are
+                       bit-identical at any N — reductions run in fixed
+                       order — so N=1 is a determinism check, not a
+                       different answer.  Accepted by every subcommand.
+                       (The single-device PJRT CPU backend serializes its
+                       own dispatch, so training-pass/HVP scaling shows on
+                       concurrency-capable backends; the int-GEMM and
+                       fleet-sweep sharding benefits everywhere.)
 ";
 
 /// Dispatch a parsed command. Returns process exit code.
 pub fn dispatch(args: &Args) -> Result<i32> {
+    if let Some(v) = args.get("threads") {
+        let n: usize = v.parse().with_context(|| format!("--threads {v:?} is not a count"))?;
+        crate::kernels::set_global_threads(n)?;
+    }
     match args.command.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -429,6 +450,24 @@ mod tests {
         assert!(HELP.contains("--solver"));
         assert!(HELP.contains("node-limit"));
         assert!(HELP.contains("cache_hit"));
+    }
+
+    #[test]
+    fn help_documents_the_kernels() {
+        assert!(HELP.contains("KERNELS"));
+        assert!(HELP.contains("--threads"));
+        assert!(HELP.contains("LIMPQ_THREADS"));
+        assert!(HELP.contains("bit-identical"));
+    }
+
+    #[test]
+    fn threads_flag_parses_as_value_flag() {
+        let a = parse(&["search", "--threads", "3", "--cap-gbitops", "1.5"]);
+        assert_eq!(a.get("threads"), Some("3"));
+        // bogus values are rejected at dispatch (without touching the
+        // process-global pool)
+        let bad = parse(&["help", "--threads", "zero"]);
+        assert!(dispatch(&bad).is_err());
     }
 
     #[test]

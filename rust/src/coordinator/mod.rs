@@ -100,8 +100,17 @@ impl<'a, B: ModelBackend + ?Sized> Pipeline<'a, B> {
         Ok(FpResult { flat, curve, val_acc, val_loss })
     }
 
-    /// Stage 2: joint importance-indicator training (§3.4).
-    pub fn train_indicators(&mut self, flat: &[f32], train: &Dataset) -> Result<TrainedIndicators> {
+    /// Stage 2: joint importance-indicator training (§3.4).  The n+1
+    /// atomic passes run concurrently on the global worker pool (`Sync`
+    /// backends only — both real backends are), with deterministic
+    /// fixed-order gradient reduction.  Note the single-device PJRT CPU
+    /// backend serializes its dispatch internally, so the wall-clock win
+    /// shows on concurrency-capable backends (mock today, multi-device
+    /// PJRT later); results are bit-identical regardless.
+    pub fn train_indicators(&mut self, flat: &[f32], train: &Dataset) -> Result<TrainedIndicators>
+    where
+        B: Sync,
+    {
         let mut batcher = Batcher::new(train, self.backend.train_batch(), self.rng.child(3).next_u64());
         let mut trainer = JointTrainer::new(
             self.backend,

@@ -58,6 +58,19 @@ impl<'a> Batcher<'a> {
         self.cursor += self.batch;
         (&self.xbuf, &self.ybuf)
     }
+
+    /// [`Batcher::next_batch`] into caller-owned buffers — lets consumers
+    /// that pre-draw several batches (the joint trainer's n+1 concurrent
+    /// passes, the parallel Hutchinson probes) keep copies without
+    /// allocating per draw.  Consumes the shuffle stream exactly like
+    /// `next_batch`.
+    pub fn next_batch_into(&mut self, x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        let (xb, yb) = self.next_batch();
+        x.clear();
+        x.extend_from_slice(xb);
+        y.clear();
+        y.extend_from_slice(yb);
+    }
 }
 
 /// Sequential (unshuffled) full-coverage batches for evaluation.
@@ -158,6 +171,25 @@ mod tests {
             assert_eq!(xa, xb.to_vec());
             assert_eq!(ya, yb.to_vec());
         }
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch_stream() {
+        let d = ds(20);
+        let mut a = Batcher::new(&d, 5, 11);
+        let mut b = Batcher::new(&d, 5, 11);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..6 {
+            b.next_batch_into(&mut x, &mut y);
+            let (xa, ya) = a.next_batch();
+            assert_eq!(x, xa.to_vec());
+            assert_eq!(y, ya.to_vec());
+        }
+        // steady state: owned buffers stop reallocating
+        let (cx, cy) = (x.capacity(), y.capacity());
+        b.next_batch_into(&mut x, &mut y);
+        assert_eq!((x.capacity(), y.capacity()), (cx, cy));
     }
 
     #[test]

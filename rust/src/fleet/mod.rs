@@ -27,12 +27,13 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::engine::{CacheStats, PolicyEngine, SearchRequest};
+use crate::kernels::WorkerPool;
 use crate::importance::Importance;
 use crate::models::ModelMeta;
 use crate::quant::BitConfig;
@@ -111,37 +112,16 @@ impl FleetSearcher {
     }
 
     /// Batch search for a whole fleet (the `z`-device sweep of §4.3),
-    /// fanned out across a thread pool.  Results keep request order.
-    /// Identical constraint sets already in the cache are served from
-    /// it; identical *cold* queries running concurrently may each solve
-    /// (the cache lock is not held during a solve — last insert wins,
-    /// results are identical).
+    /// fanned out across the crate-wide [`WorkerPool`] (the ad-hoc scoped
+    /// pool this method grew in PR 1 became `kernels::pool`).  Results
+    /// keep request order.  Identical constraint sets already in the
+    /// cache are served from it; identical *cold* queries running
+    /// concurrently may each solve (the cache lock is not held during a
+    /// solve — last insert wins, results are identical).
     pub fn search_fleet(&self, devices: &[DeviceSpec]) -> Result<Vec<DevicePolicy>> {
-        let workers = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(devices.len().max(1));
-        if workers <= 1 || devices.len() <= 1 {
-            return devices.iter().map(|d| self.search(d)).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<DevicePolicy>>>> =
-            devices.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= devices.len() {
-                        break;
-                    }
-                    let result = self.search(&devices[i]);
-                    *slots[i].lock().unwrap() = Some(result);
-                });
-            }
-        });
-        slots
+        let pool = WorkerPool::global().capped(devices.len());
+        pool.parallel_for(devices.len(), |i| self.search(&devices[i]))
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("every slot is filled by a worker"))
             .collect()
     }
 

@@ -9,6 +9,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::kernels::WorkerPool;
 use crate::models::ModelMeta;
 use crate::runtime::ModelBackend;
 use crate::util::rng::Rng;
@@ -20,17 +21,29 @@ pub struct HutchinsonCfg {
     pub probes: usize,
     /// Batches averaged per probe.
     pub batches: usize,
+    /// Worker threads for the HVP fan-out; 0 = the global pool.
+    /// Results are bit-identical at any thread count (probes and batches
+    /// are pre-drawn in sequential order, partial traces reduced in
+    /// fixed order).
+    pub threads: usize,
 }
 
 impl Default for HutchinsonCfg {
     fn default() -> Self {
-        HutchinsonCfg { probes: 4, batches: 1 }
+        HutchinsonCfg { probes: 4, batches: 1, threads: 0 }
     }
 }
 
 /// Per-layer average Hessian trace estimates (normalized by block size, as
 /// HAWQ-v2 does: trace / #params).
-pub fn layer_traces<B: ModelBackend + ?Sized>(
+///
+/// The HVP evaluations — the dominant cost — fan out across the worker
+/// pool: probe vectors and batches are pre-drawn in the sequential order
+/// (the RNG and batch streams are untouched by parallelism), each
+/// (probe, batch) job computes its blockwise partial traces, and the
+/// partials reduce in fixed job order, so the estimates are bit-identical
+/// at any thread count.
+pub fn layer_traces<B: ModelBackend + Sync + ?Sized>(
     backend: &B,
     meta: &ModelMeta,
     flat: &[f32],
@@ -49,28 +62,58 @@ pub fn layer_traces<B: ModelBackend + ?Sized>(
         })
         .collect();
 
-    let mut traces = vec![0.0f64; meta.n_qlayers];
-    let mut v = vec![0.0f32; meta.param_size];
-    for _probe in 0..cfg.probes {
-        // Independent Rademacher probe over the whole parameter space;
-        // per-layer traces are read off blockwise: E[v' H v restricted to
-        // block l] = Tr(H_ll) because off-block terms vanish in
-        // expectation.
+    let pool = match cfg.threads {
+        0 => WorkerPool::global(),
+        n => WorkerPool::new(n),
+    };
+
+    // Pre-draw all stochastic inputs in the sequential order.  Each probe
+    // is an independent Rademacher vector over the whole parameter space;
+    // per-layer traces are read off blockwise: E[v' H v restricted to
+    // block l] = Tr(H_ll) because off-block terms vanish in expectation.
+    let mut probes: Vec<Vec<f32>> = Vec::with_capacity(cfg.probes);
+    let mut jobs: Vec<(usize, Vec<f32>, Vec<i32>)> = Vec::with_capacity(cfg.probes * cfg.batches);
+    for p in 0..cfg.probes {
+        let mut v = vec![0.0f32; meta.param_size];
         for x in v.iter_mut() {
             *x = rng.rademacher();
         }
+        probes.push(v);
         for _b in 0..cfg.batches {
             let (x, y) = batches();
-            let hv = backend.hvp(flat, &v, &x, &y)?;
+            jobs.push((p, x, y));
+        }
+    }
+
+    let probes_ref = &probes;
+    let blocks_ref = &blocks;
+    let partials: Vec<Result<Vec<f64>>> =
+        pool.capped(jobs.len()).parallel_for(jobs.len(), |j| {
+            let (p, x, y) = &jobs[j];
+            let v = &probes_ref[*p];
+            let hv = backend.hvp(flat, v, x, y)?;
             ensure!(hv.len() == meta.param_size, "hvp size mismatch");
-            for (l, block) in blocks.iter().enumerate() {
+            let mut part = vec![0.0f64; blocks_ref.len()];
+            for (l, block) in blocks_ref.iter().enumerate() {
                 if let Some(r) = block {
                     let mut acc = 0.0f64;
                     for i in r.clone() {
                         acc += v[i] as f64 * hv[i] as f64;
                     }
-                    traces[l] += acc;
+                    part[l] = acc;
                 }
+            }
+            Ok(part)
+        });
+
+    // Fixed-order reduction: the same additions, in the same order, as
+    // the old sequential loop.
+    let mut traces = vec![0.0f64; meta.n_qlayers];
+    for part in partials {
+        let part = part?;
+        for (l, p) in part.iter().enumerate() {
+            if blocks[l].is_some() {
+                traces[l] += *p;
             }
         }
     }
@@ -132,12 +175,44 @@ mod tests {
             &meta,
             &flat,
             &mut batches,
-            &HutchinsonCfg { probes: 2, batches: 1 },
+            &HutchinsonCfg { probes: 2, batches: 1, threads: 0 },
             &mut rng,
         )
         .unwrap();
         for (li, t) in traces.iter().enumerate() {
             assert!((t - backend.hess[li] as f64).abs() < 1e-5, "layer {li}: {t} vs {}", backend.hess[li]);
+        }
+    }
+
+    #[test]
+    fn parallel_probes_bit_identical_to_sequential() {
+        let (l, p) = (6, 60);
+        let meta = mock_meta(l, p);
+        let backend = MockBackend::new(l, p);
+        let flat: Vec<f32> = (0..p).map(|i| 0.01 * i as f32).collect();
+        let run = |threads: usize| {
+            let mut rng = Rng::new(17);
+            let mut calls = 0usize;
+            let mut batches = || {
+                calls += 1;
+                (vec![0.1f32 * calls as f32; 16], vec![0i32; 4])
+            };
+            layer_traces(
+                &backend,
+                &meta,
+                &flat,
+                &mut batches,
+                &HutchinsonCfg { probes: 4, batches: 2, threads },
+                &mut rng,
+            )
+            .unwrap()
+        };
+        let seq = run(1);
+        for threads in [2, 4] {
+            let par = run(threads);
+            for (a, b) in par.iter().zip(&seq) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads");
+            }
         }
     }
 
@@ -159,7 +234,7 @@ mod tests {
                 &meta,
                 &flat,
                 &mut batches,
-                &HutchinsonCfg { probes: 3, batches: 2 },
+                &HutchinsonCfg { probes: 3, batches: 2, threads: 1 },
                 &mut rng,
             )
             .unwrap();

@@ -1,0 +1,337 @@
+//! Blocked, register-tiled GEMM kernels over pre-packed weights.
+//!
+//! The pre-PR inner loops walked the weight matrix column-wise
+//! (`wq[i * out_f + o]` — a stride of `out_f` elements per multiply),
+//! so every MAC missed cache.  The kernels here fix that structurally:
+//!
+//! * **Pack once per model.**  [`PackedF32`] / [`PackedI32`] store the
+//!   weight matrix transposed to `[out, in]` row-major, so the inner
+//!   product over `in` is unit-stride for both operands.
+//! * **Register tiling.**  Each pass over an activation row produces
+//!   [`TILE_OUT`] outputs at once from independent accumulators, so the
+//!   activation row is loaded from L1 once per tile instead of once per
+//!   output.
+//! * **Exactness.**  Per output, accumulation still runs in ascending-`i`
+//!   order with a single accumulator, so `gemm_f32` is **bit-identical**
+//!   to the naive reference (same additions, same order), and the i64
+//!   integer kernel is exact by construction.  That is what lets the
+//!   batch-row sharding over the [`WorkerPool`] stay deterministic at any
+//!   thread count.
+//!
+//! The `*_naive` references reproduce the pre-PR strided loops verbatim;
+//! benches report packed-vs-naive speedup against them and the property
+//! tests pin equivalence on random shapes including ragged edge tiles.
+//!
+//! [`WorkerPool`]: super::pool::WorkerPool
+
+use super::pool::WorkerPool;
+
+/// Output rows produced per activation-row pass (register tile height).
+pub const TILE_OUT: usize = 4;
+
+/// Below this many MACs a GEMM runs on the calling thread: scoped-spawn
+/// overhead (~tens of us) would swamp the work.
+pub const PAR_MIN_MACS: usize = 1 << 16;
+
+/// f32 weights packed `[out, in]` row-major (transposed from the model's
+/// `[in, out]` storage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedF32 {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl PackedF32 {
+    /// Pack from the model's row-major `[in_f, out_f]` layout.
+    pub fn from_row_major(w: &[f32], in_f: usize, out_f: usize) -> PackedF32 {
+        assert_eq!(w.len(), in_f * out_f, "weight buffer size mismatch");
+        let mut data = vec![0.0f32; w.len()];
+        for o in 0..out_f {
+            for i in 0..in_f {
+                data[o * in_f + i] = w[i * out_f + o];
+            }
+        }
+        PackedF32 { rows: out_f, cols: in_f, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Integer weight codes packed `[out, in]` row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedI32 {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<i32>,
+}
+
+impl PackedI32 {
+    /// Pack from the model's row-major `[in_f, out_f]` code layout.
+    pub fn from_row_major(wq: &[i32], in_f: usize, out_f: usize) -> PackedI32 {
+        assert_eq!(wq.len(), in_f * out_f, "code buffer size mismatch");
+        let mut data = vec![0i32; wq.len()];
+        for o in 0..out_f {
+            for i in 0..in_f {
+                data[o * in_f + i] = wq[i * out_f + o];
+            }
+        }
+        PackedI32 { rows: out_f, cols: in_f, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+#[inline]
+fn gemm_f32_row(xr: &[f32], w: &PackedF32, yr: &mut [f32]) {
+    let (rows, cols) = (w.rows, w.cols);
+    let mut o = 0;
+    while o + TILE_OUT <= rows {
+        let w0 = w.row(o);
+        let w1 = w.row(o + 1);
+        let w2 = w.row(o + 2);
+        let w3 = w.row(o + 3);
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for i in 0..cols {
+            let xv = xr[i];
+            a0 += xv * w0[i];
+            a1 += xv * w1[i];
+            a2 += xv * w2[i];
+            a3 += xv * w3[i];
+        }
+        yr[o] = a0;
+        yr[o + 1] = a1;
+        yr[o + 2] = a2;
+        yr[o + 3] = a3;
+        o += TILE_OUT;
+    }
+    while o < rows {
+        let wr = w.row(o);
+        let mut acc = 0.0f32;
+        for i in 0..cols {
+            acc += xr[i] * wr[i];
+        }
+        yr[o] = acc;
+        o += 1;
+    }
+}
+
+#[inline]
+fn gemm_i64_row(xr: &[i64], w: &PackedI32, yr: &mut [i64]) {
+    let (rows, cols) = (w.rows, w.cols);
+    let mut o = 0;
+    while o + TILE_OUT <= rows {
+        let w0 = w.row(o);
+        let w1 = w.row(o + 1);
+        let w2 = w.row(o + 2);
+        let w3 = w.row(o + 3);
+        let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+        for i in 0..cols {
+            let xv = xr[i];
+            a0 += xv * w0[i] as i64;
+            a1 += xv * w1[i] as i64;
+            a2 += xv * w2[i] as i64;
+            a3 += xv * w3[i] as i64;
+        }
+        yr[o] = a0;
+        yr[o + 1] = a1;
+        yr[o + 2] = a2;
+        yr[o + 3] = a3;
+        o += TILE_OUT;
+    }
+    while o < rows {
+        let wr = w.row(o);
+        let mut acc = 0i64;
+        for i in 0..cols {
+            acc += xr[i] * wr[i] as i64;
+        }
+        yr[o] = acc;
+        o += 1;
+    }
+}
+
+/// `y[b, o] = sum_i x[b, i] * W[i, o]` with packed weights, sharded over
+/// batch rows on `pool` when the work clears [`PAR_MIN_MACS`].
+/// Bit-identical to [`gemm_f32_naive`] at any thread count.
+pub fn gemm_f32(x: &[f32], batch: usize, w: &PackedF32, y: &mut [f32], pool: &WorkerPool) {
+    assert_eq!(x.len(), batch * w.cols, "activation size mismatch");
+    assert_eq!(y.len(), batch * w.rows, "output size mismatch");
+    if w.rows == 0 {
+        return;
+    }
+    let pool = effective(pool, batch, w.rows, w.cols);
+    pool.for_each_chunk(y, w.rows, |b, yr| {
+        gemm_f32_row(&x[b * w.cols..(b + 1) * w.cols], w, yr);
+    });
+}
+
+/// Integer GEMM: i64 accumulation over i64 activation codes and packed
+/// i32 weight codes (exact — no overflow for the bit-widths here).
+pub fn gemm_i64(codes: &[i64], batch: usize, w: &PackedI32, acc: &mut [i64], pool: &WorkerPool) {
+    assert_eq!(codes.len(), batch * w.cols, "code size mismatch");
+    assert_eq!(acc.len(), batch * w.rows, "accumulator size mismatch");
+    if w.rows == 0 {
+        return;
+    }
+    let pool = effective(pool, batch, w.rows, w.cols);
+    pool.for_each_chunk(acc, w.rows, |b, yr| {
+        gemm_i64_row(&codes[b * w.cols..(b + 1) * w.cols], w, yr);
+    });
+}
+
+fn effective(pool: &WorkerPool, batch: usize, rows: usize, cols: usize) -> WorkerPool {
+    let macs = batch.saturating_mul(rows).saturating_mul(cols);
+    if macs < PAR_MIN_MACS {
+        WorkerPool::new(1)
+    } else {
+        pool.capped(batch)
+    }
+}
+
+/// The pre-PR scalar loop (weights row-major `[in_f, out_f]`, inner loop
+/// striding by `out_f`).  Kept as the reference for property tests and
+/// the packed-vs-naive bench comparison.
+pub fn gemm_f32_naive(
+    x: &[f32],
+    batch: usize,
+    w: &[f32],
+    in_f: usize,
+    out_f: usize,
+    y: &mut [f32],
+) {
+    assert_eq!(x.len(), batch * in_f);
+    assert_eq!(w.len(), in_f * out_f);
+    assert_eq!(y.len(), batch * out_f);
+    for b in 0..batch {
+        let xr = &x[b * in_f..(b + 1) * in_f];
+        for o in 0..out_f {
+            let mut acc = 0.0f32;
+            for i in 0..in_f {
+                acc += xr[i] * w[i * out_f + o];
+            }
+            y[b * out_f + o] = acc;
+        }
+    }
+}
+
+/// The pre-PR integer loop from `IntModel::forward` (stride `out_f` per
+/// multiply) — the baseline the >= 4x speedup criterion is measured
+/// against.
+pub fn gemm_i64_naive(
+    codes: &[i64],
+    batch: usize,
+    wq: &[i32],
+    in_f: usize,
+    out_f: usize,
+    acc: &mut [i64],
+) {
+    assert_eq!(codes.len(), batch * in_f);
+    assert_eq!(wq.len(), in_f * out_f);
+    assert_eq!(acc.len(), batch * out_f);
+    for b in 0..batch {
+        let xr = &codes[b * in_f..(b + 1) * in_f];
+        for o in 0..out_f {
+            let mut a = 0i64;
+            for i in 0..in_f {
+                a += xr[i] * wq[i * out_f + o] as i64;
+            }
+            acc[b * out_f + o] = a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn rand_codes(rng: &mut Rng, n: usize, lim: i64) -> Vec<i64> {
+        (0..n).map(|_| (rng.below((2 * lim + 1) as usize) as i64) - lim).collect()
+    }
+
+    /// Random shapes including ragged edge tiles (rows not divisible by
+    /// TILE_OUT, single-column, single-row, batch 1).
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 3),
+        (2, 3, 5),
+        (3, 5, 4),
+        (4, 16, 17), // rows % TILE_OUT == 1
+        (5, 13, 2),
+        (2, 64, 31), // rows % TILE_OUT == 3
+        (8, 33, 12),
+    ];
+
+    #[test]
+    fn packed_f32_matches_naive_bitwise_on_random_shapes() {
+        let mut rng = Rng::new(42);
+        for &(batch, in_f, out_f) in SHAPES {
+            let x = rand_f32(&mut rng, batch * in_f);
+            let w = rand_f32(&mut rng, in_f * out_f);
+            let packed = PackedF32::from_row_major(&w, in_f, out_f);
+            let mut y_ref = vec![0.0f32; batch * out_f];
+            gemm_f32_naive(&x, batch, &w, in_f, out_f, &mut y_ref);
+            for threads in [1, 4] {
+                let mut y = vec![f32::NAN; batch * out_f];
+                gemm_f32(&x, batch, &packed, &mut y, &WorkerPool::new(threads));
+                // same additions in the same order -> bitwise equality
+                assert_eq!(y, y_ref, "shape ({batch},{in_f},{out_f}) threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_i64_matches_naive_exactly_on_random_shapes() {
+        let mut rng = Rng::new(7);
+        for &(batch, in_f, out_f) in SHAPES {
+            let codes = rand_codes(&mut rng, batch * in_f, 127);
+            let wq: Vec<i32> =
+                (0..in_f * out_f).map(|_| (rng.below(255) as i32) - 127).collect();
+            let packed = PackedI32::from_row_major(&wq, in_f, out_f);
+            let mut a_ref = vec![0i64; batch * out_f];
+            gemm_i64_naive(&codes, batch, &wq, in_f, out_f, &mut a_ref);
+            for threads in [1, 4] {
+                let mut a = vec![i64::MIN; batch * out_f];
+                gemm_i64(&codes, batch, &packed, &mut a, &WorkerPool::new(threads));
+                assert_eq!(a, a_ref, "shape ({batch},{in_f},{out_f}) threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_gemm_crosses_the_parallel_threshold() {
+        // batch*rows*cols > PAR_MIN_MACS so the pooled path actually runs.
+        let (batch, in_f, out_f) = (16, 96, 96);
+        assert!(batch * in_f * out_f >= PAR_MIN_MACS);
+        let mut rng = Rng::new(11);
+        let x = rand_f32(&mut rng, batch * in_f);
+        let w = rand_f32(&mut rng, in_f * out_f);
+        let packed = PackedF32::from_row_major(&w, in_f, out_f);
+        let mut y_ref = vec![0.0f32; batch * out_f];
+        gemm_f32_naive(&x, batch, &w, in_f, out_f, &mut y_ref);
+        let mut y = vec![0.0f32; batch * out_f];
+        gemm_f32(&x, batch, &packed, &mut y, &WorkerPool::new(4));
+        assert_eq!(y, y_ref);
+    }
+
+    #[test]
+    fn packing_is_a_transpose() {
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [in=2, out=3]
+        let p = PackedF32::from_row_major(&w, 2, 3);
+        assert_eq!(p.rows, 3);
+        assert_eq!(p.cols, 2);
+        assert_eq!(p.row(0), &[1.0, 4.0]);
+        assert_eq!(p.row(1), &[2.0, 5.0]);
+        assert_eq!(p.row(2), &[3.0, 6.0]);
+    }
+}

@@ -1,0 +1,33 @@
+//! Shared compute-kernel subsystem: every numeric hot path in the crate
+//! runs through here.
+//!
+//! Three primitives, composed by the callers:
+//!
+//! * [`gemm`] — blocked, register-tiled GEMM over pre-packed (transposed)
+//!   weights: [`gemm::PackedF32`] / [`gemm::PackedI32`] are built once per
+//!   model, then [`gemm::gemm_f32`] / [`gemm::gemm_i64`] run unit-stride
+//!   inner products, bit-identical to the naive references at any thread
+//!   count.
+//! * [`scratch`] — per-thread reusable buffer arena
+//!   ([`scratch::with_thread_scratch`]) so forwards stop allocating
+//!   per row/batch.
+//! * [`pool`] — the crate-wide [`pool::WorkerPool`]: index-ordered
+//!   `parallel_for` (deterministic reduction) and disjoint-chunk
+//!   `for_each_chunk` sharding.  Thread count comes from `--threads` /
+//!   `LIMPQ_THREADS` / core count.
+//!
+//! Consumers: `quant::int_infer` (packed integer inference),
+//! `importance::JointTrainer` (the n+1 atomic passes run concurrently
+//! with fixed-order gradient reduction), `hessian` (parallel Hutchinson
+//! probes), `fleet` (device sweeps), `runtime::mock`.  The determinism
+//! contract is global: **1 thread and N threads produce bit-identical
+//! results everywhere** — enforced by tests in each consumer and by CI
+//! running the suite at `--threads 1` and default parallelism.
+
+pub mod gemm;
+pub mod pool;
+pub mod scratch;
+
+pub use gemm::{gemm_f32, gemm_i64, PackedF32, PackedI32};
+pub use pool::{set_global_threads, WorkerPool};
+pub use scratch::{with_thread_scratch, ScratchArena};

@@ -1,0 +1,113 @@
+//! Scratch arena: reusable numeric buffers for the forward hot paths.
+//!
+//! `IntModel::forward`, `fake_quant_forward_ref`, and the mock backend
+//! used to allocate fresh `Vec`s per row/batch; the arena recycles those
+//! buffers so a steady-state forward performs **zero** heap allocation.
+//! Buffers are checked out ([`ScratchArena::take_f32`] & friends), used,
+//! and checked back in ([`ScratchArena::put_f32`]); a buffer that is not
+//! returned simply costs one re-allocation on the next checkout.
+//!
+//! [`with_thread_scratch`] exposes one arena per thread, which keeps
+//! `&self` APIs allocation-free without locks and stays correct under the
+//! worker pool (each worker thread owns its own arena).
+
+use std::cell::RefCell;
+
+/// A pool of reusable typed buffers.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    f32s: Vec<Vec<f32>>,
+    i64s: Vec<Vec<i64>>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Check out an f32 buffer of exactly `len` zeroed elements, reusing
+    /// a previously returned allocation when one is available.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return an f32 buffer to the arena for reuse.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.f32s.push(v);
+    }
+
+    /// Check out an i64 buffer of exactly `len` zeroed elements.
+    pub fn take_i64(&mut self, len: usize) -> Vec<i64> {
+        let mut v = self.i64s.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return an i64 buffer to the arena for reuse.
+    pub fn put_i64(&mut self, v: Vec<i64>) {
+        self.i64s.push(v);
+    }
+
+    /// Buffers currently parked (for tests / introspection).
+    pub fn parked(&self) -> usize {
+        self.f32s.len() + self.i64s.len()
+    }
+}
+
+thread_local! {
+    static THREAD_SCRATCH: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
+}
+
+/// Run `f` with this thread's arena.  Nested calls would double-borrow
+/// the `RefCell` and panic, so hot-path helpers take `&mut ScratchArena`
+/// and only the outermost entry point goes through here.
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+    THREAD_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let mut a = ScratchArena::new();
+        let mut v = a.take_f32(8);
+        assert_eq!(v.len(), 8);
+        assert!(v.iter().all(|&x| x == 0.0));
+        v.fill(3.5);
+        a.put_f32(v);
+        // reused buffer comes back zeroed at the new length
+        let v2 = a.take_f32(4);
+        assert_eq!(v2.len(), 4);
+        assert!(v2.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reuse_preserves_capacity() {
+        let mut a = ScratchArena::new();
+        let v = a.take_i64(1024);
+        let cap = v.capacity();
+        a.put_i64(v);
+        let v2 = a.take_i64(100);
+        assert!(v2.capacity() >= cap, "checkout must reuse the parked allocation");
+        assert_eq!(a.parked(), 0);
+        a.put_i64(v2);
+        assert_eq!(a.parked(), 1);
+    }
+
+    #[test]
+    fn thread_scratch_round_trip() {
+        let out = with_thread_scratch(|s| {
+            let buf = s.take_f32(16);
+            let n = buf.len();
+            s.put_f32(buf);
+            n
+        });
+        assert_eq!(out, 16);
+    }
+}

@@ -31,6 +31,16 @@
 //!
 //! [`fleet::FleetSearcher`] is a thin fleet-facing wrapper: named device
 //! requests, a thread-pooled batch sweep, and the TCP line protocol.
+//!
+//! ## Compute: the [`kernels`] module
+//!
+//! All dense numeric work funnels through [`kernels`]: blocked GEMM over
+//! pre-packed transposed weights ([`kernels::gemm`]), a per-thread scratch
+//! arena ([`kernels::scratch`]) that keeps forwards allocation-free, and
+//! the crate-wide [`kernels::WorkerPool`] that shards batch rows, runs the
+//! joint trainer's n+1 atomic passes concurrently, fans out Hutchinson
+//! probes, and powers the fleet sweep — all with bit-identical results at
+//! any thread count (deterministic fixed-order reduction).
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -38,6 +48,7 @@ pub mod engine;
 pub mod fleet;
 pub mod hessian;
 pub mod importance;
+pub mod kernels;
 pub mod models;
 pub mod optim;
 pub mod quant;

@@ -15,8 +15,12 @@
 
 use anyhow::{bail, ensure, Result};
 
+use crate::kernels::gemm::{gemm_i64, PackedI32};
+use crate::kernels::pool::WorkerPool;
+use crate::kernels::scratch::{with_thread_scratch, ScratchArena};
 use crate::models::ModelMeta;
-use crate::quant::{act_bounds, weight_bounds, BitConfig};
+use crate::quant::{act_bounds, quantize_codes_into, weight_bounds, BitConfig};
+use crate::tensor::{argmax_total, relu_inplace};
 
 /// One dense layer packed for integer execution.
 #[derive(Debug, Clone)]
@@ -25,6 +29,9 @@ pub struct IntDense {
     /// Quantized weights, row-major [in, out], stored as i32 codes
     /// (range fits the layer's w_bits).
     pub wq: Vec<i32>,
+    /// The same codes pre-transposed/packed `[out, in]` once at pack time,
+    /// so the GEMM inner loop is unit-stride (`kernels::gemm`).
+    pub wt: PackedI32,
     pub in_f: usize,
     pub out_f: usize,
     pub bias: Vec<f32>,
@@ -74,9 +81,11 @@ impl IntModel {
                 .iter()
                 .map(|&v| (v / s_w).clamp(wmin, wmax).round_ties_even() as i32)
                 .collect();
+            let wt = PackedI32::from_row_major(&wq, in_f, out_f);
             layers.push(IntDense {
                 name: q.name.clone(),
                 wq,
+                wt,
                 in_f,
                 out_f,
                 bias: flat[bp.offset..bp.offset + bp.size].to_vec(),
@@ -103,55 +112,102 @@ impl IntModel {
     /// Activations quantize to unsigned codes, weights are signed codes,
     /// the GEMM accumulates in i64 (provably no overflow for the sizes
     /// here), and each layer dequantizes by `s_a * s_w`.
+    ///
+    /// Runs the packed/blocked `kernels::gemm` path, sharded over batch
+    /// rows on the global worker pool; integer accumulation is exact, so
+    /// logits are bit-identical to the naive single-thread loop at any
+    /// thread count (pinned by tests).
     pub fn forward(&self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let mut act = x.to_vec();
+        let mut out = Vec::new();
+        self.forward_into(x, batch, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`IntModel::forward`] into a caller-reused logits buffer; all
+    /// intermediates come from the per-thread scratch arena, so the
+    /// steady-state forward allocates nothing.
+    pub fn forward_into(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) -> Result<()> {
+        self.forward_pooled(x, batch, out, &WorkerPool::global())
+    }
+
+    /// [`IntModel::forward_into`] on an explicit pool (the 1-vs-N
+    /// determinism tests and benches pin thread counts through this).
+    pub fn forward_pooled(
+        &self,
+        x: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        with_thread_scratch(|scratch| self.forward_scratch(x, batch, out, scratch, pool))
+    }
+
+    fn forward_scratch(
+        &self,
+        x: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut ScratchArena,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        let mut act = scratch.take_f32(x.len());
+        act.copy_from_slice(x);
+        let mut next = scratch.take_f32(0);
+        let mut codes = scratch.take_i64(0);
+        let mut acc = scratch.take_i64(0);
+        let mut status = Ok(());
         for (li, l) in self.layers.iter().enumerate() {
-            ensure!(act.len() == batch * l.in_f, "{}: input size mismatch", l.name);
-            let mut out = vec![0.0f32; batch * l.out_f];
+            if act.len() != batch * l.in_f {
+                status = Err(anyhow::anyhow!("{}: input size mismatch", l.name));
+                break;
+            }
+            // quantize the activation buffer to integer codes
+            quantize_codes_into(&act, l.s_a, l.a_qmin, l.a_qmax, &mut codes);
+            acc.clear();
+            acc.resize(batch * l.out_f, 0);
+            gemm_i64(&codes, batch, &l.wt, &mut acc, pool);
+            next.clear();
+            next.resize(batch * l.out_f, 0.0);
             for b in 0..batch {
-                let row = &act[b * l.in_f..(b + 1) * l.in_f];
-                // quantize the activation row to integer codes
-                let codes: Vec<i64> = row
-                    .iter()
-                    .map(|&v| (v / l.s_a).clamp(l.a_qmin, l.a_qmax).round_ties_even() as i64)
-                    .collect();
                 for o in 0..l.out_f {
-                    let mut acc: i64 = 0;
-                    for i in 0..l.in_f {
-                        acc += codes[i] * l.wq[i * l.out_f + o] as i64;
-                    }
-                    out[b * l.out_f + o] = acc as f32 * l.s_a * l.s_w + l.bias[o];
+                    next[b * l.out_f + o] =
+                        acc[b * l.out_f + o] as f32 * l.s_a * l.s_w + l.bias[o];
                 }
             }
             // hidden layers are ReLU'd (MLP layout); final layer is logits
             if li + 1 < self.layers.len() {
-                for v in out.iter_mut() {
-                    *v = v.max(0.0);
-                }
+                relu_inplace(&mut next);
             }
-            act = out;
+            std::mem::swap(&mut act, &mut next);
         }
-        Ok(act)
+        if status.is_ok() {
+            out.clear();
+            out.extend_from_slice(&act);
+        }
+        scratch.put_f32(act);
+        scratch.put_f32(next);
+        scratch.put_i64(codes);
+        scratch.put_i64(acc);
+        status
     }
 
     /// Top-1 accuracy over a dataset of flattened inputs.
+    ///
+    /// Argmax is a NaN-safe total-order fold ([`argmax_total`]): a NaN
+    /// logit can never win or panic (the old `partial_cmp().unwrap()`
+    /// aborted the whole evaluation on the first NaN).
     pub fn accuracy(&self, x: &[f32], y: &[i32], batch: usize) -> Result<f64> {
         let n = y.len();
         let feat = x.len() / n;
         let mut correct = 0usize;
+        let mut logits = Vec::new();
         let mut i = 0;
         while i < n {
             let b = batch.min(n - i);
-            let logits = self.forward(&x[i * feat..(i + b) * feat], b)?;
+            self.forward_into(&x[i * feat..(i + b) * feat], b, &mut logits)?;
             for bi in 0..b {
                 let row = &logits[bi * self.n_classes..(bi + 1) * self.n_classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
-                    .unwrap()
-                    .0;
-                if pred as i32 == y[i + bi] {
+                if argmax_total(row) as i32 == y[i + bi] {
                     correct += 1;
                 }
             }
@@ -163,32 +219,48 @@ impl IntModel {
 
 /// Reference float fake-quant forward for the same MLP layout — used to
 /// assert int-domain == fake-quant-domain equivalence.
+///
+/// Accumulation stays f64 in ascending-`i` order (the reference
+/// semantics), but the weight reads go through the packed transposed
+/// codes and every intermediate comes from the scratch arena — no per
+/// row/batch allocation.
 pub fn fake_quant_forward_ref(m: &IntModel, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-    let mut act = x.to_vec();
-    for (li, l) in m.layers.iter().enumerate() {
-        let mut out = vec![0.0f32; batch * l.out_f];
-        for b in 0..batch {
-            let row = &act[b * l.in_f..(b + 1) * l.in_f];
-            let aq: Vec<f32> = row
-                .iter()
-                .map(|&v| (v / l.s_a).clamp(l.a_qmin, l.a_qmax).round_ties_even() * l.s_a)
-                .collect();
-            for o in 0..l.out_f {
-                let mut acc = 0.0f64;
-                for i in 0..l.in_f {
-                    acc += aq[i] as f64 * (l.wq[i * l.out_f + o] as f32 * l.s_w) as f64;
+    with_thread_scratch(|scratch| {
+        let mut act = scratch.take_f32(x.len());
+        act.copy_from_slice(x);
+        let mut aq = scratch.take_f32(0);
+        let mut next = scratch.take_f32(0);
+        for (li, l) in m.layers.iter().enumerate() {
+            // fake-quantize the activation buffer
+            aq.clear();
+            aq.extend(
+                act.iter()
+                    .map(|&v| (v / l.s_a).clamp(l.a_qmin, l.a_qmax).round_ties_even() * l.s_a),
+            );
+            next.clear();
+            next.resize(batch * l.out_f, 0.0);
+            for b in 0..batch {
+                let row = &aq[b * l.in_f..(b + 1) * l.in_f];
+                for o in 0..l.out_f {
+                    let wr = l.wt.row(o);
+                    let mut acc = 0.0f64;
+                    for i in 0..l.in_f {
+                        acc += row[i] as f64 * (wr[i] as f32 * l.s_w) as f64;
+                    }
+                    next[b * l.out_f + o] = acc as f32 + l.bias[o];
                 }
-                out[b * l.out_f + o] = acc as f32 + l.bias[o];
             }
-        }
-        if li + 1 < m.layers.len() {
-            for v in out.iter_mut() {
-                *v = v.max(0.0);
+            if li + 1 < m.layers.len() {
+                relu_inplace(&mut next);
             }
+            std::mem::swap(&mut act, &mut next);
         }
-        act = out;
-    }
-    Ok(act)
+        let out = act.clone();
+        scratch.put_f32(act);
+        scratch.put_f32(aq);
+        scratch.put_f32(next);
+        Ok(out)
+    })
 }
 
 #[cfg(test)]
@@ -266,6 +338,83 @@ mod tests {
         let y: Vec<i32> = (0..20).map(|i| (i % 3) as i32).collect();
         let acc = m.accuracy(&x, &y, 8).unwrap();
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    /// The pre-PR scalar forward, replicated verbatim: per-row code Vec,
+    /// weight reads striding by `out_f`.  The kernel path must match it
+    /// bit-for-bit.
+    fn forward_naive_ref(m: &IntModel, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut act = x.to_vec();
+        for (li, l) in m.layers.iter().enumerate() {
+            let mut out = vec![0.0f32; batch * l.out_f];
+            for b in 0..batch {
+                let row = &act[b * l.in_f..(b + 1) * l.in_f];
+                let codes: Vec<i64> = row
+                    .iter()
+                    .map(|&v| (v / l.s_a).clamp(l.a_qmin, l.a_qmax).round_ties_even() as i64)
+                    .collect();
+                for o in 0..l.out_f {
+                    let mut acc: i64 = 0;
+                    for i in 0..l.in_f {
+                        acc += codes[i] * l.wq[i * l.out_f + o] as i64;
+                    }
+                    out[b * l.out_f + o] = acc as f32 * l.s_a * l.s_w + l.bias[o];
+                }
+            }
+            if li + 1 < m.layers.len() {
+                for v in out.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            act = out;
+        }
+        act
+    }
+
+    #[test]
+    fn kernel_forward_bit_identical_to_naive_and_thread_invariant() {
+        let (meta, flat, policy, sw, sa) = setup();
+        let m = IntModel::pack(&meta, &flat, &policy, &sw, &sa).unwrap();
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..16 * 6).map(|_| rng.f32()).collect();
+        let reference = forward_naive_ref(&m, &x, 16);
+        for threads in [1usize, 4] {
+            let mut logits = Vec::new();
+            m.forward_pooled(&x, 16, &mut logits, &crate::kernels::WorkerPool::new(threads))
+                .unwrap();
+            // integer accumulation is exact: bitwise equality, any threads
+            assert_eq!(logits, reference, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn accuracy_survives_nan_logits() {
+        let (meta, flat, policy, sw, sa) = setup();
+        let mut m = IntModel::pack(&meta, &flat, &policy, &sw, &sa).unwrap();
+        // Poison the final layer's bias: every logit row becomes NaN-laden.
+        let last = m.layers.len() - 1;
+        m.layers[last].bias[0] = f32::NAN;
+        let mut rng = Rng::new(13);
+        let x: Vec<f32> = (0..10 * 6).map(|_| rng.f32()).collect();
+        let y: Vec<i32> = (0..10).map(|i| (i % 3) as i32).collect();
+        // pre-PR argmax panicked here; now NaN simply never wins
+        let acc = m.accuracy(&x, &y, 4).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn forward_into_reuses_caller_buffer() {
+        let (meta, flat, policy, sw, sa) = setup();
+        let m = IntModel::pack(&meta, &flat, &policy, &sw, &sa).unwrap();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..4 * 6).map(|_| rng.f32()).collect();
+        let mut out = Vec::new();
+        m.forward_into(&x, 4, &mut out).unwrap();
+        assert_eq!(out.len(), 4 * 3);
+        let cap = out.capacity();
+        m.forward_into(&x, 4, &mut out).unwrap();
+        assert_eq!(out.capacity(), cap, "steady-state forward must not reallocate");
+        assert_eq!(out, m.forward(&x, 4).unwrap());
     }
 
     #[test]

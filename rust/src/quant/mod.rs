@@ -120,6 +120,14 @@ pub fn fake_quant_host(v: &[f32], s: f32, qmin: f32, qmax: f32) -> Vec<f32> {
     v.iter().map(|&x| (x / s).clamp(qmin, qmax).round_ties_even() * s).collect()
 }
 
+/// Quantize a float buffer to integer codes into a reusable output buffer
+/// (the activation path of the integer deployment simulator; allocation-
+/// free once `out` has warmed up).
+pub fn quantize_codes_into(v: &[f32], s: f32, qmin: f32, qmax: f32, out: &mut Vec<i64>) {
+    out.clear();
+    out.extend(v.iter().map(|&x| (x / s).clamp(qmin, qmax).round_ties_even() as i64));
+}
+
 /// LSQ statistics-based scale init (paper §3.3.2 / LSQ+):
 /// s0 = 2·E|w| / sqrt(qmax).
 pub fn scale_init_stats(values: &[f32], qmax: f32) -> f32 {
@@ -171,6 +179,17 @@ mod tests {
         assert!((scale_init_uniform(2) - 0.05).abs() < 1e-9);
         assert!(scale_init_uniform(2) > scale_init_uniform(6)); // grows as bits shrink
         assert!(act_scale_init(3.0) > act_scale_init(255.0));
+    }
+
+    #[test]
+    fn quantize_codes_reuses_buffer() {
+        let mut out = Vec::new();
+        quantize_codes_into(&[0.26, -0.26, 10.0], 0.1, -8.0, 7.0, &mut out);
+        assert_eq!(out, vec![3, -3, 7]);
+        let cap = out.capacity();
+        quantize_codes_into(&[0.0, 0.1], 0.1, -8.0, 7.0, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        assert_eq!(out.capacity(), cap, "no reallocation on reuse");
     }
 
     #[test]

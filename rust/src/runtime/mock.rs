@@ -31,6 +31,9 @@ pub struct MockBackend {
     pub sens: Vec<f32>,
     /// Ground-truth per-layer Hessian diagonal value.
     pub hess: Vec<f32>,
+    /// Precomputed `[QMAX_OFF; n_layers]` — the FP entry points used to
+    /// allocate this per call on the hot path.
+    qmax_off: Vec<f32>,
 }
 
 impl MockBackend {
@@ -49,6 +52,7 @@ impl MockBackend {
             n_classes: 4,
             sens,
             hess,
+            qmax_off: vec![crate::quant::QMAX_OFF; n_layers],
         }
     }
 
@@ -143,15 +147,15 @@ impl ModelBackend for MockBackend {
     }
 
     fn fp_train_step(&self, flat: &[f32], _x: &[f32], _y: &[i32]) -> Result<(f32, f32, Vec<f32>)> {
-        let off = vec![crate::quant::QMAX_OFF; self.n_layers];
-        let loss = self.loss(flat, &off, &off);
+        let off = &self.qmax_off;
+        let loss = self.loss(flat, off, off);
         let g: Vec<f32> = flat.iter().map(|v| v / self.param_size as f32).collect();
         Ok((loss, (1.0 - loss / 3.0).clamp(0.0, 1.0), g))
     }
 
     fn fp_eval(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOut> {
-        let off = vec![crate::quant::QMAX_OFF; self.n_layers];
-        self.eval_step(flat, &off, &off, &off, &off, x, y)
+        let off = &self.qmax_off;
+        self.eval_step(flat, off, off, off, off, x, y)
     }
 
     fn hvp(&self, _flat: &[f32], v: &[f32], _x: &[f32], _y: &[i32]) -> Result<Vec<f32>> {

@@ -113,6 +113,32 @@ pub fn accumulate(acc: &mut [f32], x: &[f32]) {
     axpy(1.0, x, acc);
 }
 
+/// In-place ReLU (the MLP hidden-layer nonlinearity on the int path).
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// NaN-safe argmax: index of the largest non-NaN element, ties resolved
+/// to the **last** maximum (matching `Iterator::max_by` so pre-existing
+/// predictions are unchanged).  NaN entries never win; an all-NaN (or
+/// empty) slice returns 0 instead of panicking — the failure mode of the
+/// old `partial_cmp().unwrap()` argmax.
+pub fn argmax_total(x: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    let mut seen = false;
+    for (i, &v) in x.iter().enumerate() {
+        if !v.is_nan() && (!seen || v >= best_v) {
+            best = i;
+            best_v = v;
+            seen = true;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +177,27 @@ mod tests {
         assert_eq!(max_abs(&x), 2.0);
         assert!(all_finite(&x));
         assert!(!all_finite(&[f32::NAN]));
+    }
+
+    #[test]
+    fn argmax_total_order() {
+        assert_eq!(argmax_total(&[1.0, 3.0, 2.0]), 1);
+        // ties resolve to the last maximum, like Iterator::max_by
+        assert_eq!(argmax_total(&[2.0, 5.0, 5.0]), 2);
+        // NaN never wins, wherever it sits
+        assert_eq!(argmax_total(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax_total(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax_total(&[-1.0, f32::NEG_INFINITY, f32::NAN]), 0);
+        // degenerate inputs return 0 instead of panicking
+        assert_eq!(argmax_total(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_total(&[]), 0);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut x = [-2.0, 0.0, 3.0];
+        relu_inplace(&mut x);
+        assert_eq!(x, [0.0, 0.0, 3.0]);
     }
 
     #[test]

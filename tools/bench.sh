@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Kernel / pipeline benchmark runner with a machine-readable artifact.
+#
+# Runs the bench targets and writes BENCH_kernels.json (op, size, threads,
+# ns_per_iter, throughput) so the perf trajectory is tracked from PR 2
+# onward — compare the file across commits to catch regressions.
+#
+# Usage: tools/bench.sh [--out FILE] [--quick]
+#   --out FILE   where to write the kernel records (default BENCH_kernels.json)
+#   --quick      short budgets (the CI smoke mode; also BENCH_QUICK=1)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+OUT="BENCH_kernels.json"
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --out)
+            OUT="$2"
+            shift 2
+            ;;
+        --quick)
+            export BENCH_QUICK=1
+            shift
+            ;;
+        *)
+            echo "unknown argument: $1 (usage: tools/bench.sh [--out FILE] [--quick])" >&2
+            exit 2
+            ;;
+    esac
+done
+
+echo "==> cargo bench --bench runtime_exec (kernel + joint-training tiers)"
+cargo bench --bench runtime_exec -- --json "$OUT"
+
+echo "==> cargo bench --bench data_pipeline"
+cargo bench --bench data_pipeline
+
+if [[ ! -s "$OUT" ]]; then
+    echo "bench.sh: $OUT was not produced" >&2
+    exit 1
+fi
+echo "kernel bench records -> $OUT"

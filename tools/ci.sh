@@ -1,9 +1,34 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: release build, full test suite, formatting.
-# Run from anywhere; operates on the workspace root.
+# Tier-1 CI gate: release build, full test suite, formatting, kernel-bench
+# smoke, and CHANGES.md append discipline.
+#
+# Usage: tools/ci.sh [--threads N]
+#   --threads N   run the suite with the worker pool pinned to N threads
+#                 (exported as LIMPQ_THREADS).  CI invokes the gate twice —
+#                 --threads 1 and default parallelism — so the kernel
+#                 determinism guarantee (bit-identical results at any
+#                 thread count) is exercised on every change.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
+
+THREADS=""
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --threads)
+            THREADS="$2"
+            shift 2
+            ;;
+        *)
+            echo "unknown argument: $1 (usage: tools/ci.sh [--threads N])" >&2
+            exit 2
+            ;;
+    esac
+done
+if [[ -n "$THREADS" ]]; then
+    export LIMPQ_THREADS="$THREADS"
+    echo "==> worker pool pinned: LIMPQ_THREADS=$THREADS"
+fi
 
 echo "==> cargo build --release"
 cargo build --release
@@ -16,6 +41,47 @@ if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
 else
     echo "rustfmt not installed; skipping format check"
+fi
+
+echo "==> bench smoke (quick kernel tier)"
+bash tools/bench.sh --quick --out BENCH_kernels.json
+
+# CHANGES.md append discipline: any change relative to the main branch
+# must carry a CHANGES.md update, so the next session knows what landed.
+echo "==> CHANGES.md discipline"
+if git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
+    base=""
+    for ref in origin/main main; do
+        if git rev-parse --verify --quiet "$ref" >/dev/null; then
+            base=$(git merge-base HEAD "$ref" 2>/dev/null || true)
+            [[ -n "$base" ]] && break
+        fi
+    done
+    if [[ -n "$base" ]]; then
+        # committed + working-tree changes vs the merge base, plus
+        # untracked files (a brand-new module still needs a CHANGES entry)
+        changed=$(
+            {
+                git diff --name-only "$base" 2>/dev/null || true
+                git ls-files --others --exclude-standard 2>/dev/null || true
+            } | sort -u
+        )
+        if [[ -n "$changed" ]] && ! grep -qx "CHANGES.md" <<<"$changed"; then
+            echo "FAIL: this diff does not update CHANGES.md" >&2
+            echo "changed files:" >&2
+            sed 's/^/  /' <<<"$changed" >&2
+            exit 1
+        fi
+        if [[ -z "$changed" ]]; then
+            echo "no diff vs merge base; skipping"
+        else
+            echo "CHANGES.md updated: OK"
+        fi
+    else
+        echo "no main merge base found; skipping"
+    fi
+else
+    echo "not a git checkout; skipping"
 fi
 
 echo "CI OK"
