@@ -7,7 +7,7 @@
 use anyhow::Result;
 use limpq::data::{generate, SynthConfig};
 use limpq::engine::SearchRequest;
-use limpq::fleet::{query, DeviceSpec, FleetSearcher, FleetServer};
+use limpq::fleet::{query, DeviceSpec, FleetSearcher, FleetServer, ServeConfig};
 use limpq::importance::IndicatorStore;
 use limpq::models::ModelMeta;
 use limpq::quant::cost::uniform_bitops;
@@ -64,8 +64,17 @@ fn main() -> Result<()> {
         100.0 * stats.hit_rate()
     );
 
-    // Same thing over the wire.
-    let server = FleetServer::spawn(searcher, "127.0.0.1:0")?;
+    // Same thing over the wire, through the event-driven serving stack:
+    // nonblocking multiplexer -> request queue -> coalescing dispatcher
+    // (persistent worker pool) -> single-flight engine.
+    let server = FleetServer::spawn_with(
+        searcher,
+        "127.0.0.1:0",
+        ServeConfig {
+            coalesce_window: std::time::Duration::from_micros(500),
+            ..Default::default()
+        },
+    )?;
     println!("\nfleet server on {} — querying over TCP:", server.addr);
     let req = Json::obj(vec![
         ("name", Json::from("edge-tpu")),
@@ -75,6 +84,38 @@ fn main() -> Result<()> {
     let resp = query(&server.addr, &req)?;
     println!("  request : {req}");
     println!("  response: {resp}");
+
+    // A stampede of identical *cold* queries from concurrent clients:
+    // single-flight collapses them onto one engine solve.
+    let stampede_cap_g = base as f64 * 0.77 / 1e9;
+    let addr = server.addr;
+    let replies: Vec<Json> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|c| {
+                s.spawn(move || {
+                    let req = Json::obj(vec![
+                        ("name", Json::Str(format!("stampede-{c}"))),
+                        ("cap_gbitops", Json::Num(stampede_cap_g)),
+                    ]);
+                    query(&addr, &req).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let cached = replies
+        .iter()
+        .filter(|r| r.get("cache_hit").map(|v| v.as_bool().unwrap_or(false)).unwrap_or(false))
+        .count();
+    println!(
+        "\nstampede: {} identical cold queries -> {} shared a single in-flight solve",
+        replies.len(),
+        cached
+    );
+
+    // Operator introspection over the same protocol.
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))]))?;
+    println!("stats   : {stats}");
     server.shutdown();
     Ok(())
 }

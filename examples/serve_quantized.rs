@@ -11,6 +11,7 @@ use anyhow::Result;
 use limpq::coordinator::checkpoint::Cache;
 use limpq::data::{generate, SynthConfig};
 use limpq::importance::IndicatorStore;
+use limpq::quant::int_infer::IntModel;
 use limpq::quant::BitConfig;
 use limpq::runtime::{pjrt::PjrtBackend, ModelBackend};
 use limpq::util::rng::Rng;
@@ -80,5 +81,30 @@ fn main() -> Result<()> {
         pct(99)
     );
     println!("top-1 on stream: {:.3}", correct as f64 / served as f64);
+
+    // Integer-domain deployment path: the same policy packed into
+    // i8-narrowed codes (4x cache density vs i32) served through the
+    // exact integer GEMM.  Dense (MLP-shaped) models only; conv models
+    // report the skip.
+    match IntModel::pack(&meta, &flat, &policy, &sw, &sa) {
+        Ok(int_model) => {
+            let n = data.labels.len();
+            let t = std::time::Instant::now();
+            let acc = int_model.accuracy(&data.images, &data.labels, b)?;
+            let dt = t.elapsed();
+            println!(
+                "int8-packed integer serving: {} requests in {:.2}s ({:.1} req/s), top-1 {:.3}",
+                n,
+                dt.as_secs_f64(),
+                n as f64 / dt.as_secs_f64(),
+                acc
+            );
+            println!(
+                "packed weight codes: {:.1} KiB at policy bit-widths (i8 stream, i64 accumulation)",
+                int_model.packed_bits(&policy) as f64 / 8.0 / 1024.0
+            );
+        }
+        Err(e) => println!("integer-domain path skipped for this model: {e:#}"),
+    }
     Ok(())
 }

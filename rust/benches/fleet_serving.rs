@@ -1,0 +1,140 @@
+//! Fleet-serving throughput bench: queries/sec through the event-driven
+//! TCP stack (multiplexer → coalescing dispatcher → single-flight
+//! engine) at 1, 8, and 64 concurrent clients, cold vs warm policy
+//! cache.  Artifact-free: runs on a synthetic model meta, so the serving
+//! machinery — not the solver — dominates what is measured (requests pin
+//! the fast `greedy` solver).
+//!
+//! Run: cargo bench --bench fleet_serving [-- --json BENCH_fleet.json]
+//!
+//! `--json PATH` writes machine-readable records (op, size, threads,
+//! ns_per_iter, throughput = queries/sec) — `tools/bench.sh` uploads the
+//! file alongside BENCH_kernels.json to track the serving trajectory.
+//! Set `BENCH_QUICK=1` for the CI smoke run.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use limpq::fleet::{FleetSearcher, FleetServer, ServeConfig};
+use limpq::importance::IndicatorStore;
+use limpq::kernels::WorkerPool;
+use limpq::models::synthetic_meta;
+use limpq::quant::cost::uniform_bitops;
+use limpq::util::bench::{json_out_arg, json_record, Bench, BenchStats};
+use limpq::util::json::Json;
+
+/// One machine-readable record for BENCH_fleet.json (shared schema from
+/// `util::bench`; fleet records count queries as the items).
+fn record(op: &str, size: &str, threads: usize, stats: &BenchStats, queries: f64) -> Json {
+    json_record(op, size, threads, stats, queries)
+}
+
+/// One volley: `clients` concurrent connections, each sending
+/// `per_client` line-protocol requests and reading every response.
+/// Warm volleys repeat one cached constraint; cold volleys draw fresh
+/// constraints from `counter` so every query misses the policy cache.
+fn volley(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    per_client: usize,
+    warm: bool,
+    base: u64,
+    counter: &AtomicU64,
+) {
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                for _ in 0..per_client {
+                    let cap = if warm {
+                        base
+                    } else {
+                        base + 1000 * (1 + counter.fetch_add(1, Ordering::Relaxed))
+                    };
+                    let line = format!(
+                        "{{\"cap_gbitops\": {}, \"solver\": \"greedy\"}}\n",
+                        cap as f64 / 1e9
+                    );
+                    writer.write_all(line.as_bytes()).unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let ok = Json::parse(resp.trim())
+                        .expect("parse response")
+                        .get("ok")
+                        .unwrap()
+                        .as_bool()
+                        .unwrap();
+                    assert!(ok, "serve error: {resp}");
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let json_path = json_out_arg();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let per_client = if quick { 2 } else { 8 };
+
+    let meta = synthetic_meta(8, |i| 50_000 * (i as u64 + 1));
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let base = uniform_bitops(&meta, 4, 4);
+    let searcher = FleetSearcher::new(meta, imp);
+    let stats_view = searcher.clone();
+    let server = FleetServer::spawn_with(
+        searcher,
+        "127.0.0.1:0",
+        ServeConfig { max_conns: 256, ..Default::default() },
+    )
+    .expect("spawn fleet server");
+    let addr = server.addr;
+    let threads = WorkerPool::global().threads();
+
+    let counter = AtomicU64::new(0);
+    let mut records: Vec<Json> = Vec::new();
+    for &clients in &[1usize, 8, 64] {
+        for (mode, warm) in [("cold", false), ("warm", true)] {
+            let queries = (clients * per_client) as f64;
+            let stats = bench.run(&format!("fleet_serve_{mode}_c{clients}x{per_client}"), || {
+                volley(addr, clients, per_client, warm, base, &counter);
+            });
+            println!(
+                "fleet {mode} @ {clients} clients: {:.0} queries/sec",
+                queries / stats.mean.as_secs_f64()
+            );
+            records.push(record(
+                &format!("fleet_serve_{mode}"),
+                &format!("clients={clients}"),
+                threads,
+                &stats,
+                queries,
+            ));
+        }
+    }
+
+    let sv = server.stats();
+    let cs = stats_view.cache_stats();
+    println!(
+        "serving totals: {} responses, {} batches (max coalesced {}), \
+         {} cache hits / {} solves, {} single-flight waits, {} conns total",
+        sv.served,
+        sv.batches,
+        sv.coalesced_batch_max,
+        cs.hits,
+        cs.hits + cs.misses,
+        cs.inflight_waits,
+        sv.conns_total
+    );
+    server.shutdown();
+
+    if let Some(path) = &json_path {
+        std::fs::write(path, Json::Arr(records).to_string()).expect("write bench json");
+        println!("fleet bench records -> {path}");
+    }
+}

@@ -26,7 +26,7 @@ use limpq::data::batcher::Batcher;
 use limpq::data::{generate, SynthConfig};
 use limpq::importance::{IndicatorStore, JointTrainer};
 use limpq::kernels::gemm::{
-    gemm_f32, gemm_f32_naive, gemm_i64, gemm_i64_naive, PackedF32, PackedI32,
+    gemm_f32, gemm_f32_naive, gemm_i64, gemm_i64_naive, gemm_i8, PackedF32, PackedI32, PackedI8,
 };
 use limpq::kernels::WorkerPool;
 use limpq::models::synthetic_meta;
@@ -34,21 +34,14 @@ use limpq::quant::BitConfig;
 use limpq::runtime::mock::MockBackend;
 use limpq::runtime::pjrt::{lit_f32, PjrtBackend};
 use limpq::runtime::ModelBackend;
-use limpq::util::bench::{black_box, Bench, BenchStats};
+use limpq::util::bench::{black_box, json_out_arg, json_record, Bench, BenchStats};
 use limpq::util::json::Json;
 use limpq::util::rng::Rng;
 
-/// One machine-readable bench record for BENCH_kernels.json.
+/// One machine-readable bench record for BENCH_kernels.json (shared
+/// schema from `util::bench`; GEMM records count MACs as the items).
 fn record(op: &str, size: &str, threads: usize, stats: &BenchStats, ops_per_iter: f64) -> Json {
-    let ns = stats.mean.as_nanos() as f64;
-    Json::obj(vec![
-        ("op", Json::Str(op.to_string())),
-        ("size", Json::Str(size.to_string())),
-        ("threads", Json::Num(threads as f64)),
-        ("ns_per_iter", Json::Num(ns)),
-        // ops/s at the measured mean (GEMM records count MACs here)
-        ("throughput", Json::Num(ops_per_iter / (ns / 1e9))),
-    ])
+    json_record(op, size, threads, stats, ops_per_iter)
 }
 
 fn gemm_benches(bench: &Bench, records: &mut Vec<Json>) {
@@ -100,6 +93,19 @@ fn gemm_benches(bench: &Bench, records: &mut Vec<Json>) {
         });
         records.push(record("int_gemm_packed", &size, n_threads, &s_packed_i_mt, macs));
 
+        // i8-narrowed weight stream (4x cache density, same i64 math).
+        let p8 = PackedI8::from_row_major(&wq, in_f, out_f);
+        let s_packed_i8 = bench.run(&format!("int_gemm_packed_i8_{size}_t1"), || {
+            gemm_i8(&codes, batch, &p8, &mut acc, &one);
+            black_box(acc[0])
+        });
+        records.push(record("int_gemm_packed_i8", &size, 1, &s_packed_i8, macs));
+        let s_packed_i8_mt = bench.run(&format!("int_gemm_packed_i8_{size}_t{n_threads}"), || {
+            gemm_i8(&codes, batch, &p8, &mut acc, &all);
+            black_box(acc[0])
+        });
+        records.push(record("int_gemm_packed_i8", &size, n_threads, &s_packed_i8_mt, macs));
+
         println!(
             "kernel speedup {size}: f32 packed/naive {:.2}x (1 thread), int packed/naive {:.2}x (1 thread), int packed x{n_threads} threads {:.2}x",
             s_naive_f.mean.as_secs_f64() / s_packed_f.mean.as_secs_f64(),
@@ -148,17 +154,7 @@ fn joint_training_benches(bench: &Bench, records: &mut Vec<Json>) {
 }
 
 fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    let mut json_path: Option<String> = None;
-    let mut i = 0;
-    while i < argv.len() {
-        if argv[i] == "--json" && i + 1 < argv.len() {
-            json_path = Some(argv[i + 1].clone());
-            i += 2;
-        } else {
-            i += 1;
-        }
-    }
+    let json_path = json_out_arg();
     let quick_mode = std::env::var("BENCH_QUICK").is_ok();
     let bench = if quick_mode { Bench::quick() } else { Bench::default() };
 

@@ -82,12 +82,30 @@ fn main() {
             .unwrap();
         engine.solve(&req).unwrap(); // warm
         bench.run(&format!("ilp_{model}_cached_repeat"), || engine.solve(&req).unwrap());
+
+        // The stampede path: 8 threads fire the *same cold* query (a
+        // fresh constraint every iteration); single-flight collapses each
+        // volley onto one solve, so this costs ~1x a cold solve plus
+        // wake-up overhead, not 8x.
+        let stamp_base = uniform_bitops(&meta, 5, 5);
+        let iter = std::sync::atomic::AtomicU64::new(0);
+        bench.run(&format!("ilp_{model}_stampede8"), || {
+            let cap = stamp_base + iter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let req =
+                SearchRequest::builder().alpha(alpha).bitops_cap(cap).build().unwrap();
+            std::thread::scope(|s| {
+                for _ in 0..8 {
+                    s.spawn(|| engine.solve(&req).unwrap());
+                }
+            });
+        });
         let c = engine.cache_stats();
         println!(
-            "cache[{model}]: {} hits / {} solves ({:.1}% hit rate)",
+            "cache[{model}]: {} hits / {} solves ({:.1}% hit rate), {} single-flight waits",
             c.hits,
             c.hits + c.misses,
-            100.0 * c.hit_rate()
+            100.0 * c.hit_rate(),
+            c.inflight_waits
         );
     }
 }

@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
 use crate::coordinator::checkpoint::Cache;
-use crate::fleet::{DeviceSpec, FleetSearcher, FleetServer};
+use crate::fleet::{DeviceSpec, FleetSearcher, FleetServer, ServeConfig};
 use crate::models::list_models;
 use crate::report::bit_chart;
 
@@ -44,6 +44,9 @@ const VALUE_FLAGS: &[&str] = &[
     "node-limit",
     "time-limit-ms",
     "threads",
+    "max-conns",
+    "coalesce-window-us",
+    "persistent-pool",
 ];
 
 impl Args {
@@ -115,8 +118,9 @@ USAGE:
   limpq search    --model M (--cap-gbitops X | --size-cap-mb X)
                   [--alpha A] [--weight-only] [--save policy.json]
                   [--solver S] [--node-limit N] [--time-limit-ms T]
-  limpq serve     --model M [--bind 127.0.0.1:7070]   fleet TCP server;
-                  reports policy-cache hit rate while serving
+  limpq serve     --model M [--bind 127.0.0.1:7070] [--max-conns N]
+                  [--coalesce-window-us U] [--persistent-pool on|off]
+                  event-driven fleet TCP server (see SERVE below)
   limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
                   policy on the validation split (finetuned ckpt if cached)
   limpq models
@@ -139,6 +143,28 @@ ENGINE (policy search):
   The fleet line protocol accepts the same controls as JSON fields
   (\"solver\", \"node_limit\", \"time_limit_ms\") and reports
   \"solver\" and \"cache_hit\" in every response.
+
+SERVE (fleet serving stack):
+  The server is event-driven: one nonblocking multiplexer thread owns
+  every connection (no thread-per-connection), decoded requests flow
+  through a shared FIFO queue, and a dispatcher coalesces everything in
+  flight into one batched sweep per tick across the shared worker pool.
+  Identical cold queries single-flight onto one engine solve; repeats
+  hit the policy cache.  Responses per connection keep request order.
+    --max-conns N           connection cap (default 256); connections
+                            beyond it are rejected with a 503-style
+                            one-line error response
+    --coalesce-window-us U  how long the dispatcher lingers after the
+                            first queued request to batch the rest
+                            (default 200)
+    --persistent-pool on|off  run sweeps on lazily-started long-lived
+                            workers shared across all connections
+                            (default on); off = scoped per-batch spawn
+  Operator introspection over the wire: send {\"cmd\": \"stats\"} on any
+  connection to get open/total connections, served count, queue_depth,
+  coalesced_batch_size (last and max), cache hits/misses, and
+  inflight_waits (queries absorbed by single-flight).  The serve loop
+  prints the same counters periodically.
 
 KERNELS (compute):
   All dense math runs through the shared kernels subsystem: blocked GEMM
@@ -355,6 +381,32 @@ fn run_eval_policy(args: &Args, cfg: Config) -> Result<()> {
     Ok(())
 }
 
+/// Parse an on/off style boolean flag value.
+fn parse_switch(v: &str) -> Result<bool> {
+    match v {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => bail!("expected on|off, got {other:?}"),
+    }
+}
+
+/// Build the serving-stack config from `serve` flags.
+fn serve_config_from_args(args: &Args) -> Result<ServeConfig> {
+    let mut scfg = ServeConfig::default();
+    if let Some(v) = args.get("max-conns") {
+        scfg.max_conns = v.parse().with_context(|| format!("--max-conns {v:?}"))?;
+    }
+    if let Some(v) = args.get("coalesce-window-us") {
+        let us: u64 = v.parse().with_context(|| format!("--coalesce-window-us {v:?}"))?;
+        scfg.coalesce_window = std::time::Duration::from_micros(us);
+    }
+    if let Some(v) = args.get("persistent-pool") {
+        scfg.persistent_pool =
+            parse_switch(v).with_context(|| format!("--persistent-pool {v:?}"))?;
+    }
+    Ok(scfg)
+}
+
 fn run_serve(args: &Args, cfg: Config) -> Result<()> {
     use crate::models::ModelMeta;
 
@@ -365,25 +417,44 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
         .context("no cached indicators — run `limpq pipeline` first")?;
     let imp = store.importance(&meta);
     let bind = args.get("bind").unwrap_or("127.0.0.1:7070");
+    let scfg = serve_config_from_args(args)?;
     let searcher = FleetSearcher::new(meta, imp);
     let stats_view = searcher.clone();
-    let server = FleetServer::spawn(searcher, bind)?;
-    println!("fleet server for {} listening on {}", cfg.model, server.addr);
-    println!("protocol: one JSON request per line, e.g. {{\"cap_gbitops\": 1.5, \"alpha\": 1.0, \"solver\": \"auto\"}}");
-    // Serve until killed, reporting policy-cache effectiveness.
-    let mut last_total = 0usize;
+    let server = FleetServer::spawn_with(searcher, bind, scfg.clone())?;
+    println!(
+        "fleet server for {} listening on {} (max {} conns, {}us coalesce window, {} pool)",
+        cfg.model,
+        server.addr,
+        scfg.max_conns,
+        scfg.coalesce_window.as_micros(),
+        if scfg.persistent_pool { "persistent" } else { "scoped" }
+    );
+    println!("protocol: one JSON request per line, e.g. {{\"cap_gbitops\": 1.5, \"alpha\": 1.0, \"solver\": \"auto\"}}; {{\"cmd\": \"stats\"}} for serving counters");
+    // Serve until killed, reporting the serving stack's effectiveness.
+    let mut last_served = 0usize;
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
         let s = stats_view.cache_stats();
-        let total = s.hits + s.misses;
-        if total != last_total {
-            last_total = total;
+        let sv = server.stats();
+        if sv.served != last_served {
+            last_served = sv.served;
             println!(
-                "cache: {} hits / {} solves ({:.1}% hit rate), {} policies cached",
+                "served {} responses in {} batches (last {}, max {}), queue {}; \
+                 cache: {} hits / {} solves ({:.1}% hit rate), {} cached, \
+                 {} single-flight waits; conns {} open / {} total ({} overloaded)",
+                sv.served,
+                sv.batches,
+                sv.coalesced_batch_size,
+                sv.coalesced_batch_max,
+                sv.queue_depth,
                 s.hits,
-                total,
+                s.hits + s.misses,
                 100.0 * s.hit_rate(),
-                s.entries
+                s.entries,
+                s.inflight_waits,
+                sv.conns_open,
+                sv.conns_total,
+                sv.overloaded
             );
         }
     }
@@ -450,6 +521,43 @@ mod tests {
         assert!(HELP.contains("--solver"));
         assert!(HELP.contains("node-limit"));
         assert!(HELP.contains("cache_hit"));
+    }
+
+    #[test]
+    fn serve_flags_parse_into_config() {
+        let a = parse(&[
+            "serve",
+            "--model",
+            "mlp",
+            "--max-conns",
+            "17",
+            "--coalesce-window-us",
+            "450",
+            "--persistent-pool",
+            "off",
+        ]);
+        let scfg = serve_config_from_args(&a).unwrap();
+        assert_eq!(scfg.max_conns, 17);
+        assert_eq!(scfg.coalesce_window, std::time::Duration::from_micros(450));
+        assert!(!scfg.persistent_pool);
+        // defaults when flags are absent
+        let d = serve_config_from_args(&parse(&["serve"])).unwrap();
+        assert_eq!(d.max_conns, ServeConfig::default().max_conns);
+        assert!(d.persistent_pool);
+        // bogus switch value is rejected
+        let bad = parse(&["serve", "--persistent-pool", "maybe"]);
+        assert!(serve_config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn help_documents_the_serving_stack() {
+        assert!(HELP.contains("SERVE"));
+        assert!(HELP.contains("--max-conns"));
+        assert!(HELP.contains("--coalesce-window-us"));
+        assert!(HELP.contains("--persistent-pool"));
+        assert!(HELP.contains("stats"));
+        assert!(HELP.contains("503"));
+        assert!(HELP.contains("single-flight"));
     }
 
     #[test]

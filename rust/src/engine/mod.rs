@@ -36,8 +36,9 @@ pub mod cache;
 pub mod request;
 pub mod solvers;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -96,6 +97,9 @@ pub struct CacheStats {
     pub misses: usize,
     pub entries: usize,
     pub capacity: usize,
+    /// Calls that blocked on another caller's in-progress identical solve
+    /// (single-flight followers).  Each also counts as a hit.
+    pub inflight_waits: usize,
 }
 
 impl CacheStats {
@@ -247,18 +251,64 @@ pub fn solve_auto(p: &MpqProblem) -> Result<Solution> {
 /// Default LRU capacity for the policy cache.
 const DEFAULT_CACHE_CAPACITY: usize = 512;
 
+/// A solve in progress: followers block on `cv` until the leader fills
+/// `done` (the outcome, or the error rendered to a string — `anyhow`
+/// errors are not cloneable).
+struct InflightSolve {
+    done: Mutex<Option<std::result::Result<Arc<PolicyOutcome>, String>>>,
+    cv: Condvar,
+}
+
+/// Publishes the leader's result to followers and clears the in-flight
+/// registration — on every exit path, including a panicking solver (the
+/// `Drop` arm), so a follower can never block forever.
+struct SingleFlightGuard<'a> {
+    engine: &'a PolicyEngine,
+    key: &'a CanonicalKey,
+    slot: &'a Arc<InflightSolve>,
+    published: bool,
+}
+
+impl SingleFlightGuard<'_> {
+    fn publish(&mut self, r: std::result::Result<Arc<PolicyOutcome>, String>) {
+        if self.published {
+            return;
+        }
+        self.published = true;
+        // Order matters: complete the slot *before* unregistering it, so
+        // a racing request either finds the completed slot (returns
+        // immediately) or finds nothing and hits the now-populated cache.
+        *self.slot.done.lock().unwrap() = Some(r);
+        self.slot.cv.notify_all();
+        self.engine.inflight.lock().unwrap().remove(self.key);
+    }
+}
+
+impl Drop for SingleFlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.published {
+            self.publish(Err("solver panicked mid-solve".into()));
+        }
+    }
+}
+
 /// The memoizing search front-end: owns the model meta and the one-time
 /// learned importances, builds eq.-3 problems from [`SearchRequest`]s,
 /// solves through the registry, and caches outcomes by canonical key.
 /// Shareable across threads (`Arc<PolicyEngine>`): the cache sits behind
-/// a mutex that is never held during a solve.
+/// a mutex that is never held during a solve, and concurrent identical
+/// cold requests are **single-flighted** — one leader runs the solver,
+/// every follower blocks on the same in-flight slot and shares the
+/// outcome, so a fleet stampede costs exactly one solve.
 pub struct PolicyEngine {
     pub meta: Arc<ModelMeta>,
     pub importance: Arc<Importance>,
     registry: &'static SolverRegistry,
     policy_cache: Mutex<LruCache<CanonicalKey, Arc<PolicyOutcome>>>,
+    inflight: Mutex<HashMap<CanonicalKey, Arc<InflightSolve>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    inflight_waits: AtomicUsize,
 }
 
 impl PolicyEngine {
@@ -271,13 +321,26 @@ impl PolicyEngine {
         importance: Importance,
         capacity: usize,
     ) -> PolicyEngine {
+        Self::with_registry(meta, importance, capacity, standard_registry())
+    }
+
+    /// Engine over a custom registry (tests inject slow/failing solvers
+    /// to pin down the single-flight protocol).
+    pub fn with_registry(
+        meta: ModelMeta,
+        importance: Importance,
+        capacity: usize,
+        registry: &'static SolverRegistry,
+    ) -> PolicyEngine {
         PolicyEngine {
             meta: Arc::new(meta),
             importance: Arc::new(importance),
-            registry: standard_registry(),
+            registry,
             policy_cache: Mutex::new(LruCache::new(capacity)),
+            inflight: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            inflight_waits: AtomicUsize::new(0),
         }
     }
 
@@ -294,19 +357,69 @@ impl PolicyEngine {
     }
 
     /// Memoized solve: identical canonical requests after the first are
-    /// served from the LRU cache in O(1) without touching a solver.
+    /// served from the LRU cache in O(1) without touching a solver, and
+    /// identical requests arriving *while* the first is still solving
+    /// block on that one solve (single-flight) instead of racing it —
+    /// exactly one solver run per distinct cold key, stampede or not.
     pub fn solve(&self, req: &SearchRequest) -> Result<EngineResponse> {
         let key = req.canonical_key();
         if let Some(outcome) = self.policy_cache.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(EngineResponse { outcome, cache_hit: true });
         }
-        // Miss: solve without holding the lock (concurrent identical
-        // misses may race the solve; last insert wins, results identical).
-        let outcome = Arc::new(self.solve_uncached(req)?);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.policy_cache.lock().unwrap().insert(key, outcome.clone());
-        Ok(EngineResponse { outcome, cache_hit: false })
+        // Register as leader or join an in-flight solve as follower.
+        let (slot, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(&key) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    // Double-check the cache under the in-flight lock: a
+                    // leader that finished between our miss above and this
+                    // lock has already unregistered and populated the
+                    // cache, and must not be re-solved.
+                    if let Some(outcome) = self.policy_cache.lock().unwrap().get(&key) {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok(EngineResponse { outcome, cache_hit: true });
+                    }
+                    let slot = Arc::new(InflightSolve {
+                        done: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    inflight.insert(key.clone(), slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if !leader {
+            self.inflight_waits.fetch_add(1, Ordering::Relaxed);
+            let mut done = slot.done.lock().unwrap();
+            while done.is_none() {
+                done = slot.cv.wait(done).unwrap();
+            }
+            return match done.as_ref().unwrap() {
+                Ok(outcome) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    Ok(EngineResponse { outcome: outcome.clone(), cache_hit: true })
+                }
+                Err(msg) => Err(anyhow::anyhow!("single-flight leader failed: {msg}")),
+            };
+        }
+        // Leader: solve without holding any lock; the guard publishes the
+        // result (or the panic) to followers on every exit path.
+        let mut guard = SingleFlightGuard { engine: self, key: &key, slot: &slot, published: false };
+        match self.solve_uncached(req) {
+            Ok(outcome) => {
+                let outcome = Arc::new(outcome);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.policy_cache.lock().unwrap().insert(key.clone(), outcome.clone());
+                guard.publish(Ok(outcome.clone()));
+                Ok(EngineResponse { outcome, cache_hit: false })
+            }
+            Err(e) => {
+                guard.publish(Err(format!("{e:#}")));
+                Err(e)
+            }
+        }
     }
 
     /// Always run the solver (bench cold paths, accuracy measurements).
@@ -323,6 +436,7 @@ impl PolicyEngine {
             misses: self.misses.load(Ordering::Relaxed),
             entries: cache.len(),
             capacity: cache.capacity(),
+            inflight_waits: self.inflight_waits.load(Ordering::Relaxed),
         }
     }
 }
@@ -484,6 +598,130 @@ mod tests {
         assert!(out.stats.proven_optimal);
         let gap = out.stats.bound_gap.expect("bb certifies a root bound");
         assert!(gap >= -1e-9, "negative bound gap {gap}");
+    }
+
+    /// Counts invocations, sleeps long enough that a stampede of callers
+    /// provably overlaps, then delegates to the real B&B solver.
+    struct SlowSolver {
+        calls: Arc<AtomicUsize>,
+        delay: std::time::Duration,
+    }
+
+    impl Solver for SlowSolver {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+        fn supports(&self, _p: &crate::search::MpqProblem) -> bool {
+            true
+        }
+        fn solve_full(
+            &self,
+            p: &crate::search::MpqProblem,
+            budget: &SolveBudget,
+        ) -> Result<SolveOutcome> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+            BranchAndBound.solve_full(p, budget)
+        }
+    }
+
+    /// Counts invocations and always fails.
+    struct FailSolver {
+        calls: Arc<AtomicUsize>,
+    }
+
+    impl Solver for FailSolver {
+        fn name(&self) -> &'static str {
+            "fail"
+        }
+        fn supports(&self, _p: &crate::search::MpqProblem) -> bool {
+            true
+        }
+        fn solve_full(
+            &self,
+            _p: &crate::search::MpqProblem,
+            _budget: &SolveBudget,
+        ) -> Result<SolveOutcome> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("deliberately broken solver")
+        }
+    }
+
+    fn engine_with(solver: Arc<dyn Solver>) -> PolicyEngine {
+        let meta = meta6();
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        let registry: &'static SolverRegistry =
+            Box::leak(Box::new(SolverRegistry::with_solvers(vec![solver])));
+        PolicyEngine::with_registry(meta, imp, DEFAULT_CACHE_CAPACITY, registry)
+    }
+
+    #[test]
+    fn concurrent_identical_cold_requests_single_flight_to_one_solve() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let e = engine_with(Arc::new(SlowSolver {
+            calls: calls.clone(),
+            delay: std::time::Duration::from_millis(150),
+        }));
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder()
+            .alpha(2.0)
+            .bitops_cap(cap)
+            .solver_name("slow")
+            .build()
+            .unwrap();
+        const N: usize = 8;
+        let barrier = std::sync::Barrier::new(N);
+        let outcomes: Vec<EngineResponse> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..N)
+                .map(|_| {
+                    s.spawn(|| {
+                        barrier.wait();
+                        e.solve(&req).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // One leader ran the solver; every follower shared its outcome.
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "stampede must cost one solve");
+        let stats = e.cache_stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, N - 1);
+        // Every follower either waited in-flight or (if descheduled past
+        // the leader's finish) hit the cache; with a 150 ms solve at
+        // least one must have overlapped the leader.
+        assert!(
+            (1..=N - 1).contains(&stats.inflight_waits),
+            "inflight_waits {} out of range",
+            stats.inflight_waits
+        );
+        let leader_hits = outcomes.iter().filter(|o| !o.cache_hit).count();
+        assert_eq!(leader_hits, 1);
+        for o in &outcomes {
+            assert_eq!(o.outcome.policy, outcomes[0].outcome.policy);
+            assert!(Arc::ptr_eq(&o.outcome, &outcomes[0].outcome), "outcome must be shared");
+        }
+    }
+
+    #[test]
+    fn single_flight_propagates_errors_and_allows_retry() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let e = engine_with(Arc::new(FailSolver { calls: calls.clone() }));
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder()
+            .bitops_cap(cap)
+            .solver_name("fail")
+            .build()
+            .unwrap();
+        assert!(e.solve(&req).is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        // Failures are not cached and the in-flight slot is cleared:
+        // a retry reaches the solver again instead of hanging or hitting
+        // a poisoned entry.
+        assert!(e.solve(&req).is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+        assert_eq!(e.cache_stats().misses, 0);
+        assert_eq!(e.cache_stats().entries, 0);
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Per-connection state for the nonblocking multiplexer: a read buffer
+//! that decodes complete request lines, a write buffer that absorbs
+//! partial writes, and the bookkeeping ([`Conn::inflight`]) that keeps a
+//! connection alive until every response it is owed has been delivered.
+//!
+//! All sockets run in nonblocking mode; the multiplexer sweeps
+//! [`Conn::read_ready`] / [`Conn::flush`] each tick and reaps
+//! connections once [`Conn::done`] — so no read can ever wedge the
+//! server (the pre-refactor thread-per-connection loop blocked forever
+//! on idle keep-alive sockets, hanging `shutdown()`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Requests larger than this without a newline poison the connection —
+/// a line protocol must bound buffering per client.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Per-tick read budget for one connection.  One multiplexer thread owns
+/// every socket, so a client writing faster than the mux drains would
+/// otherwise keep `read_ready` in its loop forever — starving the other
+/// connections and the stop flag.  Whatever is left stays in the kernel
+/// buffer for the next tick.
+pub const MAX_READ_BYTES_PER_TICK: usize = 256 * 1024;
+
+pub(crate) struct Conn {
+    pub id: u64,
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests decoded but not yet answered; the conn is held open (even
+    /// after client EOF) until these drain.
+    pub inflight: usize,
+    /// Oversize-poison error waiting for in-flight responses to drain —
+    /// queueing it immediately would jump ahead of responses still owed
+    /// for earlier requests and break per-connection response order.
+    pending_error: Option<String>,
+    /// Read side finished (EOF, error, or oversize poison).
+    closed: bool,
+    /// Hard transport failure: nothing more can be delivered, reap now.
+    dead: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, id: u64) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            id,
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: 0,
+            pending_error: None,
+            closed: false,
+            dead: false,
+        })
+    }
+
+    /// Drain whatever the socket has, returning complete (non-empty)
+    /// request lines.  Marks the read side closed on EOF or error; a
+    /// trailing unterminated line at EOF still counts (matching the old
+    /// `BufRead::lines` behavior).
+    pub fn read_ready(&mut self) -> Vec<String> {
+        let mut lines = Vec::new();
+        if self.closed || self.dead {
+            return lines;
+        }
+        let mut tmp = [0u8; 16 * 1024];
+        let mut budget = MAX_READ_BYTES_PER_TICK;
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.closed = true;
+                    if !self.rbuf.is_empty() {
+                        let tail = std::mem::take(&mut self.rbuf);
+                        push_line(&mut lines, &tail);
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    self.extract_lines(&mut lines);
+                    if self.rbuf.len() > MAX_LINE_BYTES {
+                        let msg = super::protocol::error_message(&format!(
+                            "request line exceeds {MAX_LINE_BYTES} bytes"
+                        ));
+                        // Respect response order: responses owed for
+                        // requests decoded earlier — in previous ticks
+                        // (inflight) or this very call (lines) — go first.
+                        if self.inflight == 0 && lines.is_empty() {
+                            self.queue_response(&msg);
+                        } else {
+                            self.pending_error = Some(msg);
+                        }
+                        self.rbuf.clear();
+                        self.closed = true;
+                        break;
+                    }
+                    budget = budget.saturating_sub(n);
+                    if budget == 0 {
+                        break; // fairness: yield the mux to other conns
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        lines
+    }
+
+    fn extract_lines(&mut self, lines: &mut Vec<String>) {
+        // One drain at the end: draining per line would memmove the whole
+        // remaining buffer each time — O(bytes * lines) on the single mux
+        // thread when a client pipelines thousands of small requests.
+        let mut start = 0;
+        while let Some(rel) = self.rbuf[start..].iter().position(|&b| b == b'\n') {
+            let mut raw = &self.rbuf[start..start + rel];
+            if raw.last() == Some(&b'\r') {
+                raw = &raw[..raw.len() - 1];
+            }
+            push_line(lines, raw);
+            start += rel + 1;
+        }
+        if start > 0 {
+            self.rbuf.drain(..start);
+        }
+    }
+
+    /// Append one response line to the write buffer.
+    pub fn queue_response(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Push buffered bytes to the socket without blocking; leftover bytes
+    /// stay queued for the next tick.
+    pub fn flush(&mut self) {
+        if self.dead {
+            return;
+        }
+        // All owed responses routed: the deferred poison error may go now.
+        if self.inflight == 0 {
+            if let Some(msg) = self.pending_error.take() {
+                self.queue_response(&msg);
+            }
+        }
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos >= self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+    }
+
+    pub fn has_pending_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    /// Ready to reap: transport dead, or read side done with every owed
+    /// response (and any deferred poison error) delivered.
+    pub fn done(&self) -> bool {
+        self.dead
+            || (self.closed
+                && self.inflight == 0
+                && self.pending_error.is_none()
+                && !self.has_pending_write())
+    }
+
+    /// Force the socket down (server shutdown with clients attached).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// An oversize poison error is parked behind owed responses.
+    #[cfg(test)]
+    fn has_deferred_error(&self) -> bool {
+        self.pending_error.is_some()
+    }
+}
+
+fn push_line(lines: &mut Vec<String>, raw: &[u8]) {
+    let s = String::from_utf8_lossy(raw);
+    let t = s.trim();
+    if !t.is_empty() {
+        lines.push(t.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A connected nonblocking pair via a throwaway listener.
+    fn pair() -> (TcpStream, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        (client, Conn::new(server_side, 7).unwrap())
+    }
+
+    fn read_until_lines(conn: &mut Conn, want: usize) -> Vec<String> {
+        let mut lines = Vec::new();
+        for _ in 0..200 {
+            lines.extend(conn.read_ready());
+            if lines.len() >= want || conn.done() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        lines
+    }
+
+    #[test]
+    fn decodes_complete_lines_and_skips_blanks() {
+        let (mut client, mut conn) = pair();
+        client.write_all(b"alpha\n\n  \nbeta\r\npartial").unwrap();
+        client.flush().unwrap();
+        let lines = read_until_lines(&mut conn, 2);
+        assert_eq!(lines, vec!["alpha".to_string(), "beta".to_string()]);
+        // the partial line arrives once terminated
+        client.write_all(b" tail\n").unwrap();
+        let lines = read_until_lines(&mut conn, 1);
+        assert_eq!(lines, vec!["partial tail".to_string()]);
+    }
+
+    #[test]
+    fn eof_flushes_trailing_unterminated_line() {
+        let (mut client, mut conn) = pair();
+        client.write_all(b"no newline at end").unwrap();
+        drop(client);
+        let lines = read_until_lines(&mut conn, 1);
+        assert_eq!(lines, vec!["no newline at end".to_string()]);
+        assert!(conn.done());
+    }
+
+    #[test]
+    fn oversize_line_poisons_with_an_error_response() {
+        let (mut client, mut conn) = pair();
+        // Nonblocking client: a blocking write_all could deadlock against
+        // the same-thread reader once kernel buffers fill.
+        client.set_nonblocking(true).unwrap();
+        let chunk = vec![b'x'; 64 * 1024];
+        let mut sent = 0usize;
+        while sent <= MAX_LINE_BYTES + 2 * chunk.len() && !conn.has_pending_write() {
+            match client.write(&chunk) {
+                Ok(n) => sent += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => panic!("client write failed: {e}"),
+            }
+            conn.read_ready();
+        }
+        for _ in 0..200 {
+            conn.read_ready();
+            if conn.has_pending_write() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(conn.has_pending_write(), "oversize line must queue an error");
+        conn.flush();
+        client.set_nonblocking(false).unwrap();
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        let mut resp = String::new();
+        std::io::BufRead::read_line(
+            &mut std::io::BufReader::new(&mut client),
+            &mut resp,
+        )
+        .unwrap();
+        assert!(resp.contains("exceeds"), "{resp}");
+    }
+
+    #[test]
+    fn write_buffer_survives_partial_flushes() {
+        let (client, mut conn) = pair();
+        conn.queue_response("hello");
+        conn.flush();
+        assert!(!conn.has_pending_write());
+        let mut reader = std::io::BufReader::new(client);
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+        assert_eq!(line, "hello\n");
+    }
+
+    #[test]
+    fn oversize_error_waits_for_owed_responses() {
+        let (mut client, mut conn) = pair();
+        // A valid request is decoded and handed to the dispatcher...
+        client.write_all(b"req\n").unwrap();
+        assert_eq!(read_until_lines(&mut conn, 1).len(), 1);
+        conn.inflight += 1;
+        // ...then the client firehoses an oversize unterminated line; stop
+        // as soon as the poison lands (the conn stops reading then, so
+        // further client writes would block forever).
+        client.set_nonblocking(true).unwrap();
+        let chunk = vec![b'x'; 64 * 1024];
+        let mut sent = 0usize;
+        while !conn.has_deferred_error() {
+            match client.write(&chunk) {
+                Ok(n) => sent += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => panic!("client write failed: {e}"),
+            }
+            conn.read_ready();
+            assert!(sent <= 8 * MAX_LINE_BYTES, "oversize line never poisoned the conn");
+        }
+        conn.flush();
+        assert!(!conn.has_pending_write(), "poison error must wait behind the owed response");
+        assert!(!conn.done());
+        // The owed response drains first, then the deferred error.
+        conn.queue_response("resp-for-req");
+        conn.inflight -= 1;
+        conn.flush();
+        client.set_nonblocking(false).unwrap();
+        client.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        let mut reader = std::io::BufReader::new(&mut client);
+        let mut first = String::new();
+        std::io::BufRead::read_line(&mut reader, &mut first).unwrap();
+        assert_eq!(first, "resp-for-req\n");
+        let mut second = String::new();
+        std::io::BufRead::read_line(&mut reader, &mut second).unwrap();
+        assert!(second.contains("exceeds"), "{second}");
+    }
+
+    #[test]
+    fn inflight_holds_connection_past_eof() {
+        let (mut client, mut conn) = pair();
+        client.write_all(b"req\n").unwrap();
+        let lines = read_until_lines(&mut conn, 1);
+        assert_eq!(lines.len(), 1);
+        conn.inflight += 1;
+        drop(client); // EOF
+        read_until_lines(&mut conn, 1);
+        assert!(!conn.done(), "owed a response; must not reap yet");
+        conn.inflight -= 1;
+        conn.queue_response("resp");
+        conn.flush();
+        assert!(conn.done());
+    }
+}

@@ -1,0 +1,181 @@
+//! The coalescing dispatcher: drains the shared request queue, gathers
+//! everything in flight into one batch per tick, and runs the batch as a
+//! `search_fleet`-style sweep across a worker pool — so concurrent
+//! device queries share the policy cache, the single-flight table, and
+//! (in persistent mode) one long-lived set of workers, instead of each
+//! connection solving on its own thread.
+//!
+//! Ordering contract: the queue is FIFO and batches are contiguous queue
+//! runs processed by one dispatcher thread, so responses for any single
+//! connection are pushed back in exactly the order its requests arrived —
+//! the pooled sweep returns results in index order regardless of
+//! completion order.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::protocol::{self, Request};
+use super::server::{ServeConfig, Shared, WorkItem};
+use super::{DeviceSpec, FleetSearcher};
+use crate::kernels::{persistent_global, WorkerPool};
+use crate::util::json::Json;
+
+/// Upper bound on the dispatcher's idle wait; it re-checks the stop flag
+/// at least this often even if a queue notification is lost.
+const IDLE_RECHECK: Duration = Duration::from_millis(50);
+
+pub(crate) struct Dispatcher {
+    shared: Arc<Shared>,
+    searcher: FleetSearcher,
+    cfg: ServeConfig,
+}
+
+impl Dispatcher {
+    pub fn new(shared: Arc<Shared>, searcher: FleetSearcher, cfg: ServeConfig) -> Dispatcher {
+        Dispatcher { shared, searcher, cfg }
+    }
+
+    pub fn run(self) {
+        loop {
+            let Some(first) = self.next_item() else { return };
+            let batch = self.coalesce(first);
+            self.process_batch(batch);
+        }
+    }
+
+    /// Block until a request is queued (or the server is stopping).
+    fn next_item(&self) -> Option<WorkItem> {
+        let mut q = self.shared.requests.lock().unwrap();
+        loop {
+            if self.shared.stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            if let Some(it) = q.pop_front() {
+                return Some(it);
+            }
+            let (guard, _) = self.shared.req_cv.wait_timeout(q, IDLE_RECHECK).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Linger up to the coalesce window after the first request, pulling
+    /// everything that lands in the meantime into the same batch.
+    fn coalesce(&self, first: WorkItem) -> Vec<WorkItem> {
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.coalesce_window;
+        loop {
+            let mut q = self.shared.requests.lock().unwrap();
+            while let Some(it) = q.pop_front() {
+                batch.push(it);
+            }
+            let now = Instant::now();
+            if now >= deadline || self.shared.stop.load(Ordering::Relaxed) {
+                return batch;
+            }
+            let (guard, _) = self.shared.req_cv.wait_timeout(q, deadline - now).unwrap();
+            drop(guard);
+        }
+    }
+
+    fn process_batch(&self, batch: Vec<WorkItem>) {
+        self.shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.shared.stats.batch_last.store(batch.len(), Ordering::Relaxed);
+        self.shared.stats.batch_max.fetch_max(batch.len(), Ordering::Relaxed);
+
+        // Parse everything first; cheap requests (stats, parse errors)
+        // answer inline, solves gather into one sweep.  The sweep returns
+        // answers in spec order, so `Solve` slots consume them in order.
+        enum Slot {
+            Ready(String),
+            Solve,
+        }
+        let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
+        let mut specs: Vec<DeviceSpec> = Vec::new();
+        for item in &batch {
+            match protocol::parse_request(&item.line) {
+                Ok(Request::Solve(spec)) => {
+                    slots.push(Slot::Solve);
+                    specs.push(spec);
+                }
+                Ok(Request::Stats) => slots.push(Slot::Ready(self.stats_line())),
+                Err(e) => slots.push(Slot::Ready(protocol::error_line(&e))),
+            }
+        }
+        let mut answers = self.sweep(specs).into_iter();
+
+        let mut resp = self.shared.responses.lock().unwrap();
+        for (item, slot) in batch.iter().zip(slots) {
+            let line = match slot {
+                Slot::Ready(s) => s,
+                Slot::Solve => answers.next().expect("sweep returned one answer per spec"),
+            };
+            resp.push_back((item.conn, line));
+        }
+    }
+
+    /// The coalesced `search_fleet`-style sweep: every solve in the batch
+    /// fans out across the pool; identical cold requests collapse to one
+    /// engine solve via single-flight.
+    fn sweep(&self, specs: Vec<DeviceSpec>) -> Vec<String> {
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        if self.cfg.persistent_pool {
+            let specs = Arc::new(specs);
+            let searcher = self.searcher.clone();
+            let sp = specs.clone();
+            persistent_global().parallel_for(specs.len(), move |i| {
+                respond_safe(&searcher, &sp[i])
+            })
+        } else {
+            let pool = WorkerPool::global().capped(specs.len());
+            pool.parallel_for(specs.len(), |i| respond_safe(&self.searcher, &specs[i]))
+        }
+    }
+
+    /// Build the `{"cmd":"stats"}` response from the serving counters,
+    /// the queue, and the engine's cache/single-flight stats.
+    fn stats_line(&self) -> String {
+        let depth = self.shared.requests.lock().unwrap().len();
+        let snap = self.shared.stats.snapshot(depth);
+        let cache = self.searcher.cache_stats();
+        let pool_threads = if self.cfg.persistent_pool {
+            persistent_global().threads()
+        } else {
+            WorkerPool::global().threads()
+        };
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cmd", Json::from("stats")),
+            ("open_conns", Json::from(snap.conns_open)),
+            ("total_conns", Json::from(snap.conns_total)),
+            ("overloaded", Json::from(snap.overloaded)),
+            ("served", Json::from(snap.served)),
+            ("queue_depth", Json::from(snap.queue_depth)),
+            ("batches", Json::from(snap.batches)),
+            ("coalesced_batch_size", Json::from(snap.coalesced_batch_size)),
+            ("coalesced_batch_max", Json::from(snap.coalesced_batch_max)),
+            ("cache_hits", Json::from(cache.hits)),
+            ("cache_misses", Json::from(cache.misses)),
+            ("cache_entries", Json::from(cache.entries)),
+            ("inflight_waits", Json::from(cache.inflight_waits)),
+            ("persistent_pool", Json::Bool(self.cfg.persistent_pool)),
+            ("pool_threads", Json::from(pool_threads)),
+        ])
+        .to_string()
+    }
+}
+
+/// [`protocol::respond`] behind a panic firewall: a panicking solver must
+/// cost its own request an error line, not the dispatcher thread — an
+/// unwinding sweep would leave the multiplexer accepting and queueing
+/// requests that nothing ever answers (the whole server wedges, silently).
+/// The engine's single-flight guard already publishes the panic to any
+/// followers; this converts the leader's unwind into a response.
+fn respond_safe(searcher: &FleetSearcher, spec: &DeviceSpec) -> String {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| protocol::respond(searcher, spec)))
+        .unwrap_or_else(|_| {
+            protocol::error_message(&format!("internal error: solve for {:?} panicked", spec.name))
+        })
+}

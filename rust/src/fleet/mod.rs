@@ -1,40 +1,72 @@
-//! Fleet search service — the §4.3 deployment story, as a real server.
+//! Fleet search service — the §4.3 deployment story as an event-driven
+//! serving stack.
 //!
 //! The paper's efficiency argument: indicator training is a *one-time*
 //! cost, after which the MPQ policy for each of `z` deployment devices is
-//! a sub-second data-free solve.  This module makes that concrete: a
-//! [`FleetSearcher`] wraps a memoizing [`PolicyEngine`] (learned
-//! importances + solver registry + LRU policy cache) and answers
-//! per-device constraint queries; [`serve`](FleetServer::spawn) exposes
-//! it over a TCP line-delimited JSON protocol (one request JSON per
-//! line, one response JSON per line), threaded per connection.  Batch
-//! sweeps fan out across a thread pool, and repeated identical queries
-//! are served from the policy cache in O(1).
+//! a sub-second data-free solve.  At fleet scale that only pays off if
+//! the server absorbs thousands of concurrent device queries without
+//! redundant work, so the service is structured as a pipeline:
 //!
-//! Request fields (any other key is rejected with an error naming it):
+//! ```text
+//!  TCP clients ──► multiplexer ──► request queue ──► coalescing ──► single-flight
+//!                  (server.rs,      (FIFO, shared)    dispatcher      PolicyEngine
+//!                   conn.rs)                          (dispatch.rs)   (engine::)
+//!                      ▲                                   │
+//!                      └────────── response queue ◄────────┘
+//! ```
+//!
+//! * **Multiplexer** ([`server`]): one thread owns the listener and all
+//!   connections; nonblocking readiness sweeps decode line-delimited JSON
+//!   requests and flush buffered responses.  Connections beyond
+//!   [`ServeConfig::max_conns`] get a 503-style rejection line, and the
+//!   stop flag is honored within a millisecond even with idle keep-alive
+//!   clients attached.
+//! * **Coalescing dispatcher** ([`dispatch`]): drains everything in
+//!   flight (lingering up to [`ServeConfig::coalesce_window`]) into one
+//!   batched `search_fleet`-style sweep per tick, fanned out across the
+//!   lazily-started persistent worker pool (or a scoped pool with
+//!   `persistent_pool: false`) — cache and workers shared across
+//!   connections, per-connection response order preserved.
+//! * **Single-flight engine** (`engine::PolicyEngine`): concurrent
+//!   identical cold queries block on one in-progress solve and share its
+//!   outcome, so a stampede costs exactly one solver run.
+//!
+//! Protocol ([`protocol`]) — unchanged for PR 1/2 clients: one request
+//! JSON per line, one response JSON per line.
+//!
+//! Solve request (any other key is rejected with an error naming it):
 //!   `{"name": "phone", "cap_gbitops": 23.07, "size_cap_mb": 8.0,
 //!     "alpha": 3.0, "weight_only": false, "solver": "auto",
 //!     "node_limit": 2000000, "time_limit_ms": 500}`
 //!   (all optional except at least one cap)
-//! Response:
+//! Solve response:
 //!   `{"ok": true, "w_bits": [...], "a_bits": [...], "bitops_g": ...,
-//!     "size_mb": ..., "cost": ..., "solve_us": ...,
-//!     "solver": "bb", "cache_hit": false}`
-//! where `solver` is the registry solver that produced the policy (after
-//! any automatic fallback) and `cache_hit` reports whether the response
-//! came from the engine's policy cache rather than a fresh solve.
+//!     "size_mb": ..., "cost": ..., "solve_us": ..., "solver": "bb",
+//!     "cache_hit": false}`
+//! Operator introspection:
+//!   `{"cmd": "stats"}` → `{"ok": true, "cmd": "stats", "open_conns": ...,
+//!     "served": ..., "queue_depth": ..., "batches": ...,
+//!     "coalesced_batch_size": ..., "coalesced_batch_max": ...,
+//!     "cache_hits": ..., "cache_misses": ..., "inflight_waits": ...,
+//!     "persistent_pool": ..., "pool_threads": ...}`
+
+pub mod conn;
+pub mod dispatch;
+pub mod protocol;
+pub mod server;
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+
+pub use self::server::{FleetServer, ServeConfig, ServerStats, StatsSnapshot};
 
 use crate::engine::{CacheStats, PolicyEngine, SearchRequest};
-use crate::kernels::WorkerPool;
 use crate::importance::Importance;
+use crate::kernels::WorkerPool;
 use crate::models::ModelMeta;
 use crate::quant::BitConfig;
 use crate::util::json::Json;
@@ -57,12 +89,13 @@ pub struct DevicePolicy {
     pub solve_us: u128,
     /// Which registry solver produced the policy.
     pub solver: String,
-    /// Whether the engine served this query from its policy cache.
+    /// Whether the engine served this query from its policy cache (or an
+    /// in-flight identical solve it joined).
     pub cache_hit: bool,
 }
 
-/// Holds the one-time-trained importances behind a memoizing engine;
-/// answers per-device queries.
+/// Holds the one-time-trained importances behind a memoizing,
+/// single-flighting engine; answers per-device queries.
 #[derive(Clone)]
 pub struct FleetSearcher {
     engine: Arc<PolicyEngine>,
@@ -71,6 +104,12 @@ pub struct FleetSearcher {
 impl FleetSearcher {
     pub fn new(meta: ModelMeta, importance: Importance) -> FleetSearcher {
         FleetSearcher { engine: Arc::new(PolicyEngine::new(meta, importance)) }
+    }
+
+    /// Wrap an explicitly-constructed engine (tests inject custom solver
+    /// registries through [`PolicyEngine::with_registry`]).
+    pub fn from_engine(engine: PolicyEngine) -> FleetSearcher {
+        FleetSearcher { engine: Arc::new(engine) }
     }
 
     /// The underlying engine (cache stats, raw solves).
@@ -82,7 +121,7 @@ impl FleetSearcher {
         &self.engine.meta
     }
 
-    /// Policy-cache counters for operator reporting.
+    /// Policy-cache + single-flight counters for operator reporting.
     pub fn cache_stats(&self) -> CacheStats {
         self.engine.cache_stats()
     }
@@ -112,168 +151,16 @@ impl FleetSearcher {
     }
 
     /// Batch search for a whole fleet (the `z`-device sweep of §4.3),
-    /// fanned out across the crate-wide [`WorkerPool`] (the ad-hoc scoped
-    /// pool this method grew in PR 1 became `kernels::pool`).  Results
-    /// keep request order.  Identical constraint sets already in the
-    /// cache are served from it; identical *cold* queries running
-    /// concurrently may each solve (the cache lock is not held during a
-    /// solve — last insert wins, results are identical).
+    /// fanned out across the crate-wide [`WorkerPool`].  Results keep
+    /// request order.  Identical constraint sets already in the cache are
+    /// served from it, and identical *cold* queries running concurrently
+    /// single-flight onto one solve (the engine's in-flight table).
     pub fn search_fleet(&self, devices: &[DeviceSpec]) -> Result<Vec<DevicePolicy>> {
         let pool = WorkerPool::global().capped(devices.len());
         pool.parallel_for(devices.len(), |i| self.search(&devices[i]))
             .into_iter()
             .collect()
     }
-
-    fn handle_line(&self, line: &str) -> String {
-        match self.handle_request(line) {
-            Ok(resp) => resp.to_string(),
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::from(format!("{e:#}").as_str())),
-            ])
-            .to_string(),
-        }
-    }
-
-    fn handle_request(&self, line: &str) -> Result<Json> {
-        let req = Json::parse(line)?;
-        let dev = parse_device_request(&req)?;
-        let out = self.search(&dev)?;
-        Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("device", Json::from(out.device.as_str())),
-            ("w_bits", Json::arr_usize(&out.policy.w_bits.iter().map(|&b| b as usize).collect::<Vec<_>>())),
-            ("a_bits", Json::arr_usize(&out.policy.a_bits.iter().map(|&b| b as usize).collect::<Vec<_>>())),
-            ("cost", Json::Num(out.cost)),
-            ("bitops_g", Json::Num(out.bitops as f64 / 1e9)),
-            ("size_mb", Json::Num(out.size_bits as f64 / 8e6)),
-            ("solve_us", Json::Num(out.solve_us as f64)),
-            ("solver", Json::from(out.solver.as_str())),
-            ("cache_hit", Json::Bool(out.cache_hit)),
-        ]))
-    }
-}
-
-/// Every key the line protocol accepts; anything else is a typo we must
-/// surface instead of silently ignoring (`cap_gbitop` once cost a user a
-/// completely unconstrained policy).
-const KNOWN_FIELDS: &[&str] = &[
-    "name",
-    "cap_gbitops",
-    "size_cap_mb",
-    "alpha",
-    "weight_only",
-    "solver",
-    "node_limit",
-    "time_limit_ms",
-];
-
-/// Parse a line-protocol request, rejecting unknown fields by name.
-fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
-    let obj = req.as_obj().context("request must be a JSON object")?;
-    for key in obj.keys() {
-        if !KNOWN_FIELDS.contains(&key.as_str()) {
-            bail!(
-                "unknown field {key:?} (known fields: {})",
-                KNOWN_FIELDS.join(", ")
-            );
-        }
-    }
-    let name = req
-        .opt("name")
-        .and_then(|v| v.as_str().ok().map(str::to_string))
-        .unwrap_or_else(|| "dev".into());
-    let mut b = SearchRequest::builder();
-    if let Some(v) = req.opt("cap_gbitops") {
-        b = b.bitops_cap((v.as_f64()? * 1e9) as u64);
-    }
-    if let Some(v) = req.opt("size_cap_mb") {
-        b = b.size_cap_bytes((v.as_f64()? * 1e6) as u64);
-    }
-    if let Some(v) = req.opt("alpha") {
-        b = b.alpha(v.as_f64()?);
-    }
-    if let Some(v) = req.opt("weight_only") {
-        b = b.weight_only(v.as_bool()?);
-    }
-    if let Some(v) = req.opt("solver") {
-        b = b.solver_name(v.as_str()?);
-    }
-    if let Some(v) = req.opt("node_limit") {
-        b = b.node_limit(v.as_usize()?);
-    }
-    if let Some(v) = req.opt("time_limit_ms") {
-        b = b.time_limit(std::time::Duration::from_millis(v.as_usize()? as u64));
-    }
-    Ok(DeviceSpec { name, request: b.build()? })
-}
-
-/// Server handle: join or signal shutdown.
-pub struct FleetServer {
-    pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    pub served: Arc<AtomicUsize>,
-}
-
-impl FleetServer {
-    /// Bind and serve on a background thread.
-    pub fn spawn(searcher: FleetSearcher, bind: &str) -> Result<FleetServer> {
-        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let served = Arc::new(AtomicUsize::new(0));
-        let stop2 = stop.clone();
-        let served2 = served.clone();
-        let handle = std::thread::spawn(move || {
-            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let s = searcher.clone();
-                        let served3 = served2.clone();
-                        conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, s, served3);
-                        }));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for c in conns {
-                let _ = c.join();
-            }
-        });
-        Ok(FleetServer { addr, stop, handle: Some(handle), served })
-    }
-
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn handle_conn(stream: TcpStream, searcher: FleetSearcher, served: Arc<AtomicUsize>) -> Result<()> {
-    stream.set_nonblocking(false)?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = searcher.handle_line(&line);
-        writer.write_all(resp.as_bytes())?;
-        writer.write_all(b"\n")?;
-        served.fetch_add(1, Ordering::Relaxed);
-    }
-    Ok(())
 }
 
 /// Simple blocking client for tests/examples.
@@ -369,53 +256,5 @@ mod tests {
             request: SearchRequest::builder().alpha(1.0).build().unwrap(),
         };
         assert!(s.search(&unconstrained).is_err());
-    }
-
-    #[test]
-    fn unknown_json_field_is_rejected_by_name() {
-        let s = searcher();
-        // classic typo: cap_gbitop (missing the final s)
-        let line = r#"{"cap_gbitop": 1.5, "alpha": 1.0}"#;
-        let resp = Json::parse(&s.handle_line(line)).unwrap();
-        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
-        let err = resp.get("error").unwrap().as_str().unwrap().to_string();
-        assert!(err.contains("cap_gbitop"), "error must name the bad key: {err}");
-        assert!(err.contains("unknown field"), "{err}");
-    }
-
-    #[test]
-    fn tcp_roundtrip() {
-        let s = searcher();
-        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
-        let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
-        let req = Json::obj(vec![
-            ("name", Json::from("phone")),
-            ("cap_gbitops", Json::Num(cap_g)),
-            ("alpha", Json::Num(3.0)),
-        ]);
-        let resp = query(&server.addr, &req).unwrap();
-        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
-        assert_eq!(resp.get("w_bits").unwrap().as_arr().unwrap().len(), 6);
-        assert!(resp.get("solve_us").unwrap().as_f64().unwrap() >= 0.0);
-        assert!(!resp.get("cache_hit").unwrap().as_bool().unwrap());
-        assert!(!resp.get("solver").unwrap().as_str().unwrap().is_empty());
-        // the identical query over the wire hits the policy cache
-        let resp2 = query(&server.addr, &req).unwrap();
-        assert!(resp2.get("cache_hit").unwrap().as_bool().unwrap());
-        assert_eq!(resp.get("w_bits").unwrap(), resp2.get("w_bits").unwrap());
-        // malformed request gets an error response, not a hang
-        let bad = query(&server.addr, &Json::obj(vec![("alpha", Json::Num(1.0))])).unwrap();
-        assert!(!bad.get("ok").unwrap().as_bool().unwrap());
-        server.shutdown();
-    }
-
-    #[test]
-    fn request_can_pick_a_solver() {
-        let s = searcher();
-        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
-        let line = format!(r#"{{"cap_gbitops": {cap_g}, "solver": "mckp"}}"#);
-        let resp = Json::parse(&s.handle_line(&line)).unwrap();
-        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
-        assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "mckp");
     }
 }

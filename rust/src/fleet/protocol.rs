@@ -1,0 +1,229 @@
+//! The fleet line protocol: one JSON object per line in, one JSON object
+//! per line out.
+//!
+//! Two request forms:
+//!
+//! * **Solve** (the PR 1/2 contract, unchanged): constraint fields such
+//!   as `cap_gbitops` / `size_cap_mb` plus engine controls; any unknown
+//!   key is rejected *by name* (`cap_gbitop` once cost a user a
+//!   completely unconstrained policy).
+//! * **Command**: `{"cmd": "stats"}` — operator introspection of the
+//!   serving stack (connection counts, coalesced batch sizes, queue
+//!   depth, cache and single-flight counters).  Unknown commands error.
+//!
+//! Responses always carry `"ok"`; solve responses keep the exact PR 1
+//! field set (`device`, `w_bits`, `a_bits`, `cost`, `bitops_g`,
+//! `size_mb`, `solve_us`, `solver`, `cache_hit`) so existing clients
+//! round-trip unchanged.
+
+use anyhow::{bail, Context, Result};
+
+use super::{DevicePolicy, DeviceSpec, FleetSearcher};
+use crate::engine::SearchRequest;
+use crate::util::json::Json;
+
+/// Every key a solve request accepts; anything else is a typo we must
+/// surface instead of silently ignoring.
+pub const KNOWN_FIELDS: &[&str] = &[
+    "name",
+    "cap_gbitops",
+    "size_cap_mb",
+    "alpha",
+    "weight_only",
+    "solver",
+    "node_limit",
+    "time_limit_ms",
+];
+
+/// A decoded protocol request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// A policy solve for one device constraint set.
+    Solve(DeviceSpec),
+    /// `{"cmd": "stats"}` — serving-stack introspection.
+    Stats,
+}
+
+/// Parse one request line (solve or command form).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let req = Json::parse(line)?;
+    if let Some(cmd) = req.opt("cmd") {
+        let name = cmd.as_str().context("\"cmd\" must be a string")?;
+        let obj = req.as_obj().context("request must be a JSON object")?;
+        if obj.len() != 1 {
+            bail!("a command request carries only the \"cmd\" key");
+        }
+        return match name {
+            "stats" => Ok(Request::Stats),
+            other => bail!("unknown cmd {other:?} (known: stats)"),
+        };
+    }
+    Ok(Request::Solve(parse_device_request(&req)?))
+}
+
+/// Parse a solve request, rejecting unknown fields by name.
+pub fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
+    let obj = req.as_obj().context("request must be a JSON object")?;
+    for key in obj.keys() {
+        if !KNOWN_FIELDS.contains(&key.as_str()) {
+            bail!(
+                "unknown field {key:?} (known fields: {})",
+                KNOWN_FIELDS.join(", ")
+            );
+        }
+    }
+    let name = req
+        .opt("name")
+        .and_then(|v| v.as_str().ok().map(str::to_string))
+        .unwrap_or_else(|| "dev".into());
+    let mut b = SearchRequest::builder();
+    if let Some(v) = req.opt("cap_gbitops") {
+        b = b.bitops_cap((v.as_f64()? * 1e9) as u64);
+    }
+    if let Some(v) = req.opt("size_cap_mb") {
+        b = b.size_cap_bytes((v.as_f64()? * 1e6) as u64);
+    }
+    if let Some(v) = req.opt("alpha") {
+        b = b.alpha(v.as_f64()?);
+    }
+    if let Some(v) = req.opt("weight_only") {
+        b = b.weight_only(v.as_bool()?);
+    }
+    if let Some(v) = req.opt("solver") {
+        b = b.solver_name(v.as_str()?);
+    }
+    if let Some(v) = req.opt("node_limit") {
+        b = b.node_limit(v.as_usize()?);
+    }
+    if let Some(v) = req.opt("time_limit_ms") {
+        b = b.time_limit(std::time::Duration::from_millis(v.as_usize()? as u64));
+    }
+    Ok(DeviceSpec { name, request: b.build()? })
+}
+
+/// The solve response object — field set fixed since PR 1.
+pub fn solve_response(out: &DevicePolicy) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("device", Json::from(out.device.as_str())),
+        (
+            "w_bits",
+            Json::arr_usize(&out.policy.w_bits.iter().map(|&b| b as usize).collect::<Vec<_>>()),
+        ),
+        (
+            "a_bits",
+            Json::arr_usize(&out.policy.a_bits.iter().map(|&b| b as usize).collect::<Vec<_>>()),
+        ),
+        ("cost", Json::Num(out.cost)),
+        ("bitops_g", Json::Num(out.bitops as f64 / 1e9)),
+        ("size_mb", Json::Num(out.size_bits as f64 / 8e6)),
+        ("solve_us", Json::Num(out.solve_us as f64)),
+        ("solver", Json::from(out.solver.as_str())),
+        ("cache_hit", Json::Bool(out.cache_hit)),
+    ])
+}
+
+/// An error response line (`{"ok": false, "error": "..."}`).
+pub fn error_line(e: &anyhow::Error) -> String {
+    error_message(&format!("{e:#}"))
+}
+
+/// An error response line from a plain message.
+pub fn error_message(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))]).to_string()
+}
+
+/// The overload rejection written to connections past `max_conns` — the
+/// line-protocol analogue of HTTP 503.
+pub fn overload_line(max_conns: usize) -> String {
+    error_message(&format!(
+        "server overloaded (503): connection limit {max_conns} reached, retry later"
+    ))
+}
+
+/// Solve one spec and render the response line (success or error) —
+/// shared by the dispatcher sweep and direct/line-oriented callers.
+pub fn respond(searcher: &FleetSearcher, spec: &DeviceSpec) -> String {
+    match searcher.search(spec) {
+        Ok(out) => solve_response(&out).to_string(),
+        Err(e) => error_line(&e),
+    }
+}
+
+/// Parse + answer one solve line (the pre-refactor `handle_line` path,
+/// kept for in-process callers and tests; `stats` needs the server
+/// dispatcher for its counters and errors here).
+pub fn handle_line(searcher: &FleetSearcher, line: &str) -> String {
+    match parse_request(line) {
+        Ok(Request::Solve(spec)) => respond(searcher, &spec),
+        Ok(Request::Stats) => {
+            error_message("the stats command is only available through a running server")
+        }
+        Err(e) => error_line(&e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::importance::IndicatorStore;
+    use crate::models::ModelMeta;
+    use crate::quant::cost::uniform_bitops;
+
+    fn meta6() -> ModelMeta {
+        crate::models::synthetic_meta(6, |i| 100_000 * (i as u64 + 1))
+    }
+
+    fn searcher() -> FleetSearcher {
+        let meta = meta6();
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        FleetSearcher::new(meta, imp)
+    }
+
+    #[test]
+    fn unknown_json_field_is_rejected_by_name() {
+        let s = searcher();
+        // classic typo: cap_gbitop (missing the final s)
+        let line = r#"{"cap_gbitop": 1.5, "alpha": 1.0}"#;
+        let resp = Json::parse(&handle_line(&s, line)).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        let err = resp.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("cap_gbitop"), "error must name the bad key: {err}");
+        assert!(err.contains("unknown field"), "{err}");
+    }
+
+    #[test]
+    fn request_can_pick_a_solver() {
+        let s = searcher();
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+        let line = format!(r#"{{"cap_gbitops": {cap_g}, "solver": "mckp"}}"#);
+        let resp = Json::parse(&handle_line(&s, &line)).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "mckp");
+    }
+
+    #[test]
+    fn stats_cmd_parses_and_rejects_extras() {
+        assert!(matches!(parse_request(r#"{"cmd": "stats"}"#).unwrap(), Request::Stats));
+        let err = parse_request(r#"{"cmd": "flush"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown cmd"), "{err:#}");
+        let err = parse_request(r#"{"cmd": "stats", "alpha": 1.0}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("only the \"cmd\" key"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_json_is_an_error_response_not_a_panic() {
+        let s = searcher();
+        let resp = Json::parse(&handle_line(&s, "this is not json")).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn overload_line_names_the_limit() {
+        let line = overload_line(64);
+        let resp = Json::parse(&line).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("503") && err.contains("64"), "{err}");
+    }
+}

@@ -1,0 +1,292 @@
+//! The event-driven fleet server: a nonblocking connection multiplexer
+//! feeding a shared request queue.
+//!
+//! One **multiplexer thread** owns the listener and every connection:
+//! each tick it accepts new sockets (rejecting past
+//! [`ServeConfig::max_conns`] with a 503-style line), sweeps readiness
+//! over the nonblocking streams ([`super::conn::Conn`]), pushes decoded
+//! request lines into the shared queue, routes finished responses back
+//! into per-connection write buffers, and reaps finished connections.
+//! The tick sleeps only when nothing progressed, so the loop is idle-cheap
+//! and the stop flag is observed within a millisecond — `shutdown()`
+//! returns promptly even with idle keep-alive clients attached (the old
+//! thread-per-connection design blocked forever on their reads).
+//!
+//! One **dispatcher thread** ([`super::dispatch::Dispatcher`]) drains the
+//! queue, coalescing everything in flight into batched sweeps.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use super::conn::Conn;
+use super::dispatch::Dispatcher;
+use super::protocol;
+use super::FleetSearcher;
+
+/// Knobs for the serving stack.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Connections beyond this are rejected with a 503-style error line.
+    pub max_conns: usize,
+    /// How long the dispatcher lingers after the first queued request to
+    /// coalesce whatever else is in flight into the same batch.
+    pub coalesce_window: Duration,
+    /// Run batched sweeps on the lazily-started persistent worker pool
+    /// (shared across all connections) instead of per-batch scoped spawn.
+    pub persistent_pool: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_conns: 256,
+            coalesce_window: Duration::from_micros(200),
+            persistent_pool: true,
+        }
+    }
+}
+
+/// Serving counters, updated by the multiplexer and dispatcher.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served: AtomicUsize,
+    pub conns_open: AtomicUsize,
+    pub conns_total: AtomicUsize,
+    pub overloaded: AtomicUsize,
+    pub batches: AtomicUsize,
+    pub batch_last: AtomicUsize,
+    pub batch_max: AtomicUsize,
+}
+
+/// A point-in-time copy of [`ServerStats`] plus the queue depth.
+#[derive(Debug, Clone, Copy)]
+pub struct StatsSnapshot {
+    /// Responses delivered to connections.
+    pub served: usize,
+    pub conns_open: usize,
+    pub conns_total: usize,
+    /// Connections rejected at the `max_conns` limit.
+    pub overloaded: usize,
+    /// Coalesced batches dispatched.
+    pub batches: usize,
+    /// Size of the most recent coalesced batch.
+    pub coalesced_batch_size: usize,
+    /// Largest coalesced batch so far.
+    pub coalesced_batch_max: usize,
+    /// Requests decoded but not yet picked up by the dispatcher.
+    pub queue_depth: usize,
+}
+
+impl ServerStats {
+    pub(crate) fn snapshot(&self, queue_depth: usize) -> StatsSnapshot {
+        StatsSnapshot {
+            served: self.served.load(Ordering::Relaxed),
+            conns_open: self.conns_open.load(Ordering::Relaxed),
+            conns_total: self.conns_total.load(Ordering::Relaxed),
+            overloaded: self.overloaded.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            coalesced_batch_size: self.batch_last.load(Ordering::Relaxed),
+            coalesced_batch_max: self.batch_max.load(Ordering::Relaxed),
+            queue_depth,
+        }
+    }
+}
+
+/// One decoded request line awaiting dispatch.
+pub(crate) struct WorkItem {
+    pub conn: u64,
+    pub line: String,
+}
+
+/// State shared between the multiplexer and the dispatcher.
+pub(crate) struct Shared {
+    pub stop: AtomicBool,
+    pub requests: Mutex<VecDeque<WorkItem>>,
+    pub req_cv: Condvar,
+    pub responses: Mutex<VecDeque<(u64, String)>>,
+    pub stats: ServerStats,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            stop: AtomicBool::new(false),
+            requests: Mutex::new(VecDeque::new()),
+            req_cv: Condvar::new(),
+            responses: Mutex::new(VecDeque::new()),
+            stats: ServerStats::default(),
+        }
+    }
+}
+
+/// Sleep per idle multiplexer tick; also bounds shutdown latency.
+const POLL_IDLE: Duration = Duration::from_millis(1);
+
+/// Server handle: inspect stats or signal shutdown.
+pub struct FleetServer {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    mux: Option<std::thread::JoinHandle<()>>,
+    disp: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FleetServer {
+    /// Bind and serve with the default [`ServeConfig`].
+    pub fn spawn(searcher: FleetSearcher, bind: &str) -> Result<FleetServer> {
+        Self::spawn_with(searcher, bind, ServeConfig::default())
+    }
+
+    /// Bind and serve on two background threads (multiplexer + dispatcher).
+    pub fn spawn_with(
+        searcher: FleetSearcher,
+        bind: &str,
+        cfg: ServeConfig,
+    ) -> Result<FleetServer> {
+        ensure!(cfg.max_conns >= 1, "max_conns must be >= 1");
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared::new());
+        let mux = {
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("fleet-mux".into())
+                .spawn(move || mux_loop(listener, shared, cfg))?
+        };
+        let disp = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("fleet-dispatch".into())
+                .spawn(move || Dispatcher::new(shared, searcher, cfg).run())
+        };
+        let disp = match disp {
+            Ok(h) => h,
+            Err(e) => {
+                // Don't leak a running mux (and the bound port) that
+                // nothing will ever answer or stop.
+                shared.stop.store(true, Ordering::Relaxed);
+                let _ = mux.join();
+                return Err(e).context("spawn fleet dispatcher");
+            }
+        };
+        Ok(FleetServer { addr, shared, mux: Some(mux), disp: Some(disp) })
+    }
+
+    /// Serving counters (the same numbers `{"cmd":"stats"}` reports).
+    pub fn stats(&self) -> StatsSnapshot {
+        let depth = self.shared.requests.lock().unwrap().len();
+        self.shared.stats.snapshot(depth)
+    }
+
+    /// Responses delivered so far.
+    pub fn served(&self) -> usize {
+        self.shared.stats.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop both threads and return once they have exited.  Open
+    /// connections are shut down; requests still queued are dropped.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.req_cv.notify_all();
+        if let Some(h) = self.mux.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.disp.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut next_id: u64 = 0;
+    while !shared.stop.load(Ordering::Relaxed) {
+        let mut progress = false;
+
+        // Accept whatever is pending, enforcing the connection cap.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progress = true;
+                    if conns.len() >= cfg.max_conns {
+                        shared.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                        reject_overloaded(stream, cfg.max_conns);
+                    } else if let Ok(c) = Conn::new(stream, next_id) {
+                        next_id += 1;
+                        shared.stats.conns_total.fetch_add(1, Ordering::Relaxed);
+                        conns.push(c);
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break, // transient accept failure; retry next tick
+            }
+        }
+
+        // Readiness sweep: decode complete lines into the request queue
+        // (collected outside the lock — reads are syscalls).
+        let mut new_items: Vec<WorkItem> = Vec::new();
+        for c in conns.iter_mut() {
+            for line in c.read_ready() {
+                c.inflight += 1;
+                new_items.push(WorkItem { conn: c.id, line });
+            }
+        }
+        if !new_items.is_empty() {
+            progress = true;
+            shared.requests.lock().unwrap().extend(new_items);
+            shared.req_cv.notify_all();
+        }
+
+        // Route finished responses into per-connection write buffers.
+        // Take the whole queue in one lock acquisition and route outside
+        // it — the dispatcher contends on this mutex to push the next
+        // batch, and a per-response scan over all conns would hold it for
+        // O(batch * conns).
+        let pending = std::mem::take(&mut *shared.responses.lock().unwrap());
+        if !pending.is_empty() {
+            progress = true;
+            let index: HashMap<u64, usize> =
+                conns.iter().enumerate().map(|(i, c)| (c.id, i)).collect();
+            for (id, line) in pending {
+                if let Some(&i) = index.get(&id) {
+                    let c = &mut conns[i];
+                    c.queue_response(&line);
+                    c.inflight -= 1;
+                    shared.stats.served.fetch_add(1, Ordering::Relaxed);
+                }
+                // connection already gone: drop the response
+            }
+        }
+
+        // Flush and reap.
+        for c in conns.iter_mut() {
+            c.flush();
+        }
+        conns.retain(|c| !c.done());
+        shared.stats.conns_open.store(conns.len(), Ordering::Relaxed);
+
+        if !progress {
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+    // Shutdown: force every socket down so attached clients see EOF.
+    for c in &conns {
+        c.shutdown();
+    }
+}
+
+/// Best-effort 503 line to a connection over the cap, then drop it.
+fn reject_overloaded(stream: TcpStream, max_conns: usize) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(50)));
+    let mut s = stream;
+    let _ = s.write_all(protocol::overload_line(max_conns).as_bytes());
+    let _ = s.write_all(b"\n");
+    let _ = s.shutdown(std::net::Shutdown::Both);
+}

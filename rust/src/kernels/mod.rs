@@ -14,7 +14,10 @@
 //! * [`pool`] — the crate-wide [`pool::WorkerPool`]: index-ordered
 //!   `parallel_for` (deterministic reduction) and disjoint-chunk
 //!   `for_each_chunk` sharding.  Thread count comes from `--threads` /
-//!   `LIMPQ_THREADS` / core count.
+//!   `LIMPQ_THREADS` / core count.  [`pool::PersistentPool`] offers the
+//!   same `parallel_for` shape over lazily-started long-lived workers for
+//!   serving hot loops (the fleet dispatcher), where per-region scoped
+//!   spawn would recur forever.
 //!
 //! Consumers: `quant::int_infer` (packed integer inference),
 //! `importance::JointTrainer` (the n+1 atomic passes run concurrently
@@ -28,6 +31,6 @@ pub mod gemm;
 pub mod pool;
 pub mod scratch;
 
-pub use gemm::{gemm_f32, gemm_i64, PackedF32, PackedI32};
-pub use pool::{set_global_threads, WorkerPool};
+pub use gemm::{gemm_f32, gemm_i64, gemm_i8, PackedF32, PackedI32, PackedI8};
+pub use pool::{persistent_global, set_global_threads, PersistentPool, WorkerPool};
 pub use scratch::{with_thread_scratch, ScratchArena};

@@ -9,13 +9,17 @@
 //!
 //! Design choices:
 //!
-//! * **Scoped spawn, not persistent threads.**  Every parallel region runs
-//!   under `std::thread::scope`, so closures may borrow stack data with no
-//!   `'static` bound and no unsafe lifetime laundering.  Spawn cost is
-//!   tens of microseconds — negligible for the millisecond-scale regions
-//!   this crate parallelizes, and callers below a work threshold take the
-//!   sequential branch anyway.  (A persistent pool is on the ROADMAP
-//!   backlog if profiling ever shows spawn overhead.)
+//! * **Scoped spawn by default, persistent workers for serving.**
+//!   [`WorkerPool`] runs every parallel region under `std::thread::scope`,
+//!   so closures may borrow stack data with no `'static` bound and no
+//!   unsafe lifetime laundering.  Spawn cost is tens of microseconds —
+//!   negligible for the millisecond-scale regions this crate parallelizes,
+//!   and callers below a work threshold take the sequential branch anyway.
+//!   Long-lived serving paths (the fleet dispatcher coalesces requests
+//!   from many connections into one sweep per tick) instead use
+//!   [`PersistentPool`]: lazily-started long-lived workers behind the same
+//!   `parallel_for` shape, trading a `'static` bound (callers share data
+//!   through `Arc`s) for zero per-region spawn cost.
 //! * **Determinism by construction.**  [`WorkerPool::parallel_for`]
 //!   returns results in index order regardless of completion order, so a
 //!   caller that reduces them in a fixed sequential order produces
@@ -29,8 +33,9 @@
 //!
 //! [`JointTrainer`]: crate::importance::JointTrainer
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use anyhow::{ensure, Result};
 
@@ -172,6 +177,206 @@ impl Default for WorkerPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Persistent pool
+// ---------------------------------------------------------------------------
+
+/// One queued parallel region for the persistent workers.
+struct Job {
+    /// Erased per-index closure (writes its result into a caller slot).
+    run: Box<dyn Fn(usize) + Send + Sync>,
+    n: usize,
+    /// Dynamic-stealing cursor: the next index to claim.
+    next: AtomicUsize,
+    /// Indices not yet finished; the worker that takes it to zero signals
+    /// `done`.
+    pending: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Claim and run indices until the cursor is exhausted.  Runs on
+    /// workers *and* the submitting thread (which helps, so a job always
+    /// makes progress even while every worker is busy elsewhere).
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            // A panicking closure must not kill the long-lived worker or
+            // hang the submitter: the slot stays empty, which the
+            // submitter reports when it collects results.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (self.run)(i)));
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.done_cv.wait(done).unwrap();
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    job_cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// Long-lived worker threads behind the same `parallel_for` shape as
+/// [`WorkerPool`] — the ROADMAP's "persistent worker threads" item.
+///
+/// Workers are **lazily started** on the first parallel region and then
+/// reused for every subsequent call, so a serving hot loop (the fleet
+/// dispatcher runs one coalesced sweep per tick, indefinitely) pays the
+/// thread-spawn cost once per process instead of once per region.  The
+/// price relative to the scoped pool is a `'static` bound on the closure
+/// and its results: callers share inputs through `Arc`s instead of
+/// borrowing the stack.  Results still come back **in index order**, and
+/// the submitting thread helps drain the job, so a region completes even
+/// if every worker is occupied.
+pub struct PersistentPool {
+    shared: Arc<PoolShared>,
+    threads: usize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PersistentPool {
+    /// Pool with an explicit worker count (>= 1; 0 is clamped to 1).
+    /// No threads start until the first [`PersistentPool::parallel_for`].
+    pub fn new(threads: usize) -> PersistentPool {
+        PersistentPool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(VecDeque::new()),
+                job_cv: Condvar::new(),
+                stop: AtomicBool::new(false),
+            }),
+            threads: threads.max(1),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Whether the lazy workers have been spawned yet.
+    pub fn started(&self) -> bool {
+        !self.workers.lock().unwrap().is_empty()
+    }
+
+    fn ensure_started(&self) {
+        let mut w = self.workers.lock().unwrap();
+        if !w.is_empty() {
+            return;
+        }
+        for wi in 0..self.threads {
+            let shared = self.shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("limpq-worker-{wi}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn persistent worker");
+            w.push(h);
+        }
+    }
+
+    /// Run `f(0..n)` across the persistent workers and return the results
+    /// **in index order**, exactly like [`WorkerPool::parallel_for`].
+    /// With one thread or one item this degenerates to a sequential loop.
+    pub fn parallel_for<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        self.ensure_started();
+        let slots: Arc<Vec<Mutex<Option<T>>>> = Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let write = slots.clone();
+        let job = Arc::new(Job {
+            run: Box::new(move |i| {
+                let v = f(i);
+                *write[i].lock().unwrap() = Some(v);
+            }),
+            n,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            // Garbage-collect jobs whose indices are all claimed; their
+            // submitters already hold an Arc and will observe completion.
+            while q.front().is_some_and(|j| j.exhausted()) {
+                q.pop_front();
+            }
+            q.push_back(job.clone());
+        }
+        self.shared.job_cv.notify_all();
+        job.work(); // the submitter helps
+        job.wait(); // then blocks for straggler indices on the workers
+        slots
+            .iter()
+            .map(|m| m.lock().unwrap().take().expect("persistent worker dropped a slot"))
+            .collect()
+    }
+}
+
+impl Drop for PersistentPool {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.job_cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                while q.front().is_some_and(|j| j.exhausted()) {
+                    q.pop_front();
+                }
+                if let Some(j) = q.front() {
+                    break j.clone();
+                }
+                q = shared.job_cv.wait(q).unwrap();
+            }
+        };
+        job.work();
+    }
+}
+
+/// Process-wide lazily-started persistent pool, sized like
+/// [`WorkerPool::global`] at first use.  The fleet dispatcher's default
+/// executor — one set of workers shared across every connection.
+pub fn persistent_global() -> &'static PersistentPool {
+    static POOL: OnceLock<PersistentPool> = OnceLock::new();
+    POOL.get_or_init(|| PersistentPool::new(WorkerPool::global().threads()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +434,55 @@ mod tests {
         // Note: we do not set a global here — other tests in the process
         // read WorkerPool::global() and must see the env/core default.
         assert!(WorkerPool::global().threads() >= 1);
+    }
+
+    #[test]
+    fn persistent_parallel_for_matches_sequential() {
+        let pool = PersistentPool::new(4);
+        for n in [0usize, 1, 2, 7, 64, 103] {
+            let out = pool.parallel_for(n, |i| i * 3 + 1);
+            assert_eq!(out, (0..n).map(|i| i * 3 + 1).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn persistent_pool_is_lazy_and_reuses_threads() {
+        use std::collections::HashSet;
+        let pool = PersistentPool::new(3);
+        assert!(!pool.started(), "workers must not spawn before first use");
+        let ids1: HashSet<std::thread::ThreadId> =
+            pool.parallel_for(64, |_| std::thread::current().id()).into_iter().collect();
+        assert!(pool.started());
+        let ids2: HashSet<std::thread::ThreadId> =
+            pool.parallel_for(64, |_| std::thread::current().id()).into_iter().collect();
+        // Long-lived workers: across both calls at most threads + the
+        // submitting thread ever touch a slot (a scoped pool would mint
+        // fresh thread ids per region).
+        let all: HashSet<_> = ids1.union(&ids2).collect();
+        assert!(all.len() <= 3 + 1, "saw {} distinct threads", all.len());
+    }
+
+    #[test]
+    fn persistent_single_thread_runs_inline() {
+        let pool = PersistentPool::new(1);
+        let out = pool.parallel_for(5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+        assert!(!pool.started(), "single-thread pool never needs workers");
+    }
+
+    #[test]
+    fn persistent_pool_shares_arc_data() {
+        let data: Arc<Vec<u64>> = Arc::new((0..257).collect());
+        let pool = PersistentPool::new(4);
+        let d = data.clone();
+        let out = pool.parallel_for(data.len(), move |i| d[i] * 2);
+        assert_eq!(out, data.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn persistent_global_is_usable() {
+        let pool = persistent_global();
+        assert!(pool.threads() >= 1);
+        assert_eq!(pool.parallel_for(8, |i| i), (0..8).collect::<Vec<_>>());
     }
 }

@@ -29,8 +29,12 @@
 //!   makes repeated fleet/device queries O(1) ([`engine::CacheStats`]
 //!   reports hit rates for `limpq serve`).
 //!
-//! [`fleet::FleetSearcher`] is a thin fleet-facing wrapper: named device
-//! requests, a thread-pooled batch sweep, and the TCP line protocol.
+//! [`fleet`] is the serving stack around it: [`fleet::FleetSearcher`]
+//! answers named device requests and batch sweeps in-process, and
+//! [`fleet::FleetServer`] serves the TCP line protocol event-driven — a
+//! nonblocking connection multiplexer feeding a coalescing dispatcher
+//! over a persistent worker pool, with identical concurrent cold queries
+//! single-flighted onto one engine solve.
 //!
 //! ## Compute: the [`kernels`] module
 //!

@@ -15,7 +15,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::kernels::gemm::{gemm_i64, PackedI32};
+use crate::kernels::gemm::{gemm_i8, PackedI8};
 use crate::kernels::pool::WorkerPool;
 use crate::kernels::scratch::{with_thread_scratch, ScratchArena};
 use crate::models::ModelMeta;
@@ -29,9 +29,11 @@ pub struct IntDense {
     /// Quantized weights, row-major [in, out], stored as i32 codes
     /// (range fits the layer's w_bits).
     pub wq: Vec<i32>,
-    /// The same codes pre-transposed/packed `[out, in]` once at pack time,
-    /// so the GEMM inner loop is unit-stride (`kernels::gemm`).
-    pub wt: PackedI32,
+    /// The same codes pre-transposed/packed `[out, in]` once at pack time
+    /// **and narrowed to `i8`** (every supported bit-width fits), so the
+    /// GEMM inner loop is unit-stride over a weight stream 4x denser in
+    /// cache than the `i32` codes (`kernels::gemm::PackedI8`).
+    pub wt: PackedI8,
     pub in_f: usize,
     pub out_f: usize,
     pub bias: Vec<f32>,
@@ -73,6 +75,15 @@ impl IntModel {
                 .ok_or_else(|| anyhow::anyhow!("{}: missing bias param", q.name))?;
             ensure!(wp.shape.len() == 2, "{}: weight must be 2-D", q.name);
             let (in_f, out_f) = (wp.shape[0], wp.shape[1]);
+            // PackedI8 narrows codes to i8; weight_bounds(8) = [-128, 127]
+            // fits exactly, anything wider must be a recoverable error
+            // (pack is the fallible API — from_row_major just asserts).
+            ensure!(
+                policy.w_bits[q.index] <= 8,
+                "{}: w_bits {} exceeds the 8-bit limit of i8 code packing",
+                q.name,
+                policy.w_bits[q.index]
+            );
             let (wmin, wmax) = weight_bounds(policy.w_bits[q.index]);
             let (amin, amax) = act_bounds(policy.a_bits[q.index]);
             let s_w = sw[q.index].max(1e-9);
@@ -81,7 +92,7 @@ impl IntModel {
                 .iter()
                 .map(|&v| (v / s_w).clamp(wmin, wmax).round_ties_even() as i32)
                 .collect();
-            let wt = PackedI32::from_row_major(&wq, in_f, out_f);
+            let wt = PackedI8::from_row_major(&wq, in_f, out_f);
             layers.push(IntDense {
                 name: q.name.clone(),
                 wq,
@@ -165,7 +176,7 @@ impl IntModel {
             quantize_codes_into(&act, l.s_a, l.a_qmin, l.a_qmax, &mut codes);
             acc.clear();
             acc.resize(batch * l.out_f, 0);
-            gemm_i64(&codes, batch, &l.wt, &mut acc, pool);
+            gemm_i8(&codes, batch, &l.wt, &mut acc, pool);
             next.clear();
             next.resize(batch * l.out_f, 0.0);
             for b in 0..batch {
@@ -307,6 +318,34 @@ mod tests {
         for (a, b) in int_out.iter().zip(&fq_out) {
             assert!((a - b).abs() < 1e-4, "int {a} vs fq {b}");
         }
+    }
+
+    #[test]
+    fn pack_rejects_bit_widths_beyond_i8_with_an_error() {
+        // A pinned 16-bit layer passes BitConfig::validate (pin_bits is an
+        // arbitrary u8), so pack() must reject it as a recoverable error —
+        // not hit the assert inside PackedI8::from_row_major.
+        let text = r#"{"name":"widemlp","param_size":53,"n_qlayers":2,
+          "input_shape":[6],"n_classes":3,
+          "train_batch":4,"eval_batch":8,"serve_batch":2,
+          "bit_options":[2,3,4,5,6],"pin_bits":16,
+          "params":[
+            {"name":"fc1.w","shape":[6,5],"offset":0,"size":30,"init":"he_dense","fan_in":6},
+            {"name":"fc1.b","shape":[5],"offset":30,"size":5,"init":"zeros","fan_in":6},
+            {"name":"fc2.w","shape":[5,3],"offset":35,"size":15,"init":"he_dense","fan_in":5},
+            {"name":"fc2.b","shape":[3],"offset":50,"size":3,"init":"zeros","fan_in":5}],
+          "qlayers":[
+            {"index":0,"name":"fc1","kind":"dense","macs":30,"w_numel":30,"pinned":true},
+            {"index":1,"name":"fc2","kind":"dense","macs":15,"w_numel":15,"pinned":false}],
+          "artifacts":{}}"#;
+        let meta = ModelMeta::from_json(&Json::parse(text).unwrap(), Path::new("/tmp")).unwrap();
+        let mut rng = Rng::new(5);
+        let flat = meta.init_params(&mut rng);
+        let policy = BitConfig { w_bits: vec![16, 4], a_bits: vec![16, 4] };
+        policy.validate(&meta).unwrap();
+        let err = IntModel::pack(&meta, &flat, &policy, &[0.07, 0.05], &[0.06, 0.08])
+            .expect_err("16-bit codes cannot pack to i8");
+        assert!(format!("{err:#}").contains("8-bit limit"), "{err:#}");
     }
 
     #[test]

@@ -129,6 +129,34 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One machine-readable `BENCH_*.json` record — the one schema every
+/// bench binary emits (`op`, `size`, `threads`, `ns_per_iter`,
+/// `throughput` = `items`/sec at the measured mean), so the CI
+/// regression-diff job never sees two shapes drift apart.
+pub fn json_record(
+    op: &str,
+    size: &str,
+    threads: usize,
+    stats: &BenchStats,
+    items: f64,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let ns = stats.mean.as_nanos() as f64;
+    Json::obj(vec![
+        ("op", Json::Str(op.to_string())),
+        ("size", Json::Str(size.to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("ns_per_iter", Json::Num(ns)),
+        ("throughput", Json::Num(items / (ns / 1e9))),
+    ])
+}
+
+/// The `--json PATH` argv flag shared by the bench binaries.
+pub fn json_out_arg() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1).cloned())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,22 +1,31 @@
 #!/usr/bin/env bash
-# Kernel / pipeline benchmark runner with a machine-readable artifact.
+# Kernel / pipeline / fleet-serving benchmark runner with machine-readable
+# artifacts.
 #
 # Runs the bench targets and writes BENCH_kernels.json (op, size, threads,
-# ns_per_iter, throughput) so the perf trajectory is tracked from PR 2
-# onward — compare the file across commits to catch regressions.
+# ns_per_iter, throughput) plus BENCH_fleet.json (queries/sec through the
+# event-driven TCP serving stack at 1/8/64 concurrent clients, cold vs
+# warm cache) so the perf trajectory is tracked from PR 2 onward —
+# compare the files across commits to catch regressions.
 #
-# Usage: tools/bench.sh [--out FILE] [--quick]
-#   --out FILE   where to write the kernel records (default BENCH_kernels.json)
-#   --quick      short budgets (the CI smoke mode; also BENCH_QUICK=1)
+# Usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--quick]
+#   --out FILE        where to write the kernel records (default BENCH_kernels.json)
+#   --fleet-out FILE  where to write the fleet records (default BENCH_fleet.json)
+#   --quick           short budgets (the CI smoke mode; also BENCH_QUICK=1)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 OUT="BENCH_kernels.json"
+FLEET_OUT="BENCH_fleet.json"
 while [[ $# -gt 0 ]]; do
     case "$1" in
         --out)
             OUT="$2"
+            shift 2
+            ;;
+        --fleet-out)
+            FLEET_OUT="$2"
             shift 2
             ;;
         --quick)
@@ -24,7 +33,7 @@ while [[ $# -gt 0 ]]; do
             shift
             ;;
         *)
-            echo "unknown argument: $1 (usage: tools/bench.sh [--out FILE] [--quick])" >&2
+            echo "unknown argument: $1 (usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--quick])" >&2
             exit 2
             ;;
     esac
@@ -33,6 +42,9 @@ done
 echo "==> cargo bench --bench runtime_exec (kernel + joint-training tiers)"
 cargo bench --bench runtime_exec -- --json "$OUT"
 
+echo "==> cargo bench --bench fleet_serving (event-driven serving tier)"
+cargo bench --bench fleet_serving -- --json "$FLEET_OUT"
+
 echo "==> cargo bench --bench data_pipeline"
 cargo bench --bench data_pipeline
 
@@ -40,4 +52,9 @@ if [[ ! -s "$OUT" ]]; then
     echo "bench.sh: $OUT was not produced" >&2
     exit 1
 fi
+if [[ ! -s "$FLEET_OUT" ]]; then
+    echo "bench.sh: $FLEET_OUT was not produced" >&2
+    exit 1
+fi
 echo "kernel bench records -> $OUT"
+echo "fleet bench records  -> $FLEET_OUT"

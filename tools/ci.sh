@@ -43,8 +43,8 @@ else
     echo "rustfmt not installed; skipping format check"
 fi
 
-echo "==> bench smoke (quick kernel tier)"
-bash tools/bench.sh --quick --out BENCH_kernels.json
+echo "==> bench smoke (quick kernel + fleet-serving tiers)"
+bash tools/bench.sh --quick --out BENCH_kernels.json --fleet-out BENCH_fleet.json
 
 # CHANGES.md append discipline: any change relative to the main branch
 # must carry a CHANGES.md update, so the next session knows what landed.
