@@ -1,8 +1,11 @@
 //! Fleet search (§4.3's z-device deployment story): one-time importance
 //! indicators answer per-device MPQ queries both in-process and over the
-//! TCP line-protocol server.
+//! TCP line-protocol server — which serves *every* artifact model from
+//! one registry (lazy loads, LRU-by-bytes eviction, per-model caches).
 //!
 //! Run:  make artifacts && cargo run --release --example fleet_search
+
+use std::sync::Arc;
 
 use anyhow::Result;
 use limpq::data::{generate, SynthConfig};
@@ -11,6 +14,7 @@ use limpq::fleet::{query, DeviceSpec, FleetSearcher, FleetServer, ServeConfig};
 use limpq::importance::IndicatorStore;
 use limpq::models::ModelMeta;
 use limpq::quant::cost::uniform_bitops;
+use limpq::registry::{DirSource, ModelRegistry, RegistryConfig};
 use limpq::util::json::Json;
 use limpq::util::rng::Rng;
 
@@ -65,10 +69,18 @@ fn main() -> Result<()> {
     );
 
     // Same thing over the wire, through the event-driven serving stack:
-    // nonblocking multiplexer -> request queue -> coalescing dispatcher
-    // (persistent worker pool) -> single-flight engine.
-    let server = FleetServer::spawn_with(
-        searcher,
+    // nonblocking multiplexer -> two-lane queues -> coalescing dispatcher
+    // (persistent worker pool) -> per-model single-flight engines.  The
+    // server fronts a registry over the whole artifacts directory:
+    // every *_meta.json is servable, models load lazily on first use,
+    // and the 256 MB budget evicts least-recently-used models.
+    let registry = Arc::new(ModelRegistry::new(
+        Box::new(DirSource::new(std::path::Path::new("artifacts"))),
+        RegistryConfig::default().mem_budget_mb(256),
+    ));
+    let server = FleetServer::spawn_registry(
+        registry,
+        "mobilenetv1s",
         "127.0.0.1:0",
         ServeConfig {
             coalesce_window: std::time::Duration::from_micros(500),
@@ -113,9 +125,40 @@ fn main() -> Result<()> {
         cached
     );
 
-    // Operator introspection over the same protocol.
+    // Operator introspection over the same protocol: serving counters
+    // plus per-model registry accounting (resident bytes, loads,
+    // evictions).
     let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))]))?;
     println!("stats   : {stats}");
+
+    // Registry control over the same protocol: list the catalogue, route
+    // a solve to a second model (lazy-loaded on first use), then evict
+    // it and watch the next solve transparently reload it.
+    let models = query(&server.addr, &Json::obj(vec![("cmd", Json::from("models"))]))?;
+    println!("models  : {models}");
+    if let Some(other) =
+        server.registry().available().into_iter().find(|m| m != "mobilenetv1s")
+    {
+        let entry = server.registry().get(&other)?;
+        let cap_g = uniform_bitops(entry.meta(), 4, 4) as f64 / 1e9;
+        let req = Json::obj(vec![
+            ("model", Json::from(other.as_str())),
+            ("name", Json::from("edge-tpu")),
+            ("cap_gbitops", Json::Num(cap_g)),
+        ]);
+        let resp = query(&server.addr, &req)?;
+        println!("\ncross-model solve on {other:?}: {resp}");
+        let evicted = query(
+            &server.addr,
+            &Json::obj(vec![("cmd", Json::from("evict")), ("model", Json::from(other.as_str()))]),
+        )?;
+        println!("evict   : {evicted}");
+        let resp = query(&server.addr, &req)?;
+        println!(
+            "solve-after-evict reloaded {other:?} (cold cache: cache_hit {})",
+            resp.get("cache_hit")?
+        );
+    }
     server.shutdown();
     Ok(())
 }

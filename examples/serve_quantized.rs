@@ -11,8 +11,8 @@ use anyhow::Result;
 use limpq::coordinator::checkpoint::Cache;
 use limpq::data::{generate, SynthConfig};
 use limpq::importance::IndicatorStore;
-use limpq::quant::int_infer::IntModel;
 use limpq::quant::BitConfig;
+use limpq::registry::{ModelAssets, ModelEntry, RegistryConfig};
 use limpq::runtime::{pjrt::PjrtBackend, ModelBackend};
 use limpq::util::rng::Rng;
 
@@ -84,9 +84,26 @@ fn main() -> Result<()> {
 
     // Integer-domain deployment path: the same policy packed into
     // i8-narrowed codes (4x cache density vs i32) served through the
-    // exact integer GEMM.  Dense (MLP-shaped) models only; conv models
+    // exact integer GEMM.  Packing goes through the registry's one
+    // entry point — a resident ModelEntry owns the flat weights and the
+    // indicator store, and ModelEntry::int_model gathers the policy's
+    // step sizes from that store (exactly how the fleet server would
+    // serve this model).  Dense (MLP-shaped) models only; conv models
     // report the skip.
-    match IntModel::pack(&meta, &flat, &policy, &sw, &sa) {
+    let store = cache
+        .load_indicators(&model)?
+        .unwrap_or_else(|| IndicatorStore::init_stats(&meta, &flat));
+    let entry = ModelEntry::build(
+        &model,
+        ModelAssets { meta: meta.clone(), store, flat: Some(flat.clone()) },
+        &RegistryConfig::default(),
+    );
+    println!(
+        "registry entry {:?}: {:.1} KiB resident (weights + indicators + engine cache)",
+        entry.name(),
+        entry.bytes() as f64 / 1024.0
+    );
+    match entry.int_model(&policy) {
         Ok(int_model) => {
             let n = data.labels.len();
             let t = std::time::Instant::now();

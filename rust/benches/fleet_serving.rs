@@ -1,7 +1,11 @@
 //! Fleet-serving throughput bench: queries/sec through the event-driven
 //! TCP stack (multiplexer → coalescing dispatcher → single-flight
 //! engine) at 1, 8, and 64 concurrent clients, cold vs warm policy
-//! cache.  Artifact-free: runs on a synthetic model meta, so the serving
+//! cache.  A second tier measures the multi-model registry: round-robin
+//! queries over 2 and 8 resident models (`fleet_multi_hit`) and the same
+//! round-robin under a memory budget that only fits half the set, so
+//! every access is an LRU evict + reload (`fleet_multi_reload`).
+//! Artifact-free: runs on a synthetic model meta, so the serving
 //! machinery — not the solver — dominates what is measured (requests pin
 //! the fast `greedy` solver).
 //!
@@ -15,6 +19,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use limpq::fleet::{FleetSearcher, FleetServer, ServeConfig};
@@ -22,6 +27,7 @@ use limpq::importance::IndicatorStore;
 use limpq::kernels::WorkerPool;
 use limpq::models::synthetic_meta;
 use limpq::quant::cost::uniform_bitops;
+use limpq::registry::{ModelRegistry, RegistryConfig, StaticSource};
 use limpq::util::bench::{json_out_arg, json_record, Bench, BenchStats};
 use limpq::util::json::Json;
 
@@ -74,6 +80,46 @@ fn volley(
             });
         }
     });
+}
+
+/// `nmodels` identically-shaped synthetic models m0..m{n-1}; entries
+/// rebuild from assets on every load, so an evict/reload cycle costs
+/// what a real reload would (importance + engine construction).
+fn multi_source(nmodels: usize) -> StaticSource {
+    let mut src = StaticSource::new();
+    for m in 0..nmodels {
+        let meta = synthetic_meta(8, |i| 50_000 * (i as u64 + 1));
+        let store = IndicatorStore::init_uniform(&meta);
+        src = src.with_assets(&format!("m{m}"), meta, store, None);
+    }
+    src
+}
+
+/// One client, `queries` sequential solves round-robining the models —
+/// sequential on purpose: with cached policies the solve is O(1), so the
+/// registry lookup (hit) or evict+reload (thrash) dominates.
+fn multi_volley(addr: std::net::SocketAddr, nmodels: usize, queries: usize, base: u64) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for q in 0..queries {
+        let line = format!(
+            "{{\"model\": \"m{}\", \"cap_gbitops\": {}, \"solver\": \"greedy\"}}\n",
+            q % nmodels,
+            base as f64 / 1e9
+        );
+        writer.write_all(line.as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let ok = Json::parse(resp.trim())
+            .expect("parse response")
+            .get("ok")
+            .unwrap()
+            .as_bool()
+            .unwrap();
+        assert!(ok, "serve error: {resp}");
+    }
 }
 
 fn main() {
@@ -132,6 +178,53 @@ fn main() {
         sv.conns_total
     );
     server.shutdown();
+
+    // Multi-model registry tier: hit (everything resident) vs reload
+    // (budget fits half the set, so round-robin access thrashes the LRU
+    // and every query pays an evict + rebuild).
+    let probe = ModelRegistry::new(Box::new(multi_source(1)), RegistryConfig::default());
+    let model_bytes = probe.get("m0").expect("probe model").bytes();
+    for &nmodels in &[2usize, 8] {
+        let queries = nmodels * if quick { 2 } else { 8 };
+        for mode in ["hit", "reload"] {
+            let rcfg = match mode {
+                "hit" => RegistryConfig::default(),
+                _ => RegistryConfig {
+                    mem_budget: Some(model_bytes * (nmodels / 2) + 64),
+                    ..RegistryConfig::default()
+                },
+            };
+            let registry = Arc::new(ModelRegistry::new(Box::new(multi_source(nmodels)), rcfg));
+            let server =
+                FleetServer::spawn_registry(registry, "m0", "127.0.0.1:0", ServeConfig::default())
+                    .expect("spawn multi-model server");
+            let addr = server.addr;
+            // Unmeasured settle pass: in hit mode it loads every model
+            // and primes each policy cache; in reload mode it reaches
+            // the steady thrash state.
+            multi_volley(addr, nmodels, queries, base);
+            let stats = bench.run(&format!("fleet_multi_{mode}_m{nmodels}x{queries}"), || {
+                multi_volley(addr, nmodels, queries, base);
+            });
+            let rs = server.registry().stats();
+            println!(
+                "fleet multi {mode} @ {nmodels} models: {:.0} queries/sec \
+                 ({} resident, {} loads, {} evictions)",
+                queries as f64 / stats.mean.as_secs_f64(),
+                rs.models.len(),
+                rs.loads,
+                rs.evictions
+            );
+            records.push(record(
+                &format!("fleet_multi_{mode}"),
+                &format!("models={nmodels}"),
+                threads,
+                &stats,
+                queries as f64,
+            ));
+            server.shutdown();
+        }
+    }
 
     if let Some(path) = &json_path {
         std::fs::write(path, Json::Arr(records).to_string()).expect("write bench json");

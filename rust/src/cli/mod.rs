@@ -17,6 +17,7 @@ use crate::config::Config;
 use crate::coordinator::checkpoint::Cache;
 use crate::fleet::{DeviceSpec, FleetSearcher, FleetServer, ServeConfig};
 use crate::models::list_models;
+use crate::registry::{DirSource, ModelRegistry, ModelSource, RegistryConfig};
 use crate::report::bit_chart;
 
 /// Parsed command line.
@@ -47,6 +48,10 @@ const VALUE_FLAGS: &[&str] = &[
     "max-conns",
     "coalesce-window-us",
     "persistent-pool",
+    "models",
+    "mem-budget-mb",
+    "max-inflight",
+    "max-queue",
 ];
 
 impl Args {
@@ -118,8 +123,10 @@ USAGE:
   limpq search    --model M (--cap-gbitops X | --size-cap-mb X)
                   [--alpha A] [--weight-only] [--save policy.json]
                   [--solver S] [--node-limit N] [--time-limit-ms T]
-  limpq serve     --model M [--bind 127.0.0.1:7070] [--max-conns N]
-                  [--coalesce-window-us U] [--persistent-pool on|off]
+  limpq serve     [--model M | --models DIR] [--bind 127.0.0.1:7070]
+                  [--max-conns N] [--coalesce-window-us U]
+                  [--persistent-pool on|off] [--mem-budget-mb N]
+                  [--max-inflight N] [--max-queue N]
                   event-driven fleet TCP server (see SERVE below)
   limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
                   policy on the validation split (finetuned ckpt if cached)
@@ -160,11 +167,42 @@ SERVE (fleet serving stack):
     --persistent-pool on|off  run sweeps on lazily-started long-lived
                             workers shared across all connections
                             (default on); off = scoped per-batch spawn
+    --max-inflight N        per-connection cap on unanswered solves
+                            (default 64); lines past it are answered
+                            immediately with a \"busy\": true 503-style
+                            rejection instead of queueing
+    --max-queue N           bound on the shared solve queue (default
+                            1024); solve lines arriving while it is full
+                            get the same busy rejection.  Admin commands
+                            ride a separate fast lane and are never
+                            rejected, so stats answer even under load.
+
+  MULTI-MODEL REGISTRY:
+    --models DIR            serve every <model>_meta.json under DIR from
+                            one registry; a request picks its model with
+                            a \"model\" field (omitted = the default:
+                            --model if given, else the config model when
+                            present, else the first listed).  Models load
+                            lazily on first use — learned indicators from
+                            the pipeline checkpoint cache when trained,
+                            statistics-initialized otherwise.  Without
+                            --models the server runs the strict
+                            single-model path (trained indicators
+                            required).
+    --mem-budget-mb N       cap resident model bytes: loading past the
+                            budget evicts least-recently-used models
+                            first.  A single model over the whole budget
+                            is a clean error.  Default: unlimited.
+
   Operator introspection over the wire: send {\"cmd\": \"stats\"} on any
-  connection to get open/total connections, served count, queue_depth,
-  coalesced_batch_size (last and max), cache hits/misses, and
-  inflight_waits (queries absorbed by single-flight).  The serve loop
-  prints the same counters periodically.
+  connection to get open/total connections, served and busy-rejected
+  counts, both queue depths, coalesced_batch_size (last and max), cache
+  hits/misses, inflight_waits (queries absorbed by single-flight), and
+  per-model registry accounting (resident bytes, loads, evictions).
+  {\"cmd\": \"models\"} lists available + resident models;
+  {\"cmd\": \"load\", \"model\": M} warms a model;
+  {\"cmd\": \"evict\", \"model\": M} drops it (next use reloads).
+  The serve loop prints the same counters periodically.
 
 KERNELS (compute):
   All dense math runs through the shared kernels subsystem: blocked GEMM
@@ -404,54 +442,133 @@ fn serve_config_from_args(args: &Args) -> Result<ServeConfig> {
         scfg.persistent_pool =
             parse_switch(v).with_context(|| format!("--persistent-pool {v:?}"))?;
     }
+    if let Some(v) = args.get("max-inflight") {
+        scfg.max_inflight_per_conn =
+            v.parse().with_context(|| format!("--max-inflight {v:?}"))?;
+    }
+    if let Some(v) = args.get("max-queue") {
+        scfg.max_queue = v.parse().with_context(|| format!("--max-queue {v:?}"))?;
+    }
     Ok(scfg)
 }
 
-fn run_serve(args: &Args, cfg: Config) -> Result<()> {
-    use crate::models::ModelMeta;
+/// Build the model registry the server serves from: multi-model over an
+/// artifacts directory with `--models DIR`, otherwise the strict
+/// single-model path (trained indicators required, like PR 3).
+fn registry_from_args(
+    args: &Args,
+    cfg: &Config,
+) -> Result<(std::sync::Arc<ModelRegistry>, String)> {
+    use std::sync::Arc;
 
-    let meta = ModelMeta::load(&cfg.artifacts_dir, &cfg.model)?;
-    let cache = Cache::new(&cfg.out_dir)?;
-    let store = cache
-        .load_indicators(&cfg.model)?
-        .context("no cached indicators — run `limpq pipeline` first")?;
-    let imp = store.importance(&meta);
+    let mut rcfg = RegistryConfig::default();
+    if let Some(v) = args.get("mem-budget-mb") {
+        let mb: usize = v.parse().with_context(|| format!("--mem-budget-mb {v:?}"))?;
+        anyhow::ensure!(mb >= 1, "--mem-budget-mb must be >= 1");
+        rcfg = rcfg.mem_budget_mb(mb);
+    }
+    match args.get("models") {
+        Some(dir) => {
+            let dir = PathBuf::from(dir);
+            let source = DirSource::new(&dir).with_out_dir(&cfg.out_dir);
+            let available = source.list();
+            anyhow::ensure!(
+                !available.is_empty(),
+                "--models {}: no <model>_meta.json files found",
+                dir.display()
+            );
+            // Default model: an explicit --model wins; else the config
+            // model when the directory has it; else the first listed.
+            let default_model = match args.get("model") {
+                Some(m) => m.to_string(),
+                None if available.iter().any(|m| *m == cfg.model) => cfg.model.clone(),
+                None => available[0].clone(),
+            };
+            Ok((Arc::new(ModelRegistry::new(Box::new(source), rcfg)), default_model))
+        }
+        None => {
+            // Single-model compatibility path: trained indicators are
+            // required (a statistics fallback would silently serve a
+            // worse policy than the operator trained for).
+            let meta = crate::models::ModelMeta::load(&cfg.artifacts_dir, &cfg.model)?;
+            let cache = Cache::new(&cfg.out_dir)?;
+            let store = cache
+                .load_indicators(&cfg.model)?
+                .context("no cached indicators — run `limpq pipeline` first")?;
+            let imp = store.importance(&meta);
+            let searcher = FleetSearcher::new(meta, imp);
+            let entry = crate::registry::ModelEntry::from_engine(&cfg.model, searcher.engine_arc());
+            let source = crate::registry::StaticSource::new().with_entry(entry);
+            Ok((Arc::new(ModelRegistry::new(Box::new(source), rcfg)), cfg.model.clone()))
+        }
+    }
+}
+
+fn run_serve(args: &Args, cfg: Config) -> Result<()> {
     let bind = args.get("bind").unwrap_or("127.0.0.1:7070");
     let scfg = serve_config_from_args(args)?;
-    let searcher = FleetSearcher::new(meta, imp);
-    let stats_view = searcher.clone();
-    let server = FleetServer::spawn_with(searcher, bind, scfg.clone())?;
+    let (registry, default_model) = registry_from_args(args, &cfg)?;
+    let available = registry.available();
+    let server = FleetServer::spawn_registry(registry, &default_model, bind, scfg.clone())?;
     println!(
-        "fleet server for {} listening on {} (max {} conns, {}us coalesce window, {} pool)",
-        cfg.model,
+        "fleet server listening on {} — {} model(s) available, default {:?} (max {} conns, \
+         {}us coalesce window, {} pool, queue bound {}, {} in-flight/conn{})",
         server.addr,
+        available.len(),
+        default_model,
         scfg.max_conns,
         scfg.coalesce_window.as_micros(),
-        if scfg.persistent_pool { "persistent" } else { "scoped" }
+        if scfg.persistent_pool { "persistent" } else { "scoped" },
+        scfg.max_queue,
+        scfg.max_inflight_per_conn,
+        match server.registry().config().mem_budget {
+            Some(b) => format!(", {} MB budget", b >> 20),
+            None => String::new(),
+        }
     );
-    println!("protocol: one JSON request per line, e.g. {{\"cap_gbitops\": 1.5, \"alpha\": 1.0, \"solver\": \"auto\"}}; {{\"cmd\": \"stats\"}} for serving counters");
+    println!(
+        "protocol: one JSON request per line, e.g. {{\"model\": \"{default_model}\", \
+         \"cap_gbitops\": 1.5, \"alpha\": 1.0}}; {{\"cmd\": \"stats\"}} for counters, \
+         {{\"cmd\": \"models\"}} / {{\"cmd\": \"load\", \"model\": ...}} / \
+         {{\"cmd\": \"evict\", \"model\": ...}} for registry control"
+    );
     // Serve until killed, reporting the serving stack's effectiveness.
     let mut last_served = 0usize;
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
-        let s = stats_view.cache_stats();
+        let rs = server.registry().stats();
         let sv = server.stats();
         if sv.served != last_served {
             last_served = sv.served;
+            let (hits, solves, entries, waits) =
+                rs.models.iter().fold((0, 0, 0, 0), |(h, s, e, w), m| {
+                    (
+                        h + m.cache.hits,
+                        s + m.cache.hits + m.cache.misses,
+                        e + m.cache.entries,
+                        w + m.cache.inflight_waits,
+                    )
+                });
             println!(
-                "served {} responses in {} batches (last {}, max {}), queue {}; \
-                 cache: {} hits / {} solves ({:.1}% hit rate), {} cached, \
-                 {} single-flight waits; conns {} open / {} total ({} overloaded)",
+                "served {} responses in {} batches (last {}, max {}), queue {} (+{} admin), \
+                 {} busy-rejected; cache: {} hits / {} solves, {} cached, {} single-flight \
+                 waits; {} models resident ({:.1} MB, {} loads / {} evictions); \
+                 conns {} open / {} total ({} overloaded)",
                 sv.served,
                 sv.batches,
                 sv.coalesced_batch_size,
                 sv.coalesced_batch_max,
                 sv.queue_depth,
-                s.hits,
-                s.hits + s.misses,
-                100.0 * s.hit_rate(),
-                s.entries,
-                s.inflight_waits,
+                sv.admin_queue_depth,
+                sv.rejected,
+                hits,
+                solves,
+                entries,
+                waits,
+                rs.models.len(),
+                rs.resident_bytes as f64 / (1 << 20) as f64,
+                rs.loads,
+                rs.evictions,
                 sv.conns_open,
                 sv.conns_total,
                 sv.overloaded
@@ -544,9 +661,90 @@ mod tests {
         let d = serve_config_from_args(&parse(&["serve"])).unwrap();
         assert_eq!(d.max_conns, ServeConfig::default().max_conns);
         assert!(d.persistent_pool);
+        assert_eq!(d.max_queue, ServeConfig::default().max_queue);
+        assert_eq!(d.max_inflight_per_conn, ServeConfig::default().max_inflight_per_conn);
         // bogus switch value is rejected
         let bad = parse(&["serve", "--persistent-pool", "maybe"]);
         assert!(serve_config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn backpressure_flags_parse_into_config() {
+        let a = parse(&["serve", "--max-inflight", "3", "--max-queue", "9"]);
+        let scfg = serve_config_from_args(&a).unwrap();
+        assert_eq!(scfg.max_inflight_per_conn, 3);
+        assert_eq!(scfg.max_queue, 9);
+        let bad = parse(&["serve", "--max-queue", "lots"]);
+        assert!(serve_config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn registry_flags_are_value_flags() {
+        let a = parse(&["serve", "--models", "arts", "--mem-budget-mb", "64"]);
+        assert_eq!(a.get("models"), Some("arts"));
+        assert_eq!(a.get("mem-budget-mb"), Some("64"));
+        // a value is required, not treated as a bare switch
+        assert!(Args::parse(&["serve".into(), "--models".into()]).is_err());
+    }
+
+    /// Minimal on-disk `<name>_meta.json` in the build-contract schema
+    /// (mirrors `synthetic_meta`, but named and written to disk).
+    fn write_meta(dir: &std::path::Path, name: &str) {
+        let text = format!(
+            r#"{{"name":"{name}","param_size":20,"n_qlayers":2,
+              "input_shape":[2,2,1],"n_classes":4,
+              "train_batch":4,"eval_batch":8,"serve_batch":2,
+              "bit_options":[2,3,4,5,6],"pin_bits":8,
+              "params":[
+                {{"name":"l0.w","shape":[10],"offset":0,"size":10,"init":"he_dense","fan_in":4}},
+                {{"name":"l1.w","shape":[10],"offset":10,"size":10,"init":"he_dense","fan_in":4}}],
+              "qlayers":[
+                {{"index":0,"name":"l0","kind":"conv","macs":50000,"w_numel":10,"pinned":true}},
+                {{"index":1,"name":"l1","kind":"conv","macs":90000,"w_numel":10,"pinned":true}}],
+              "artifacts":{{}}}}"#
+        );
+        std::fs::write(dir.join(format!("{name}_meta.json")), text).unwrap();
+    }
+
+    #[test]
+    fn models_dir_serve_builds_a_multi_model_registry() {
+        let dir = std::env::temp_dir().join(format!("limpq_cli_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, "alpha");
+        write_meta(&dir, "beta");
+        let a = parse(&[
+            "serve",
+            "--models",
+            dir.to_str().unwrap(),
+            "--mem-budget-mb",
+            "32",
+        ]);
+        let cfg = a.config().unwrap();
+        let (registry, default_model) = registry_from_args(&a, &cfg).unwrap();
+        assert_eq!(registry.available(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(default_model, "alpha"); // config model absent from dir
+        assert_eq!(registry.config().mem_budget, Some(32 << 20));
+        // an explicit --model wins the default
+        let b = parse(&["serve", "--models", dir.to_str().unwrap(), "--model", "beta"]);
+        let (_, d) = registry_from_args(&b, &b.config().unwrap()).unwrap();
+        assert_eq!(d, "beta");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn help_documents_the_registry() {
+        for needle in [
+            "--models",
+            "--mem-budget-mb",
+            "--max-inflight",
+            "--max-queue",
+            "MULTI-MODEL REGISTRY",
+            "\"evict\"",
+            "busy",
+            "least-recently-used",
+        ] {
+            assert!(HELP.contains(needle), "HELP is missing {needle:?}");
+        }
     }
 
     #[test]

@@ -248,8 +248,9 @@ pub fn solve_auto(p: &MpqProblem) -> Result<Solution> {
 // PolicyEngine
 // ---------------------------------------------------------------------------
 
-/// Default LRU capacity for the policy cache.
-const DEFAULT_CACHE_CAPACITY: usize = 512;
+/// Default LRU capacity for the policy cache (also the registry's
+/// per-model default, see [`crate::registry::RegistryConfig`]).
+pub const DEFAULT_CACHE_CAPACITY: usize = 512;
 
 /// A solve in progress: followers block on `cv` until the leader fills
 /// `done` (the outcome, or the error rendered to a string — `anyhow`

@@ -1,16 +1,29 @@
-//! The coalescing dispatcher: drains the shared request queue, gathers
-//! everything in flight into one batch per tick, and runs the batch as a
-//! `search_fleet`-style sweep across a worker pool — so concurrent
-//! device queries share the policy cache, the single-flight table, and
-//! (in persistent mode) one long-lived set of workers, instead of each
-//! connection solving on its own thread.
+//! The coalescing dispatcher and the admin fast lane.
 //!
-//! Ordering contract: the queue is FIFO and batches are contiguous queue
-//! runs processed by one dispatcher thread, so responses for any single
-//! connection are pushed back in exactly the order its requests arrived —
-//! the pooled sweep returns results in index order regardless of
-//! completion order.
+//! **Dispatcher**: drains the shared solve queue, gathers everything in
+//! flight into one batch per tick, resolves each solve's target model
+//! through the [`ModelRegistry`], and runs the batch as per-model
+//! `search_fleet`-style sweeps across a worker pool — so concurrent
+//! device queries share each model's policy cache, its single-flight
+//! table, and (in persistent mode) one long-lived set of workers.  A
+//! batch is swept **grouped by model**: one sweep never mixes two
+//! models' packed weight sets or engines.
+//!
+//! **Admin lane** ([`AdminLane`]): a second thread draining a second
+//! queue for `stats` / `models` / `load` / `evict`, so a slow solve
+//! batch (large `time_limit_ms`) can never delay operator introspection
+//! or registry control — the head-of-line fix the ROADMAP carried since
+//! the event-driven rewrite.  The multiplexer routes lines containing a
+//! `"cmd"` key here; a solve line that merely *mentions* `"cmd"` inside
+//! a string value also lands here and is answered inline (correct, just
+//! off the batch path).
+//!
+//! Ordering contract: each queue is FIFO and processed by one thread, so
+//! responses for any single connection come back in arrival order
+//! *within a lane*; admin responses and early backpressure rejections
+//! may overtake queued solves (that is the point of the fast lane).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -19,151 +32,338 @@ use super::protocol::{self, Request};
 use super::server::{ServeConfig, Shared, WorkItem};
 use super::{DeviceSpec, FleetSearcher};
 use crate::kernels::{persistent_global, WorkerPool};
+use crate::registry::ModelRegistry;
 use crate::util::json::Json;
 
-/// Upper bound on the dispatcher's idle wait; it re-checks the stop flag
-/// at least this often even if a queue notification is lost.
+/// Upper bound on a lane's idle wait; it re-checks the stop flag at
+/// least this often even if a queue notification is lost.
 const IDLE_RECHECK: Duration = Duration::from_millis(50);
 
+/// Everything both lanes need: the model registry, the default model for
+/// requests that name none, the serve knobs, and the shared queues.
+pub(crate) struct ServingCore {
+    pub registry: Arc<ModelRegistry>,
+    pub default_model: String,
+    pub cfg: ServeConfig,
+    pub shared: Arc<Shared>,
+}
+
+impl ServingCore {
+    /// Answer one parsed admin request (also handles a misrouted solve
+    /// inline, preserving that connection's per-lane ordering).
+    fn answer_admin(&self, req: &Request) -> String {
+        match req {
+            Request::Stats => self.stats_line(),
+            Request::Models => self.models_line(),
+            Request::Load { model } => self.load_line(model),
+            Request::Evict { model } => self.evict_line(model),
+            Request::Solve { model, spec } => {
+                let name = model.as_deref().unwrap_or(&self.default_model);
+                match self.registry.get(name) {
+                    Ok(entry) => {
+                        respond_safe(&FleetSearcher::from_shared(entry.engine().clone()), spec, name)
+                    }
+                    Err(e) => protocol::error_line(&e),
+                }
+            }
+        }
+    }
+
+    /// Build the `{"cmd":"stats"}` response: serving counters, both
+    /// queue depths, registry-wide accounting, and per-model bytes +
+    /// cache counters (LRU→MRU).  The pre-registry top-level cache
+    /// fields aggregate across resident models so old dashboards keep
+    /// reading.
+    fn stats_line(&self) -> String {
+        let depth = self.shared.requests.lock().unwrap().len();
+        let admin_depth = self.shared.admin.lock().unwrap().len();
+        let snap = self.shared.stats.snapshot(depth, admin_depth);
+        let rs = self.registry.stats();
+        let (mut hits, mut misses, mut entries, mut waits) = (0usize, 0usize, 0usize, 0usize);
+        for m in &rs.models {
+            hits += m.cache.hits;
+            misses += m.cache.misses;
+            entries += m.cache.entries;
+            waits += m.cache.inflight_waits;
+        }
+        let pool_threads = if self.cfg.persistent_pool {
+            persistent_global().threads()
+        } else {
+            WorkerPool::global().threads()
+        };
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("cmd", Json::from("stats")),
+            ("open_conns", Json::from(snap.conns_open)),
+            ("total_conns", Json::from(snap.conns_total)),
+            ("overloaded", Json::from(snap.overloaded)),
+            ("rejected", Json::from(snap.rejected)),
+            ("served", Json::from(snap.served)),
+            ("queue_depth", Json::from(snap.queue_depth)),
+            ("admin_queue_depth", Json::from(snap.admin_queue_depth)),
+            ("batches", Json::from(snap.batches)),
+            ("coalesced_batch_size", Json::from(snap.coalesced_batch_size)),
+            ("coalesced_batch_max", Json::from(snap.coalesced_batch_max)),
+            ("cache_hits", Json::from(hits)),
+            ("cache_misses", Json::from(misses)),
+            ("cache_entries", Json::from(entries)),
+            ("inflight_waits", Json::from(waits)),
+            ("persistent_pool", Json::Bool(self.cfg.persistent_pool)),
+            ("pool_threads", Json::from(pool_threads)),
+            ("default_model", Json::from(self.default_model.as_str())),
+            ("models_resident", Json::from(rs.resident())),
+            ("resident_bytes", Json::from(rs.resident_bytes)),
+            ("model_loads", Json::from(rs.loads)),
+            ("model_evictions", Json::from(rs.evictions)),
+            ("model_load_failures", Json::from(rs.load_failures)),
+        ];
+        if let Some(budget) = rs.mem_budget {
+            fields.push(("mem_budget_bytes", Json::from(budget)));
+        }
+        let models: Vec<Json> = rs
+            .models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::from(m.model.as_str())),
+                    ("bytes", Json::from(m.bytes)),
+                    ("cache_hits", Json::from(m.cache.hits)),
+                    ("cache_misses", Json::from(m.cache.misses)),
+                    ("cache_entries", Json::from(m.cache.entries)),
+                ])
+            })
+            .collect();
+        fields.push(("models", Json::Arr(models)));
+        Json::obj(fields).to_string()
+    }
+
+    /// `{"cmd":"models"}` — what the source offers and what is resident.
+    fn models_line(&self) -> String {
+        let rs = self.registry.stats();
+        let available: Vec<Json> =
+            self.registry.available().iter().map(|m| Json::from(m.as_str())).collect();
+        let resident: Vec<Json> = rs
+            .models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::from(m.model.as_str())),
+                    ("bytes", Json::from(m.bytes)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cmd", Json::from("models")),
+            ("default_model", Json::from(self.default_model.as_str())),
+            ("available", Json::Arr(available)),
+            ("resident", Json::Arr(resident)),
+        ])
+        .to_string()
+    }
+
+    /// `{"cmd":"load"}` — load (or touch) a model now.
+    fn load_line(&self, model: &str) -> String {
+        match self.registry.get(model) {
+            Ok(entry) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", Json::from("load")),
+                ("model", Json::from(model)),
+                ("bytes", Json::from(entry.bytes())),
+            ])
+            .to_string(),
+            Err(e) => protocol::error_line(&e),
+        }
+    }
+
+    /// `{"cmd":"evict"}` — drop a model from residency.  Evicting a
+    /// non-resident model is not an error (`"evicted": false`).
+    fn evict_line(&self, model: &str) -> String {
+        let evicted = self.registry.evict(model);
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cmd", Json::from("evict")),
+            ("model", Json::from(model)),
+            ("evicted", Json::Bool(evicted)),
+        ])
+        .to_string()
+    }
+}
+
+/// Block until `queue` has an item (or the server is stopping).
+fn next_item(
+    shared: &Shared,
+    queue: &std::sync::Mutex<std::collections::VecDeque<WorkItem>>,
+    cv: &std::sync::Condvar,
+) -> Option<WorkItem> {
+    let mut q = queue.lock().unwrap();
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        if let Some(it) = q.pop_front() {
+            return Some(it);
+        }
+        let (guard, _) = cv.wait_timeout(q, IDLE_RECHECK).unwrap();
+        q = guard;
+    }
+}
+
 pub(crate) struct Dispatcher {
-    shared: Arc<Shared>,
-    searcher: FleetSearcher,
-    cfg: ServeConfig,
+    core: Arc<ServingCore>,
 }
 
 impl Dispatcher {
-    pub fn new(shared: Arc<Shared>, searcher: FleetSearcher, cfg: ServeConfig) -> Dispatcher {
-        Dispatcher { shared, searcher, cfg }
+    pub fn new(core: Arc<ServingCore>) -> Dispatcher {
+        Dispatcher { core }
     }
 
     pub fn run(self) {
         loop {
-            let Some(first) = self.next_item() else { return };
+            let shared = &self.core.shared;
+            let Some(first) = next_item(shared, &shared.requests, &shared.req_cv) else { return };
             let batch = self.coalesce(first);
             self.process_batch(batch);
-        }
-    }
-
-    /// Block until a request is queued (or the server is stopping).
-    fn next_item(&self) -> Option<WorkItem> {
-        let mut q = self.shared.requests.lock().unwrap();
-        loop {
-            if self.shared.stop.load(Ordering::Relaxed) {
-                return None;
-            }
-            if let Some(it) = q.pop_front() {
-                return Some(it);
-            }
-            let (guard, _) = self.shared.req_cv.wait_timeout(q, IDLE_RECHECK).unwrap();
-            q = guard;
         }
     }
 
     /// Linger up to the coalesce window after the first request, pulling
     /// everything that lands in the meantime into the same batch.
     fn coalesce(&self, first: WorkItem) -> Vec<WorkItem> {
+        let shared = &self.core.shared;
         let mut batch = vec![first];
-        let deadline = Instant::now() + self.cfg.coalesce_window;
+        let deadline = Instant::now() + self.core.cfg.coalesce_window;
         loop {
-            let mut q = self.shared.requests.lock().unwrap();
+            let mut q = shared.requests.lock().unwrap();
             while let Some(it) = q.pop_front() {
                 batch.push(it);
             }
             let now = Instant::now();
-            if now >= deadline || self.shared.stop.load(Ordering::Relaxed) {
+            if now >= deadline || shared.stop.load(Ordering::Relaxed) {
                 return batch;
             }
-            let (guard, _) = self.shared.req_cv.wait_timeout(q, deadline - now).unwrap();
+            let (guard, _) = shared.req_cv.wait_timeout(q, deadline - now).unwrap();
             drop(guard);
         }
     }
 
     fn process_batch(&self, batch: Vec<WorkItem>) {
-        self.shared.stats.batches.fetch_add(1, Ordering::Relaxed);
-        self.shared.stats.batch_last.store(batch.len(), Ordering::Relaxed);
-        self.shared.stats.batch_max.fetch_max(batch.len(), Ordering::Relaxed);
+        let stats = &self.core.shared.stats;
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batch_last.store(batch.len(), Ordering::Relaxed);
+        stats.batch_max.fetch_max(batch.len(), Ordering::Relaxed);
 
-        // Parse everything first; cheap requests (stats, parse errors)
-        // answer inline, solves gather into one sweep.  The sweep returns
-        // answers in spec order, so `Solve` slots consume them in order.
+        // Parse everything first; parse errors (and any admin request
+        // the mux misrouted here) answer inline, solves gather into
+        // per-model sweeps.  `Slot::Solve` holds the solve's index into
+        // the answers vector, so per-connection order is preserved
+        // whatever the model grouping did.
         enum Slot {
             Ready(String),
-            Solve,
+            Solve(usize),
         }
         let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
-        let mut specs: Vec<DeviceSpec> = Vec::new();
+        let mut solves: Vec<(String, DeviceSpec)> = Vec::new();
         for item in &batch {
             match protocol::parse_request(&item.line) {
-                Ok(Request::Solve(spec)) => {
-                    slots.push(Slot::Solve);
-                    specs.push(spec);
+                Ok(Request::Solve { model, spec }) => {
+                    let name = model.unwrap_or_else(|| self.core.default_model.clone());
+                    slots.push(Slot::Solve(solves.len()));
+                    solves.push((name, spec));
                 }
-                Ok(Request::Stats) => slots.push(Slot::Ready(self.stats_line())),
+                Ok(req) => slots.push(Slot::Ready(self.core.answer_admin(&req))),
                 Err(e) => slots.push(Slot::Ready(protocol::error_line(&e))),
             }
         }
-        let mut answers = self.sweep(specs).into_iter();
+        let answers = self.sweep(solves);
 
-        let mut resp = self.shared.responses.lock().unwrap();
+        let mut resp = self.core.shared.responses.lock().unwrap();
         for (item, slot) in batch.iter().zip(slots) {
             let line = match slot {
                 Slot::Ready(s) => s,
-                Slot::Solve => answers.next().expect("sweep returned one answer per spec"),
+                Slot::Solve(i) => answers[i].clone(),
             };
             resp.push_back((item.conn, line));
         }
     }
 
-    /// The coalesced `search_fleet`-style sweep: every solve in the batch
-    /// fans out across the pool; identical cold requests collapse to one
-    /// engine solve via single-flight.
-    fn sweep(&self, specs: Vec<DeviceSpec>) -> Vec<String> {
-        if specs.is_empty() {
+    /// The coalesced sweep, grouped by model: each group resolves its
+    /// entry once (lazy-loading through the registry) and fans its
+    /// solves out across the pool; a registry load failure answers every
+    /// solve in the group with that error.  Within a group, identical
+    /// cold requests collapse to one engine solve via single-flight.
+    fn sweep(&self, solves: Vec<(String, DeviceSpec)>) -> Vec<String> {
+        if solves.is_empty() {
             return Vec::new();
         }
-        if self.cfg.persistent_pool {
-            let specs = Arc::new(specs);
-            let searcher = self.searcher.clone();
-            let sp = specs.clone();
-            persistent_global().parallel_for(specs.len(), move |i| {
-                respond_safe(&searcher, &sp[i])
-            })
-        } else {
-            let pool = WorkerPool::global().capped(specs.len());
-            pool.parallel_for(specs.len(), |i| respond_safe(&self.searcher, &specs[i]))
+        let solves = Arc::new(solves);
+        let mut answers: Vec<Option<String>> = vec![None; solves.len()];
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, (model, _)) in solves.iter().enumerate() {
+            groups.entry(model.clone()).or_default().push(i);
         }
+        for (model, idxs) in groups {
+            let entry = match self.core.registry.get(&model) {
+                Ok(e) => e,
+                Err(e) => {
+                    let line = protocol::error_line(&e);
+                    for &i in &idxs {
+                        answers[i] = Some(line.clone());
+                    }
+                    continue;
+                }
+            };
+            let searcher = FleetSearcher::from_shared(entry.engine().clone());
+            let results: Vec<String> = if self.core.cfg.persistent_pool {
+                let sp = solves.clone();
+                let group = Arc::new(idxs.clone());
+                let model = model.clone();
+                persistent_global().parallel_for(group.len(), move |k| {
+                    respond_safe(&searcher, &sp[group[k]].1, &model)
+                })
+            } else {
+                let pool = WorkerPool::global().capped(idxs.len());
+                pool.parallel_for(idxs.len(), |k| respond_safe(&searcher, &solves[idxs[k]].1, &model))
+            };
+            for (&i, line) in idxs.iter().zip(results) {
+                answers[i] = Some(line);
+            }
+        }
+        answers
+            .into_iter()
+            .map(|a| a.expect("every solve slot answered"))
+            .collect()
+    }
+}
+
+/// The admin fast lane: drains the second queue so `stats` / `models` /
+/// `load` / `evict` answer while the dispatcher is deep in a slow solve
+/// batch.  `load` can itself be slow (it builds the model) — that is
+/// admin's own latency to spend, and it never blocks solves.
+pub(crate) struct AdminLane {
+    core: Arc<ServingCore>,
+}
+
+impl AdminLane {
+    pub fn new(core: Arc<ServingCore>) -> AdminLane {
+        AdminLane { core }
     }
 
-    /// Build the `{"cmd":"stats"}` response from the serving counters,
-    /// the queue, and the engine's cache/single-flight stats.
-    fn stats_line(&self) -> String {
-        let depth = self.shared.requests.lock().unwrap().len();
-        let snap = self.shared.stats.snapshot(depth);
-        let cache = self.searcher.cache_stats();
-        let pool_threads = if self.cfg.persistent_pool {
-            persistent_global().threads()
-        } else {
-            WorkerPool::global().threads()
-        };
-        Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("cmd", Json::from("stats")),
-            ("open_conns", Json::from(snap.conns_open)),
-            ("total_conns", Json::from(snap.conns_total)),
-            ("overloaded", Json::from(snap.overloaded)),
-            ("served", Json::from(snap.served)),
-            ("queue_depth", Json::from(snap.queue_depth)),
-            ("batches", Json::from(snap.batches)),
-            ("coalesced_batch_size", Json::from(snap.coalesced_batch_size)),
-            ("coalesced_batch_max", Json::from(snap.coalesced_batch_max)),
-            ("cache_hits", Json::from(cache.hits)),
-            ("cache_misses", Json::from(cache.misses)),
-            ("cache_entries", Json::from(cache.entries)),
-            ("inflight_waits", Json::from(cache.inflight_waits)),
-            ("persistent_pool", Json::Bool(self.cfg.persistent_pool)),
-            ("pool_threads", Json::from(pool_threads)),
-        ])
-        .to_string()
+    pub fn run(self) {
+        loop {
+            let shared = &self.core.shared;
+            let Some(item) = next_item(shared, &shared.admin, &shared.admin_cv) else { return };
+            // Same panic firewall as the sweep: one poisoned command
+            // must not kill the lane for every later admin request.
+            let line = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match protocol::parse_request(&item.line) {
+                    Ok(req) => self.core.answer_admin(&req),
+                    Err(e) => protocol::error_line(&e),
+                }
+            }))
+            .unwrap_or_else(|_| protocol::error_message("internal error: admin command panicked"));
+            self.core.shared.responses.lock().unwrap().push_back((item.conn, line));
+        }
     }
 }
 
@@ -173,9 +373,11 @@ impl Dispatcher {
 /// requests that nothing ever answers (the whole server wedges, silently).
 /// The engine's single-flight guard already publishes the panic to any
 /// followers; this converts the leader's unwind into a response.
-fn respond_safe(searcher: &FleetSearcher, spec: &DeviceSpec) -> String {
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| protocol::respond(searcher, spec)))
-        .unwrap_or_else(|_| {
-            protocol::error_message(&format!("internal error: solve for {:?} panicked", spec.name))
-        })
+fn respond_safe(searcher: &FleetSearcher, spec: &DeviceSpec, model: &str) -> String {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        protocol::respond(searcher, spec, model)
+    }))
+    .unwrap_or_else(|_| {
+        protocol::error_message(&format!("internal error: solve for {:?} panicked", spec.name))
+    })
 }

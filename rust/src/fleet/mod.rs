@@ -8,11 +8,12 @@
 //! redundant work, so the service is structured as a pipeline:
 //!
 //! ```text
-//!  TCP clients ──► multiplexer ──► request queue ──► coalescing ──► single-flight
-//!                  (server.rs,      (FIFO, shared)    dispatcher      PolicyEngine
-//!                   conn.rs)                          (dispatch.rs)   (engine::)
-//!                      ▲                                   │
-//!                      └────────── response queue ◄────────┘
+//!                                 ┌─► admin queue ──► admin lane ───────┐
+//!  TCP clients ──► multiplexer ───┤   (stats/models/load/evict)         │
+//!                  (server.rs,    └─► solve queue ──► coalescing ──► registry ──► single-flight
+//!                   conn.rs)           (bounded)      dispatcher     (per-model)   PolicyEngine
+//!                      ▲                              (dispatch.rs)                (engine::)
+//!                      └────────────── response queue ◄──────────────┘
 //! ```
 //!
 //! * **Multiplexer** ([`server`]): one thread owns the listener and all
@@ -20,35 +21,50 @@
 //!   requests and flush buffered responses.  Connections beyond
 //!   [`ServeConfig::max_conns`] get a 503-style rejection line, and the
 //!   stop flag is honored within a millisecond even with idle keep-alive
-//!   clients attached.
+//!   clients attached.  Backpressure lives here too: solve lines past the
+//!   per-connection in-flight cap or the bounded solve queue are answered
+//!   immediately with a `"busy": true` 503-style line.
+//! * **Admin fast lane** ([`dispatch`]): command lines take a second
+//!   queue and thread, so `stats`/`models`/`load`/`evict` answer even
+//!   while the dispatcher is deep in a slow solve batch (no more
+//!   head-of-line blocking for operator introspection).
 //! * **Coalescing dispatcher** ([`dispatch`]): drains everything in
-//!   flight (lingering up to [`ServeConfig::coalesce_window`]) into one
-//!   batched `search_fleet`-style sweep per tick, fanned out across the
+//!   flight (lingering up to [`ServeConfig::coalesce_window`]) into
+//!   batched `search_fleet`-style sweeps **grouped by model** — one sweep
+//!   never mixes two models' packed weight sets — fanned out across the
 //!   lazily-started persistent worker pool (or a scoped pool with
-//!   `persistent_pool: false`) — cache and workers shared across
-//!   connections, per-connection response order preserved.
-//! * **Single-flight engine** (`engine::PolicyEngine`): concurrent
-//!   identical cold queries block on one in-progress solve and share its
-//!   outcome, so a stampede costs exactly one solver run.
+//!   `persistent_pool: false`); per-connection response order preserved
+//!   within the solve lane.
+//! * **Model registry** (`registry::ModelRegistry`): each solve resolves
+//!   its `"model"` (default: the server's seed model) to a resident
+//!   [`crate::registry::ModelEntry`] — lazy single-flighted loads,
+//!   LRU-by-bytes eviction against `--mem-budget-mb`, per-model byte
+//!   accounting in `{"cmd":"stats"}`.
+//! * **Single-flight engine** (`engine::PolicyEngine`, one per model):
+//!   concurrent identical cold queries block on one in-progress solve and
+//!   share its outcome, so a stampede costs exactly one solver run.
 //!
 //! Protocol ([`protocol`]) — unchanged for PR 1/2 clients: one request
 //! JSON per line, one response JSON per line.
 //!
-//! Solve request (any other key is rejected with an error naming it):
-//!   `{"name": "phone", "cap_gbitops": 23.07, "size_cap_mb": 8.0,
-//!     "alpha": 3.0, "weight_only": false, "solver": "auto",
-//!     "node_limit": 2000000, "time_limit_ms": 500}`
+//! Solve request (any other key is rejected with an error naming it;
+//! `model` is optional and defaults to the server's seed model):
+//!   `{"name": "phone", "model": "resnet18", "cap_gbitops": 23.07,
+//!     "size_cap_mb": 8.0, "alpha": 3.0, "weight_only": false,
+//!     "solver": "auto", "node_limit": 2000000, "time_limit_ms": 500}`
 //!   (all optional except at least one cap)
 //! Solve response:
-//!   `{"ok": true, "w_bits": [...], "a_bits": [...], "bitops_g": ...,
-//!     "size_mb": ..., "cost": ..., "solve_us": ..., "solver": "bb",
-//!     "cache_hit": false}`
-//! Operator introspection:
-//!   `{"cmd": "stats"}` → `{"ok": true, "cmd": "stats", "open_conns": ...,
-//!     "served": ..., "queue_depth": ..., "batches": ...,
-//!     "coalesced_batch_size": ..., "coalesced_batch_max": ...,
-//!     "cache_hits": ..., "cache_misses": ..., "inflight_waits": ...,
-//!     "persistent_pool": ..., "pool_threads": ...}`
+//!   `{"ok": true, "model": "resnet18", "w_bits": [...], "a_bits": [...],
+//!     "bitops_g": ..., "size_mb": ..., "cost": ..., "solve_us": ...,
+//!     "solver": "bb", "cache_hit": false}`
+//! Operator introspection and registry control:
+//!   `{"cmd": "stats"}` → serving counters (`served`, `queue_depth`,
+//!     `admin_queue_depth`, `rejected`, `batches`, cache totals, ...)
+//!     plus registry accounting (`models_resident`, `resident_bytes`,
+//!     `mem_budget_bytes`, `model_loads`, `model_evictions`, and a
+//!     per-model `models` array with bytes + cache counters)
+//!   `{"cmd": "models"}` → available + resident models
+//!   `{"cmd": "load", "model": "m"}` / `{"cmd": "evict", "model": "m"}`
 
 pub mod conn;
 pub mod dispatch;
@@ -112,9 +128,21 @@ impl FleetSearcher {
         FleetSearcher { engine: Arc::new(engine) }
     }
 
+    /// Wrap an already-shared engine — the registry serving path, where
+    /// each `ModelEntry` owns its engine and sweeps borrow it.
+    pub fn from_shared(engine: Arc<PolicyEngine>) -> FleetSearcher {
+        FleetSearcher { engine }
+    }
+
     /// The underlying engine (cache stats, raw solves).
     pub fn engine(&self) -> &PolicyEngine {
         &self.engine
+    }
+
+    /// The shared engine handle (what `FleetServer::spawn_with` hands to
+    /// its single-model registry entry).
+    pub fn engine_arc(&self) -> Arc<PolicyEngine> {
+        self.engine.clone()
     }
 
     pub fn meta(&self) -> &ModelMeta {

@@ -6,15 +6,22 @@
 //! * **Solve** (the PR 1/2 contract, unchanged): constraint fields such
 //!   as `cap_gbitops` / `size_cap_mb` plus engine controls; any unknown
 //!   key is rejected *by name* (`cap_gbitop` once cost a user a
-//!   completely unconstrained policy).
-//! * **Command**: `{"cmd": "stats"}` — operator introspection of the
-//!   serving stack (connection counts, coalesced batch sizes, queue
-//!   depth, cache and single-flight counters).  Unknown commands error.
+//!   completely unconstrained policy).  Since the multi-model registry,
+//!   an optional `"model"` key routes the solve to a specific registered
+//!   model; omitting it targets the server's default model, so
+//!   single-model clients round-trip unchanged.
+//! * **Command**: `{"cmd": "stats"}` (serving-stack + registry
+//!   introspection), `{"cmd": "models"}` (available + resident models),
+//!   `{"cmd": "load", "model": "m"}` / `{"cmd": "evict", "model": "m"}`
+//!   (explicit registry control).  `load`/`evict` require the `"model"`
+//!   key; `stats`/`models` take none.  Unknown commands error.
 //!
 //! Responses always carry `"ok"`; solve responses keep the exact PR 1
 //! field set (`device`, `w_bits`, `a_bits`, `cost`, `bitops_g`,
-//! `size_mb`, `solve_us`, `solver`, `cache_hit`) so existing clients
-//! round-trip unchanged.
+//! `size_mb`, `solve_us`, `solver`, `cache_hit`) plus the `model` that
+//! answered.  Early backpressure rejections ([`busy_line`]) additionally
+//! carry `"busy": true` so pipelining clients can tell them from solve
+//! errors.
 
 use anyhow::{bail, Context, Result};
 
@@ -26,6 +33,7 @@ use crate::util::json::Json;
 /// surface instead of silently ignoring.
 pub const KNOWN_FIELDS: &[&str] = &[
     "name",
+    "model",
     "cap_gbitops",
     "size_cap_mb",
     "alpha",
@@ -38,10 +46,24 @@ pub const KNOWN_FIELDS: &[&str] = &[
 /// A decoded protocol request.
 #[derive(Debug, Clone)]
 pub enum Request {
-    /// A policy solve for one device constraint set.
-    Solve(DeviceSpec),
-    /// `{"cmd": "stats"}` — serving-stack introspection.
+    /// A policy solve for one device constraint set, optionally routed to
+    /// a named model (`None` = the server's default model).
+    Solve { model: Option<String>, spec: DeviceSpec },
+    /// `{"cmd": "stats"}` — serving-stack + registry introspection.
     Stats,
+    /// `{"cmd": "models"}` — list available and resident models.
+    Models,
+    /// `{"cmd": "load", "model": "m"}` — load a model now.
+    Load { model: String },
+    /// `{"cmd": "evict", "model": "m"}` — drop a model from residency.
+    Evict { model: String },
+}
+
+impl Request {
+    /// Commands run on the admin fast lane; solves go to the dispatcher.
+    pub fn is_admin(&self) -> bool {
+        !matches!(self, Request::Solve { .. })
+    }
 }
 
 /// Parse one request line (solve or command form).
@@ -50,15 +72,38 @@ pub fn parse_request(line: &str) -> Result<Request> {
     if let Some(cmd) = req.opt("cmd") {
         let name = cmd.as_str().context("\"cmd\" must be a string")?;
         let obj = req.as_obj().context("request must be a JSON object")?;
-        if obj.len() != 1 {
-            bail!("a command request carries only the \"cmd\" key");
+        let model = match req.opt("model") {
+            Some(v) => Some(v.as_str().context("\"model\" must be a string")?.to_string()),
+            None => None,
+        };
+        // stats/models carry only "cmd"; load/evict carry exactly
+        // "cmd" + "model".
+        let expected = 1 + usize::from(model.is_some());
+        if obj.len() != expected {
+            bail!(
+                "a command request carries only the \"cmd\" key \
+                 (plus \"model\" for load/evict)"
+            );
         }
-        return match name {
-            "stats" => Ok(Request::Stats),
-            other => bail!("unknown cmd {other:?} (known: stats)"),
+        return match (name, model) {
+            ("stats", None) => Ok(Request::Stats),
+            ("models", None) => Ok(Request::Models),
+            ("load", Some(model)) => Ok(Request::Load { model }),
+            ("evict", Some(model)) => Ok(Request::Evict { model }),
+            ("load" | "evict", None) => {
+                bail!("cmd {name:?} requires a \"model\" key")
+            }
+            ("stats" | "models", Some(_)) => {
+                bail!("cmd {name:?} takes no \"model\" key")
+            }
+            (other, _) => bail!("unknown cmd {other:?} (known: stats, models, load, evict)"),
         };
     }
-    Ok(Request::Solve(parse_device_request(&req)?))
+    let model = match req.opt("model") {
+        Some(v) => Some(v.as_str().context("\"model\" must be a string")?.to_string()),
+        None => None,
+    };
+    Ok(Request::Solve { model, spec: parse_device_request(&req)? })
 }
 
 /// Parse a solve request, rejecting unknown fields by name.
@@ -101,10 +146,12 @@ pub fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
     Ok(DeviceSpec { name, request: b.build()? })
 }
 
-/// The solve response object — field set fixed since PR 1.
-pub fn solve_response(out: &DevicePolicy) -> Json {
+/// The solve response object — the PR 1 field set plus the model that
+/// answered (clients that predate the registry ignore the extra field).
+pub fn solve_response(out: &DevicePolicy, model: &str) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
+        ("model", Json::from(model)),
         ("device", Json::from(out.device.as_str())),
         (
             "w_bits",
@@ -141,25 +188,54 @@ pub fn overload_line(max_conns: usize) -> String {
     ))
 }
 
+/// Early backpressure rejection for a single request (per-connection
+/// in-flight cap or dispatcher queue bound).  Marked `"busy": true` so a
+/// pipelining client can distinguish it from a solve error — rejected
+/// requests are answered immediately, out of arrival order.
+pub fn busy_line(reason: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("busy", Json::Bool(true)),
+        ("error", Json::from(format!("server busy (503): {reason}").as_str())),
+    ])
+    .to_string()
+}
+
 /// Solve one spec and render the response line (success or error) —
 /// shared by the dispatcher sweep and direct/line-oriented callers.
-pub fn respond(searcher: &FleetSearcher, spec: &DeviceSpec) -> String {
+/// `model` names the model that answers (stamped into the response).
+pub fn respond(searcher: &FleetSearcher, spec: &DeviceSpec, model: &str) -> String {
     match searcher.search(spec) {
-        Ok(out) => solve_response(&out).to_string(),
+        Ok(out) => solve_response(&out, model).to_string(),
         Err(e) => error_line(&e),
     }
 }
 
 /// Parse + answer one solve line (the pre-refactor `handle_line` path,
-/// kept for in-process callers and tests; `stats` needs the server
-/// dispatcher for its counters and errors here).
+/// kept for in-process callers and tests; commands need the server's
+/// dispatcher/registry for their state and error here).  The searcher
+/// stands in for whatever model the line names.
 pub fn handle_line(searcher: &FleetSearcher, line: &str) -> String {
     match parse_request(line) {
-        Ok(Request::Solve(spec)) => respond(searcher, &spec),
-        Ok(Request::Stats) => {
-            error_message("the stats command is only available through a running server")
+        Ok(Request::Solve { model, spec }) => {
+            let model = model.unwrap_or_else(|| searcher.meta().name.clone());
+            respond(searcher, &spec, &model)
         }
+        Ok(req) => error_message(&format!(
+            "the {:?} command is only available through a running server",
+            cmd_name(&req)
+        )),
         Err(e) => error_line(&e),
+    }
+}
+
+fn cmd_name(req: &Request) -> &'static str {
+    match req {
+        Request::Solve { .. } => "solve",
+        Request::Stats => "stats",
+        Request::Models => "models",
+        Request::Load { .. } => "load",
+        Request::Evict { .. } => "evict",
     }
 }
 
@@ -200,6 +276,25 @@ mod tests {
         let resp = Json::parse(&handle_line(&s, &line)).unwrap();
         assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
         assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "mckp");
+        // default model stamped into the response
+        assert_eq!(resp.get("model").unwrap().as_str().unwrap(), "synthetic");
+    }
+
+    #[test]
+    fn solve_request_carries_an_optional_model() {
+        let r = parse_request(r#"{"model": "resnet18", "cap_gbitops": 2.0}"#).unwrap();
+        match r {
+            Request::Solve { model, spec } => {
+                assert_eq!(model.as_deref(), Some("resnet18"));
+                assert_eq!(spec.name, "dev");
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        // no model key -> None (the PR 3 wire form, unchanged)
+        let r = parse_request(r#"{"cap_gbitops": 2.0}"#).unwrap();
+        assert!(matches!(r, Request::Solve { model: None, .. }));
+        // model must be a string
+        assert!(parse_request(r#"{"model": 7, "cap_gbitops": 2.0}"#).is_err());
     }
 
     #[test]
@@ -209,6 +304,28 @@ mod tests {
         assert!(format!("{err:#}").contains("unknown cmd"), "{err:#}");
         let err = parse_request(r#"{"cmd": "stats", "alpha": 1.0}"#).unwrap_err();
         assert!(format!("{err:#}").contains("only the \"cmd\" key"), "{err:#}");
+        let err = parse_request(r#"{"cmd": "stats", "model": "m"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("takes no \"model\" key"), "{err:#}");
+    }
+
+    #[test]
+    fn registry_cmds_parse_and_validate_model_key() {
+        assert!(matches!(parse_request(r#"{"cmd": "models"}"#).unwrap(), Request::Models));
+        match parse_request(r#"{"cmd": "load", "model": "resnet18"}"#).unwrap() {
+            Request::Load { model } => assert_eq!(model, "resnet18"),
+            other => panic!("expected load, got {other:?}"),
+        }
+        match parse_request(r#"{"cmd": "evict", "model": "m0"}"#).unwrap() {
+            Request::Evict { model } => assert_eq!(model, "m0"),
+            other => panic!("expected evict, got {other:?}"),
+        }
+        let err = parse_request(r#"{"cmd": "load"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("requires a \"model\" key"), "{err:#}");
+        let err = parse_request(r#"{"cmd": "evict", "model": "m", "alpha": 1}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("only the \"cmd\" key"), "{err:#}");
+        // admin classification drives the fast lane
+        assert!(parse_request(r#"{"cmd": "models"}"#).unwrap().is_admin());
+        assert!(!parse_request(r#"{"cap_gbitops": 2.0}"#).unwrap().is_admin());
     }
 
     #[test]
@@ -225,5 +342,14 @@ mod tests {
         assert!(!resp.get("ok").unwrap().as_bool().unwrap());
         let err = resp.get("error").unwrap().as_str().unwrap();
         assert!(err.contains("503") && err.contains("64"), "{err}");
+    }
+
+    #[test]
+    fn busy_line_is_marked_busy() {
+        let resp = Json::parse(&busy_line("dispatcher queue full (1024)")).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert!(resp.get("busy").unwrap().as_bool().unwrap());
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("503") && err.contains("1024"), "{err}");
     }
 }

@@ -1,19 +1,34 @@
 //! The event-driven fleet server: a nonblocking connection multiplexer
-//! feeding a shared request queue.
+//! feeding two shared request queues over a model registry.
 //!
 //! One **multiplexer thread** owns the listener and every connection:
 //! each tick it accepts new sockets (rejecting past
 //! [`ServeConfig::max_conns`] with a 503-style line), sweeps readiness
 //! over the nonblocking streams ([`super::conn::Conn`]), pushes decoded
-//! request lines into the shared queue, routes finished responses back
+//! request lines into the shared queues, routes finished responses back
 //! into per-connection write buffers, and reaps finished connections.
 //! The tick sleeps only when nothing progressed, so the loop is idle-cheap
 //! and the stop flag is observed within a millisecond — `shutdown()`
 //! returns promptly even with idle keep-alive clients attached (the old
 //! thread-per-connection design blocked forever on their reads).
 //!
-//! One **dispatcher thread** ([`super::dispatch::Dispatcher`]) drains the
-//! queue, coalescing everything in flight into batched sweeps.
+//! Lines are split into two lanes at the mux: command lines (those
+//! containing a `"cmd"` key) go to the **admin lane**
+//! ([`super::dispatch::AdminLane`]) so `stats`/`load`/`evict`/`models`
+//! answer even while a slow solve batch runs; solve lines go to the
+//! **dispatcher** ([`super::dispatch::Dispatcher`]), which coalesces
+//! everything in flight into per-model batched sweeps.
+//!
+//! **Backpressure** happens at the mux, before a request costs anything:
+//! a solve line past the per-connection in-flight cap
+//! ([`ServeConfig::max_inflight_per_conn`]) or past the bounded solve
+//! queue ([`ServeConfig::max_queue`]) is answered immediately with a
+//! `"busy": true` 503-style line ([`super::protocol::busy_line`]) — one
+//! firehose client can no longer monopolize the dispatcher.  Rejections
+//! jump the queue by construction; pipelining clients match them up via
+//! the `busy` marker.  Admin lines are never rejected (they are cheap,
+//! and refusing `stats` under load would blind the operator exactly when
+//! it matters).
 
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
@@ -25,9 +40,10 @@ use std::time::Duration;
 use anyhow::{ensure, Context, Result};
 
 use super::conn::Conn;
-use super::dispatch::Dispatcher;
+use super::dispatch::{AdminLane, Dispatcher, ServingCore};
 use super::protocol;
 use super::FleetSearcher;
+use crate::registry::{ModelEntry, ModelRegistry, RegistryConfig, StaticSource};
 
 /// Knobs for the serving stack.
 #[derive(Debug, Clone)]
@@ -40,6 +56,12 @@ pub struct ServeConfig {
     /// Run batched sweeps on the lazily-started persistent worker pool
     /// (shared across all connections) instead of per-batch scoped spawn.
     pub persistent_pool: bool,
+    /// Bound on the solve queue: solve lines arriving while this many
+    /// are already queued get an immediate `busy` rejection.
+    pub max_queue: usize,
+    /// Per-connection cap on unanswered requests; lines past it get an
+    /// immediate `busy` rejection instead of queueing.
+    pub max_inflight_per_conn: usize,
 }
 
 impl Default for ServeConfig {
@@ -48,6 +70,8 @@ impl Default for ServeConfig {
             max_conns: 256,
             coalesce_window: Duration::from_micros(200),
             persistent_pool: true,
+            max_queue: 1024,
+            max_inflight_per_conn: 64,
         }
     }
 }
@@ -59,12 +83,14 @@ pub struct ServerStats {
     pub conns_open: AtomicUsize,
     pub conns_total: AtomicUsize,
     pub overloaded: AtomicUsize,
+    /// Requests answered with an early `busy` rejection (backpressure).
+    pub rejected: AtomicUsize,
     pub batches: AtomicUsize,
     pub batch_last: AtomicUsize,
     pub batch_max: AtomicUsize,
 }
 
-/// A point-in-time copy of [`ServerStats`] plus the queue depth.
+/// A point-in-time copy of [`ServerStats`] plus the queue depths.
 #[derive(Debug, Clone, Copy)]
 pub struct StatsSnapshot {
     /// Responses delivered to connections.
@@ -73,27 +99,33 @@ pub struct StatsSnapshot {
     pub conns_total: usize,
     /// Connections rejected at the `max_conns` limit.
     pub overloaded: usize,
+    /// Requests rejected early by backpressure (`busy` lines).
+    pub rejected: usize,
     /// Coalesced batches dispatched.
     pub batches: usize,
     /// Size of the most recent coalesced batch.
     pub coalesced_batch_size: usize,
     /// Largest coalesced batch so far.
     pub coalesced_batch_max: usize,
-    /// Requests decoded but not yet picked up by the dispatcher.
+    /// Solve requests decoded but not yet picked up by the dispatcher.
     pub queue_depth: usize,
+    /// Admin commands decoded but not yet picked up by the admin lane.
+    pub admin_queue_depth: usize,
 }
 
 impl ServerStats {
-    pub(crate) fn snapshot(&self, queue_depth: usize) -> StatsSnapshot {
+    pub(crate) fn snapshot(&self, queue_depth: usize, admin_queue_depth: usize) -> StatsSnapshot {
         StatsSnapshot {
             served: self.served.load(Ordering::Relaxed),
             conns_open: self.conns_open.load(Ordering::Relaxed),
             conns_total: self.conns_total.load(Ordering::Relaxed),
             overloaded: self.overloaded.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             coalesced_batch_size: self.batch_last.load(Ordering::Relaxed),
             coalesced_batch_max: self.batch_max.load(Ordering::Relaxed),
             queue_depth,
+            admin_queue_depth,
         }
     }
 }
@@ -104,11 +136,15 @@ pub(crate) struct WorkItem {
     pub line: String,
 }
 
-/// State shared between the multiplexer and the dispatcher.
+/// State shared between the multiplexer, dispatcher, and admin lane.
 pub(crate) struct Shared {
     pub stop: AtomicBool,
+    /// Solve lines for the coalescing dispatcher.
     pub requests: Mutex<VecDeque<WorkItem>>,
     pub req_cv: Condvar,
+    /// Command lines for the admin fast lane.
+    pub admin: Mutex<VecDeque<WorkItem>>,
+    pub admin_cv: Condvar,
     pub responses: Mutex<VecDeque<(u64, String)>>,
     pub stats: ServerStats,
 }
@@ -119,6 +155,8 @@ impl Shared {
             stop: AtomicBool::new(false),
             requests: Mutex::new(VecDeque::new()),
             req_cv: Condvar::new(),
+            admin: Mutex::new(VecDeque::new()),
+            admin_cv: Condvar::new(),
             responses: Mutex::new(VecDeque::new()),
             stats: ServerStats::default(),
         }
@@ -132,8 +170,10 @@ const POLL_IDLE: Duration = Duration::from_millis(1);
 pub struct FleetServer {
     pub addr: std::net::SocketAddr,
     shared: Arc<Shared>,
+    registry: Arc<ModelRegistry>,
     mux: Option<std::thread::JoinHandle<()>>,
     disp: Option<std::thread::JoinHandle<()>>,
+    admin: Option<std::thread::JoinHandle<()>>,
 }
 
 impl FleetServer {
@@ -142,17 +182,56 @@ impl FleetServer {
         Self::spawn_with(searcher, bind, ServeConfig::default())
     }
 
-    /// Bind and serve on two background threads (multiplexer + dispatcher).
+    /// Bind and serve a single-model searcher: wraps it in a one-entry
+    /// registry whose source hands back the same engine on every load,
+    /// so cache counters survive an evict/reload cycle and external
+    /// clones of the searcher keep observing the served engine.
     pub fn spawn_with(
         searcher: FleetSearcher,
         bind: &str,
         cfg: ServeConfig,
     ) -> Result<FleetServer> {
+        let name = searcher.meta().name.clone();
+        let entry = ModelEntry::from_engine(&name, searcher.engine_arc());
+        let source = StaticSource::new().with_entry(entry);
+        let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+        Self::spawn_registry(registry, &name, bind, cfg)
+    }
+
+    /// Bind and serve a model registry on three background threads
+    /// (multiplexer + dispatcher + admin lane).  `default_model` answers
+    /// requests that carry no `"model"` field; it is loaded eagerly so a
+    /// bad default fails here, not at the first query.
+    pub fn spawn_registry(
+        registry: Arc<ModelRegistry>,
+        default_model: &str,
+        bind: &str,
+        cfg: ServeConfig,
+    ) -> Result<FleetServer> {
         ensure!(cfg.max_conns >= 1, "max_conns must be >= 1");
+        ensure!(cfg.max_queue >= 1, "max_queue must be >= 1");
+        ensure!(cfg.max_inflight_per_conn >= 1, "max_inflight_per_conn must be >= 1");
+        registry
+            .get(default_model)
+            .with_context(|| format!("load default model {default_model:?}"))?;
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Shared::new());
+        let core = Arc::new(ServingCore {
+            registry: registry.clone(),
+            default_model: default_model.to_string(),
+            cfg: cfg.clone(),
+            shared: shared.clone(),
+        });
+        let stop_and_join = |shared: &Arc<Shared>, handles: Vec<std::thread::JoinHandle<()>>| {
+            shared.stop.store(true, Ordering::Relaxed);
+            shared.req_cv.notify_all();
+            shared.admin_cv.notify_all();
+            for h in handles {
+                let _ = h.join();
+            }
+        };
         let mux = {
             let shared = shared.clone();
             let cfg = cfg.clone();
@@ -161,28 +240,53 @@ impl FleetServer {
                 .spawn(move || mux_loop(listener, shared, cfg))?
         };
         let disp = {
-            let shared = shared.clone();
+            let core = core.clone();
             std::thread::Builder::new()
                 .name("fleet-dispatch".into())
-                .spawn(move || Dispatcher::new(shared, searcher, cfg).run())
+                .spawn(move || Dispatcher::new(core).run())
         };
+        // Don't leak running threads (and the bound port) that nothing
+        // will ever answer or stop.
         let disp = match disp {
             Ok(h) => h,
             Err(e) => {
-                // Don't leak a running mux (and the bound port) that
-                // nothing will ever answer or stop.
-                shared.stop.store(true, Ordering::Relaxed);
-                let _ = mux.join();
+                stop_and_join(&shared, vec![mux]);
                 return Err(e).context("spawn fleet dispatcher");
             }
         };
-        Ok(FleetServer { addr, shared, mux: Some(mux), disp: Some(disp) })
+        let admin = {
+            let core = core.clone();
+            std::thread::Builder::new()
+                .name("fleet-admin".into())
+                .spawn(move || AdminLane::new(core).run())
+        };
+        let admin = match admin {
+            Ok(h) => h,
+            Err(e) => {
+                stop_and_join(&shared, vec![mux, disp]);
+                return Err(e).context("spawn fleet admin lane");
+            }
+        };
+        Ok(FleetServer {
+            addr,
+            shared,
+            registry,
+            mux: Some(mux),
+            disp: Some(disp),
+            admin: Some(admin),
+        })
     }
 
     /// Serving counters (the same numbers `{"cmd":"stats"}` reports).
     pub fn stats(&self) -> StatsSnapshot {
         let depth = self.shared.requests.lock().unwrap().len();
-        self.shared.stats.snapshot(depth)
+        let admin_depth = self.shared.admin.lock().unwrap().len();
+        self.shared.stats.snapshot(depth, admin_depth)
+    }
+
+    /// The model registry this server serves from.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Responses delivered so far.
@@ -190,16 +294,16 @@ impl FleetServer {
         self.shared.stats.served.load(Ordering::Relaxed)
     }
 
-    /// Stop both threads and return once they have exited.  Open
+    /// Stop all three threads and return once they have exited.  Open
     /// connections are shut down; requests still queued are dropped.
     pub fn shutdown(mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.req_cv.notify_all();
-        if let Some(h) = self.mux.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.disp.take() {
-            let _ = h.join();
+        self.shared.admin_cv.notify_all();
+        for h in [self.mux.take(), self.disp.take(), self.admin.take()] {
+            if let Some(h) = h {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -229,19 +333,59 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
             }
         }
 
-        // Readiness sweep: decode complete lines into the request queue
-        // (collected outside the lock — reads are syscalls).
-        let mut new_items: Vec<WorkItem> = Vec::new();
-        for c in conns.iter_mut() {
+        // Readiness sweep: decode complete lines (collected outside the
+        // locks — reads are syscalls), then classify per line.
+        let mut pending: Vec<(usize, String)> = Vec::new();
+        for (i, c) in conns.iter_mut().enumerate() {
             for line in c.read_ready() {
-                c.inflight += 1;
-                new_items.push(WorkItem { conn: c.id, line });
+                pending.push((i, line));
             }
         }
-        if !new_items.is_empty() {
+        if !pending.is_empty() {
             progress = true;
-            shared.requests.lock().unwrap().extend(new_items);
-            shared.req_cv.notify_all();
+            // Remaining solve-queue room, computed once per tick: the
+            // bound is approximate (the dispatcher drains concurrently)
+            // but can only under-admit, never exceed the cap.
+            let mut room = cfg.max_queue.saturating_sub(shared.requests.lock().unwrap().len());
+            let mut solve_items: Vec<WorkItem> = Vec::new();
+            let mut admin_items: Vec<WorkItem> = Vec::new();
+            for (i, line) in pending {
+                let c = &mut conns[i];
+                // Cheap lane split: a JSON command object always contains
+                // the `"cmd"` key literally.  A solve whose string values
+                // merely mention it lands on the admin lane, which answers
+                // solves inline — correct, just off the batch path.
+                if line.contains("\"cmd\"") {
+                    // Admin is never rejected: cheap, and refusing stats
+                    // under load would blind the operator.
+                    c.inflight += 1;
+                    admin_items.push(WorkItem { conn: c.id, line });
+                } else if c.inflight >= cfg.max_inflight_per_conn {
+                    shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    c.queue_response(&protocol::busy_line(&format!(
+                        "per-connection in-flight cap ({}) reached",
+                        cfg.max_inflight_per_conn
+                    )));
+                } else if room == 0 {
+                    shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    c.queue_response(&protocol::busy_line(&format!(
+                        "solve queue full ({})",
+                        cfg.max_queue
+                    )));
+                } else {
+                    room -= 1;
+                    c.inflight += 1;
+                    solve_items.push(WorkItem { conn: c.id, line });
+                }
+            }
+            if !solve_items.is_empty() {
+                shared.requests.lock().unwrap().extend(solve_items);
+                shared.req_cv.notify_all();
+            }
+            if !admin_items.is_empty() {
+                shared.admin.lock().unwrap().extend(admin_items);
+                shared.admin_cv.notify_all();
+            }
         }
 
         // Route finished responses into per-connection write buffers.
@@ -249,12 +393,12 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
         // it — the dispatcher contends on this mutex to push the next
         // batch, and a per-response scan over all conns would hold it for
         // O(batch * conns).
-        let pending = std::mem::take(&mut *shared.responses.lock().unwrap());
-        if !pending.is_empty() {
+        let finished = std::mem::take(&mut *shared.responses.lock().unwrap());
+        if !finished.is_empty() {
             progress = true;
             let index: HashMap<u64, usize> =
                 conns.iter().enumerate().map(|(i, c)| (c.id, i)).collect();
-            for (id, line) in pending {
+            for (id, line) in finished {
                 if let Some(&i) = index.get(&id) {
                     let c = &mut conns[i];
                     c.queue_response(&line);

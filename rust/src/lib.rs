@@ -36,6 +36,12 @@
 //! over a persistent worker pool, with identical concurrent cold queries
 //! single-flighted onto one engine solve.
 //!
+//! [`registry`] makes the server multi-tenant: a [`registry::ModelRegistry`]
+//! keyed by model id owns, per model, the packed weights, learned
+//! indicators, and an isolated engine cache — lazy single-flighted loads,
+//! LRU-by-bytes eviction against `--mem-budget-mb`, per-model byte
+//! accounting in `{"cmd":"stats"}`.
+//!
 //! ## Compute: the [`kernels`] module
 //!
 //! All dense numeric work funnels through [`kernels`]: blocked GEMM over
@@ -56,6 +62,7 @@ pub mod kernels;
 pub mod models;
 pub mod optim;
 pub mod quant;
+pub mod registry;
 pub mod report;
 pub mod runtime;
 pub mod search;

@@ -1,0 +1,715 @@
+//! # ModelRegistry — multi-model serving with budgeted load/evict
+//!
+//! The paper's economics (§4.3): once layer-wise importance indicators
+//! are learned, every MPQ policy query is a near-free data-free solve —
+//! which only pays off at fleet scale if one serving process answers for
+//! *many* models.  This module turns the server's single hardcoded model
+//! into a multi-tenant registry:
+//!
+//! * [`ModelEntry`] — everything one model owns: metadata, learned
+//!   indicators, packed weights ([`PackedWeights`], plus on-demand
+//!   integer packing via [`ModelEntry::int_model`]), and an **isolated**
+//!   [`PolicyEngine`] whose policy cache and single-flight table never
+//!   mix with another model's (the same canonical request on two models
+//!   cannot collide).
+//! * [`ModelSource`] — where entries come from: an artifacts directory
+//!   ([`DirSource`]) or in-memory builders ([`StaticSource`]).
+//! * [`ModelRegistry`] — lazy, single-flighted loads keyed by model id,
+//!   LRU-by-bytes eviction against a global memory budget
+//!   (`--mem-budget-mb`), and per-model byte accounting surfaced through
+//!   [`RegistryStats`] into `{"cmd":"stats"}`.
+//!
+//! Eviction drops the registry's reference; solves already holding the
+//! entry's `Arc` finish normally and the memory is released when the
+//! last reference goes.  A model whose resident footprint alone exceeds
+//! the whole budget is a clean load error, never a livelock.
+
+pub mod packed;
+pub mod source;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+pub use self::packed::{PackedLayer, PackedWeights};
+pub use self::source::{DirSource, ModelSource, StaticSource};
+
+use crate::engine::{CacheStats, PolicyEngine};
+use crate::importance::IndicatorStore;
+use crate::models::ModelMeta;
+use crate::quant::int_infer::IntModel;
+use crate::quant::BitConfig;
+
+/// Fixed per-entry overhead charged on top of the measured buffers
+/// (metadata structs, cache scaffolding, allocator slack).
+const ENTRY_OVERHEAD_BYTES: usize = 4096;
+
+/// Registry knobs (CLI: `--mem-budget-mb`, plus engine cache sizing).
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Global budget for resident models, in bytes (`None` = unlimited).
+    /// Loading past it evicts least-recently-used models first.
+    pub mem_budget: Option<usize>,
+    /// Per-model policy-cache capacity (entries, not bytes).
+    pub cache_capacity: usize,
+    /// Keep the flat parameter buffer + packed float weights resident
+    /// (off = policy-only serving; entries are importance + engine).
+    pub retain_weights: bool,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig {
+            mem_budget: None,
+            cache_capacity: crate::engine::DEFAULT_CACHE_CAPACITY,
+            retain_weights: true,
+        }
+    }
+}
+
+impl RegistryConfig {
+    /// Set the budget in MiB (the `--mem-budget-mb` unit).
+    pub fn mem_budget_mb(mut self, mb: usize) -> RegistryConfig {
+        self.mem_budget = Some(mb << 20);
+        self
+    }
+}
+
+/// Everything the registry loads for one model, before entry assembly.
+pub struct ModelAssets {
+    pub meta: ModelMeta,
+    /// Learned (or statistics-initialized) layer-wise indicators.
+    pub store: IndicatorStore,
+    /// Flat parameter buffer; `None` for policy-only entries.
+    pub flat: Option<Vec<f32>>,
+}
+
+/// One resident model: packed weights, indicators, and an isolated
+/// engine.  Shared out as `Arc<ModelEntry>`; eviction only drops the
+/// registry's reference.
+pub struct ModelEntry {
+    name: String,
+    engine: Arc<PolicyEngine>,
+    store: Option<Arc<IndicatorStore>>,
+    flat: Option<Arc<Vec<f32>>>,
+    packed: Option<Arc<PackedWeights>>,
+    bytes: usize,
+}
+
+impl ModelEntry {
+    /// Assemble an entry from loaded assets: derive importances, build
+    /// the per-model engine, pack dense weights, and account the bytes.
+    pub fn build(name: &str, assets: ModelAssets, cfg: &RegistryConfig) -> Arc<ModelEntry> {
+        let ModelAssets { meta, store, flat } = assets;
+        let importance = store.importance(&meta);
+        let engine =
+            Arc::new(PolicyEngine::with_cache_capacity(meta, importance, cfg.cache_capacity));
+        let flat = if cfg.retain_weights { flat.map(Arc::new) } else { None };
+        let packed = flat
+            .as_ref()
+            .map(|f| Arc::new(PackedWeights::pack(&engine.meta, f)))
+            .filter(|p| p.n_layers() > 0);
+        let mut e = ModelEntry {
+            name: name.to_string(),
+            engine,
+            store: Some(Arc::new(store)),
+            flat,
+            packed,
+            bytes: 0,
+        };
+        e.bytes = e.measure();
+        Arc::new(e)
+    }
+
+    /// Wrap an existing engine (single-model compatibility path and
+    /// solver-injection tests).  No weights or indicator store: policy
+    /// serving only.
+    pub fn from_engine(name: &str, engine: Arc<PolicyEngine>) -> Arc<ModelEntry> {
+        let mut e = ModelEntry { name: name.to_string(), engine, store: None, flat: None, packed: None, bytes: 0 };
+        e.bytes = e.measure();
+        Arc::new(e)
+    }
+
+    fn measure(&self) -> usize {
+        let f32s = std::mem::size_of::<f32>();
+        let flat = self.flat.as_ref().map_or(0, |f| f.len() * f32s);
+        let packed = self.packed.as_ref().map_or(0, |p| p.bytes());
+        let store = self.store.as_ref().map_or(0, |s| {
+            s.slot_bits.len()
+                + (s.sw.iter().chain(&s.sa).map(Vec::len).sum::<usize>()) * f32s
+        });
+        let imp = &self.engine.importance;
+        let importance = imp.bits.len()
+            + (imp.w.iter().chain(&imp.a).map(Vec::len).sum::<usize>()) * f32s;
+        ENTRY_OVERHEAD_BYTES + flat + packed + store + importance
+    }
+
+    /// Registry id (the wire `"model"` field), not `meta.name` — two
+    /// registry entries may share one meta name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.engine.meta
+    }
+
+    /// The model's isolated policy engine.
+    pub fn engine(&self) -> &Arc<PolicyEngine> {
+        &self.engine
+    }
+
+    /// Resident footprint in bytes (params + packed weights +
+    /// indicators + importances + fixed overhead).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Packed dense float weights, when retained and the model has
+    /// dense layers.
+    pub fn packed(&self) -> Option<&Arc<PackedWeights>> {
+        self.packed.as_ref()
+    }
+
+    /// Flat parameter buffer, when retained.
+    pub fn flat(&self) -> Option<&Arc<Vec<f32>>> {
+        self.flat.as_ref()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.engine.cache_stats()
+    }
+
+    /// Pack this model for integer-domain serving under a solved policy
+    /// (i8-narrowed codes through `kernels::gemm`).  This is the one
+    /// packing entry point for served models — callers go through the
+    /// registry instead of touching the flat buffer themselves.
+    pub fn int_model(&self, policy: &BitConfig) -> Result<IntModel> {
+        let store = self
+            .store
+            .as_ref()
+            .with_context(|| format!("model {:?} holds no indicator store", self.name))?;
+        let flat = self
+            .flat
+            .as_ref()
+            .with_context(|| format!("model {:?} holds no weights (retain_weights off?)", self.name))?;
+        let (sw, sa) = store.gather(policy)?;
+        IntModel::pack(self.meta(), flat, policy, &sw, &sa)
+    }
+}
+
+/// Point-in-time accounting for one resident model.
+#[derive(Debug, Clone)]
+pub struct ModelStat {
+    pub model: String,
+    pub bytes: usize,
+    pub cache: CacheStats,
+}
+
+/// Registry-wide accounting (what `{"cmd":"stats"}` reports).
+#[derive(Debug, Clone)]
+pub struct RegistryStats {
+    pub resident_bytes: usize,
+    pub mem_budget: Option<usize>,
+    /// Completed source loads (including reloads after eviction).
+    pub loads: usize,
+    pub evictions: usize,
+    pub load_failures: usize,
+    /// Resident models, least- to most-recently used.
+    pub models: Vec<ModelStat>,
+}
+
+impl RegistryStats {
+    pub fn resident(&self) -> usize {
+        self.models.len()
+    }
+}
+
+/// A load in progress: followers block on `cv` until the leader fills
+/// `done` (mirrors the engine's single-flight solve slot).
+struct LoadSlot {
+    done: Mutex<Option<std::result::Result<Arc<ModelEntry>, String>>>,
+    cv: Condvar,
+}
+
+/// Publishes the leader's load result and clears the in-flight slot on
+/// every exit path — the `Drop` arm converts a panicking source into an
+/// error so followers can never block forever.
+struct LoadGuard<'a> {
+    registry: &'a ModelRegistry,
+    model: &'a str,
+    slot: &'a Arc<LoadSlot>,
+    published: bool,
+}
+
+impl LoadGuard<'_> {
+    fn publish(&mut self, r: std::result::Result<Arc<ModelEntry>, String>) {
+        if self.published {
+            return;
+        }
+        self.published = true;
+        // Complete the slot before unregistering it: a racing get()
+        // either finds the completed slot or finds nothing and hits the
+        // now-resident entry.
+        *self.slot.done.lock().unwrap() = Some(r);
+        self.slot.cv.notify_all();
+        self.registry.loading.lock().unwrap().remove(self.model);
+    }
+}
+
+impl Drop for LoadGuard<'_> {
+    fn drop(&mut self) {
+        if !self.published {
+            self.publish(Err("model load panicked".into()));
+        }
+    }
+}
+
+struct Resident {
+    entry: Arc<ModelEntry>,
+    /// Monotonic recency stamp; smallest = least recently used.
+    stamp: u64,
+}
+
+struct Inner {
+    entries: HashMap<String, Resident>,
+    clock: u64,
+    resident_bytes: usize,
+}
+
+/// The model registry: lazy single-flighted loads, LRU-by-bytes
+/// eviction against [`RegistryConfig::mem_budget`], per-model byte
+/// accounting.  Shareable across threads (`Arc<ModelRegistry>`); no
+/// lock is held while a source load runs.
+pub struct ModelRegistry {
+    source: Box<dyn ModelSource>,
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    loading: Mutex<HashMap<String, Arc<LoadSlot>>>,
+    loads: AtomicUsize,
+    evictions: AtomicUsize,
+    load_failures: AtomicUsize,
+}
+
+impl ModelRegistry {
+    pub fn new(source: Box<dyn ModelSource>, cfg: RegistryConfig) -> ModelRegistry {
+        ModelRegistry {
+            source,
+            cfg,
+            inner: Mutex::new(Inner { entries: HashMap::new(), clock: 0, resident_bytes: 0 }),
+            loading: Mutex::new(HashMap::new()),
+            loads: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+            load_failures: AtomicUsize::new(0),
+        }
+    }
+
+    /// Single-model registry around an existing engine — the
+    /// compatibility wrapper behind `FleetServer::spawn` (evicting the
+    /// model and re-requesting it restores the same engine).
+    pub fn single(name: &str, engine: Arc<PolicyEngine>) -> ModelRegistry {
+        let entry = ModelEntry::from_engine(name, engine);
+        let source = StaticSource::new().with_entry(entry);
+        ModelRegistry::new(Box::new(source), RegistryConfig::default())
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    /// Model ids the source offers (resident or not).
+    pub fn available(&self) -> Vec<String> {
+        self.source.list()
+    }
+
+    /// Fetch a model, loading it lazily.  Resident entries are returned
+    /// immediately (bumping recency); concurrent cold requests for the
+    /// same model single-flight onto one source load; loading past the
+    /// memory budget evicts least-recently-used models first.
+    pub fn get(&self, model: &str) -> Result<Arc<ModelEntry>> {
+        if let Some(e) = self.touch(model) {
+            return Ok(e);
+        }
+        let (slot, leader) = {
+            let mut loading = self.loading.lock().unwrap();
+            match loading.get(model) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    // Double-check residency under the loading lock: a
+                    // leader that finished between our miss above and
+                    // this lock has already unregistered its slot.
+                    if let Some(e) = self.touch(model) {
+                        return Ok(e);
+                    }
+                    let slot =
+                        Arc::new(LoadSlot { done: Mutex::new(None), cv: Condvar::new() });
+                    loading.insert(model.to_string(), slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if !leader {
+            let mut done = slot.done.lock().unwrap();
+            while done.is_none() {
+                done = slot.cv.wait(done).unwrap();
+            }
+            return match done.as_ref().unwrap() {
+                Ok(entry) => {
+                    self.touch(model);
+                    Ok(entry.clone())
+                }
+                Err(msg) => Err(anyhow!("load of model {model:?} failed: {msg}")),
+            };
+        }
+        // Leader: load with no registry lock held; the guard publishes
+        // the result (or the panic) to followers on every exit path.
+        let mut guard = LoadGuard { registry: self, model, slot: &slot, published: false };
+        let loaded = self
+            .source
+            .load(model, &self.cfg)
+            .and_then(|entry| self.admit(model, entry.clone()).map(|()| entry));
+        match loaded {
+            Ok(entry) => {
+                self.loads.fetch_add(1, Ordering::Relaxed);
+                guard.publish(Ok(entry.clone()));
+                Ok(entry)
+            }
+            Err(e) => {
+                self.load_failures.fetch_add(1, Ordering::Relaxed);
+                guard.publish(Err(format!("{e:#}")));
+                Err(e).with_context(|| format!("load model {model:?}"))
+            }
+        }
+    }
+
+    /// Explicitly load a model (the `{"cmd":"load"}` admin path).
+    pub fn load(&self, model: &str) -> Result<Arc<ModelEntry>> {
+        self.get(model)
+    }
+
+    /// Evict one model.  Returns whether it was resident.  In-flight
+    /// solves holding the entry's `Arc` finish normally; the memory is
+    /// freed when the last reference drops.
+    pub fn evict(&self, model: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.remove(model) {
+            Some(r) => {
+                inner.resident_bytes -= r.entry.bytes();
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether a model is currently resident (no load is triggered).
+    pub fn resident(&self, model: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(model)
+    }
+
+    /// Registry-wide + per-model accounting, LRU order.
+    pub fn stats(&self) -> RegistryStats {
+        let inner = self.inner.lock().unwrap();
+        let mut models: Vec<(u64, ModelStat)> = inner
+            .entries
+            .iter()
+            .map(|(name, r)| {
+                (
+                    r.stamp,
+                    ModelStat {
+                        model: name.clone(),
+                        bytes: r.entry.bytes(),
+                        cache: r.entry.cache_stats(),
+                    },
+                )
+            })
+            .collect();
+        models.sort_by_key(|(stamp, _)| *stamp);
+        RegistryStats {
+            resident_bytes: inner.resident_bytes,
+            mem_budget: self.cfg.mem_budget,
+            loads: self.loads.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            load_failures: self.load_failures.load(Ordering::Relaxed),
+            models: models.into_iter().map(|(_, m)| m).collect(),
+        }
+    }
+
+    /// Bump recency and return the entry if resident.
+    fn touch(&self, model: &str) -> Option<Arc<ModelEntry>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        let r = inner.entries.get_mut(model)?;
+        r.stamp = stamp;
+        Some(r.entry.clone())
+    }
+
+    /// Insert a freshly loaded entry, evicting LRU entries until it
+    /// fits the budget.
+    fn admit(&self, model: &str, entry: Arc<ModelEntry>) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(budget) = self.cfg.mem_budget {
+            ensure!(
+                entry.bytes() <= budget,
+                "model {model:?} needs {} bytes resident, over the whole {budget}-byte \
+                 budget (--mem-budget-mb too small)",
+                entry.bytes()
+            );
+            while inner.resident_bytes + entry.bytes() > budget {
+                let victim = inner
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, r)| r.stamp)
+                    .map(|(name, _)| name.clone());
+                let Some(name) = victim else { break };
+                let r = inner.entries.remove(&name).expect("victim resident");
+                inner.resident_bytes -= r.entry.bytes();
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.resident_bytes += entry.bytes();
+        if let Some(old) = inner.entries.insert(model.to_string(), Resident { entry, stamp }) {
+            // A racing explicit load replaced an existing entry; release
+            // the old one's accounting.
+            inner.resident_bytes -= old.entry.bytes();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SearchRequest;
+    use crate::models::synthetic_meta;
+    use crate::quant::cost::uniform_bitops;
+    use crate::util::json::Json;
+    use crate::util::rng::Rng;
+
+    fn assets(layers: usize, seed: u64) -> ModelAssets {
+        let meta = synthetic_meta(layers, |i| 100_000 * (i as u64 + 1));
+        let flat = meta.init_params(&mut Rng::new(seed));
+        let store = IndicatorStore::init_stats(&meta, &flat);
+        ModelAssets { meta, store, flat: Some(flat) }
+    }
+
+    fn counting_source(
+        names: &[&str],
+        layers: usize,
+        counter: Arc<AtomicUsize>,
+    ) -> StaticSource {
+        let mut src = StaticSource::new();
+        for (i, name) in names.iter().enumerate() {
+            let counter = counter.clone();
+            let name_owned = name.to_string();
+            src = src.with_builder(name, move |cfg| {
+                counter.fetch_add(1, Ordering::SeqCst);
+                Ok(ModelEntry::build(&name_owned, assets(layers, i as u64 + 1), cfg))
+            });
+        }
+        src
+    }
+
+    #[test]
+    fn lazy_load_then_resident_hit() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = ModelRegistry::new(
+            Box::new(counting_source(&["m0", "m1"], 6, loads.clone())),
+            RegistryConfig::default(),
+        );
+        assert_eq!(reg.available(), vec!["m0", "m1"]);
+        assert!(!reg.resident("m0"));
+        let a = reg.get("m0").unwrap();
+        let b = reg.get("m0").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must return the resident entry");
+        assert_eq!(loads.load(Ordering::SeqCst), 1);
+        let s = reg.stats();
+        assert_eq!(s.resident(), 1);
+        assert_eq!(s.loads, 1);
+        assert_eq!(s.resident_bytes, a.bytes());
+        assert!(a.bytes() > ENTRY_OVERHEAD_BYTES);
+        assert!(reg.get("nope").is_err());
+        assert_eq!(reg.stats().load_failures, 1);
+    }
+
+    #[test]
+    fn concurrent_cold_gets_single_flight_to_one_load() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let counter = loads.clone();
+        let src = StaticSource::new().with_builder("m", move |cfg| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(80));
+            Ok(ModelEntry::build("m", assets(6, 3), cfg))
+        });
+        let reg = ModelRegistry::new(Box::new(src), RegistryConfig::default());
+        let barrier = std::sync::Barrier::new(6);
+        let entries: Vec<Arc<ModelEntry>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6)
+                .map(|_| {
+                    s.spawn(|| {
+                        barrier.wait();
+                        reg.get("m").unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(loads.load(Ordering::SeqCst), 1, "stampede must cost one load");
+        for e in &entries {
+            assert!(Arc::ptr_eq(e, &entries[0]));
+        }
+    }
+
+    #[test]
+    fn lru_by_bytes_evicts_the_stalest_model() {
+        // Three equal-sized models, budget for exactly two.
+        let probe = ModelEntry::build("probe", assets(6, 1), &RegistryConfig::default());
+        let cfg = RegistryConfig {
+            mem_budget: Some(2 * probe.bytes() + 64),
+            ..RegistryConfig::default()
+        };
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = ModelRegistry::new(
+            Box::new(counting_source(&["a", "b", "c"], 6, loads.clone())),
+            cfg,
+        );
+        reg.get("a").unwrap();
+        reg.get("b").unwrap();
+        reg.get("a").unwrap(); // refresh a: b is now the stalest
+        reg.get("c").unwrap(); // must evict b, not a
+        assert!(reg.resident("a") && reg.resident("c") && !reg.resident("b"));
+        let s = reg.stats();
+        assert_eq!(s.resident(), 2);
+        assert_eq!(s.evictions, 1);
+        assert!(s.resident_bytes <= s.mem_budget.unwrap());
+        assert_eq!(s.resident_bytes, s.models.iter().map(|m| m.bytes).sum::<usize>());
+        // LRU -> MRU ordering in the stats
+        assert_eq!(s.models[0].model, "a");
+        assert_eq!(s.models[1].model, "c");
+        // b reloads on demand
+        reg.get("b").unwrap();
+        assert_eq!(loads.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn model_over_the_whole_budget_is_a_clean_error() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = ModelRegistry::new(
+            Box::new(counting_source(&["big"], 6, loads)),
+            RegistryConfig { mem_budget: Some(128), ..RegistryConfig::default() },
+        );
+        let err = reg.get("big").unwrap_err();
+        assert!(format!("{err:#}").contains("budget"), "{err:#}");
+        assert_eq!(reg.stats().resident(), 0);
+        assert_eq!(reg.stats().load_failures, 1);
+    }
+
+    #[test]
+    fn evict_then_get_reloads_with_a_fresh_cache() {
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg = ModelRegistry::new(
+            Box::new(counting_source(&["m"], 6, loads.clone())),
+            RegistryConfig::default(),
+        );
+        let e = reg.get("m").unwrap();
+        let cap = uniform_bitops(e.meta(), 4, 4);
+        let req = SearchRequest::builder().bitops_cap(cap).build().unwrap();
+        e.engine().solve(&req).unwrap();
+        assert_eq!(e.cache_stats().entries, 1);
+        assert!(reg.evict("m"));
+        assert!(!reg.evict("m"), "double evict reports not resident");
+        assert_eq!(reg.stats().resident_bytes, 0);
+        let e2 = reg.get("m").unwrap();
+        assert_eq!(loads.load(Ordering::SeqCst), 2);
+        assert_eq!(e2.cache_stats().entries, 0, "reload must start with a cold cache");
+    }
+
+    #[test]
+    fn per_model_engines_isolate_policy_caches() {
+        let (a6, a9) = (assets(6, 1), assets(9, 2));
+        let reg = ModelRegistry::new(
+            Box::new(
+                StaticSource::new()
+                    .with_assets("six", a6.meta, a6.store, None)
+                    .with_assets("nine", a9.meta, a9.store, None),
+            ),
+            RegistryConfig::default(),
+        );
+        // One canonical request served by both models: distinct engines,
+        // both cold, answers sized per model.
+        let req = SearchRequest::builder().size_cap_bytes(1 << 20).build().unwrap();
+        let six = reg.get("six").unwrap();
+        let nine = reg.get("nine").unwrap();
+        let a = six.engine().solve(&req).unwrap();
+        let b = nine.engine().solve(&req).unwrap();
+        assert!(!a.cache_hit && !b.cache_hit, "same key on two models must not collide");
+        assert_eq!(a.outcome.policy.w_bits.len(), 6);
+        assert_eq!(b.outcome.policy.w_bits.len(), 9);
+        assert_eq!(six.cache_stats().misses, 1);
+        assert_eq!(nine.cache_stats().misses, 1);
+        assert_eq!(six.cache_stats().hits, 0);
+    }
+
+    #[test]
+    fn dense_model_packs_weights_and_int_model() {
+        // A small dense MLP meta (4 -> 3 -> 2), the IntModel layout.
+        let text = r#"{
+          "name": "densely", "param_size": 26, "n_qlayers": 2,
+          "input_shape": [4], "n_classes": 2,
+          "train_batch": 2, "eval_batch": 2, "serve_batch": 2,
+          "bit_options": [2,3,4,5,6], "pin_bits": 8,
+          "params": [
+            {"name":"l0.w","shape":[4,3],"offset":0,"size":12,"init":"he_dense","fan_in":4},
+            {"name":"l0.b","shape":[3],"offset":12,"size":3,"init":"zeros","fan_in":4},
+            {"name":"l1.w","shape":[3,2],"offset":15,"size":6,"init":"he_dense","fan_in":3},
+            {"name":"l1.b","shape":[2],"offset":21,"size":2,"init":"zeros","fan_in":3},
+            {"name":"norm.g","shape":[3],"offset":23,"size":3,"init":"ones","fan_in":1}
+          ],
+          "qlayers": [
+            {"index":0,"name":"l0","kind":"dense","macs":12,"w_numel":12,"pinned":true},
+            {"index":1,"name":"l1","kind":"dense","macs":6,"w_numel":6,"pinned":true}
+          ],
+          "artifacts": {}
+        }"#;
+        let meta =
+            ModelMeta::from_json(&Json::parse(text).unwrap(), std::path::Path::new("/tmp"))
+                .unwrap();
+        let flat = meta.init_params(&mut Rng::new(5));
+        let store = IndicatorStore::init_stats(&meta, &flat);
+        let entry = ModelEntry::build(
+            "densely",
+            ModelAssets { meta: meta.clone(), store, flat: Some(flat) },
+            &RegistryConfig::default(),
+        );
+        let packed = entry.packed().expect("dense layers must pack");
+        assert_eq!(packed.n_layers(), 2);
+        assert_eq!(packed.layers[0].w.rows, 3); // [out, in] transposed
+        assert_eq!(packed.layers[0].w.cols, 4);
+        assert_eq!(packed.layers[1].bias.len(), 2);
+        assert!(entry.bytes() >= ENTRY_OVERHEAD_BYTES + packed.bytes());
+        let policy = BitConfig::uniform_pinned(&meta, 4, 4);
+        let im = entry.int_model(&policy).unwrap();
+        assert_eq!(im.layers.len(), 2);
+        // conv-kind synthetic models have nothing to pack, and say so
+        let conv = ModelEntry::build("conv", assets(4, 9), &RegistryConfig::default());
+        assert!(conv.packed().is_none());
+        let err = ModelEntry::from_engine("bare", conv.engine().clone())
+            .int_model(&BitConfig::uniform_pinned(conv.meta(), 4, 4))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("indicator store"), "{err:#}");
+    }
+
+    #[test]
+    fn retain_weights_off_serves_policy_only() {
+        let cfg = RegistryConfig { retain_weights: false, ..RegistryConfig::default() };
+        let with = ModelEntry::build("w", assets(6, 1), &RegistryConfig::default());
+        let without = ModelEntry::build("wo", assets(6, 1), &cfg);
+        assert!(without.flat().is_none() && without.packed().is_none());
+        assert!(without.bytes() < with.bytes());
+    }
+}

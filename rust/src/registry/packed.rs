@@ -1,0 +1,75 @@
+//! Per-model packed weight sets owned by the registry.
+//!
+//! Packing weights into the GEMM layout ([`kernels::gemm::PackedF32`] /
+//! `PackedI8`) is a per-model, policy-independent cost that used to be
+//! paid ad hoc by whoever touched the flat buffer.  The registry pays it
+//! once at model-load time and owns the result, so eviction releases the
+//! packed bytes together with everything else the model holds — the
+//! per-model byte accounting in `{"cmd":"stats"}` covers them.
+//!
+//! [`kernels::gemm::PackedF32`]: crate::kernels::gemm::PackedF32
+
+use crate::kernels::gemm::PackedF32;
+use crate::models::ModelMeta;
+
+/// One dense layer's float weights in the pre-transposed `[out, in]`
+/// blocked-GEMM layout, plus its bias.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub name: String,
+    pub in_f: usize,
+    pub out_f: usize,
+    pub w: PackedF32,
+    pub bias: Vec<f32>,
+}
+
+/// Every dense layer of a model packed for serving GEMMs.  Conv-kind
+/// layers (no 2-D `<name>.w` parameter) are skipped — the float serving
+/// path for those runs through the AOT artifacts, not host GEMM.
+#[derive(Debug, Clone, Default)]
+pub struct PackedWeights {
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedWeights {
+    /// Pack every dense layer found in `meta` out of the flat parameter
+    /// buffer.  Policy-independent: the same packed set serves every
+    /// bit-width policy (integer repacking is separate, see
+    /// [`super::ModelEntry::int_model`]).
+    pub fn pack(meta: &ModelMeta, flat: &[f32]) -> PackedWeights {
+        let mut layers = Vec::new();
+        for q in &meta.qlayers {
+            if q.kind != "dense" {
+                continue;
+            }
+            let wname = format!("{}.w", q.name);
+            let Some(wp) = meta.params.iter().find(|p| p.name == wname) else {
+                continue;
+            };
+            if wp.shape.len() != 2 {
+                continue;
+            }
+            let (in_f, out_f) = (wp.shape[0], wp.shape[1]);
+            let w = PackedF32::from_row_major(&flat[wp.offset..wp.offset + wp.size], in_f, out_f);
+            let bname = format!("{}.b", q.name);
+            let bias = match meta.params.iter().find(|p| p.name == bname) {
+                Some(bp) => flat[bp.offset..bp.offset + bp.size].to_vec(),
+                None => vec![0.0; out_f],
+            };
+            layers.push(PackedLayer { name: q.name.clone(), in_f, out_f, w, bias });
+        }
+        PackedWeights { layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Resident bytes of the packed set (weights + biases).
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.w.rows * l.w.cols + l.bias.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+}

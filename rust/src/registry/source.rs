@@ -1,0 +1,188 @@
+//! Where models come from: the [`ModelSource`] trait and its two
+//! implementations.
+//!
+//! * [`DirSource`] — the production path: an artifacts directory of
+//!   `<model>_meta.json` files (the Python build contract), with learned
+//!   indicators pulled from a `limpq pipeline` checkpoint cache when one
+//!   exists and statistics-initialized otherwise.
+//! * [`StaticSource`] — in-memory builders for tests, benches, and the
+//!   single-model compatibility wrapper: each registered model maps to a
+//!   closure that produces (or re-produces, after eviction) its entry.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ModelAssets, ModelEntry, RegistryConfig};
+use crate::coordinator::checkpoint::Cache;
+use crate::importance::IndicatorStore;
+use crate::models::ModelMeta;
+use crate::util::rng::Rng;
+
+/// A lazy supplier of model entries for the registry.  `load` runs
+/// outside every registry lock (loads are single-flighted per model),
+/// so implementations may do real work — disk reads, parameter init,
+/// weight packing.
+pub trait ModelSource: Send + Sync {
+    /// Model ids this source can load (what `{"cmd":"models"}` lists).
+    fn list(&self) -> Vec<String>;
+
+    /// Build the entry for one model id.
+    fn load(&self, model: &str, cfg: &RegistryConfig) -> Result<Arc<ModelEntry>>;
+}
+
+/// Directory-backed source over `<model>_meta.json` files.
+pub struct DirSource {
+    artifacts_dir: PathBuf,
+    /// Pipeline output dir; its checkpoint cache supplies learned
+    /// indicators when present.
+    out_dir: Option<PathBuf>,
+    /// Fall back to statistics-initialized indicators when no trained
+    /// checkpoint exists (off = loading such a model is an error).
+    stats_fallback: bool,
+    /// Parameter-init seed (deterministic per process).
+    seed: u64,
+}
+
+impl DirSource {
+    pub fn new(artifacts_dir: &Path) -> DirSource {
+        DirSource {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            out_dir: None,
+            stats_fallback: true,
+            seed: 7,
+        }
+    }
+
+    /// Use `out_dir`'s checkpoint cache for learned indicators.
+    pub fn with_out_dir(mut self, out_dir: &Path) -> DirSource {
+        self.out_dir = Some(out_dir.to_path_buf());
+        self
+    }
+
+    /// Refuse models without trained indicators instead of falling back
+    /// to statistics init (the strict single-model `limpq serve` path).
+    pub fn require_trained_indicators(mut self) -> DirSource {
+        self.stats_fallback = false;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> DirSource {
+        self.seed = seed;
+        self
+    }
+}
+
+impl ModelSource for DirSource {
+    fn list(&self) -> Vec<String> {
+        let mut models: Vec<String> = std::fs::read_dir(&self.artifacts_dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()
+                    .and_then(|n| n.strip_suffix("_meta.json"))
+                    .map(str::to_string)
+            })
+            .collect();
+        models.sort();
+        models
+    }
+
+    fn load(&self, model: &str, cfg: &RegistryConfig) -> Result<Arc<ModelEntry>> {
+        let meta = ModelMeta::load(&self.artifacts_dir, model)?;
+        let flat = meta.init_params(&mut Rng::new(self.seed));
+        let cached = match &self.out_dir {
+            Some(dir) => Cache::new(dir)?.load_indicators(model)?,
+            None => None,
+        };
+        let store = match cached {
+            Some(store) => store,
+            None if self.stats_fallback => IndicatorStore::init_stats(&meta, &flat),
+            None => bail!(
+                "no cached indicators for {model:?} — run `limpq pipeline` first \
+                 (or serve via --models, which falls back to statistics init)"
+            ),
+        };
+        Ok(ModelEntry::build(model, ModelAssets { meta, store, flat: Some(flat) }, cfg))
+    }
+}
+
+/// Per-model entry builder used by [`StaticSource`].
+type EntryBuilder = Box<dyn Fn(&RegistryConfig) -> Result<Arc<ModelEntry>> + Send + Sync>;
+
+/// In-memory source: each model id maps to a closure producing its
+/// entry.  Used by tests/benches (synthetic models, injected solvers,
+/// load counting) and by the single-model [`FleetServer::spawn`]
+/// compatibility wrapper.
+///
+/// [`FleetServer::spawn`]: crate::fleet::FleetServer::spawn
+#[derive(Default)]
+pub struct StaticSource {
+    builders: HashMap<String, EntryBuilder>,
+}
+
+impl StaticSource {
+    pub fn new() -> StaticSource {
+        StaticSource::default()
+    }
+
+    /// Register a model rebuilt from its assets on every load — an
+    /// evict/reload cycle gets a fresh entry (empty policy cache), like
+    /// a real reload would.
+    pub fn with_assets(
+        self,
+        model: &str,
+        meta: ModelMeta,
+        store: IndicatorStore,
+        flat: Option<Vec<f32>>,
+    ) -> StaticSource {
+        let model_owned = model.to_string();
+        self.with_builder(model, move |cfg| {
+            Ok(ModelEntry::build(
+                &model_owned,
+                ModelAssets { meta: meta.clone(), store: store.clone(), flat: flat.clone() },
+                cfg,
+            ))
+        })
+    }
+
+    /// Register a prebuilt entry returned as-is on every load.  The
+    /// source keeps the `Arc` alive, so evicting such a model frees no
+    /// memory — this is the single-model wrapper path, where there is
+    /// nothing else to serve anyway.
+    pub fn with_entry(self, entry: Arc<ModelEntry>) -> StaticSource {
+        let name = entry.name().to_string();
+        self.with_builder(&name, move |_| Ok(entry.clone()))
+    }
+
+    /// Register an arbitrary builder (tests count loads or inject
+    /// latency/failures through this).
+    pub fn with_builder(
+        mut self,
+        model: &str,
+        f: impl Fn(&RegistryConfig) -> Result<Arc<ModelEntry>> + Send + Sync + 'static,
+    ) -> StaticSource {
+        self.builders.insert(model.to_string(), Box::new(f));
+        self
+    }
+}
+
+impl ModelSource for StaticSource {
+    fn list(&self) -> Vec<String> {
+        let mut models: Vec<String> = self.builders.keys().cloned().collect();
+        models.sort();
+        models
+    }
+
+    fn load(&self, model: &str, cfg: &RegistryConfig) -> Result<Arc<ModelEntry>> {
+        let b = self
+            .builders
+            .get(model)
+            .with_context(|| format!("unknown model {model:?} (known: {})", self.list().join(", ")))?;
+        b(cfg)
+    }
+}

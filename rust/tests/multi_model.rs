@@ -1,0 +1,481 @@
+//! Integration tests for multi-model serving: one fleet server over a
+//! `ModelRegistry` — lazy loads, LRU-by-bytes eviction, per-model cache
+//! isolation, model-grouped coalesced sweeps, the admin fast lane, and
+//! backpressure (`busy` rejections).
+//!
+//! Artifact-free (synthetic model meta): always runs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use limpq::engine::{
+    BranchAndBound, PolicyEngine, SolveBudget, SolveOutcome, Solver, SolverRegistry,
+};
+use limpq::fleet::{query, FleetServer, ServeConfig};
+use limpq::importance::IndicatorStore;
+use limpq::models::{synthetic_meta, ModelMeta};
+use limpq::quant::cost::uniform_bitops;
+use limpq::registry::{ModelEntry, ModelRegistry, RegistryConfig, StaticSource};
+use limpq::search::MpqProblem;
+use limpq::util::json::Json;
+
+fn meta_n(layers: usize) -> ModelMeta {
+    synthetic_meta(layers, |i| 100_000 * (i as u64 + 1))
+}
+
+/// A source of identically-shaped synthetic models (so every entry
+/// weighs the same number of bytes — convenient for budget math).
+fn source_of(names: &[&str], layers: usize) -> StaticSource {
+    let mut src = StaticSource::new();
+    for name in names {
+        let meta = meta_n(layers);
+        let store = IndicatorStore::init_uniform(&meta);
+        src = src.with_assets(name, meta, store, None);
+    }
+    src
+}
+
+/// Bytes one synthetic `layers`-layer entry occupies when resident.
+fn entry_bytes(layers: usize) -> usize {
+    let reg = ModelRegistry::new(
+        Box::new(source_of(&["probe"], layers)),
+        RegistryConfig::default(),
+    );
+    reg.get("probe").unwrap().bytes()
+}
+
+fn spawn(names: &[&str], layers: usize, rcfg: RegistryConfig, scfg: ServeConfig) -> FleetServer {
+    let registry = Arc::new(ModelRegistry::new(Box::new(source_of(names, layers)), rcfg));
+    FleetServer::spawn_registry(registry, names[0], "127.0.0.1:0", scfg).unwrap()
+}
+
+fn solve_req(model: Option<&str>, name: &str, cap_g: f64) -> Json {
+    let mut fields = vec![
+        ("name", Json::from(name)),
+        ("cap_gbitops", Json::Num(cap_g)),
+        ("alpha", Json::Num(2.0)),
+    ];
+    if let Some(m) = model {
+        fields.push(("model", Json::from(m)));
+    }
+    Json::obj(fields)
+}
+
+fn cmd(c: &str, model: Option<&str>) -> Json {
+    let mut fields = vec![("cmd", Json::from(c))];
+    if let Some(m) = model {
+        fields.push(("model", Json::from(m)));
+    }
+    Json::obj(fields)
+}
+
+/// Resident model names from a `{"cmd":"models"}` response, LRU→MRU.
+fn resident_names(resp: &Json) -> Vec<String> {
+    resp.get("resident")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.get("model").unwrap().as_str().unwrap().to_string())
+        .collect()
+}
+
+/// The headline cycle over the wire: solve on a lazily-loaded model,
+/// evict it, and watch the next solve transparently reload it (with a
+/// fresh policy cache — the cached policy does not survive eviction).
+#[test]
+fn load_solve_evict_then_solve_reloads() {
+    let loads = Arc::new(AtomicUsize::new(0));
+    let counted = loads.clone();
+    let meta = meta_n(4);
+    let store = IndicatorStore::init_uniform(&meta);
+    let source = StaticSource::new().with_builder("m", move |cfg| {
+        counted.fetch_add(1, Ordering::SeqCst);
+        Ok(ModelEntry::build(
+            "m",
+            limpq::registry::ModelAssets {
+                meta: meta.clone(),
+                store: store.clone(),
+                flat: None,
+            },
+            cfg,
+        ))
+    });
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    let server =
+        FleetServer::spawn_registry(registry, "m", "127.0.0.1:0", ServeConfig::default()).unwrap();
+    assert_eq!(loads.load(Ordering::SeqCst), 1, "default model loads eagerly, once");
+
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+    let req = solve_req(Some("m"), "edge", cap_g);
+    let first = query(&server.addr, &req).unwrap();
+    assert!(first.get("ok").unwrap().as_bool().unwrap(), "{first}");
+    assert_eq!(first.get("model").unwrap().as_str().unwrap(), "m");
+    assert!(!first.get("cache_hit").unwrap().as_bool().unwrap());
+    assert_eq!(loads.load(Ordering::SeqCst), 1, "resident model must not reload");
+
+    let evicted = query(&server.addr, &cmd("evict", Some("m"))).unwrap();
+    assert!(evicted.get("ok").unwrap().as_bool().unwrap(), "{evicted}");
+    assert!(evicted.get("evicted").unwrap().as_bool().unwrap());
+    // evicting again is a no-op, not an error
+    let again = query(&server.addr, &cmd("evict", Some("m"))).unwrap();
+    assert!(!again.get("evicted").unwrap().as_bool().unwrap());
+
+    // Solve-after-evict: the registry reloads on demand; the rebuilt
+    // engine starts with an empty cache, so the identical request is a
+    // cold solve again.
+    let reloaded = query(&server.addr, &req).unwrap();
+    assert!(reloaded.get("ok").unwrap().as_bool().unwrap(), "{reloaded}");
+    assert!(!reloaded.get("cache_hit").unwrap().as_bool().unwrap());
+    assert_eq!(loads.load(Ordering::SeqCst), 2, "evicted model must reload exactly once");
+    assert_eq!(first.get("w_bits").unwrap(), reloaded.get("w_bits").unwrap());
+
+    // Explicit load warms without solving.
+    query(&server.addr, &cmd("evict", Some("m"))).unwrap();
+    let loaded = query(&server.addr, &cmd("load", Some("m"))).unwrap();
+    assert!(loaded.get("ok").unwrap().as_bool().unwrap(), "{loaded}");
+    assert!(loaded.get("bytes").unwrap().as_usize().unwrap() > 0);
+    assert_eq!(loads.load(Ordering::SeqCst), 3);
+    // loading an unknown model is an error response, not a hang
+    let unknown = query(&server.addr, &cmd("load", Some("nope"))).unwrap();
+    assert!(!unknown.get("ok").unwrap().as_bool().unwrap());
+    assert!(unknown.get("error").unwrap().as_str().unwrap().contains("nope"));
+    server.shutdown();
+}
+
+/// A memory budget that fits two of three models: the least recently
+/// used one is evicted, accounting stays under budget, and the wire
+/// stats report all of it.
+#[test]
+fn lru_eviction_under_tight_budget() {
+    let b = entry_bytes(4);
+    let budget = 2 * b + 64;
+    let rcfg = RegistryConfig { mem_budget: Some(budget), ..RegistryConfig::default() };
+    let server = spawn(&["m0", "m1", "m2"], 4, rcfg, ServeConfig::default());
+
+    // m0 is resident (default); warm m1 then m2 — m0 is the LRU victim.
+    for m in ["m1", "m2"] {
+        let r = query(&server.addr, &cmd("load", Some(m))).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    }
+    let models = query(&server.addr, &cmd("models", None)).unwrap();
+    assert_eq!(resident_names(&models), vec!["m1", "m2"], "{models}");
+    assert_eq!(models.get("available").unwrap().as_arr().unwrap().len(), 3);
+
+    let stats = query(&server.addr, &cmd("stats", None)).unwrap();
+    assert_eq!(stats.get("models_resident").unwrap().as_usize().unwrap(), 2, "{stats}");
+    assert_eq!(stats.get("mem_budget_bytes").unwrap().as_usize().unwrap(), budget);
+    let resident_bytes = stats.get("resident_bytes").unwrap().as_usize().unwrap();
+    assert!(resident_bytes <= budget, "{resident_bytes} over budget {budget}");
+    assert_eq!(resident_bytes, 2 * b, "per-model accounting must sum to the resident set");
+    assert!(stats.get("model_evictions").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(stats.get("model_loads").unwrap().as_usize().unwrap(), 3);
+
+    // Solving on the evicted model reloads it and evicts today's LRU (m1).
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+    let r = query(&server.addr, &solve_req(Some("m0"), "d", cap_g)).unwrap();
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    let models = query(&server.addr, &cmd("models", None)).unwrap();
+    assert_eq!(resident_names(&models), vec!["m2", "m0"], "{models}");
+    server.shutdown();
+}
+
+/// Two models, same canonical request: each model's engine cache is
+/// isolated, so neither request collides with the other's cached policy
+/// (the old single-engine server would have returned a 6-layer policy
+/// for the 9-layer model).
+#[test]
+fn per_model_policy_caches_are_isolated() {
+    let six = meta_n(6);
+    let nine = synthetic_meta(9, |i| 100_000 * (i as u64 + 1));
+    let source = StaticSource::new()
+        .with_assets("six", six.clone(), IndicatorStore::init_uniform(&six), None)
+        .with_assets("nine", nine.clone(), IndicatorStore::init_uniform(&nine), None);
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    let server =
+        FleetServer::spawn_registry(registry, "six", "127.0.0.1:0", ServeConfig::default())
+            .unwrap();
+
+    // The same size cap is canonically identical on both models.
+    let req = |model: &str| {
+        Json::obj(vec![
+            ("model", Json::from(model)),
+            ("size_cap_mb", Json::Num(1.0)),
+            ("alpha", Json::Num(2.0)),
+        ])
+    };
+    let a = query(&server.addr, &req("six")).unwrap();
+    let b = query(&server.addr, &req("nine")).unwrap();
+    assert!(a.get("ok").unwrap().as_bool().unwrap(), "{a}");
+    assert!(b.get("ok").unwrap().as_bool().unwrap(), "{b}");
+    assert!(!a.get("cache_hit").unwrap().as_bool().unwrap());
+    assert!(
+        !b.get("cache_hit").unwrap().as_bool().unwrap(),
+        "the nine-layer solve hit the six-layer model's cache"
+    );
+    assert_eq!(a.get("w_bits").unwrap().as_arr().unwrap().len(), 6);
+    assert_eq!(b.get("w_bits").unwrap().as_arr().unwrap().len(), 9);
+    // repeats hit each model's own cache
+    assert!(query(&server.addr, &req("six")).unwrap().get("cache_hit").unwrap().as_bool().unwrap());
+    assert!(query(&server.addr, &req("nine")).unwrap().get("cache_hit").unwrap().as_bool().unwrap());
+
+    // per-model stats confirm one miss each, not two on one engine
+    let stats = query(&server.addr, &cmd("stats", None)).unwrap();
+    for m in stats.get("models").unwrap().as_arr().unwrap() {
+        assert_eq!(m.get("cache_misses").unwrap().as_usize().unwrap(), 1, "{m}");
+        assert_eq!(m.get("cache_hits").unwrap().as_usize().unwrap(), 1, "{m}");
+    }
+    server.shutdown();
+}
+
+/// One connection pipelines a burst alternating between two models: the
+/// coalescing dispatcher splits the batch into per-model sweeps, yet
+/// per-connection response order and model stamping survive.
+#[test]
+fn mixed_model_coalesced_batch_keeps_order() {
+    const BURST: usize = 10;
+    let server = spawn(
+        &["a", "b"],
+        4,
+        RegistryConfig::default(),
+        ServeConfig { coalesce_window: Duration::from_millis(20), ..Default::default() },
+    );
+    let base = uniform_bitops(&meta_n(4), 4, 4);
+
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut payload = String::new();
+    for i in 0..BURST {
+        let model = if i % 2 == 0 { "a" } else { "b" };
+        let cap_g = (base + 500 * (i as u64 + 1)) as f64 / 1e9;
+        payload.push_str(&solve_req(Some(model), &format!("q{i}"), cap_g).to_string());
+        payload.push('\n');
+    }
+    writer.write_all(payload.as_bytes()).unwrap();
+    for i in 0..BURST {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(
+            resp.get("device").unwrap().as_str().unwrap(),
+            format!("q{i}"),
+            "responses out of order across the model split"
+        );
+        assert_eq!(
+            resp.get("model").unwrap().as_str().unwrap(),
+            if i % 2 == 0 { "a" } else { "b" },
+            "response stamped with the wrong model"
+        );
+    }
+    let sv = server.stats();
+    assert!(sv.coalesced_batch_max >= 2, "burst never coalesced (max {})", sv.coalesced_batch_max);
+    server.shutdown();
+}
+
+/// A solver that sleeps before delegating — makes the dispatcher's sweep
+/// measurably slow so fast-lane latency is observable.
+struct SlowSolver(Duration);
+
+impl Solver for SlowSolver {
+    fn name(&self) -> &'static str {
+        "slug"
+    }
+    fn supports(&self, _p: &MpqProblem) -> bool {
+        true
+    }
+    fn solve_full(&self, p: &MpqProblem, b: &SolveBudget) -> anyhow::Result<SolveOutcome> {
+        std::thread::sleep(self.0);
+        BranchAndBound.solve_full(p, b)
+    }
+}
+
+fn slow_server(delay: Duration, scfg: ServeConfig) -> FleetServer {
+    let meta = meta_n(4);
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let solvers: &'static SolverRegistry = Box::leak(Box::new(SolverRegistry::with_solvers(vec![
+        Arc::new(SlowSolver(delay)),
+        Arc::new(BranchAndBound),
+    ])));
+    let engine = Arc::new(PolicyEngine::with_registry(meta, imp, 64, solvers));
+    let entry = ModelEntry::from_engine("slow", engine);
+    let source = StaticSource::new().with_entry(entry);
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    FleetServer::spawn_registry(registry, "slow", "127.0.0.1:0", scfg).unwrap()
+}
+
+/// The admin fast lane: `stats` answers on a second connection while the
+/// dispatcher is stuck in a slow solve — the head-of-line block the
+/// single-queue design suffered from.
+#[test]
+fn admin_fast_lane_answers_during_slow_solve() {
+    let delay = Duration::from_millis(1500);
+    let server = slow_server(delay, ServeConfig::default());
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+
+    // Conn A: a slow solve, left pending.
+    let a = TcpStream::connect(server.addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut aw = a.try_clone().unwrap();
+    let mut ar = BufReader::new(a);
+    let solve = format!("{{\"cap_gbitops\": {cap_g}, \"solver\": \"slug\"}}\n");
+    aw.write_all(solve.as_bytes()).unwrap();
+    // Let the dispatcher pick it up (coalesce window is 200us).
+    std::thread::sleep(Duration::from_millis(200));
+
+    // Conn B: stats must come back well before the solve finishes.
+    let t = Instant::now();
+    let stats = query(&server.addr, &cmd("stats", None)).unwrap();
+    let admin_latency = t.elapsed();
+    assert!(stats.get("ok").unwrap().as_bool().unwrap(), "{stats}");
+    assert!(
+        admin_latency < Duration::from_millis(1000),
+        "stats waited {admin_latency:?} behind a {delay:?} solve — fast lane broken"
+    );
+    // models/evict ride the same lane
+    let models = query(&server.addr, &cmd("models", None)).unwrap();
+    assert!(models.get("ok").unwrap().as_bool().unwrap(), "{models}");
+
+    // The pending solve still completes correctly.
+    let mut line = String::new();
+    ar.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "slug");
+    server.shutdown();
+}
+
+/// The PR 3 single-model wire form (no `model` field) round-trips
+/// against a multi-model registry: it targets the default model, and the
+/// response stamps which model answered.
+#[test]
+fn model_free_requests_target_the_default_model() {
+    let server = spawn(&["alpha", "beta"], 4, RegistryConfig::default(), ServeConfig::default());
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+    let resp = query(&server.addr, &solve_req(None, "legacy", cap_g)).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("model").unwrap().as_str().unwrap(), "alpha");
+    assert_eq!(resp.get("device").unwrap().as_str().unwrap(), "legacy");
+
+    let models = query(&server.addr, &cmd("models", None)).unwrap();
+    assert_eq!(models.get("default_model").unwrap().as_str().unwrap(), "alpha");
+    let available: Vec<&str> = models
+        .get("available")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_str().unwrap())
+        .collect();
+    assert_eq!(available, vec!["alpha", "beta"]);
+    // an unknown model on a solve is an error naming it
+    let bad = query(&server.addr, &solve_req(Some("gamma"), "d", cap_g)).unwrap();
+    assert!(!bad.get("ok").unwrap().as_bool().unwrap());
+    assert!(bad.get("error").unwrap().as_str().unwrap().contains("gamma"), "{bad}");
+    server.shutdown();
+}
+
+/// Per-connection backpressure: with an in-flight cap of 1 and a slow
+/// solve hogging it, pipelined extras get immediate `busy` rejections
+/// while the admitted solve still completes.
+#[test]
+fn per_connection_inflight_cap_rejects_busy() {
+    let server = slow_server(
+        Duration::from_millis(500),
+        ServeConfig { max_inflight_per_conn: 1, ..Default::default() },
+    );
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut payload = String::new();
+    for i in 0..3 {
+        // distinct caps: no cache hits shortcutting the slow solver
+        let g = cap_g + (i as f64) * 1e-4;
+        payload.push_str(&format!("{{\"cap_gbitops\": {g}, \"solver\": \"slug\"}}\n"));
+    }
+    writer.write_all(payload.as_bytes()).unwrap();
+
+    let (mut ok, mut busy) = (0, 0);
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        if resp.get("ok").unwrap().as_bool().unwrap() {
+            ok += 1;
+        } else {
+            assert!(resp.get("busy").unwrap().as_bool().unwrap(), "{resp}");
+            assert!(resp.get("error").unwrap().as_str().unwrap().contains("503"), "{resp}");
+            busy += 1;
+        }
+    }
+    assert_eq!(ok, 1, "exactly the admitted solve must succeed");
+    assert_eq!(busy, 2, "both over-cap lines must be rejected busy");
+    assert_eq!(server.stats().rejected, 2);
+    server.shutdown();
+}
+
+/// Queue-bound backpressure: a burst larger than `max_queue` while the
+/// dispatcher is busy gets early `busy` rejections instead of unbounded
+/// queueing; everything admitted is still answered.
+#[test]
+fn bounded_queue_rejects_busy_under_burst() {
+    let server = slow_server(
+        Duration::from_millis(300),
+        ServeConfig {
+            max_queue: 1,
+            // keep the per-conn cap out of the way: this test is about
+            // the shared queue bound
+            max_inflight_per_conn: 1024,
+            ..Default::default()
+        },
+    );
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+
+    const BURST: usize = 6;
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut payload = String::new();
+    for i in 0..BURST {
+        let g = cap_g + (i as f64) * 1e-4;
+        payload.push_str(&format!("{{\"cap_gbitops\": {g}, \"solver\": \"slug\"}}\n"));
+    }
+    writer.write_all(payload.as_bytes()).unwrap();
+
+    // Timing-tolerant: the dispatcher drains concurrently with the mux
+    // tick, so the admitted count can exceed max_queue — but with a
+    // 1-deep queue and a 300ms solve, a 6-line burst cannot be fully
+    // admitted.
+    let (mut ok, mut busy) = (0, 0);
+    for _ in 0..BURST {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        if resp.get("ok").unwrap().as_bool().unwrap() {
+            ok += 1;
+        } else {
+            assert!(resp.get("busy").unwrap().as_bool().unwrap(), "{resp}");
+            busy += 1;
+        }
+    }
+    assert_eq!(ok + busy, BURST, "no line may go unanswered");
+    assert!(ok >= 1, "at least the first line must be admitted");
+    assert!(busy >= 1, "a 1-deep queue must reject part of a {BURST}-line burst");
+    assert_eq!(server.stats().rejected, busy);
+
+    // Rejections cleared room: a fresh request still round-trips.
+    let resp = query(&server.addr, &solve_req(None, "after", cap_g)).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    let stats = query(&server.addr, &cmd("stats", None)).unwrap();
+    assert!(stats.get("rejected").unwrap().as_usize().unwrap() >= busy, "{stats}");
+    server.shutdown();
+}

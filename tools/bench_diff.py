@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Diff two bench-record files (BENCH_kernels.json / BENCH_fleet.json).
+
+Each file is a JSON array of records with at least op, size, threads,
+ns_per_iter, and throughput (items/sec) — the schema emitted by the
+crate's `util::bench::json_record`.  Records are matched on
+(op, size, threads); the comparison metric is throughput (higher is
+better), falling back to ns_per_iter (lower is better) when a record
+carries no throughput.
+
+Usage:
+    tools/bench_diff.py BASELINE CURRENT [--threshold PCT] [--strict]
+
+A record is flagged as a regression when it is more than --threshold
+percent slower than the baseline (default 15, generous because shared CI
+runners are noisy).  Exit code is 0 unless --strict is given, in which
+case any flagged regression exits 1.  A missing or empty BASELINE exits
+0 with a note — the first run of a new bench tier has nothing to
+compare against.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    """Records keyed by (op, size, threads); None when unreadable."""
+    if not os.path.isfile(path) or os.path.getsize(path) == 0:
+        return None
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot parse {path}: {e}", file=sys.stderr)
+        return None
+    out = {}
+    for r in records:
+        key = (r.get("op"), r.get("size"), r.get("threads"))
+        out[key] = r
+    return out
+
+
+def metric(record):
+    """(value, higher_is_better) for one record."""
+    tp = record.get("throughput")
+    if tp:
+        return float(tp), True
+    return float(record["ns_per_iter"]), False
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=15.0,
+        help="flag records more than PCT percent slower (default 15)",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit 1 when any regression is flagged",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    if base is None:
+        print(f"bench_diff: no baseline at {args.baseline} — nothing to compare")
+        return 0
+    cur = load(args.current)
+    if cur is None:
+        print(f"bench_diff: no current records at {args.current}", file=sys.stderr)
+        return 1
+
+    regressions = []
+    improved = 0
+    compared = 0
+    for key, c in sorted(cur.items()):
+        b = base.get(key)
+        if b is None:
+            print(f"  new  {key[0]} [{key[1]}, t={key[2]}] (no baseline record)")
+            continue
+        compared += 1
+        cv, higher_better = metric(c)
+        bv, _ = metric(b)
+        if bv == 0:
+            continue
+        # normalize to "percent slower than baseline"
+        slower = (bv / cv - 1.0) * 100.0 if higher_better else (cv / bv - 1.0) * 100.0
+        tag = "ok  "
+        if slower > args.threshold:
+            tag = "SLOW"
+            regressions.append((key, slower))
+        elif slower < -args.threshold:
+            tag = "fast"
+            improved += 1
+        unit = "items/s" if higher_better else "ns/iter"
+        print(
+            f"  {tag} {key[0]} [{key[1]}, t={key[2]}]: "
+            f"{bv:.3g} -> {cv:.3g} {unit} ({slower:+.1f}% slower)"
+        )
+
+    dropped = sorted(set(base) - set(cur))
+    for key in dropped:
+        print(f"  gone {key[0]} [{key[1]}, t={key[2]}] (record no longer produced)")
+
+    print(
+        f"bench_diff: {compared} compared, {len(regressions)} regressions "
+        f"(> {args.threshold:.0f}% slower), {improved} improvements"
+    )
+    if regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
