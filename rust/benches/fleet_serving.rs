@@ -22,12 +22,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use limpq::engine::{BranchAndBound, PolicyEngine};
+use limpq::fleet::faults::{FaultPlan, FaultySolver};
 use limpq::fleet::{FleetSearcher, FleetServer, ServeConfig};
 use limpq::importance::IndicatorStore;
 use limpq::kernels::WorkerPool;
 use limpq::models::synthetic_meta;
 use limpq::quant::cost::uniform_bitops;
-use limpq::registry::{ModelRegistry, RegistryConfig, StaticSource};
+use limpq::registry::{ModelEntry, ModelRegistry, RegistryConfig, StaticSource};
 use limpq::util::bench::{json_out_arg, json_record, Bench, BenchStats};
 use limpq::util::json::Json;
 
@@ -76,6 +78,46 @@ fn volley(
                         .as_bool()
                         .unwrap();
                     assert!(ok, "serve error: {resp}");
+                }
+            });
+        }
+    });
+}
+
+/// Fault-tier volley: like [`volley`] cold mode but every request
+/// carries a tight `deadline_ms`, and degraded answers are counted
+/// instead of rejected (they are still `"ok": true` lines — the
+/// exactly-one-response discipline is what the tier measures under
+/// injected stalls).
+fn fault_volley(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    per_client: usize,
+    base: u64,
+    counter: &AtomicU64,
+    degraded: &AtomicU64,
+) {
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                for _ in 0..per_client {
+                    let cap = base + 1000 * (1 + counter.fetch_add(1, Ordering::Relaxed));
+                    let line = format!(
+                        "{{\"cap_gbitops\": {}, \"deadline_ms\": 25}}\n",
+                        cap as f64 / 1e9
+                    );
+                    writer.write_all(line.as_bytes()).unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let resp = Json::parse(resp.trim()).expect("parse response");
+                    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "serve error: {resp}");
+                    if resp.opt("degraded").is_some() {
+                        degraded.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             });
         }
@@ -224,6 +266,51 @@ fn main() {
             ));
             server.shutdown();
         }
+    }
+
+    // Fault tier: every 10th solve stalls well past a tight per-request
+    // deadline, so ~10% of answers come back degraded.  Measures serving
+    // throughput with deadline supervision and the degradation chain
+    // active — the robustness machinery's overhead on the happy 90%.
+    {
+        let meta = synthetic_meta(8, |i| 50_000 * (i as u64 + 1));
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        let (solvers, _) = FaultySolver::registry(
+            Arc::new(BranchAndBound),
+            FaultPlan {
+                slow_every: 10,
+                slow_delay: Duration::from_millis(30),
+                ..FaultPlan::default()
+            },
+        );
+        let engine = Arc::new(PolicyEngine::with_registry(meta, imp, 4096, solvers));
+        let registry = Arc::new(ModelRegistry::new(
+            Box::new(StaticSource::new().with_entry(ModelEntry::from_engine("m", engine))),
+            RegistryConfig::default(),
+        ));
+        let server =
+            FleetServer::spawn_registry(registry, "m", "127.0.0.1:0", ServeConfig::default())
+                .expect("spawn faulty server");
+        let addr = server.addr;
+        let clients = 8usize;
+        let counter = AtomicU64::new(0);
+        let degraded = AtomicU64::new(0);
+        let queries = (clients * per_client) as f64;
+        let stats = bench.run(&format!("fleet_faults_c{clients}x{per_client}"), || {
+            fault_volley(addr, clients, per_client, base, &counter, &degraded);
+        });
+        let answered = counter.load(Ordering::Relaxed);
+        let shed = degraded.load(Ordering::Relaxed);
+        let sv = server.stats();
+        println!(
+            "fleet faults @ {clients} clients: {:.0} queries/sec, \
+             {shed}/{answered} degraded ({} deadline-expired, {} breaker-shed)",
+            queries / stats.mean.as_secs_f64(),
+            sv.deadline_expired,
+            sv.breaker_open
+        );
+        records.push(record("fleet_faults", &format!("clients={clients}"), threads, &stats, queries));
+        server.shutdown();
     }
 
     if let Some(path) = &json_path {

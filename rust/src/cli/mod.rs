@@ -52,6 +52,8 @@ const VALUE_FLAGS: &[&str] = &[
     "mem-budget-mb",
     "max-inflight",
     "max-queue",
+    "default-deadline-ms",
+    "drain-ms",
 ];
 
 impl Args {
@@ -127,6 +129,7 @@ USAGE:
                   [--max-conns N] [--coalesce-window-us U]
                   [--persistent-pool on|off] [--mem-budget-mb N]
                   [--max-inflight N] [--max-queue N]
+                  [--default-deadline-ms T] [--drain-ms T]
                   event-driven fleet TCP server (see SERVE below)
   limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
                   policy on the validation split (finetuned ckpt if cached)
@@ -146,10 +149,13 @@ ENGINE (policy search):
     --time-limit-ms T  wall-clock deadline for the exact B&B search; on
                        expiry the best feasible incumbent is returned
                        (optimality unproven).  Other solvers run to
-                       completion and ignore the deadline.
+                       completion under this flag, but every solver
+                       honors a serve-side end-to-end deadline by bailing
+                       cleanly mid-solve (see SERVE: DEADLINES &
+                       DEGRADATION).
   The fleet line protocol accepts the same controls as JSON fields
-  (\"solver\", \"node_limit\", \"time_limit_ms\") and reports
-  \"solver\" and \"cache_hit\" in every response.
+  (\"solver\", \"node_limit\", \"time_limit_ms\", \"deadline_ms\") and
+  reports \"solver\" and \"cache_hit\" in every response.
 
 SERVE (fleet serving stack):
   The server is event-driven: one nonblocking multiplexer thread owns
@@ -193,6 +199,31 @@ SERVE (fleet serving stack):
                             budget evicts least-recently-used models
                             first.  A single model over the whole budget
                             is a clean error.  Default: unlimited.
+    Transient model-load faults retry on a short backoff (~0/15/60 ms)
+    before the request sees an error, and a failed load is never cached:
+    the next request starts a fresh load.
+
+  DEADLINES & DEGRADATION:
+    --default-deadline-ms T server-side deadline for solve requests that
+                            carry no \"deadline_ms\" field of their own.
+                            Counts end-to-end from the moment the request
+                            line is read — queue wait and the coalesce
+                            window spend it, not just the solve — and
+                            solvers observe it cooperatively mid-solve.
+                            Default: none.
+    --drain-ms T            shutdown grace: in-flight and already-queued
+                            responses get up to T ms to flush before the
+                            sockets close (default 250).
+    On deadline expiry or a solver panic the server degrades instead of
+    erroring, falling down a chain: the solver's best incumbent so far,
+    else a fresh greedy repair, else the model's last good policy.
+    Degraded answers keep \"ok\": true and add \"degraded\": true plus a
+    \"degraded_reason\"; they are never cached.  Repeated solver panics
+    trip a per-model circuit breaker — solves shed straight to the
+    degradation chain (no solver runs) for a cooldown, then one half-open
+    probe decides whether to close it.  Stats gain deadline_expired,
+    degraded, breaker_open, model_load_retries, and a per-model
+    \"breaker\" phase (closed / open / half-open).
 
   Operator introspection over the wire: send {\"cmd\": \"stats\"} on any
   connection to get open/total connections, served and busy-rejected
@@ -353,7 +384,7 @@ fn run_search(args: &Args, cfg: Config) -> Result<()> {
     let searcher = FleetSearcher::new(meta.clone(), imp);
     let request = request_from_args(args, &cfg)?;
     let alpha = request.alpha;
-    let dev = DeviceSpec { name: "cli".into(), request };
+    let dev = DeviceSpec { name: "cli".into(), request, deadline: None };
     let out = searcher.search(&dev)?;
     let names: Vec<String> = meta.qlayers.iter().map(|q| q.name.clone()).collect();
     println!("{}", bit_chart(&format!("{} policy", cfg.model), &names, &out.policy.w_bits, &out.policy.a_bits));
@@ -448,6 +479,15 @@ fn serve_config_from_args(args: &Args) -> Result<ServeConfig> {
     }
     if let Some(v) = args.get("max-queue") {
         scfg.max_queue = v.parse().with_context(|| format!("--max-queue {v:?}"))?;
+    }
+    if let Some(v) = args.get("default-deadline-ms") {
+        let ms: u64 = v.parse().with_context(|| format!("--default-deadline-ms {v:?}"))?;
+        anyhow::ensure!(ms >= 1, "--default-deadline-ms must be at least 1");
+        scfg.default_deadline = Some(std::time::Duration::from_millis(ms));
+    }
+    if let Some(v) = args.get("drain-ms") {
+        let ms: u64 = v.parse().with_context(|| format!("--drain-ms {v:?}"))?;
+        scfg.drain = std::time::Duration::from_millis(ms);
     }
     Ok(scfg)
 }
@@ -552,7 +592,8 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
             println!(
                 "served {} responses in {} batches (last {}, max {}), queue {} (+{} admin), \
                  {} busy-rejected; cache: {} hits / {} solves, {} cached, {} single-flight \
-                 waits; {} models resident ({:.1} MB, {} loads / {} evictions); \
+                 waits; health: {} deadline-expired / {} degraded / {} breaker-shed; \
+                 {} models resident ({:.1} MB, {} loads / {} evictions / {} load retries); \
                  conns {} open / {} total ({} overloaded)",
                 sv.served,
                 sv.batches,
@@ -565,10 +606,14 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
                 solves,
                 entries,
                 waits,
+                sv.deadline_expired,
+                sv.degraded,
+                sv.breaker_open,
                 rs.models.len(),
                 rs.resident_bytes as f64 / (1 << 20) as f64,
                 rs.loads,
                 rs.evictions,
+                rs.load_retries,
                 sv.conns_open,
                 sv.conns_total,
                 sv.overloaded
@@ -679,6 +724,23 @@ mod tests {
     }
 
     #[test]
+    fn deadline_and_drain_flags_parse_into_config() {
+        let a = parse(&["serve", "--default-deadline-ms", "40", "--drain-ms", "90"]);
+        let scfg = serve_config_from_args(&a).unwrap();
+        assert_eq!(scfg.default_deadline, Some(std::time::Duration::from_millis(40)));
+        assert_eq!(scfg.drain, std::time::Duration::from_millis(90));
+        // defaults when absent: no server-side deadline, stock drain
+        let d = serve_config_from_args(&parse(&["serve"])).unwrap();
+        assert_eq!(d.default_deadline, None);
+        assert_eq!(d.drain, ServeConfig::default().drain);
+        // a zero deadline would cancel every solve before it starts
+        let bad = parse(&["serve", "--default-deadline-ms", "0"]);
+        assert!(serve_config_from_args(&bad).is_err());
+        let junk = parse(&["serve", "--drain-ms", "soon"]);
+        assert!(serve_config_from_args(&junk).is_err());
+    }
+
+    #[test]
     fn registry_flags_are_value_flags() {
         let a = parse(&["serve", "--models", "arts", "--mem-budget-mb", "64"]);
         assert_eq!(a.get("models"), Some("arts"));
@@ -756,6 +818,22 @@ mod tests {
         assert!(HELP.contains("stats"));
         assert!(HELP.contains("503"));
         assert!(HELP.contains("single-flight"));
+    }
+
+    #[test]
+    fn help_documents_deadlines_and_degradation() {
+        for needle in [
+            "DEADLINES & DEGRADATION",
+            "--default-deadline-ms",
+            "--drain-ms",
+            "\"deadline_ms\"",
+            "\"degraded\"",
+            "circuit breaker",
+            "last good policy",
+            "never cached",
+        ] {
+            assert!(HELP.contains(needle), "HELP is missing {needle:?}");
+        }
     }
 
     #[test]

@@ -44,7 +44,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 pub use self::request::{
-    CanonicalKey, SearchRequest, SearchRequestBuilder, SolveBudget, SolverPref,
+    CancelToken, CanonicalKey, SearchRequest, SearchRequestBuilder, SolveBudget, SolverPref,
 };
 pub use self::solvers::{
     BranchAndBound, GreedyRepair, MckpDp, ParetoFrontier, SimplexRelax, SolveOutcome, Solver,
@@ -72,7 +72,20 @@ pub struct SolveStats {
     pub wall_us: u128,
     /// How many solvers failed before one succeeded (Auto mode).
     pub fallbacks: u32,
+    /// True when this outcome came from the degradation chain (deadline
+    /// expiry, solver panic, or breaker shed) rather than a clean solve.
+    /// Degraded outcomes are never cached.
+    pub degraded: bool,
+    /// Why the outcome is degraded, when it is.  Panic-caused reasons
+    /// start with [`PANIC_REASON`].
+    pub degraded_reason: Option<String>,
 }
+
+/// Degradation-reason prefix for solver panics.  The fleet dispatcher's
+/// per-model circuit breaker string-matches this prefix to count real
+/// solver faults; honest solve failures (infeasible caps, unknown
+/// solver names) never carry it and so can never trip the breaker.
+pub const PANIC_REASON: &str = "solver panicked";
 
 /// A solved policy plus everything a caller may want to report.
 #[derive(Debug, Clone)]
@@ -219,6 +232,10 @@ fn stats_of(
         proven_optimal: out.proven_optimal,
         wall_us: started.elapsed().as_micros(),
         fallbacks,
+        degraded: out.cancelled,
+        degraded_reason: out
+            .cancelled
+            .then(|| "cancelled mid-search (deadline or shed); best incumbent returned".to_string()),
     }
 }
 
@@ -307,6 +324,9 @@ pub struct PolicyEngine {
     registry: &'static SolverRegistry,
     policy_cache: Mutex<LruCache<CanonicalKey, Arc<PolicyOutcome>>>,
     inflight: Mutex<HashMap<CanonicalKey, Arc<InflightSolve>>>,
+    /// Most recent clean (non-degraded) outcome — the degradation chain's
+    /// last resort when even the direct greedy fallback cannot answer.
+    last_good: Mutex<Option<Arc<PolicyOutcome>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     inflight_waits: AtomicUsize,
@@ -339,6 +359,7 @@ impl PolicyEngine {
             registry,
             policy_cache: Mutex::new(LruCache::new(capacity)),
             inflight: Mutex::new(HashMap::new()),
+            last_good: Mutex::new(None),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             inflight_waits: AtomicUsize::new(0),
@@ -406,20 +427,102 @@ impl PolicyEngine {
             };
         }
         // Leader: solve without holding any lock; the guard publishes the
-        // result (or the panic) to followers on every exit path.
+        // result (or the panic) to followers on every exit path.  A fault
+        // (panic, deadline expiry) walks the degradation chain instead of
+        // erroring, so followers receive a usable degraded outcome.
         let mut guard = SingleFlightGuard { engine: self, key: &key, slot: &slot, published: false };
-        match self.solve_uncached(req) {
-            Ok(outcome) => {
-                let outcome = Arc::new(outcome);
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                self.policy_cache.lock().unwrap().insert(key.clone(), outcome.clone());
-                guard.publish(Ok(outcome.clone()));
-                Ok(EngineResponse { outcome, cache_hit: false })
-            }
+        let outcome = match self.solve_attempt(req) {
+            Ok(outcome) => outcome,
             Err(e) => {
-                guard.publish(Err(format!("{e:#}")));
-                Err(e)
+                let msg = format!("{e:#}");
+                let panicked = msg.starts_with(PANIC_REASON);
+                if !panicked && !req.budget.cancel.expired() {
+                    // An honest solve failure (infeasible cap, unknown
+                    // solver): there is nothing truthful to degrade to.
+                    guard.publish(Err(msg));
+                    return Err(e);
+                }
+                let reason = if panicked { msg.clone() } else { "deadline expired".to_string() };
+                match self.fallback_outcome(req, &reason) {
+                    Some(outcome) => outcome,
+                    None => {
+                        guard.publish(Err(msg));
+                        return Err(e);
+                    }
+                }
             }
+        };
+        let outcome = Arc::new(outcome);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if !outcome.stats.degraded {
+            // Degraded answers are never cached (a retry once the fault
+            // clears must reach a real solver) and never become last_good.
+            self.policy_cache.lock().unwrap().insert(key.clone(), outcome.clone());
+            *self.last_good.lock().unwrap() = Some(outcome.clone());
+        }
+        guard.publish(Ok(outcome.clone()));
+        Ok(EngineResponse { outcome, cache_hit: false })
+    }
+
+    /// One registry run under a panic firewall: a panicking solver
+    /// becomes an `Err` whose message starts with [`PANIC_REASON`], so
+    /// callers (and the dispatcher's circuit breaker) can tell real
+    /// solver faults from honest solve failures.
+    fn solve_attempt(&self, req: &SearchRequest) -> Result<PolicyOutcome> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.solve_uncached(req))) {
+            Ok(r) => r,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                Err(anyhow::anyhow!("{PANIC_REASON}: {msg}"))
+            }
+        }
+    }
+
+    /// The degradation chain below the solver's own incumbent: a direct
+    /// greedy construction (bypassing the registry, so it is available
+    /// even when the registry chain is broken), then the last clean
+    /// outcome for this model — stale, but the right shape.  `None` when
+    /// neither applies; the caller then reports the original error.
+    fn fallback_outcome(&self, req: &SearchRequest, reason: &str) -> Option<PolicyOutcome> {
+        let p = self.problem(req);
+        // Greedy has no cancellation points and runs in microseconds, so
+        // it is safe to invoke after the request's token already fired.
+        let t = Instant::now();
+        if GreedyRepair.supports(&p) {
+            if let Ok(out) = GreedyRepair.solve_full(&p, &SolveBudget::default()) {
+                let mut stats = stats_of("greedy", p.n_vars(), &out, t, 0);
+                stats.degraded = true;
+                stats.degraded_reason = Some(reason.to_string());
+                let policy = p.to_bit_config(&out.solution);
+                return Some(PolicyOutcome { policy, solution: out.solution, stats });
+            }
+        }
+        let last = self.last_good.lock().unwrap().clone()?;
+        let mut outcome = (*last).clone();
+        outcome.stats.degraded = true;
+        outcome.stats.degraded_reason = Some(format!("{reason}; serving last good policy"));
+        Some(outcome)
+    }
+
+    /// Answer without touching the registry — used by the fleet's circuit
+    /// breaker to shed load while a model's solvers are misbehaving.  A
+    /// cached clean answer still wins (shedding must not hide it); only a
+    /// cold request pays the degradation chain.
+    pub fn solve_degraded(&self, req: &SearchRequest, reason: &str) -> Result<EngineResponse> {
+        let key = req.canonical_key();
+        if let Some(outcome) = self.policy_cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(EngineResponse { outcome, cache_hit: true });
+        }
+        match self.fallback_outcome(req, reason) {
+            Some(outcome) => {
+                Ok(EngineResponse { outcome: Arc::new(outcome), cache_hit: false })
+            }
+            None => bail!("degraded fallback unavailable ({reason}) and no last good policy"),
         }
     }
 
@@ -723,6 +826,161 @@ mod tests {
         assert_eq!(calls.load(Ordering::SeqCst), 2);
         assert_eq!(e.cache_stats().misses, 0);
         assert_eq!(e.cache_stats().entries, 0);
+    }
+
+    /// Panics on every call — the fault the engine's firewall must absorb.
+    struct PanicSolver;
+
+    impl Solver for PanicSolver {
+        fn name(&self) -> &'static str {
+            "panic"
+        }
+        fn supports(&self, _p: &crate::search::MpqProblem) -> bool {
+            true
+        }
+        fn solve_full(
+            &self,
+            _p: &crate::search::MpqProblem,
+            _budget: &SolveBudget,
+        ) -> Result<SolveOutcome> {
+            panic!("boom")
+        }
+    }
+
+    /// Succeeds once (delegating to B&B), then panics forever.
+    struct FlakySolver {
+        calls: Arc<AtomicUsize>,
+    }
+
+    impl Solver for FlakySolver {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn supports(&self, _p: &crate::search::MpqProblem) -> bool {
+            true
+        }
+        fn solve_full(
+            &self,
+            p: &crate::search::MpqProblem,
+            budget: &SolveBudget,
+        ) -> Result<SolveOutcome> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                BranchAndBound.solve_full(p, budget)
+            } else {
+                panic!("flaky fault")
+            }
+        }
+    }
+
+    #[test]
+    fn solver_panic_degrades_to_greedy_and_is_never_cached() {
+        let e = engine_with(Arc::new(PanicSolver));
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder()
+            .bitops_cap(cap)
+            .solver_name("panic")
+            .build()
+            .unwrap();
+        let resp = e.solve(&req).unwrap();
+        let stats = &resp.outcome.stats;
+        assert!(stats.degraded);
+        assert_eq!(stats.solver, "greedy");
+        let reason = stats.degraded_reason.as_deref().unwrap();
+        assert!(reason.starts_with(PANIC_REASON), "{reason}");
+        assert!(reason.contains("boom"), "{reason}");
+        assert!(resp.outcome.solution.bitops <= cap, "degraded answer must stay feasible");
+        // Never cached: the retry reaches the (still broken) solver again
+        // instead of being pinned to a degraded answer forever.
+        assert_eq!(e.cache_stats().entries, 0);
+        let again = e.solve(&req).unwrap();
+        assert!(!again.cache_hit);
+        assert!(again.outcome.stats.degraded);
+    }
+
+    #[test]
+    fn cancelled_leader_propagates_degraded_result_to_followers() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let e = engine_with(Arc::new(SlowSolver {
+            calls: calls.clone(),
+            delay: std::time::Duration::from_millis(150),
+        }));
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder()
+            .bitops_cap(cap)
+            .solver_name("slow")
+            .cancel(CancelToken::after(std::time::Duration::from_millis(30)))
+            .build()
+            .unwrap();
+        const N: usize = 4;
+        let barrier = std::sync::Barrier::new(N);
+        let outcomes: Vec<EngineResponse> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..N)
+                .map(|_| {
+                    s.spawn(|| {
+                        barrier.wait();
+                        e.solve(&req).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // The deadline fires while the leader sleeps inside the solver;
+        // B&B then salvages its root incumbent.  Followers must share
+        // that degraded outcome, not receive a leader-failed error.
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "single flight must hold under cancellation");
+        for o in &outcomes {
+            assert!(o.outcome.stats.degraded, "follower saw a non-degraded outcome");
+            assert!(Arc::ptr_eq(&o.outcome, &outcomes[0].outcome), "outcome must be shared");
+        }
+        assert_eq!(e.cache_stats().entries, 0, "degraded outcomes must not enter the cache");
+    }
+
+    #[test]
+    fn solve_degraded_prefers_cache_then_greedy() {
+        let e = engine();
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let req = SearchRequest::builder().bitops_cap(cap).build().unwrap();
+        // Cold: the shed path answers via direct greedy, marked degraded.
+        let shed = e.solve_degraded(&req, "breaker open").unwrap();
+        assert!(shed.outcome.stats.degraded);
+        assert_eq!(shed.outcome.stats.solver, "greedy");
+        assert_eq!(shed.outcome.stats.degraded_reason.as_deref(), Some("breaker open"));
+        assert!(shed.outcome.solution.bitops <= cap);
+        // Warm: a real cached answer beats the fallback chain.
+        let real = e.solve(&req).unwrap();
+        assert!(!real.outcome.stats.degraded);
+        let warm = e.solve_degraded(&req, "breaker open").unwrap();
+        assert!(warm.cache_hit);
+        assert!(!warm.outcome.stats.degraded);
+    }
+
+    #[test]
+    fn panic_on_unrepairable_request_falls_back_to_last_good_policy() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let e = engine_with(Arc::new(FlakySolver { calls }));
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        let good_req = SearchRequest::builder()
+            .bitops_cap(cap)
+            .solver_name("flaky")
+            .build()
+            .unwrap();
+        let good = e.solve(&good_req).unwrap();
+        assert!(!good.outcome.stats.degraded);
+        // Second request: the solver panics AND greedy cannot repair the
+        // hopeless 1-bitop cap, so the chain lands on the last clean
+        // policy for this model — stale, but an answer.
+        let hopeless = SearchRequest::builder()
+            .bitops_cap(1)
+            .solver_name("flaky")
+            .build()
+            .unwrap();
+        let resp = e.solve(&hopeless).unwrap();
+        let stats = &resp.outcome.stats;
+        assert!(stats.degraded);
+        let reason = stats.degraded_reason.as_deref().unwrap();
+        assert!(reason.starts_with(PANIC_REASON), "{reason}");
+        assert!(reason.contains("last good"), "{reason}");
+        assert_eq!(resp.outcome.policy, good.outcome.policy);
     }
 
     #[test]

@@ -9,26 +9,97 @@
 //! Requests canonicalize to a hashable [`CanonicalKey`] so the
 //! [`super::PolicyEngine`] can memoize repeated fleet queries.
 
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+/// Cooperative cancellation handle threaded from the serving layer down
+/// into solver inner loops (`bb` node expansion, `mckp` layer sweep,
+/// `lp-round` pivots).  Carries an optional **absolute** deadline — the
+/// serving stack stamps it at request arrival, so it covers queue wait
+/// and coalescing, not just solve time — plus an explicit cancel flag
+/// (circuit-breaker sheds, shutdown).
+///
+/// Tokens are deliberately excluded from [`SearchRequest::canonical_key`]
+/// and compare equal to each other: two requests that differ only in
+/// their supervision deadline must share a cached policy.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    deadline: Option<Instant>,
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A token that never fires (the default for direct engine callers).
+    pub fn none() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that expires at an absolute instant.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken { deadline: Some(deadline), flag: Arc::default() }
+    }
+
+    /// A token expiring `after` from now.
+    pub fn after(after: Duration) -> CancelToken {
+        CancelToken::with_deadline(Instant::now() + after)
+    }
+
+    /// The absolute deadline, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Explicitly cancel (all clones observe it).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether the token has fired — explicitly cancelled or past its
+    /// deadline.  Cheap enough for inner loops when called every few
+    /// hundred iterations (one atomic load + one clock read).
+    pub fn expired(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+            || self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+/// All tokens are interchangeable for request identity: supervision
+/// state must not split the policy cache or break request equality.
+impl PartialEq for CancelToken {
+    fn eq(&self, _other: &CancelToken) -> bool {
+        true
+    }
+}
 
 /// Resource limits for one solve.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SolveBudget {
     /// Branch-and-bound node budget.
     pub node_limit: usize,
-    /// Optional wall-clock deadline; exceeding it returns the incumbent.
-    /// Honored by the exact B&B solver only — the DP/LP/heuristic
-    /// solvers run to completion (they are polynomial and fast).
+    /// Optional wall-clock deadline, relative to solve start; exceeding
+    /// it returns the incumbent.  Part of the cache key (unlike
+    /// `cancel`), since it changes which solve the budget describes.
     pub time_limit: Option<Duration>,
     /// Budget cells for the MCKP dynamic program's resource grid.
     pub dp_grid: usize,
+    /// End-to-end cancellation: checked cooperatively inside the `bb`,
+    /// `mckp`, and `lp-round` inner loops.  Expiry mid-solve yields a
+    /// degraded answer (incumbent → greedy → last cached policy), never
+    /// a cached one — see `PolicyEngine::solve`.
+    pub cancel: CancelToken,
 }
 
 impl Default for SolveBudget {
     fn default() -> SolveBudget {
-        SolveBudget { node_limit: 2_000_000, time_limit: None, dp_grid: 16_384 }
+        SolveBudget {
+            node_limit: 2_000_000,
+            time_limit: None,
+            dp_grid: 16_384,
+            cancel: CancelToken::none(),
+        }
     }
 }
 
@@ -222,6 +293,12 @@ impl SearchRequestBuilder {
         self
     }
 
+    /// Attach a cancellation token (deadline supervision / breaker shed).
+    pub fn cancel(mut self, token: CancelToken) -> Self {
+        self.budget.cancel = token;
+        self
+    }
+
     pub fn build(self) -> Result<SearchRequest> {
         if !self.alpha.is_finite() {
             bail!("alpha must be finite, got {}", self.alpha);
@@ -297,6 +374,31 @@ mod tests {
         assert_eq!(r.solver, SolverPref::Auto);
         let r2 = SearchRequest::builder().solver(SolverPref::Named(String::new())).build().unwrap();
         assert_eq!(r2.solver, SolverPref::Auto);
+    }
+
+    #[test]
+    fn cancel_token_never_enters_request_identity() {
+        let plain = SearchRequest::builder().alpha(2.0).bitops_cap(100).build().unwrap();
+        let supervised = SearchRequest::builder()
+            .alpha(2.0)
+            .bitops_cap(100)
+            .cancel(CancelToken::after(Duration::from_millis(1)))
+            .build()
+            .unwrap();
+        assert_eq!(plain.canonical_key(), supervised.canonical_key());
+        assert_eq!(plain, supervised, "tokens must not break request equality");
+    }
+
+    #[test]
+    fn cancel_token_fires_on_flag_and_deadline() {
+        let t = CancelToken::none();
+        assert!(!t.expired());
+        let clone = t.clone();
+        t.cancel();
+        assert!(clone.expired(), "cancel must be visible through clones");
+        let d = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(d.expired());
+        assert!(CancelToken::after(Duration::from_secs(3600)).deadline().is_some());
     }
 
     #[test]

@@ -32,6 +32,12 @@ pub struct SolveOutcome {
     pub lower_bound: Option<f64>,
     /// True when the returned solution is provably optimal.
     pub proven_optimal: bool,
+    /// Set when the budget's [`CancelToken`] fired mid-solve and the
+    /// solver salvaged an incumbent anyway (B&B).  The engine treats such
+    /// outcomes as degraded: returned to the caller, never cached.
+    ///
+    /// [`CancelToken`]: super::request::CancelToken
+    pub cancelled: bool,
 }
 
 /// A pluggable MPQ policy solver.
@@ -68,12 +74,14 @@ impl Solver for BranchAndBound {
     }
 
     fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
-        let (solution, stats) = solve_bb_stats(p, budget.node_limit, budget.deadline())?;
+        let (solution, stats) =
+            solve_bb_stats(p, budget.node_limit, budget.deadline(), &budget.cancel)?;
         Ok(SolveOutcome {
             solution,
             nodes: stats.nodes,
             lower_bound: Some(stats.root_bound),
             proven_optimal: stats.proven_optimal,
+            cancelled: stats.cancelled,
         })
     }
 }
@@ -100,13 +108,14 @@ impl Solver for MckpDp {
             (None, Some(_)) => Resource::SizeBits,
             _ => bail!("mckp DP needs exactly one constraint"),
         };
-        let (solution, dp) = solve_dp_stats(p, resource, budget.dp_grid)?;
+        let (solution, dp) = solve_dp_stats(p, resource, budget.dp_grid, &budget.cancel)?;
         Ok(SolveOutcome {
             solution,
             nodes: dp.cells as u64 * p.n_vars() as u64,
             lower_bound: None,
             // Exact whenever the cap fits the grid without rounding.
             proven_optimal: dp.unit == 1,
+            cancelled: false,
         })
     }
 }
@@ -176,11 +185,11 @@ impl Solver for SimplexRelax {
         !p.layers.is_empty()
     }
 
-    fn solve_full(&self, p: &MpqProblem, _budget: &SolveBudget) -> Result<SolveOutcome> {
+    fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
         if p.layers.iter().any(|o| o.is_empty()) {
             bail!("a layer has no options");
         }
-        let (x, lp_obj) = match Self::relaxation(p).solve()? {
+        let (x, lp_obj) = match Self::relaxation(p).solve_supervised(&budget.cancel)? {
             LpOutcome::Optimal { x, obj } => (x, obj),
             LpOutcome::Infeasible => bail!("LP relaxation infeasible"),
             LpOutcome::Unbounded => bail!("LP relaxation unbounded (malformed problem)"),
@@ -212,6 +221,7 @@ impl Solver for SimplexRelax {
             nodes: 0,
             lower_bound: Some(lp_obj),
             proven_optimal: proven,
+            cancelled: false,
         })
     }
 }
@@ -244,6 +254,7 @@ impl Solver for ParetoFrontier {
             nodes: PARETO_STEPS as u64,
             lower_bound: None,
             proven_optimal: false,
+            cancelled: false,
         })
     }
 }
@@ -283,7 +294,13 @@ impl Solver for GreedyRepair {
             .collect();
         let solution = repair_to_feasible(p, &choice)
             .ok_or_else(|| anyhow::anyhow!("greedy repair could not reach feasibility"))?;
-        Ok(SolveOutcome { solution, nodes: 0, lower_bound: None, proven_optimal: false })
+        Ok(SolveOutcome {
+            solution,
+            nodes: 0,
+            lower_bound: None,
+            proven_optimal: false,
+            cancelled: false,
+        })
     }
 }
 

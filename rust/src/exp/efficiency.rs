@@ -60,7 +60,7 @@ pub fn run(cfg: Config) -> Result<()> {
         .alpha(ctx.cfg.search.alpha)
         .bitops_cap(cap)
         .build()?;
-    let dev = DeviceSpec { name: "d".into(), request: request.clone() };
+    let dev = DeviceSpec { name: "d".into(), request: request.clone(), deadline: None };
     let t = Instant::now();
     let reps = 20;
     for _ in 0..reps {

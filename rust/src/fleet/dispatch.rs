@@ -1,13 +1,25 @@
-//! The coalescing dispatcher and the admin fast lane.
+//! The coalescing dispatcher, per-slot streaming completion, the
+//! per-model circuit breaker, and the admin fast lane.
 //!
 //! **Dispatcher**: drains the shared solve queue, gathers everything in
 //! flight into one batch per tick, resolves each solve's target model
-//! through the [`ModelRegistry`], and runs the batch as per-model
-//! `search_fleet`-style sweeps across a worker pool — so concurrent
-//! device queries share each model's policy cache, its single-flight
-//! table, and (in persistent mode) one long-lived set of workers.  A
-//! batch is swept **grouped by model**: one sweep never mixes two
-//! models' packed weight sets or engines.
+//! through the [`ModelRegistry`] (one single-flighted, retried load per
+//! distinct model), and fans the batch out across a worker pool — so
+//! concurrent device queries share each model's policy cache, its
+//! single-flight table, and (in persistent mode) one long-lived set of
+//! workers.  Each solve answers **as soon as it finishes** through the
+//! [`BatchRouter`]: a 1.5 s solve no longer pins its batch siblings,
+//! only later lines of its *own* connection (per-connection responses
+//! still leave in arrival order, and the dispatcher waits for the whole
+//! batch before the next one, so cross-batch order holds too).
+//!
+//! **Deadlines & degradation**: each solve's `deadline_ms` (or the
+//! server default) is armed as a [`CancelToken`] counting from mux
+//! arrival; the engine degrades on expiry or solver panic instead of
+//! erroring.  Repeated panic-caused degradations trip the model's
+//! **circuit breaker** ([`BreakerState`]): further solves shed straight
+//! to the degradation chain (no solver runs) until the cooldown elapses,
+//! then one half-open probe decides whether to close or re-open it.
 //!
 //! **Admin lane** ([`AdminLane`]): a second thread draining a second
 //! queue for `stats` / `models` / `load` / `evict`, so a slow solve
@@ -23,16 +35,17 @@
 //! *within a lane*; admin responses and early backpressure rejections
 //! may overtake queued solves (that is the point of the fast lane).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::protocol::{self, Request};
 use super::server::{ServeConfig, Shared, WorkItem};
 use super::{DeviceSpec, FleetSearcher};
+use crate::engine::{CancelToken, PANIC_REASON};
 use crate::kernels::{persistent_global, WorkerPool};
-use crate::registry::ModelRegistry;
+use crate::registry::{ModelEntry, ModelRegistry};
 use crate::util::json::Json;
 
 /// Upper bound on a lane's idle wait; it re-checks the stop flag at
@@ -46,12 +59,39 @@ pub(crate) struct ServingCore {
     pub default_model: String,
     pub cfg: ServeConfig,
     pub shared: Arc<Shared>,
+    /// Per-model circuit breakers; see [`BreakerState`].
+    pub breakers: Mutex<HashMap<String, BreakerState>>,
+}
+
+/// Per-model circuit-breaker state.  Only panic-caused degradations
+/// count as failures — a client's infeasible constraints can never trip
+/// the breaker.  [`ServeConfig::breaker_threshold`] consecutive panics
+/// open it: solves shed to the engine's degradation chain (no solver
+/// runs) until [`ServeConfig::breaker_cooldown`] elapses, then exactly
+/// one request runs as a half-open probe.  A clean probe closes the
+/// breaker; another panic re-opens it for a fresh cooldown.
+#[derive(Debug, Default)]
+pub(crate) struct BreakerState {
+    /// Consecutive panic-degradations since the last clean answer.
+    fails: usize,
+    /// `Some` while open; sheds until this instant, then half-open.
+    open_until: Option<Instant>,
+    /// A half-open probe is in flight; other requests keep shedding.
+    probing: bool,
+}
+
+/// What the breaker lets a given solve do.
+enum Admit {
+    /// Run a real solver (closed breaker, or the half-open probe).
+    Solve,
+    /// Answer through the degradation chain without running a solver.
+    Shed,
 }
 
 impl ServingCore {
     /// Answer one parsed admin request (also handles a misrouted solve
     /// inline, preserving that connection's per-lane ordering).
-    fn answer_admin(&self, req: &Request) -> String {
+    fn answer_admin(&self, req: &Request, arrival: Instant) -> String {
         match req {
             Request::Stats => self.stats_line(),
             Request::Models => self.models_line(),
@@ -61,11 +101,122 @@ impl ServingCore {
                 let name = model.as_deref().unwrap_or(&self.default_model);
                 match self.registry.get(name) {
                     Ok(entry) => {
-                        respond_safe(&FleetSearcher::from_shared(entry.engine().clone()), spec, name)
+                        let searcher = FleetSearcher::from_shared(entry.engine().clone());
+                        self.answer_solve(&searcher, spec, name, arrival)
                     }
                     Err(e) => protocol::error_line(&e),
                 }
             }
+        }
+    }
+
+    /// Decide whether a solve for `model` may run a real solver.
+    fn breaker_admit(&self, model: &str) -> Admit {
+        let mut breakers = self.breakers.lock().unwrap();
+        let st = breakers.entry(model.to_string()).or_default();
+        match st.open_until {
+            None => Admit::Solve,
+            Some(until) if Instant::now() >= until && !st.probing => {
+                // Half-open: let exactly one probe through.
+                st.probing = true;
+                Admit::Solve
+            }
+            Some(_) => Admit::Shed,
+        }
+    }
+
+    /// Record a solve's outcome for the breaker.  `panicked` means the
+    /// answer was a panic-caused degradation (or an escaped panic), the
+    /// only failure mode the breaker counts.
+    fn breaker_record(&self, model: &str, panicked: bool) {
+        let mut breakers = self.breakers.lock().unwrap();
+        let st = breakers.entry(model.to_string()).or_default();
+        if panicked {
+            st.fails += 1;
+            st.probing = false;
+            if st.fails >= self.cfg.breaker_threshold {
+                st.open_until = Some(Instant::now() + self.cfg.breaker_cooldown);
+            }
+        } else {
+            *st = BreakerState::default();
+        }
+    }
+
+    /// Operator-facing breaker state for one model.
+    fn breaker_phase(&self, model: &str) -> &'static str {
+        let breakers = self.breakers.lock().unwrap();
+        match breakers.get(model).and_then(|s| s.open_until) {
+            None => "closed",
+            Some(until) if Instant::now() >= until => "half-open",
+            Some(_) => "open",
+        }
+    }
+
+    /// Answer one solve slot end-to-end: arm the deadline token, consult
+    /// the breaker, run (or shed) the solve behind a panic firewall, and
+    /// account the outcome.  Always returns a response line — a solve
+    /// that reaches here gets exactly one answer, whatever fails.
+    pub(crate) fn answer_solve(
+        &self,
+        searcher: &FleetSearcher,
+        spec: &DeviceSpec,
+        model: &str,
+        arrival: Instant,
+    ) -> String {
+        let stats = &self.shared.stats;
+        let mut spec = spec.clone();
+        if let Some(rel) = spec.deadline.or(self.cfg.default_deadline) {
+            // End-to-end: the deadline counts from the moment the mux
+            // read the line, so queue wait and the coalesce window have
+            // already been charged against it.
+            spec.request.budget.cancel = CancelToken::with_deadline(arrival + rel);
+        }
+        let result = match self.breaker_admit(model) {
+            Admit::Shed => {
+                stats.breaker_open.fetch_add(1, Ordering::Relaxed);
+                searcher.search_degraded(
+                    &spec,
+                    &format!("breaker open for model {model:?} after repeated solver panics"),
+                )
+            }
+            Admit::Solve => {
+                let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    searcher.search(&spec)
+                }));
+                match solved {
+                    Ok(result) => {
+                        let panicked = matches!(
+                            &result,
+                            Ok(out) if out
+                                .degraded_reason
+                                .as_deref()
+                                .is_some_and(|r| r.starts_with(PANIC_REASON))
+                        );
+                        self.breaker_record(model, panicked);
+                        result
+                    }
+                    Err(_) => {
+                        // A panic that escaped even the engine's firewall.
+                        self.breaker_record(model, true);
+                        Err(anyhow::anyhow!(
+                            "internal error: solve for {:?} panicked",
+                            spec.name
+                        ))
+                    }
+                }
+            }
+        };
+        if spec.request.budget.cancel.expired() {
+            stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        }
+        match result {
+            Ok(out) => {
+                if out.degraded {
+                    stats.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+                protocol::solve_response(&out, model).to_string()
+            }
+            Err(e) => protocol::error_line(&e),
         }
     }
 
@@ -104,6 +255,9 @@ impl ServingCore {
             ("batches", Json::from(snap.batches)),
             ("coalesced_batch_size", Json::from(snap.coalesced_batch_size)),
             ("coalesced_batch_max", Json::from(snap.coalesced_batch_max)),
+            ("deadline_expired", Json::from(snap.deadline_expired)),
+            ("degraded", Json::from(snap.degraded)),
+            ("breaker_open", Json::from(snap.breaker_open)),
             ("cache_hits", Json::from(hits)),
             ("cache_misses", Json::from(misses)),
             ("cache_entries", Json::from(entries)),
@@ -116,6 +270,7 @@ impl ServingCore {
             ("model_loads", Json::from(rs.loads)),
             ("model_evictions", Json::from(rs.evictions)),
             ("model_load_failures", Json::from(rs.load_failures)),
+            ("model_load_retries", Json::from(rs.load_retries)),
         ];
         if let Some(budget) = rs.mem_budget {
             fields.push(("mem_budget_bytes", Json::from(budget)));
@@ -130,6 +285,7 @@ impl ServingCore {
                     ("cache_hits", Json::from(m.cache.hits)),
                     ("cache_misses", Json::from(m.cache.misses)),
                     ("cache_entries", Json::from(m.cache.entries)),
+                    ("breaker", Json::from(self.breaker_phase(&m.model))),
                 ])
             })
             .collect();
@@ -253,86 +409,134 @@ impl Dispatcher {
         stats.batch_last.store(batch.len(), Ordering::Relaxed);
         stats.batch_max.fetch_max(batch.len(), Ordering::Relaxed);
 
-        // Parse everything first; parse errors (and any admin request
-        // the mux misrouted here) answer inline, solves gather into
-        // per-model sweeps.  `Slot::Solve` holds the solve's index into
-        // the answers vector, so per-connection order is preserved
-        // whatever the model grouping did.
-        enum Slot {
-            Ready(String),
-            Solve(usize),
-        }
-        let mut slots: Vec<Slot> = Vec::with_capacity(batch.len());
-        let mut solves: Vec<(String, DeviceSpec)> = Vec::new();
-        for item in &batch {
+        // Parse everything first.  Every slot — instant answers (parse
+        // errors, misrouted admin) and solves alike — completes through
+        // the router, which streams a connection's responses out the
+        // moment its next-in-order slot is done.
+        let router = Arc::new(BatchRouter::new(
+            self.core.shared.clone(),
+            batch.iter().map(|it| it.conn).collect(),
+        ));
+        let mut solves: Vec<(usize, String, DeviceSpec, Instant)> = Vec::new();
+        for (slot, item) in batch.iter().enumerate() {
             match protocol::parse_request(&item.line) {
                 Ok(Request::Solve { model, spec }) => {
                     let name = model.unwrap_or_else(|| self.core.default_model.clone());
-                    slots.push(Slot::Solve(solves.len()));
-                    solves.push((name, spec));
+                    solves.push((slot, name, spec, item.arrival));
                 }
-                Ok(req) => slots.push(Slot::Ready(self.core.answer_admin(&req))),
-                Err(e) => slots.push(Slot::Ready(protocol::error_line(&e))),
+                Ok(req) => router.complete(slot, self.core.answer_admin(&req, item.arrival)),
+                Err(e) => router.complete(slot, protocol::error_line(&e)),
             }
         }
-        let answers = self.sweep(solves);
-
-        let mut resp = self.core.shared.responses.lock().unwrap();
-        for (item, slot) in batch.iter().zip(slots) {
-            let line = match slot {
-                Slot::Ready(s) => s,
-                Slot::Solve(i) => answers[i].clone(),
-            };
-            resp.push_back((item.conn, line));
-        }
+        self.sweep(router, solves);
     }
 
-    /// The coalesced sweep, grouped by model: each group resolves its
-    /// entry once (lazy-loading through the registry) and fans its
-    /// solves out across the pool; a registry load failure answers every
-    /// solve in the group with that error.  Within a group, identical
-    /// cold requests collapse to one engine solve via single-flight.
-    fn sweep(&self, solves: Vec<(String, DeviceSpec)>) -> Vec<String> {
+    /// Fan the batch's solves out across the worker pool.  Each distinct
+    /// model resolves its entry once up front (single-flighted and
+    /// retried inside the registry); a load failure answers that model's
+    /// solves with the error line.  Every completion streams through the
+    /// router immediately — the dispatcher still waits for the whole
+    /// batch before starting the next, which preserves cross-batch
+    /// per-connection order.  Identical cold requests within the batch
+    /// collapse to one engine solve via single-flight.
+    fn sweep(&self, router: Arc<BatchRouter>, solves: Vec<(usize, String, DeviceSpec, Instant)>) {
         if solves.is_empty() {
-            return Vec::new();
+            return;
         }
-        let solves = Arc::new(solves);
-        let mut answers: Vec<Option<String>> = vec![None; solves.len()];
-        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
-        for (i, (model, _)) in solves.iter().enumerate() {
-            groups.entry(model.clone()).or_default().push(i);
-        }
-        for (model, idxs) in groups {
-            let entry = match self.core.registry.get(&model) {
-                Ok(e) => e,
-                Err(e) => {
-                    let line = protocol::error_line(&e);
-                    for &i in &idxs {
-                        answers[i] = Some(line.clone());
-                    }
-                    continue;
-                }
-            };
-            let searcher = FleetSearcher::from_shared(entry.engine().clone());
-            let results: Vec<String> = if self.core.cfg.persistent_pool {
-                let sp = solves.clone();
-                let group = Arc::new(idxs.clone());
-                let model = model.clone();
-                persistent_global().parallel_for(group.len(), move |k| {
-                    respond_safe(&searcher, &sp[group[k]].1, &model)
-                })
-            } else {
-                let pool = WorkerPool::global().capped(idxs.len());
-                pool.parallel_for(idxs.len(), |k| respond_safe(&searcher, &solves[idxs[k]].1, &model))
-            };
-            for (&i, line) in idxs.iter().zip(results) {
-                answers[i] = Some(line);
+        let mut entries: BTreeMap<String, Result<Arc<ModelEntry>, String>> = BTreeMap::new();
+        for (_, model, _, _) in &solves {
+            if !entries.contains_key(model) {
+                let resolved =
+                    self.core.registry.get(model).map_err(|e| protocol::error_line(&e));
+                entries.insert(model.clone(), resolved);
             }
         }
-        answers
-            .into_iter()
-            .map(|a| a.expect("every solve slot answered"))
-            .collect()
+        let n = solves.len();
+        let core = self.core.clone();
+        let entries = Arc::new(entries);
+        let solves = Arc::new(solves);
+        let run = move |k: usize| {
+            let (slot, model, spec, arrival) = &solves[k];
+            // Last-ditch firewall: if anything below panics past the
+            // engine's own catch, the slot still completes — otherwise
+            // this connection's later responses would never flush.
+            let line = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match &entries[model] {
+                    Err(line) => line.clone(),
+                    Ok(entry) => {
+                        let searcher = FleetSearcher::from_shared(entry.engine().clone());
+                        core.answer_solve(&searcher, spec, model, *arrival)
+                    }
+                }
+            }))
+            .unwrap_or_else(|_| {
+                protocol::error_message(&format!(
+                    "internal error: solve for {:?} panicked",
+                    spec.name
+                ))
+            });
+            router.complete(*slot, line);
+        };
+        if self.core.cfg.persistent_pool {
+            persistent_global().parallel_for(n, run);
+        } else {
+            WorkerPool::global().capped(n).parallel_for(n, run);
+        }
+    }
+}
+
+/// Routes a batch's answers back to the multiplexer as they complete.
+/// Responses for one connection must leave in arrival order, so each
+/// completion emits that connection's maximal prefix of completed slots;
+/// a slow solve therefore delays only later lines of its *own*
+/// connection, never its batch siblings.
+struct BatchRouter {
+    shared: Arc<Shared>,
+    /// Owning connection of each slot, in batch order.
+    conn_of: Vec<u64>,
+    inner: Mutex<RouterInner>,
+}
+
+struct RouterInner {
+    /// Completed-but-unemitted response lines per slot.
+    done: Vec<Option<String>>,
+    /// Per-connection slot queues, in batch (= arrival) order.
+    per_conn: HashMap<u64, VecDeque<usize>>,
+}
+
+impl BatchRouter {
+    fn new(shared: Arc<Shared>, conn_of: Vec<u64>) -> BatchRouter {
+        let mut per_conn: HashMap<u64, VecDeque<usize>> = HashMap::new();
+        for (slot, &conn) in conn_of.iter().enumerate() {
+            per_conn.entry(conn).or_default().push_back(slot);
+        }
+        let inner = Mutex::new(RouterInner { done: vec![None; conn_of.len()], per_conn });
+        BatchRouter { shared, conn_of, inner }
+    }
+
+    /// Mark `slot` answered and flush its connection's ready prefix into
+    /// the shared response queue (the mux picks it up within a tick).
+    fn complete(&self, slot: usize, line: String) {
+        let conn = self.conn_of[slot];
+        let mut ready: Vec<(u64, String)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let RouterInner { done, per_conn } = &mut *inner;
+            done[slot] = Some(line);
+            let q = per_conn.get_mut(&conn).expect("slot's connection is registered");
+            while let Some(&front) = q.front() {
+                match done[front].take() {
+                    Some(l) => {
+                        q.pop_front();
+                        ready.push((conn, l));
+                    }
+                    None => break,
+                }
+            }
+        }
+        if !ready.is_empty() {
+            self.shared.responses.lock().unwrap().extend(ready);
+        }
     }
 }
 
@@ -357,7 +561,7 @@ impl AdminLane {
             // must not kill the lane for every later admin request.
             let line = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 match protocol::parse_request(&item.line) {
-                    Ok(req) => self.core.answer_admin(&req),
+                    Ok(req) => self.core.answer_admin(&req, item.arrival),
                     Err(e) => protocol::error_line(&e),
                 }
             }))
@@ -365,19 +569,4 @@ impl AdminLane {
             self.core.shared.responses.lock().unwrap().push_back((item.conn, line));
         }
     }
-}
-
-/// [`protocol::respond`] behind a panic firewall: a panicking solver must
-/// cost its own request an error line, not the dispatcher thread — an
-/// unwinding sweep would leave the multiplexer accepting and queueing
-/// requests that nothing ever answers (the whole server wedges, silently).
-/// The engine's single-flight guard already publishes the panic to any
-/// followers; this converts the leader's unwind into a response.
-fn respond_safe(searcher: &FleetSearcher, spec: &DeviceSpec, model: &str) -> String {
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        protocol::respond(searcher, spec, model)
-    }))
-    .unwrap_or_else(|_| {
-        protocol::error_message(&format!("internal error: solve for {:?} panicked", spec.name))
-    })
 }

@@ -1,0 +1,175 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The robustness suite (`tests/fault_tolerance.rs`) and the
+//! `fleet_faults` bench tier need to provoke the failure modes the
+//! server defends against — solver panics, pathologically slow solves,
+//! flaky model loads — on a *schedule*, so a run is reproducible and a
+//! regression bisects.  Everything here is counter-based: no clocks, no
+//! randomness.
+//!
+//! [`FaultySolver`] wraps any real solver and panics or stalls on fixed
+//! call indices ([`FaultPlan`]).  [`flaky_entry_builder`] gives a
+//! [`StaticSource`](crate::registry::StaticSource) builder whose first N
+//! loads fail, for exercising the registry's load retries.  These live
+//! in the library (not a test helper file) so integration tests and
+//! benches share one implementation of the schedule.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::engine::{SolveBudget, SolveOutcome, Solver, SolverRegistry};
+use crate::registry::{ModelEntry, RegistryConfig};
+use crate::search::MpqProblem;
+
+/// When a [`FaultySolver`] misbehaves, counted in solver calls (1-based
+/// across the wrapper's lifetime, shared by all threads).  `0` disables
+/// that fault.  When one call matches both schedules it panics — the
+/// harsher fault wins.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Panic on each of the first N calls — a transient crash window,
+    /// for tripping the circuit breaker and then watching its half-open
+    /// probe recover once the fault clears.
+    pub panic_first: usize,
+    /// Panic on every Nth call (`panic!`, exercising the engine's panic
+    /// firewall and the per-model circuit breaker).
+    pub panic_every: usize,
+    /// Stall for [`FaultPlan::slow_delay`] on every Nth call before
+    /// solving normally (exercising deadlines and streaming completion).
+    pub slow_every: usize,
+    /// How long a slow call stalls.
+    pub slow_delay: Duration,
+}
+
+/// A [`Solver`] wrapper that injects the faults a [`FaultPlan`]
+/// schedules and otherwise delegates to the wrapped solver (same name
+/// and `supports`-shape as reported by `name()` = `"faulty"`, so it can
+/// sit first in an `Auto` chain or be named on the wire).
+pub struct FaultySolver {
+    inner: Arc<dyn Solver>,
+    plan: FaultPlan,
+    calls: AtomicUsize,
+}
+
+impl FaultySolver {
+    pub fn new(inner: Arc<dyn Solver>, plan: FaultPlan) -> FaultySolver {
+        FaultySolver { inner, plan, calls: AtomicUsize::new(0) }
+    }
+
+    /// Wrap `inner` and register the wrapper as the only solver of a
+    /// leaked [`SolverRegistry`] (engine registries are `&'static`; the
+    /// few bytes leaked per harness are a test-lifetime cost).  Returns
+    /// the wrapper too, for call-count assertions.
+    pub fn registry(
+        inner: Arc<dyn Solver>,
+        plan: FaultPlan,
+    ) -> (&'static SolverRegistry, Arc<FaultySolver>) {
+        let faulty = Arc::new(FaultySolver::new(inner, plan));
+        let reg: &'static SolverRegistry =
+            Box::leak(Box::new(SolverRegistry::with_solvers(vec![faulty.clone()])));
+        (reg, faulty)
+    }
+
+    /// Total solver calls so far (faulted or clean).
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl Solver for FaultySolver {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn supports(&self, p: &MpqProblem) -> bool {
+        self.inner.supports(p)
+    }
+
+    fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
+        let i = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if i <= self.plan.panic_first
+            || (self.plan.panic_every > 0 && i % self.plan.panic_every == 0)
+        {
+            panic!("injected solver fault (call {i})");
+        }
+        if self.plan.slow_every > 0 && i % self.plan.slow_every == 0 {
+            std::thread::sleep(self.plan.slow_delay);
+        }
+        self.inner.solve_full(p, budget)
+    }
+}
+
+/// A `StaticSource::with_builder` closure whose first `fail_first`
+/// invocations fail (a transient source outage), then hand out `entry`.
+/// Returns the closure and the shared attempt counter.
+pub fn flaky_entry_builder(
+    entry: Arc<ModelEntry>,
+    fail_first: usize,
+) -> (impl Fn(&RegistryConfig) -> Result<Arc<ModelEntry>> + Send + Sync + 'static, Arc<AtomicUsize>)
+{
+    let attempts = Arc::new(AtomicUsize::new(0));
+    let counter = attempts.clone();
+    let builder = move |_cfg: &RegistryConfig| {
+        let i = counter.fetch_add(1, Ordering::SeqCst) + 1;
+        if i <= fail_first {
+            anyhow::bail!("injected load fault (attempt {i})");
+        }
+        Ok(entry.clone())
+    };
+    (builder, attempts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::BranchAndBound;
+    use crate::importance::IndicatorStore;
+    use crate::quant::cost::uniform_bitops;
+
+    fn problem() -> MpqProblem {
+        let meta = crate::models::synthetic_meta(6, |i| 100_000 * (i as u64 + 1));
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        let cap = uniform_bitops(&meta, 4, 4);
+        MpqProblem::from_importance(&meta, &imp, 1.0, Some(cap), None, false)
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic() {
+        let p = problem();
+        let s = FaultySolver::new(
+            Arc::new(BranchAndBound),
+            FaultPlan { panic_every: 3, ..FaultPlan::default() },
+        );
+        for i in 1..=6usize {
+            let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                s.solve_full(&p, &SolveBudget::default()).unwrap()
+            }));
+            assert_eq!(got.is_err(), i % 3 == 0, "call {i}");
+        }
+        assert_eq!(s.calls(), 6);
+    }
+
+    #[test]
+    fn slow_schedule_stalls_only_scheduled_calls() {
+        let p = problem();
+        let s = FaultySolver::new(
+            Arc::new(BranchAndBound),
+            FaultPlan {
+                slow_every: 2,
+                slow_delay: Duration::from_millis(40),
+                ..FaultPlan::default()
+            },
+        );
+        let t = std::time::Instant::now();
+        s.solve_full(&p, &SolveBudget::default()).unwrap();
+        let fast = t.elapsed();
+        let t = std::time::Instant::now();
+        s.solve_full(&p, &SolveBudget::default()).unwrap();
+        let slow = t.elapsed();
+        assert!(slow >= Duration::from_millis(40), "stall skipped: {slow:?}");
+        assert!(fast < slow, "first call should not stall");
+    }
+}

@@ -44,6 +44,23 @@
 //!   concurrent identical cold queries block on one in-progress solve and
 //!   share its outcome, so a stampede costs exactly one solver run.
 //!
+//! **Deadlines and graceful degradation.** Every solve carries an
+//! optional end-to-end deadline (`"deadline_ms"` on the wire, or the
+//! server's `--default-deadline-ms`), measured from the moment the mux
+//! reads the line — queue wait, coalesce window, and solver time all
+//! count against it.  The deadline arms a cooperative
+//! [`crate::engine::CancelToken`] that the B&B / DP / simplex inner
+//! loops poll; on expiry (or a solver panic) the engine walks a
+//! degradation chain — best incumbent so far, then a direct greedy
+//! construction, then the last clean policy for the model — and the
+//! response comes back with `"degraded": true` plus a reason instead of
+//! an error.  Repeated solver panics trip a per-model circuit breaker
+//! ([`dispatch`]) that sheds straight to degraded answers until a
+//! half-open probe succeeds.  Each solve in a coalesced batch answers
+//! as soon as it finishes (per-connection order still preserved), so a
+//! slow solve never pins its batch siblings; on shutdown the mux drains
+//! owed responses for up to [`ServeConfig::drain`] before closing.
+//!
 //! Protocol ([`protocol`]) — unchanged for PR 1/2 clients: one request
 //! JSON per line, one response JSON per line.
 //!
@@ -51,12 +68,15 @@
 //! `model` is optional and defaults to the server's seed model):
 //!   `{"name": "phone", "model": "resnet18", "cap_gbitops": 23.07,
 //!     "size_cap_mb": 8.0, "alpha": 3.0, "weight_only": false,
-//!     "solver": "auto", "node_limit": 2000000, "time_limit_ms": 500}`
+//!     "solver": "auto", "node_limit": 2000000, "time_limit_ms": 500,
+//!     "deadline_ms": 250}`
 //!   (all optional except at least one cap)
 //! Solve response:
 //!   `{"ok": true, "model": "resnet18", "w_bits": [...], "a_bits": [...],
 //!     "bitops_g": ..., "size_mb": ..., "cost": ..., "solve_us": ...,
 //!     "solver": "bb", "cache_hit": false}`
+//!   plus, only on a degraded answer:
+//!   `{"degraded": true, "degraded_reason": "deadline expired ..."}`
 //! Operator introspection and registry control:
 //!   `{"cmd": "stats"}` → serving counters (`served`, `queue_depth`,
 //!     `admin_queue_depth`, `rejected`, `batches`, cache totals, ...)
@@ -68,6 +88,7 @@
 
 pub mod conn;
 pub mod dispatch;
+pub mod faults;
 pub mod protocol;
 pub mod server;
 
@@ -92,6 +113,11 @@ use crate::util::json::Json;
 pub struct DeviceSpec {
     pub name: String,
     pub request: SearchRequest,
+    /// End-to-end deadline for this solve, relative to request arrival
+    /// (the wire's `"deadline_ms"`).  The server turns it into an
+    /// absolute [`crate::engine::CancelToken`] deadline when the line is
+    /// read; `None` falls back to the server default, if any.
+    pub deadline: Option<std::time::Duration>,
 }
 
 /// Search result for one device.
@@ -108,6 +134,11 @@ pub struct DevicePolicy {
     /// Whether the engine served this query from its policy cache (or an
     /// in-flight identical solve it joined).
     pub cache_hit: bool,
+    /// True when the degradation chain answered (deadline expiry, solver
+    /// panic, or breaker shed) rather than a clean solve.
+    pub degraded: bool,
+    /// Why the answer is degraded, when it is.
+    pub degraded_reason: Option<String>,
 }
 
 /// Holds the one-time-trained importances behind a memoizing,
@@ -175,6 +206,36 @@ impl FleetSearcher {
             solve_us: t.elapsed().as_micros(),
             solver: out.stats.solver.clone(),
             cache_hit: resp.cache_hit,
+            degraded: out.stats.degraded,
+            degraded_reason: out.stats.degraded_reason.clone(),
+        })
+    }
+
+    /// Answer a spec through the engine's degradation chain without
+    /// touching a solver — the circuit breaker's shed path.
+    pub fn search_degraded(&self, dev: &DeviceSpec, reason: &str) -> Result<DevicePolicy> {
+        anyhow::ensure!(
+            dev.request.bitops_cap.is_some() || dev.request.size_cap_bits.is_some(),
+            "device {} has no constraint",
+            dev.name
+        );
+        let t = Instant::now();
+        let resp = self
+            .engine
+            .solve_degraded(&dev.request, reason)
+            .with_context(|| format!("device {}", dev.name))?;
+        let out = &resp.outcome;
+        Ok(DevicePolicy {
+            device: dev.name.clone(),
+            policy: out.policy.clone(),
+            cost: out.solution.cost,
+            bitops: out.solution.bitops,
+            size_bits: out.solution.size_bits,
+            solve_us: t.elapsed().as_micros(),
+            solver: out.stats.solver.clone(),
+            cache_hit: resp.cache_hit,
+            degraded: out.stats.degraded,
+            degraded_reason: out.stats.degraded_reason.clone(),
         })
     }
 
@@ -223,6 +284,7 @@ mod tests {
         DeviceSpec {
             name: name.into(),
             request: SearchRequest::builder().alpha(alpha).bitops_cap(cap).build().unwrap(),
+            deadline: None,
         }
     }
 
@@ -282,6 +344,7 @@ mod tests {
         let unconstrained = DeviceSpec {
             name: "x".into(),
             request: SearchRequest::builder().alpha(1.0).build().unwrap(),
+            deadline: None,
         };
         assert!(s.search(&unconstrained).is_err());
     }

@@ -41,6 +41,7 @@ pub const KNOWN_FIELDS: &[&str] = &[
     "solver",
     "node_limit",
     "time_limit_ms",
+    "deadline_ms",
 ];
 
 /// A decoded protocol request.
@@ -143,13 +144,26 @@ pub fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
     if let Some(v) = req.opt("time_limit_ms") {
         b = b.time_limit(std::time::Duration::from_millis(v.as_usize()? as u64));
     }
-    Ok(DeviceSpec { name, request: b.build()? })
+    let deadline = match req.opt("deadline_ms") {
+        Some(v) => {
+            let ms = v.as_usize().context("\"deadline_ms\" must be a positive integer")?;
+            if ms == 0 {
+                bail!("\"deadline_ms\" must be at least 1");
+            }
+            Some(std::time::Duration::from_millis(ms as u64))
+        }
+        None => None,
+    };
+    Ok(DeviceSpec { name, request: b.build()?, deadline })
 }
 
 /// The solve response object — the PR 1 field set plus the model that
 /// answered (clients that predate the registry ignore the extra field).
+/// Degraded answers (deadline expiry, solver panic, breaker shed) stay
+/// `"ok": true` — they are usable policies — and additionally carry
+/// `"degraded": true` with a `"degraded_reason"`.
 pub fn solve_response(out: &DevicePolicy, model: &str) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("model", Json::from(model)),
         ("device", Json::from(out.device.as_str())),
@@ -167,7 +181,14 @@ pub fn solve_response(out: &DevicePolicy, model: &str) -> Json {
         ("solve_us", Json::Num(out.solve_us as f64)),
         ("solver", Json::from(out.solver.as_str())),
         ("cache_hit", Json::Bool(out.cache_hit)),
-    ])
+    ];
+    if out.degraded {
+        fields.push(("degraded", Json::Bool(true)));
+        if let Some(reason) = &out.degraded_reason {
+            fields.push(("degraded_reason", Json::from(reason.as_str())));
+        }
+    }
+    Json::obj(fields)
 }
 
 /// An error response line (`{"ok": false, "error": "..."}`).
@@ -326,6 +347,44 @@ mod tests {
         // admin classification drives the fast lane
         assert!(parse_request(r#"{"cmd": "models"}"#).unwrap().is_admin());
         assert!(!parse_request(r#"{"cap_gbitops": 2.0}"#).unwrap().is_admin());
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_rejects_zero() {
+        match parse_request(r#"{"cap_gbitops": 2.0, "deadline_ms": 250}"#).unwrap() {
+            Request::Solve { spec, .. } => {
+                assert_eq!(spec.deadline, Some(std::time::Duration::from_millis(250)));
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        match parse_request(r#"{"cap_gbitops": 2.0}"#).unwrap() {
+            Request::Solve { spec, .. } => assert_eq!(spec.deadline, None),
+            other => panic!("expected solve, got {other:?}"),
+        }
+        let err = parse_request(r#"{"cap_gbitops": 2.0, "deadline_ms": 0}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("at least 1"), "{err:#}");
+    }
+
+    #[test]
+    fn degraded_answers_stay_ok_and_carry_a_reason() {
+        let s = searcher();
+        let cap = uniform_bitops(s.meta(), 4, 4);
+        let spec = DeviceSpec {
+            name: "edge".into(),
+            request: crate::engine::SearchRequest::builder().bitops_cap(cap).build().unwrap(),
+            deadline: None,
+        };
+        let out = s.search_degraded(&spec, "breaker open").unwrap();
+        assert!(out.degraded);
+        let resp = solve_response(&out, "synthetic");
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "degraded must stay ok");
+        assert!(resp.get("degraded").unwrap().as_bool().unwrap());
+        assert_eq!(resp.get("degraded_reason").unwrap().as_str().unwrap(), "breaker open");
+        // Clean answers carry no degraded marker at all (PR 1 field set).
+        let clean = s.search(&spec).unwrap();
+        let resp = solve_response(&clean, "synthetic");
+        assert!(resp.opt("degraded").is_none());
+        assert!(resp.opt("degraded_reason").is_none());
     }
 
     #[test]

@@ -29,6 +29,14 @@
 //! the `busy` marker.  Admin lines are never rejected (they are cheap,
 //! and refusing `stats` under load would blind the operator exactly when
 //! it matters).
+//!
+//! **Deadlines** are stamped at the mux: every [`WorkItem`] records when
+//! its line was read, and the dispatcher charges queue wait, coalescing,
+//! and solver time against the request's `deadline_ms` (or
+//! [`ServeConfig::default_deadline`]) from that instant.  **Shutdown**
+//! drains: the mux stops accepting and reading, then keeps routing and
+//! flushing owed responses for up to [`ServeConfig::drain`] before
+//! closing sockets, so an in-flight solve's answer is not dropped.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
@@ -62,6 +70,21 @@ pub struct ServeConfig {
     /// Per-connection cap on unanswered requests; lines past it get an
     /// immediate `busy` rejection instead of queueing.
     pub max_inflight_per_conn: usize,
+    /// End-to-end deadline applied to solves that carry no
+    /// `"deadline_ms"` of their own, measured from the moment the mux
+    /// reads the line.  `None` (the default) leaves such solves
+    /// unsupervised.
+    pub default_deadline: Option<Duration>,
+    /// On shutdown, keep routing and flushing owed responses for up to
+    /// this long before closing sockets, so in-flight solves are not
+    /// silently dropped.
+    pub drain: Duration,
+    /// Consecutive panic-caused degradations that open a model's circuit
+    /// breaker (solves shed to degraded answers until the cooldown).
+    pub breaker_threshold: usize,
+    /// How long an open breaker sheds before letting a half-open probe
+    /// through.
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +95,10 @@ impl Default for ServeConfig {
             persistent_pool: true,
             max_queue: 1024,
             max_inflight_per_conn: 64,
+            default_deadline: None,
+            drain: Duration::from_millis(250),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_secs(1),
         }
     }
 }
@@ -88,6 +115,13 @@ pub struct ServerStats {
     pub batches: AtomicUsize,
     pub batch_last: AtomicUsize,
     pub batch_max: AtomicUsize,
+    /// Solves whose end-to-end deadline expired while they were being
+    /// handled (they still got an answer — degraded if possible).
+    pub deadline_expired: AtomicUsize,
+    /// Responses answered through the degradation chain.
+    pub degraded: AtomicUsize,
+    /// Solves shed by an open per-model circuit breaker.
+    pub breaker_open: AtomicUsize,
 }
 
 /// A point-in-time copy of [`ServerStats`] plus the queue depths.
@@ -111,6 +145,12 @@ pub struct StatsSnapshot {
     pub queue_depth: usize,
     /// Admin commands decoded but not yet picked up by the admin lane.
     pub admin_queue_depth: usize,
+    /// Solves whose end-to-end deadline expired while being handled.
+    pub deadline_expired: usize,
+    /// Responses answered through the degradation chain.
+    pub degraded: usize,
+    /// Solves shed by an open per-model circuit breaker.
+    pub breaker_open: usize,
 }
 
 impl ServerStats {
@@ -126,6 +166,9 @@ impl ServerStats {
             coalesced_batch_max: self.batch_max.load(Ordering::Relaxed),
             queue_depth,
             admin_queue_depth,
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            breaker_open: self.breaker_open.load(Ordering::Relaxed),
         }
     }
 }
@@ -134,6 +177,9 @@ impl ServerStats {
 pub(crate) struct WorkItem {
     pub conn: u64,
     pub line: String,
+    /// When the mux read the line — end-to-end deadlines count from here,
+    /// so queue wait and the coalesce window are charged against them.
+    pub arrival: std::time::Instant,
 }
 
 /// State shared between the multiplexer, dispatcher, and admin lane.
@@ -211,6 +257,7 @@ impl FleetServer {
         ensure!(cfg.max_conns >= 1, "max_conns must be >= 1");
         ensure!(cfg.max_queue >= 1, "max_queue must be >= 1");
         ensure!(cfg.max_inflight_per_conn >= 1, "max_inflight_per_conn must be >= 1");
+        ensure!(cfg.breaker_threshold >= 1, "breaker_threshold must be >= 1");
         registry
             .get(default_model)
             .with_context(|| format!("load default model {default_model:?}"))?;
@@ -223,6 +270,7 @@ impl FleetServer {
             default_model: default_model.to_string(),
             cfg: cfg.clone(),
             shared: shared.clone(),
+            breakers: Mutex::new(HashMap::new()),
         });
         let stop_and_join = |shared: &Arc<Shared>, handles: Vec<std::thread::JoinHandle<()>>| {
             shared.stop.store(true, Ordering::Relaxed);
@@ -294,8 +342,10 @@ impl FleetServer {
         self.shared.stats.served.load(Ordering::Relaxed)
     }
 
-    /// Stop all three threads and return once they have exited.  Open
-    /// connections are shut down; requests still queued are dropped.
+    /// Stop all three threads and return once they have exited.  The mux
+    /// keeps routing and flushing owed responses for up to
+    /// [`ServeConfig::drain`] before closing sockets; requests still
+    /// queued (never picked up) are dropped.
     pub fn shutdown(mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.req_cv.notify_all();
@@ -349,6 +399,7 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
             let mut room = cfg.max_queue.saturating_sub(shared.requests.lock().unwrap().len());
             let mut solve_items: Vec<WorkItem> = Vec::new();
             let mut admin_items: Vec<WorkItem> = Vec::new();
+            let arrival = std::time::Instant::now();
             for (i, line) in pending {
                 let c = &mut conns[i];
                 // Cheap lane split: a JSON command object always contains
@@ -359,7 +410,7 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
                     // Admin is never rejected: cheap, and refusing stats
                     // under load would blind the operator.
                     c.inflight += 1;
-                    admin_items.push(WorkItem { conn: c.id, line });
+                    admin_items.push(WorkItem { conn: c.id, line, arrival });
                 } else if c.inflight >= cfg.max_inflight_per_conn {
                     shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
                     c.queue_response(&protocol::busy_line(&format!(
@@ -375,7 +426,7 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
                 } else {
                     room -= 1;
                     c.inflight += 1;
-                    solve_items.push(WorkItem { conn: c.id, line });
+                    solve_items.push(WorkItem { conn: c.id, line, arrival });
                 }
             }
             if !solve_items.is_empty() {
@@ -420,7 +471,37 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
             std::thread::sleep(POLL_IDLE);
         }
     }
-    // Shutdown: force every socket down so attached clients see EOF.
+    // Bounded-grace drain: no more accepts or reads, but keep routing
+    // finished responses and flushing write buffers until every surviving
+    // connection has been paid what it is owed — or the grace expires.
+    // Without this, responses still in flight in the dispatcher at stop
+    // time were silently dropped with the sockets.
+    let drain_deadline = std::time::Instant::now() + cfg.drain;
+    loop {
+        let finished = std::mem::take(&mut *shared.responses.lock().unwrap());
+        if !finished.is_empty() {
+            let index: HashMap<u64, usize> =
+                conns.iter().enumerate().map(|(i, c)| (c.id, i)).collect();
+            for (id, line) in finished {
+                if let Some(&i) = index.get(&id) {
+                    let c = &mut conns[i];
+                    c.queue_response(&line);
+                    c.inflight -= 1;
+                    shared.stats.served.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        for c in conns.iter_mut() {
+            c.flush();
+        }
+        conns.retain(|c| !c.done());
+        let owed = conns.iter().any(|c| c.inflight > 0 || c.has_pending_write());
+        if !owed || std::time::Instant::now() >= drain_deadline {
+            break;
+        }
+        std::thread::sleep(POLL_IDLE);
+    }
+    // Force every socket down so attached clients see EOF.
     for c in &conns {
         c.shutdown();
     }

@@ -23,6 +23,13 @@
 //! entry's `Arc` finish normally and the memory is released when the
 //! last reference goes.  A model whose resident footprint alone exceeds
 //! the whole budget is a clean load error, never a livelock.
+//!
+//! Source loads are **retried** a bounded number of times with a short
+//! backoff ([`LOAD_RETRY_BACKOFF`]) before the leader reports failure —
+//! a file caught mid-rewrite or a transient I/O fault costs milliseconds,
+//! not an error to every coalesced follower.  Failures are never cached:
+//! the failed load's single-flight slot is torn down, so the next
+//! request for the model starts a fresh load.
 
 pub mod packed;
 pub mod source;
@@ -30,6 +37,7 @@ pub mod source;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
@@ -45,6 +53,12 @@ use crate::quant::BitConfig;
 /// Fixed per-entry overhead charged on top of the measured buffers
 /// (metadata structs, cache scaffolding, allocator slack).
 const ENTRY_OVERHEAD_BYTES: usize = 4096;
+
+/// Pauses between a load leader's retry attempts (the first attempt is
+/// immediate, so the schedule is ~[0, 15, 60] ms).  Long enough for a
+/// file caught mid-rewrite to finish, short enough that followers
+/// blocked on the single-flight slot never notice on the serving path.
+const LOAD_RETRY_BACKOFF: &[Duration] = &[Duration::from_millis(15), Duration::from_millis(60)];
 
 /// Registry knobs (CLI: `--mem-budget-mb`, plus engine cache sizing).
 #[derive(Debug, Clone)]
@@ -217,6 +231,9 @@ pub struct RegistryStats {
     pub loads: usize,
     pub evictions: usize,
     pub load_failures: usize,
+    /// Retry attempts after transient load faults (a load that succeeds
+    /// on its second attempt counts one retry and zero failures).
+    pub load_retries: usize,
     /// Resident models, least- to most-recently used.
     pub models: Vec<ModelStat>,
 }
@@ -291,6 +308,7 @@ pub struct ModelRegistry {
     loads: AtomicUsize,
     evictions: AtomicUsize,
     load_failures: AtomicUsize,
+    load_retries: AtomicUsize,
 }
 
 impl ModelRegistry {
@@ -303,6 +321,7 @@ impl ModelRegistry {
             loads: AtomicUsize::new(0),
             evictions: AtomicUsize::new(0),
             load_failures: AtomicUsize::new(0),
+            load_retries: AtomicUsize::new(0),
         }
     }
 
@@ -365,10 +384,12 @@ impl ModelRegistry {
         }
         // Leader: load with no registry lock held; the guard publishes
         // the result (or the panic) to followers on every exit path.
+        // Transient source faults retry on the backoff schedule; admit
+        // failures (over the whole memory budget) are deterministic and
+        // do not.
         let mut guard = LoadGuard { registry: self, model, slot: &slot, published: false };
         let loaded = self
-            .source
-            .load(model, &self.cfg)
+            .load_with_retries(model)
             .and_then(|entry| self.admit(model, entry.clone()).map(|()| entry));
         match loaded {
             Ok(entry) => {
@@ -387,6 +408,25 @@ impl ModelRegistry {
     /// Explicitly load a model (the `{"cmd":"load"}` admin path).
     pub fn load(&self, model: &str) -> Result<Arc<ModelEntry>> {
         self.get(model)
+    }
+
+    /// One source load, retried on [`LOAD_RETRY_BACKOFF`].  Returns the
+    /// last attempt's error if every attempt fails.
+    fn load_with_retries(&self, model: &str) -> Result<Arc<ModelEntry>> {
+        let mut err = match self.source.load(model, &self.cfg) {
+            Ok(entry) => return Ok(entry),
+            Err(e) => e,
+        };
+        for &pause in LOAD_RETRY_BACKOFF {
+            self.load_retries.fetch_add(1, Ordering::Relaxed);
+            eprintln!("[registry] load of model {model:?} failed ({err:#}); retrying in {pause:?}");
+            std::thread::sleep(pause);
+            match self.source.load(model, &self.cfg) {
+                Ok(entry) => return Ok(entry),
+                Err(e) => err = e,
+            }
+        }
+        Err(err)
     }
 
     /// Evict one model.  Returns whether it was resident.  In-flight
@@ -433,6 +473,7 @@ impl ModelRegistry {
             loads: self.loads.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             load_failures: self.load_failures.load(Ordering::Relaxed),
+            load_retries: self.load_retries.load(Ordering::Relaxed),
             models: models.into_iter().map(|(_, m)| m).collect(),
         }
     }
@@ -563,6 +604,45 @@ mod tests {
         for e in &entries {
             assert!(Arc::ptr_eq(e, &entries[0]));
         }
+    }
+
+    #[test]
+    fn transient_load_fault_retries_and_succeeds() {
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let counter = attempts.clone();
+        let src = StaticSource::new().with_builder("m", move |cfg| {
+            if counter.fetch_add(1, Ordering::SeqCst) < 2 {
+                anyhow::bail!("transient source fault");
+            }
+            Ok(ModelEntry::build("m", assets(6, 3), cfg))
+        });
+        let reg = ModelRegistry::new(Box::new(src), RegistryConfig::default());
+        reg.get("m").unwrap();
+        assert_eq!(attempts.load(Ordering::SeqCst), 3);
+        let s = reg.stats();
+        assert_eq!(s.load_retries, 2);
+        assert_eq!(s.load_failures, 0, "a retried success is not a failure");
+        assert_eq!(s.loads, 1);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_without_caching_the_error() {
+        // Every attempt fails; a later get() must start a fresh load
+        // (failures are never sticky) and count its own failure.
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let counter = attempts.clone();
+        let src = StaticSource::new().with_builder("m", move |_cfg| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("persistent source fault")
+        });
+        let reg = ModelRegistry::new(Box::new(src), RegistryConfig::default());
+        assert!(reg.get("m").is_err());
+        assert_eq!(attempts.load(Ordering::SeqCst), 1 + LOAD_RETRY_BACKOFF.len());
+        assert!(reg.get("m").is_err());
+        assert_eq!(attempts.load(Ordering::SeqCst), 2 * (1 + LOAD_RETRY_BACKOFF.len()));
+        let s = reg.stats();
+        assert_eq!(s.load_failures, 2);
+        assert_eq!(s.load_retries, 2 * LOAD_RETRY_BACKOFF.len());
     }
 
     #[test]

@@ -24,7 +24,9 @@ use crate::util::rng::Rng;
 /// A lazy supplier of model entries for the registry.  `load` runs
 /// outside every registry lock (loads are single-flighted per model),
 /// so implementations may do real work — disk reads, parameter init,
-/// weight packing.
+/// weight packing.  A failing `load` is retried by the registry on a
+/// short backoff before the caller sees the error, so sources need no
+/// retry logic of their own.
 pub trait ModelSource: Send + Sync {
     /// Model ids this source can load (what `{"cmd":"models"}` lists).
     fn list(&self) -> Vec<String>;

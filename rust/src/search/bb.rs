@@ -16,6 +16,7 @@
 use anyhow::{bail, Result};
 
 use super::{MpqProblem, Solution};
+use crate::engine::CancelToken;
 
 /// Per-solve telemetry from the branch-and-bound search.
 #[derive(Debug, Clone, Default)]
@@ -27,21 +28,30 @@ pub struct BbStats {
     /// False when the node limit / deadline cut the search short and the
     /// returned incumbent's optimality is unproven.
     pub proven_optimal: bool,
+    /// True when the stop was caused by the request's [`CancelToken`]
+    /// (end-to-end deadline / breaker shed) rather than the solve-local
+    /// node or time budget — the engine must treat the incumbent as a
+    /// degraded answer and keep it out of the policy cache.
+    pub cancelled: bool,
 }
 
 /// Solve exactly; errs if infeasible or the node budget is exhausted.
 pub fn solve_bb(p: &MpqProblem, node_limit: usize) -> Result<Solution> {
-    solve_bb_stats(p, node_limit, None).map(|(s, _)| s)
+    solve_bb_stats(p, node_limit, None, &CancelToken::none()).map(|(s, _)| s)
 }
 
-/// [`solve_bb`] with telemetry and an optional wall-clock deadline.  When
-/// the deadline or node limit is hit, the best feasible incumbent is
-/// returned with `proven_optimal == false` (time-limited-solver
-/// semantics); with no incumbent the solve errs.
+/// [`solve_bb`] with telemetry, an optional wall-clock deadline, and a
+/// cooperative cancellation token.  When the deadline or node limit is
+/// hit — or the token fires — the best feasible incumbent is returned
+/// with `proven_optimal == false` (time-limited-solver semantics); with
+/// no incumbent the solve errs.  The token is checked before the first
+/// node and every 1024 nodes thereafter, so a pre-cancelled token
+/// deterministically yields the greedy root incumbent.
 pub fn solve_bb_stats(
     p: &MpqProblem,
     node_limit: usize,
     deadline: Option<std::time::Instant>,
+    cancel: &CancelToken,
 ) -> Result<(Solution, BbStats)> {
     if p.layers.is_empty() {
         return Ok((
@@ -121,12 +131,32 @@ pub fn solve_bb_stats(
     let mut stack = vec![Node { depth: 0, cost: 0.0, bitops: 0, size: 0, choice: Vec::new() }];
     let mut nodes = 0usize;
 
+    // A token that fired before the search even started (queue wait ate
+    // the whole deadline, or a breaker shed): hand back the greedy root
+    // incumbent — deterministic for a fixed problem at any thread count.
+    if cancel.expired() {
+        if let Some(inc) = incumbent {
+            let stats =
+                BbStats { nodes: 0, root_bound, proven_optimal: false, cancelled: true };
+            return Ok((inc, stats));
+        }
+        bail!("branch-and-bound cancelled before the search with no feasible incumbent");
+    }
+
     while let Some(node) = stack.pop() {
         nodes += 1;
+        let checkpoint = nodes % 1024 == 0;
         let expired =
-            nodes % 1024 == 0 && deadline.map_or(false, |d| std::time::Instant::now() >= d);
-        if nodes > node_limit || expired {
-            let why = if expired { "deadline" } else { "node limit" };
+            checkpoint && deadline.map_or(false, |d| std::time::Instant::now() >= d);
+        let cancelled = checkpoint && !expired && cancel.expired();
+        if nodes > node_limit || expired || cancelled {
+            let why = if cancelled {
+                "cancellation"
+            } else if expired {
+                "deadline"
+            } else {
+                "node limit"
+            };
             // Time-limited-solver semantics: return the best feasible
             // incumbent instead of failing (its bound-gap is unproven).
             if let Some(inc) = incumbent {
@@ -135,7 +165,7 @@ pub fn solve_bb_stats(
                     inc.cost
                 );
                 let stats =
-                    BbStats { nodes: nodes as u64, root_bound, proven_optimal: false };
+                    BbStats { nodes: nodes as u64, root_bound, proven_optimal: false, cancelled };
                 return Ok((inc, stats));
             }
             bail!("branch-and-bound {why} hit after {nodes} nodes (limit {node_limit}) with no feasible incumbent");
@@ -196,7 +226,8 @@ pub fn solve_bb_stats(
         }
     }
 
-    let stats = BbStats { nodes: nodes as u64, root_bound, proven_optimal: true };
+    let stats =
+        BbStats { nodes: nodes as u64, root_bound, proven_optimal: true, cancelled: false };
     incumbent
         .map(|s| (s, stats))
         .ok_or_else(|| anyhow::anyhow!("no feasible solution found"))
@@ -379,7 +410,7 @@ mod tests {
         let mut rng = Rng::new(55);
         for _ in 0..10 {
             let p = random_problem(&mut rng, 5, 4, 0.5);
-            if let Ok((s, st)) = solve_bb_stats(&p, 1_000_000, None) {
+            if let Ok((s, st)) = solve_bb_stats(&p, 1_000_000, None, &CancelToken::none()) {
                 assert!(st.proven_optimal);
                 assert!(st.nodes >= 1);
                 assert!(
@@ -390,6 +421,26 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pre_cancelled_token_returns_deterministic_greedy_incumbent() {
+        let mut rng = Rng::new(21);
+        let p = random_problem(&mut rng, 6, 4, 0.6);
+        let token = CancelToken::none();
+        token.cancel();
+        let (a, sa) = solve_bb_stats(&p, 1_000_000, None, &token).unwrap();
+        assert!(sa.cancelled && !sa.proven_optimal && sa.nodes == 0);
+        assert!(p.feasible(&a));
+        // Repeat solves with a fired token return the identical incumbent
+        // (the greedy root assignment depends only on the problem).
+        let (b, _) = solve_bb_stats(&p, 1_000_000, None, &token).unwrap();
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.cost, b.cost);
+        // ...which matches what an unsupervised solve would start from,
+        // never an infeasible or empty assignment.
+        let full = solve_bb(&p, 1_000_000).unwrap();
+        assert!(full.cost <= a.cost + 1e-12, "full solve can only improve on the incumbent");
     }
 
     #[test]

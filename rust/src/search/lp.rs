@@ -11,6 +11,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::engine::CancelToken;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum LpOutcome {
     Optimal { x: Vec<f64>, obj: f64 },
@@ -36,6 +38,13 @@ impl Lp {
     }
 
     pub fn solve(&self) -> Result<LpOutcome> {
+        self.solve_supervised(&CancelToken::none())
+    }
+
+    /// [`Lp::solve`] under a cooperative cancellation token, checked
+    /// every few hundred pivots inside the simplex loop.  A fired token
+    /// aborts with an error (there is no meaningful partial LP answer).
+    pub fn solve_supervised(&self, cancel: &CancelToken) -> Result<LpOutcome> {
         for row in self.a_ub.iter().chain(self.a_eq.iter()) {
             if row.len() != self.n() {
                 bail!("row width {} != {}", row.len(), self.n());
@@ -116,7 +125,7 @@ impl Lp {
             for col in (n + n_slack)..total {
                 cost[col] = 1.0;
             }
-            let obj = simplex_core(&mut t, &mut basis, &cost, total)?;
+            let obj = simplex_core(&mut t, &mut basis, &cost, total, cancel)?;
             if obj > 1e-7 {
                 return Ok(LpOutcome::Infeasible);
             }
@@ -137,7 +146,7 @@ impl Lp {
         for c in cost.iter_mut().take(total).skip(n + n_slack) {
             *c = 1e18;
         }
-        let obj = match simplex_core(&mut t, &mut basis, &cost, total) {
+        let obj = match simplex_core(&mut t, &mut basis, &cost, total, cancel) {
             Ok(o) => o,
             Err(e) if e.to_string() == "unbounded" => return Ok(LpOutcome::Unbounded),
             Err(e) => return Err(e),
@@ -154,14 +163,21 @@ impl Lp {
 }
 
 /// Primal simplex on an existing basic-feasible tableau; returns objective.
+/// Errs with the exact message `"unbounded"` on an unbounded ray (the
+/// caller string-matches it — keep that contract) and with a distinct
+/// `"cancelled"`-bearing message when the token fires mid-iteration.
 fn simplex_core(
     t: &mut [Vec<f64>],
     basis: &mut [usize],
     cost: &[f64],
     total: usize,
+    cancel: &CancelToken,
 ) -> Result<f64> {
     let m = t.len();
-    for _iter in 0..50_000 {
+    for iter in 0..50_000 {
+        if iter % 256 == 0 && cancel.expired() {
+            bail!("simplex cancelled mid-solve after {iter} pivots (deadline or shed)");
+        }
         // Reduced costs: r_j = c_j - c_B B^-1 A_j (computed from tableau).
         let mut entering = None;
         for j in 0..total {
@@ -258,6 +274,21 @@ mod tests {
             }
             o => panic!("{o:?}"),
         }
+    }
+
+    #[test]
+    fn fired_token_aborts_with_cancelled_error() {
+        let lp = Lp {
+            c: vec![-3.0, -5.0],
+            a_ub: vec![vec![1.0, 0.0], vec![0.0, 2.0], vec![3.0, 2.0]],
+            b_ub: vec![4.0, 12.0, 18.0],
+            ..Default::default()
+        };
+        let token = CancelToken::none();
+        token.cancel();
+        let err = lp.solve_supervised(&token).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert_ne!(err.to_string(), "unbounded", "must not alias the unbounded contract");
     }
 
     #[test]

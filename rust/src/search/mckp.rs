@@ -10,6 +10,7 @@
 use anyhow::{bail, Result};
 
 use super::{MpqProblem, Solution};
+use crate::engine::CancelToken;
 
 /// Which resource the DP runs against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,14 +31,18 @@ pub struct DpStats {
 
 /// Solve via DP on the given resource with at most `grid` budget cells.
 pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solution> {
-    solve_dp_stats(p, resource, grid).map(|(s, _)| s)
+    solve_dp_stats(p, resource, grid, &CancelToken::none()).map(|(s, _)| s)
 }
 
-/// [`solve_dp`] plus the grid telemetry it ran with.
+/// [`solve_dp`] plus the grid telemetry it ran with.  The cancellation
+/// token is checked once per layer (each layer costs O(grid · options));
+/// a fired token aborts with an error — the DP has no partial incumbent,
+/// so degradation is the engine's job (greedy / last cached policy).
 pub fn solve_dp_stats(
     p: &MpqProblem,
     resource: Resource,
     grid: usize,
+    cancel: &CancelToken,
 ) -> Result<(Solution, DpStats)> {
     let cap = match resource {
         Resource::BitOps => p.bitops_cap,
@@ -75,6 +80,9 @@ pub fn solve_dp_stats(
 
     let mut next = vec![INF; cells];
     for opts in &p.layers {
+        if cancel.expired() {
+            bail!("mckp DP cancelled mid-solve (deadline or shed)");
+        }
         next.fill(INF);
         let mut par = vec![u16::MAX; cells];
         for (c, o) in opts.iter().enumerate() {
@@ -163,6 +171,16 @@ mod tests {
                 assert!(s.cost <= o.cost + 2.0, "dp {} vs opt {}", s.cost, o.cost);
             }
         }
+    }
+
+    #[test]
+    fn fired_token_aborts_with_error() {
+        let mut rng = Rng::new(9);
+        let p = random_problem(&mut rng, 4, 4, 0.8);
+        let token = CancelToken::none();
+        token.cancel();
+        let err = solve_dp_stats(&p, Resource::BitOps, 512, &token).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
     }
 
     #[test]

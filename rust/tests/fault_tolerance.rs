@@ -1,0 +1,461 @@
+//! Wire-level fault-tolerance suite for the serving stack: deterministic
+//! injected faults (solver panics, slow solves, flaky model loads) driven
+//! through real sockets, asserting the robustness contract — every
+//! request gets exactly one response (solved or degraded), per-connection
+//! order holds, and the server stays up.
+//!
+//! Artifact-free (synthetic model meta): always runs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use limpq::engine::{
+    BranchAndBound, PolicyEngine, SolveBudget, SolveOutcome, Solver, SolverRegistry,
+};
+use limpq::fleet::faults::{flaky_entry_builder, FaultPlan, FaultySolver};
+use limpq::fleet::{query, FleetServer, ServeConfig};
+use limpq::importance::IndicatorStore;
+use limpq::models::{synthetic_meta, ModelMeta};
+use limpq::quant::cost::uniform_bitops;
+use limpq::registry::{DirSource, ModelEntry, ModelRegistry, RegistryConfig, StaticSource};
+use limpq::search::MpqProblem;
+use limpq::util::json::Json;
+
+fn meta_n(layers: usize) -> ModelMeta {
+    synthetic_meta(layers, |i| 100_000 * (i as u64 + 1))
+}
+
+/// Spawn a server whose only model runs every solve through a
+/// [`FaultySolver`] wrapping exact branch-and-bound.
+fn faulty_server(plan: FaultPlan, scfg: ServeConfig) -> FleetServer {
+    let meta = meta_n(6);
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let (solvers, _) = FaultySolver::registry(Arc::new(BranchAndBound), plan);
+    let engine = Arc::new(PolicyEngine::with_registry(meta, imp, 64, solvers));
+    let entry = ModelEntry::from_engine("m", engine);
+    let source = StaticSource::new().with_entry(entry);
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    FleetServer::spawn_registry(registry, "m", "127.0.0.1:0", scfg).unwrap()
+}
+
+/// The acceptance scenario: several connections pipeline bursts of
+/// distinct solves into a server whose solver panics on every 10th call
+/// and stalls past the deadline on every 7th, under a tight default
+/// deadline.  Every request must get exactly one in-order response with
+/// `"ok": true` — solved or degraded — and the server must still answer
+/// afterwards.
+#[test]
+fn chaos_plan_answers_every_request_exactly_once_in_order() {
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 12;
+    let server = faulty_server(
+        FaultPlan {
+            panic_every: 10,
+            slow_every: 7,
+            slow_delay: Duration::from_millis(250),
+            ..FaultPlan::default()
+        },
+        ServeConfig {
+            coalesce_window: Duration::from_millis(2),
+            default_deadline: Some(Duration::from_millis(60)),
+            // this test is about deadlines and panics, not shedding
+            breaker_threshold: 1_000,
+            ..Default::default()
+        },
+    );
+    let addr = server.addr;
+    let base = uniform_bitops(&meta_n(6), 4, 4);
+
+    std::thread::scope(|scope| {
+        for ci in 0..CLIENTS {
+            scope.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut payload = String::new();
+                for qi in 0..PER_CLIENT {
+                    // distinct caps: every request is a cold solve
+                    let g = (base + 100 * (ci * PER_CLIENT + qi + 1) as u64) as f64 / 1e9;
+                    payload.push_str(&format!(
+                        "{{\"cap_gbitops\": {g}, \"name\": \"c{ci}-q{qi}\"}}\n"
+                    ));
+                }
+                writer.write_all(payload.as_bytes()).unwrap();
+                for qi in 0..PER_CLIENT {
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(!line.trim().is_empty(), "client {ci} lost response {qi}");
+                    let resp = Json::parse(line.trim()).unwrap();
+                    assert!(
+                        resp.get("ok").unwrap().as_bool().unwrap(),
+                        "under faults every answer must be solved or degraded: {resp}"
+                    );
+                    assert_eq!(
+                        resp.get("device").unwrap().as_str().unwrap(),
+                        format!("c{ci}-q{qi}"),
+                        "out-of-order response for client {ci}"
+                    );
+                    if let Some(d) = resp.opt("degraded") {
+                        assert!(d.as_bool().unwrap(), "{resp}");
+                        let reason =
+                            resp.get("degraded_reason").unwrap().as_str().unwrap();
+                        assert!(!reason.is_empty(), "{resp}");
+                    }
+                }
+            });
+        }
+    });
+
+    assert_eq!(server.served(), CLIENTS * PER_CLIENT, "no lost or duplicated replies");
+    let sv = server.stats();
+    // 48 solver calls with panic_every=10 must have panicked at least 4
+    // times, each answered degraded; the slow calls expire the deadline.
+    assert!(sv.degraded >= 4, "expected degraded answers under the chaos plan, saw {}", sv.degraded);
+    assert!(sv.deadline_expired >= 1, "250ms stalls under a 60ms deadline never expired it");
+    // The server is still healthy: stats and a clean solve round-trip.
+    let stats = query(&addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    assert!(stats.get("ok").unwrap().as_bool().unwrap(), "{stats}");
+    server.shutdown();
+}
+
+/// A solver that sleeps before delegating, registered as "slug".
+struct SlowSolver(Duration);
+
+impl Solver for SlowSolver {
+    fn name(&self) -> &'static str {
+        "slug"
+    }
+    fn supports(&self, _p: &MpqProblem) -> bool {
+        true
+    }
+    fn solve_full(&self, p: &MpqProblem, b: &SolveBudget) -> anyhow::Result<SolveOutcome> {
+        std::thread::sleep(self.0);
+        BranchAndBound.solve_full(p, b)
+    }
+}
+
+fn slow_server(delay: Duration, scfg: ServeConfig) -> FleetServer {
+    let meta = meta_n(4);
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let solvers: &'static SolverRegistry = Box::leak(Box::new(SolverRegistry::with_solvers(vec![
+        Arc::new(SlowSolver(delay)),
+        Arc::new(BranchAndBound),
+    ])));
+    let engine = Arc::new(PolicyEngine::with_registry(meta, imp, 64, solvers));
+    let entry = ModelEntry::from_engine("slow", engine);
+    let source = StaticSource::new().with_entry(entry);
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    FleetServer::spawn_registry(registry, "slow", "127.0.0.1:0", scfg).unwrap()
+}
+
+/// Per-slot streaming completion: a 1.5s solve coalesced into the same
+/// batch as a fast sibling on another connection must not delay the
+/// sibling (the old sweep answered the whole batch behind one barrier,
+/// so the sibling waited the full 1.5s).  Order still holds *within* a
+/// connection: a fast solve pipelined behind the slow one waits for it.
+#[test]
+fn slow_solve_streams_past_its_batch_siblings_but_not_its_own_conn() {
+    let delay = Duration::from_millis(1500);
+    let server = slow_server(
+        delay,
+        ServeConfig { coalesce_window: Duration::from_millis(50), ..Default::default() },
+    );
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+
+    // Conn A pipelines slow-then-fast; conn B sends fast within the
+    // coalesce window so all three land in one batch.
+    let a = TcpStream::connect(server.addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut aw = a.try_clone().unwrap();
+    let mut ar = BufReader::new(a);
+    let b = TcpStream::connect(server.addr).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut bw = b.try_clone().unwrap();
+    let mut br = BufReader::new(b);
+
+    aw.write_all(
+        format!(
+            "{{\"cap_gbitops\": {cap_g}, \"solver\": \"slug\", \"name\": \"a-slow\"}}\n\
+             {{\"cap_gbitops\": {}, \"solver\": \"bb\", \"name\": \"a-fast\"}}\n",
+            cap_g + 1e-4
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let t = Instant::now();
+    bw.write_all(
+        format!("{{\"cap_gbitops\": {}, \"solver\": \"bb\", \"name\": \"b-fast\"}}\n", cap_g + 2e-4)
+            .as_bytes(),
+    )
+    .unwrap();
+
+    // B's fast sibling answers while A's slow solve is still running.
+    let mut line = String::new();
+    br.read_line(&mut line).unwrap();
+    let b_latency = t.elapsed();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("device").unwrap().as_str().unwrap(), "b-fast");
+    assert!(
+        b_latency < Duration::from_millis(500),
+        "fast sibling waited {b_latency:?} behind a {delay:?} batchmate — streaming broken"
+    );
+
+    // Conn A's responses come back in arrival order: slow first.
+    for expect in ["a-slow", "a-fast"] {
+        let mut line = String::new();
+        ar.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(resp.get("device").unwrap().as_str().unwrap(), expect);
+    }
+    server.shutdown();
+}
+
+/// The per-model circuit breaker: consecutive solver panics trip it,
+/// tripped solves shed straight to the degradation chain (no solver
+/// call), and after the cooldown one half-open probe recovers it.
+#[test]
+fn breaker_trips_sheds_then_half_open_probe_recovers() {
+    let meta = meta_n(6);
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    // The first two solver calls panic; every later call is clean.
+    let (solvers, faulty) =
+        FaultySolver::registry(Arc::new(BranchAndBound), FaultPlan { panic_first: 2, ..FaultPlan::default() });
+    let engine = Arc::new(PolicyEngine::with_registry(meta.clone(), imp, 64, solvers));
+    let entry = ModelEntry::from_engine("m", engine);
+    let registry = Arc::new(ModelRegistry::new(
+        Box::new(StaticSource::new().with_entry(entry)),
+        RegistryConfig::default(),
+    ));
+    // Wide enough that the shed assertions cannot race the cooldown on a
+    // loaded CI machine.
+    let cooldown = Duration::from_millis(600);
+    let server = FleetServer::spawn_registry(
+        registry,
+        "m",
+        "127.0.0.1:0",
+        ServeConfig { breaker_threshold: 2, breaker_cooldown: cooldown, ..Default::default() },
+    )
+    .unwrap();
+    let base = uniform_bitops(&meta, 4, 4);
+    let solve = |i: u64| {
+        let g = (base + 100 * i) as f64 / 1e9;
+        query(&server.addr, &Json::obj(vec![("cap_gbitops", Json::Num(g))])).unwrap()
+    };
+
+    // Two panics: both answered degraded, breaker trips at the second.
+    for i in 1..=2 {
+        let resp = solve(i);
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert!(resp.get("degraded").unwrap().as_bool().unwrap(), "{resp}");
+        assert!(
+            resp.get("degraded_reason").unwrap().as_str().unwrap().contains("solver panicked"),
+            "{resp}"
+        );
+    }
+    assert_eq!(faulty.calls(), 2);
+
+    // Open: the next solve sheds without running the solver.
+    let shed = solve(3);
+    assert!(shed.get("ok").unwrap().as_bool().unwrap(), "{shed}");
+    assert!(shed.get("degraded").unwrap().as_bool().unwrap(), "{shed}");
+    assert!(
+        shed.get("degraded_reason").unwrap().as_str().unwrap().contains("breaker open"),
+        "{shed}"
+    );
+    assert_eq!(faulty.calls(), 2, "an open breaker must not run the solver");
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    assert!(stats.get("breaker_open").unwrap().as_usize().unwrap() >= 1, "{stats}");
+    let models = stats.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models[0].get("breaker").unwrap().as_str().unwrap(), "open", "{stats}");
+
+    // After the cooldown the half-open probe runs, succeeds, and closes
+    // the breaker: later solves are clean.
+    std::thread::sleep(cooldown + Duration::from_millis(100));
+    let probe = solve(4);
+    assert!(probe.get("ok").unwrap().as_bool().unwrap(), "{probe}");
+    assert!(probe.opt("degraded").is_none(), "a clean probe answer is not degraded: {probe}");
+    assert_eq!(faulty.calls(), 3, "the probe must run the solver");
+    let after = solve(5);
+    assert!(after.get("ok").unwrap().as_bool().unwrap(), "{after}");
+    assert!(after.opt("degraded").is_none(), "{after}");
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    let models = stats.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models[0].get("breaker").unwrap().as_str().unwrap(), "closed", "{stats}");
+    server.shutdown();
+}
+
+/// Minimal on-disk `<name>_meta.json` in the build-contract schema.
+fn write_meta(dir: &std::path::Path, name: &str) {
+    let text = format!(
+        r#"{{"name":"{name}","param_size":20,"n_qlayers":2,
+          "input_shape":[2,2,1],"n_classes":4,
+          "train_batch":4,"eval_batch":8,"serve_batch":2,
+          "bit_options":[2,3,4,5,6],"pin_bits":8,
+          "params":[
+            {{"name":"l0.w","shape":[10],"offset":0,"size":10,"init":"he_dense","fan_in":4}},
+            {{"name":"l1.w","shape":[10],"offset":10,"size":10,"init":"he_dense","fan_in":4}}],
+          "qlayers":[
+            {{"index":0,"name":"l0","kind":"conv","macs":50000,"w_numel":10,"pinned":true}},
+            {{"index":1,"name":"l1","kind":"conv","macs":90000,"w_numel":10,"pinned":false}}],
+          "artifacts":{{}}}}"#
+    );
+    std::fs::write(dir.join(format!("{name}_meta.json")), text).unwrap();
+}
+
+/// Regression for the error-caching bug: a `_meta.json` truncated
+/// mid-write fails its load (after the bounded retries), but the failure
+/// is never cached — once the file is complete, the very next request
+/// loads and solves.  Counters separate retries from failures.
+#[test]
+fn truncated_meta_load_fails_without_caching_and_recovers_when_fixed() {
+    let dir = std::env::temp_dir().join(format!("limpq_faults_dir_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    write_meta(&dir, "good");
+    // "bad" is caught mid-write: syntactically broken JSON.
+    std::fs::write(dir.join("bad_meta.json"), "{\"name\":\"bad\",\"param_si").unwrap();
+
+    let source = DirSource::new(&dir);
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    let server =
+        FleetServer::spawn_registry(registry, "good", "127.0.0.1:0", ServeConfig::default())
+            .unwrap();
+    // Loose cap for the tiny meta: above even the all-8-bit worst case
+    // (140k MACs x 8 x 8 = 0.009 Gbitops), so every solve is feasible.
+    let cap_g = 0.01;
+    let solve_on = |model: &str| {
+        query(
+            &server.addr,
+            &Json::obj(vec![
+                ("model", Json::from(model)),
+                ("cap_gbitops", Json::Num(cap_g)),
+            ]),
+        )
+        .unwrap()
+    };
+
+    // Two failing requests: each one is a fresh load attempt (plus its
+    // retries) — the error must not stick.
+    for _ in 0..2 {
+        let resp = solve_on("bad");
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("bad"), "{resp}");
+    }
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    assert_eq!(
+        stats.get("model_load_failures").unwrap().as_usize().unwrap(),
+        2,
+        "each request must re-attempt the load, not replay a cached error: {stats}"
+    );
+    assert!(
+        stats.get("model_load_retries").unwrap().as_usize().unwrap() >= 2,
+        "failed loads must have burned their retry budget: {stats}"
+    );
+
+    // The write completes; the next request just works.
+    write_meta(&dir, "bad");
+    let resp = solve_on("bad");
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("model").unwrap().as_str().unwrap(), "bad");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A transiently flaky source: the first load attempt fails, the
+/// registry's in-line retry succeeds, and the requesting client never
+/// sees an error (`load_retries` counts it, `load_failures` stays 0).
+#[test]
+fn transient_load_fault_is_absorbed_by_retries_over_the_wire() {
+    let meta = meta_n(4);
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let flaky_entry = ModelEntry::from_engine(
+        "flaky",
+        Arc::new(PolicyEngine::with_cache_capacity(meta.clone(), imp.clone(), 64)),
+    );
+    let (builder, attempts) = flaky_entry_builder(flaky_entry, 1);
+    let stable = ModelEntry::from_engine(
+        "stable",
+        Arc::new(PolicyEngine::with_cache_capacity(meta.clone(), imp, 64)),
+    );
+    let source = StaticSource::new().with_entry(stable).with_builder("flaky", builder);
+    let registry = Arc::new(ModelRegistry::new(Box::new(source), RegistryConfig::default()));
+    let server =
+        FleetServer::spawn_registry(registry, "stable", "127.0.0.1:0", ServeConfig::default())
+            .unwrap();
+
+    let cap_g = uniform_bitops(&meta, 4, 4) as f64 / 1e9;
+    let resp = query(
+        &server.addr,
+        &Json::obj(vec![("model", Json::from("flaky")), ("cap_gbitops", Json::Num(cap_g))]),
+    )
+    .unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "a retried load must serve: {resp}");
+    assert_eq!(attempts.load(std::sync::atomic::Ordering::SeqCst), 2);
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    assert_eq!(stats.get("model_load_retries").unwrap().as_usize().unwrap(), 1, "{stats}");
+    assert_eq!(stats.get("model_load_failures").unwrap().as_usize().unwrap(), 0, "{stats}");
+    server.shutdown();
+}
+
+/// Degraded answers are deterministic: the same expired-deadline request
+/// against the same fault plan yields bit-identical policies whichever
+/// pool mode (persistent or scoped per-batch) runs the sweep.
+#[test]
+fn degraded_policy_is_bit_identical_across_pool_modes() {
+    let plan = FaultPlan {
+        slow_every: 1,
+        slow_delay: Duration::from_millis(100),
+        ..FaultPlan::default()
+    };
+    let cap_g = uniform_bitops(&meta_n(6), 4, 4) as f64 / 1e9;
+    let run = |persistent: bool| {
+        let server = faulty_server(
+            plan,
+            ServeConfig { persistent_pool: persistent, ..Default::default() },
+        );
+        let resp = query(
+            &server.addr,
+            &Json::obj(vec![("cap_gbitops", Json::Num(cap_g)), ("deadline_ms", Json::from(1usize))]),
+        )
+        .unwrap();
+        server.shutdown();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert!(resp.get("degraded").unwrap().as_bool().unwrap(), "{resp}");
+        format!("{}|{}", resp.get("w_bits").unwrap(), resp.get("a_bits").unwrap())
+    };
+    assert_eq!(run(true), run(false), "degraded fallback must not depend on the pool mode");
+}
+
+/// Bounded-grace shutdown: a response owed when `shutdown()` is called
+/// is still delivered (the drain window flushes it) instead of dying
+/// with the socket.
+#[test]
+fn shutdown_drains_the_owed_response() {
+    let server = slow_server(
+        Duration::from_millis(300),
+        ServeConfig { drain: Duration::from_millis(2_000), ..Default::default() },
+    );
+    let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(format!("{{\"cap_gbitops\": {cap_g}, \"solver\": \"slug\"}}\n").as_bytes())
+        .unwrap();
+    // Let the dispatcher pick the solve up, then shut down underneath it.
+    std::thread::sleep(Duration::from_millis(100));
+    let t = Instant::now();
+    server.shutdown();
+    assert!(t.elapsed() < Duration::from_secs(5), "shutdown hung");
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.trim().is_empty(), "the in-flight response was dropped at shutdown");
+    let resp = Json::parse(line.trim()).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "slug");
+}

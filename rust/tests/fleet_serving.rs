@@ -235,11 +235,13 @@ impl Solver for PanicSolver {
     }
 }
 
-/// A panicking solver must cost its own request an error line — not the
-/// dispatcher thread.  Regression: without the dispatcher's panic
-/// firewall the sweep unwinds, the dispatcher exits, and every later
-/// request on every connection hangs unanswered while the multiplexer
-/// keeps accepting.
+/// A panicking solver must cost its own request a *degraded answer* —
+/// never the dispatcher thread.  Regression, twice over: without the
+/// panic firewall the sweep unwinds and every later request hangs; and
+/// since graceful degradation, a panic falls back to a greedy policy
+/// (`"ok": true, "degraded": true`) instead of erroring, so fleet
+/// clients keep getting servable policies while operators see the panic
+/// in `degraded_reason` and the stats counters.
 #[test]
 fn solver_panic_answers_with_error_and_server_keeps_serving() {
     let meta = meta6();
@@ -266,14 +268,22 @@ fn solver_panic_answers_with_error_and_server_keeps_serving() {
     };
 
     let boom = send_recv(format!("{{\"cap_gbitops\": {cap_g}, \"solver\": \"boom\"}}"));
-    assert!(!boom.get("ok").unwrap().as_bool().unwrap(), "{boom}");
+    assert!(boom.get("ok").unwrap().as_bool().unwrap(), "{boom}");
+    assert!(boom.get("degraded").unwrap().as_bool().unwrap(), "{boom}");
+    let reason = boom.get("degraded_reason").unwrap().as_str().unwrap();
+    assert!(reason.contains("solver panicked"), "{boom}");
+    assert_eq!(boom.get("w_bits").unwrap().as_arr().unwrap().len(), 6);
 
-    // The dispatcher survived: stats and a healthy solver still answer.
+    // The dispatcher survived: stats and a healthy solver still answer,
+    // the panic is visible in the counters, and a clean answer carries
+    // no degraded fields.
     let stats = send_recv("{\"cmd\": \"stats\"}".into());
     assert!(stats.get("ok").unwrap().as_bool().unwrap(), "{stats}");
+    assert_eq!(stats.get("degraded").unwrap().as_usize().unwrap(), 1, "{stats}");
     let good = send_recv(format!("{{\"cap_gbitops\": {cap_g}, \"solver\": \"bb\"}}"));
     assert!(good.get("ok").unwrap().as_bool().unwrap(), "{good}");
     assert_eq!(good.get("solver").unwrap().as_str().unwrap(), "bb");
+    assert!(good.opt("degraded").is_none(), "{good}");
     server.shutdown();
 }
 

@@ -36,6 +36,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# The wire-level robustness gate, run by name so a fault-tolerance
+# regression is unmistakable in CI logs (the suite also runs as part of
+# the full `cargo test` above).
+echo "==> cargo test -q --test fault_tolerance"
+cargo test -q --test fault_tolerance
+
 echo "==> cargo fmt --check"
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
