@@ -216,7 +216,9 @@ SERVE (fleet serving stack):
                             sockets close (default 250).
     On deadline expiry or a solver panic the server degrades instead of
     erroring, falling down a chain: the solver's best incumbent so far,
-    else a fresh greedy repair, else the model's last good policy.
+    else a fresh greedy repair, else the model's last good policy — the
+    stale policy is served only if it satisfies the live request's caps
+    (never an over-budget answer under \"ok\": true).
     Degraded answers keep \"ok\": true and add \"degraded\": true plus a
     \"degraded_reason\"; they are never cached.  Repeated solver panics
     trip a per-model circuit breaker — solves shed straight to the

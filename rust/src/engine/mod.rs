@@ -39,7 +39,7 @@ pub mod solvers;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -269,6 +269,12 @@ pub fn solve_auto(p: &MpqProblem) -> Result<Solution> {
 /// per-model default, see [`crate::registry::RegistryConfig`]).
 pub const DEFAULT_CACHE_CAPACITY: usize = 512;
 
+/// Upper bound on one single-flight follower condvar wait: a follower
+/// re-checks its own [`CancelToken`] at least this often, so an explicit
+/// cancel (which has no deadline to time the wait against) is observed
+/// promptly even if the leader never publishes.
+const FOLLOWER_RECHECK: Duration = Duration::from_millis(25);
+
 /// A solve in progress: followers block on `cv` until the leader fills
 /// `done` (the outcome, or the error rendered to a string — `anyhow`
 /// errors are not cloneable).
@@ -317,7 +323,10 @@ impl Drop for SingleFlightGuard<'_> {
 /// a mutex that is never held during a solve, and concurrent identical
 /// cold requests are **single-flighted** — one leader runs the solver,
 /// every follower blocks on the same in-flight slot and shares the
-/// outcome, so a fleet stampede costs exactly one solve.
+/// outcome, so a fleet stampede costs exactly one solve.  A follower
+/// still answers to its *own* [`CancelToken`]: if its deadline fires
+/// before the leader publishes, it leaves the wait and degrades under
+/// its own supervision rather than inheriting the leader's.
 pub struct PolicyEngine {
     pub meta: Arc<ModelMeta>,
     pub importance: Arc<Importance>,
@@ -414,9 +423,30 @@ impl PolicyEngine {
         };
         if !leader {
             self.inflight_waits.fetch_add(1, Ordering::Relaxed);
+            // Wait under the follower's *own* token, not the leader's:
+            // the leader may have a laxer deadline (or none), and this
+            // request's end-to-end supervision must still hold.  The wait
+            // is chunked so an explicitly cancelled flag is observed too.
+            let cancel = &req.budget.cancel;
             let mut done = slot.done.lock().unwrap();
             while done.is_none() {
-                done = slot.cv.wait(done).unwrap();
+                if cancel.expired() {
+                    drop(done);
+                    let reason = "deadline expired waiting on an in-flight identical solve";
+                    return match self.fallback_outcome(req, reason) {
+                        Some(outcome) => {
+                            Ok(EngineResponse { outcome: Arc::new(outcome), cache_hit: false })
+                        }
+                        None => Err(anyhow::anyhow!(
+                            "{reason}, and no degraded fallback is available"
+                        )),
+                    };
+                }
+                let wait = cancel.deadline().map_or(FOLLOWER_RECHECK, |d| {
+                    d.saturating_duration_since(Instant::now()).min(FOLLOWER_RECHECK)
+                });
+                let (guard, _) = slot.cv.wait_timeout(done, wait).unwrap();
+                done = guard;
             }
             return match done.as_ref().unwrap() {
                 Ok(outcome) => {
@@ -485,8 +515,9 @@ impl PolicyEngine {
     /// The degradation chain below the solver's own incumbent: a direct
     /// greedy construction (bypassing the registry, so it is available
     /// even when the registry chain is broken), then the last clean
-    /// outcome for this model — stale, but the right shape.  `None` when
-    /// neither applies; the caller then reports the original error.
+    /// outcome for this model — stale, but the right shape, and only if
+    /// it satisfies **this** request's caps.  `None` when neither
+    /// applies; the caller then reports the original error.
     fn fallback_outcome(&self, req: &SearchRequest, reason: &str) -> Option<PolicyOutcome> {
         let p = self.problem(req);
         // Greedy has no cancellation points and runs in microseconds, so
@@ -502,6 +533,15 @@ impl PolicyEngine {
             }
         }
         let last = self.last_good.lock().unwrap().clone()?;
+        // The stale policy was solved under *different* constraints: if it
+        // blows this request's bitops/size caps, serving it with ok:true
+        // would hand the client a policy its hardware budget cannot hold.
+        // Refuse and let the caller report the original error instead.
+        let fits = req.bitops_cap.map_or(true, |c| last.solution.bitops <= c)
+            && req.size_cap_bits.map_or(true, |c| last.solution.size_bits <= c);
+        if !fits {
+            return None;
+        }
         let mut outcome = (*last).clone();
         outcome.stats.degraded = true;
         outcome.stats.degraded_reason = Some(format!("{reason}; serving last good policy"));
@@ -902,27 +942,30 @@ mod tests {
         let calls = Arc::new(AtomicUsize::new(0));
         let e = engine_with(Arc::new(SlowSolver {
             calls: calls.clone(),
-            delay: std::time::Duration::from_millis(150),
+            delay: std::time::Duration::from_millis(200),
         }));
         let cap = uniform_bitops(&e.meta, 4, 4);
-        let req = SearchRequest::builder()
+        // The leader carries the short deadline; followers are patient
+        // (same canonical key — tokens never enter request identity), so
+        // they wait the leader out and must share whatever it publishes.
+        let leader_req = SearchRequest::builder()
             .bitops_cap(cap)
             .solver_name("slow")
             .cancel(CancelToken::after(std::time::Duration::from_millis(30)))
             .build()
             .unwrap();
-        const N: usize = 4;
-        let barrier = std::sync::Barrier::new(N);
+        let follower_req =
+            SearchRequest::builder().bitops_cap(cap).solver_name("slow").build().unwrap();
+        const FOLLOWERS: usize = 3;
         let outcomes: Vec<EngineResponse> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..N)
-                .map(|_| {
-                    s.spawn(|| {
-                        barrier.wait();
-                        e.solve(&req).unwrap()
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+            let leader = s.spawn(|| e.solve(&leader_req).unwrap());
+            // Join while the leader is still inside its 200 ms solve.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let handles: Vec<_> =
+                (0..FOLLOWERS).map(|_| s.spawn(|| e.solve(&follower_req).unwrap())).collect();
+            let mut all = vec![leader.join().unwrap()];
+            all.extend(handles.into_iter().map(|h| h.join().unwrap()));
+            all
         });
         // The deadline fires while the leader sleeps inside the solver;
         // B&B then salvages its root incumbent.  Followers must share
@@ -933,6 +976,53 @@ mod tests {
             assert!(Arc::ptr_eq(&o.outcome, &outcomes[0].outcome), "outcome must be shared");
         }
         assert_eq!(e.cache_stats().entries, 0, "degraded outcomes must not enter the cache");
+    }
+
+    #[test]
+    fn follower_deadline_fires_during_anothers_solve_and_degrades_on_time() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let e = engine_with(Arc::new(SlowSolver {
+            calls: calls.clone(),
+            delay: std::time::Duration::from_millis(500),
+        }));
+        let cap = uniform_bitops(&e.meta, 4, 4);
+        // Patient leader, impatient follower: the follower's own 40 ms
+        // deadline expires long before the leader's 500 ms solve returns,
+        // so it must degrade under its own supervision instead of
+        // inheriting the leader's (previously it blocked the full 500 ms).
+        let leader_req =
+            SearchRequest::builder().bitops_cap(cap).solver_name("slow").build().unwrap();
+        let follower_req = SearchRequest::builder()
+            .bitops_cap(cap)
+            .solver_name("slow")
+            .cancel(CancelToken::after(std::time::Duration::from_millis(40)))
+            .build()
+            .unwrap();
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| e.solve(&leader_req).unwrap());
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            let t = Instant::now();
+            let resp = e.solve(&follower_req).unwrap();
+            let waited = t.elapsed();
+            assert!(
+                waited < std::time::Duration::from_millis(300),
+                "follower ignored its own deadline and waited {waited:?} on the leader"
+            );
+            assert!(!resp.cache_hit);
+            let stats = &resp.outcome.stats;
+            assert!(stats.degraded);
+            assert_eq!(stats.solver, "greedy");
+            assert!(
+                stats.degraded_reason.as_deref().unwrap().contains("waiting"),
+                "{:?}",
+                stats.degraded_reason
+            );
+            assert!(resp.outcome.solution.bitops <= cap, "degraded answer must stay feasible");
+            // The leader itself is untouched: clean solve, cached.
+            let led = leader.join().unwrap();
+            assert!(!led.outcome.stats.degraded);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "the follower must not have raced a solve");
     }
 
     #[test]
@@ -955,7 +1045,7 @@ mod tests {
     }
 
     #[test]
-    fn panic_on_unrepairable_request_falls_back_to_last_good_policy() {
+    fn last_good_fallback_honors_the_live_requests_caps() {
         let calls = Arc::new(AtomicUsize::new(0));
         let e = engine_with(Arc::new(FlakySolver { calls }));
         let cap = uniform_bitops(&e.meta, 4, 4);
@@ -967,20 +1057,31 @@ mod tests {
         let good = e.solve(&good_req).unwrap();
         assert!(!good.outcome.stats.degraded);
         // Second request: the solver panics AND greedy cannot repair the
-        // hopeless 1-bitop cap, so the chain lands on the last clean
-        // policy for this model — stale, but an answer.
+        // hopeless 1-bitop cap.  The last clean policy exists but blows
+        // this request's cap, so the chain must refuse — answering
+        // `ok` with an over-cap policy would bust the client's stated
+        // hardware budget — and the original panic surfaces as the error.
         let hopeless = SearchRequest::builder()
             .bitops_cap(1)
             .solver_name("flaky")
             .build()
             .unwrap();
-        let resp = e.solve(&hopeless).unwrap();
-        let stats = &resp.outcome.stats;
-        assert!(stats.degraded);
-        let reason = stats.degraded_reason.as_deref().unwrap();
+        let err = e.solve(&hopeless).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.starts_with(PANIC_REASON), "{msg}");
+        // A stale policy that *does* fit the live caps is still served.
+        // Greedy only fails on these synthetic metas when the cap is
+        // hopeless, so fabricate a fitting last_good to reach the branch.
+        let mut doctored = (*good.outcome).clone();
+        doctored.solution.bitops = 1;
+        doctored.solution.size_bits = 0;
+        *e.last_good.lock().unwrap() = Some(Arc::new(doctored));
+        let served = e.fallback_outcome(&hopeless, "solver panicked: boom").unwrap();
+        assert!(served.stats.degraded);
+        let reason = served.stats.degraded_reason.as_deref().unwrap();
         assert!(reason.starts_with(PANIC_REASON), "{reason}");
         assert!(reason.contains("last good"), "{reason}");
-        assert_eq!(resp.outcome.policy, good.outcome.policy);
+        assert_eq!(served.policy, good.outcome.policy);
     }
 
     #[test]

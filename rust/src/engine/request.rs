@@ -86,9 +86,11 @@ pub struct SolveBudget {
     /// Budget cells for the MCKP dynamic program's resource grid.
     pub dp_grid: usize,
     /// End-to-end cancellation: checked cooperatively inside the `bb`,
-    /// `mckp`, and `lp-round` inner loops.  Expiry mid-solve yields a
-    /// degraded answer (incumbent → greedy → last cached policy), never
-    /// a cached one — see `PolicyEngine::solve`.
+    /// `mckp`, and `lp-round` inner loops, and by single-flight
+    /// followers waiting on a leader's solve.  Expiry mid-solve yields a
+    /// degraded answer (incumbent → greedy → last cached policy if it
+    /// fits the live caps), never a cached one — see
+    /// `PolicyEngine::solve`.
     pub cancel: CancelToken,
 }
 

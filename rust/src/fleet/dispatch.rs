@@ -69,7 +69,9 @@ pub(crate) struct ServingCore {
 /// open it: solves shed to the engine's degradation chain (no solver
 /// runs) until [`ServeConfig::breaker_cooldown`] elapses, then exactly
 /// one request runs as a half-open probe.  A clean probe closes the
-/// breaker; another panic re-opens it for a fresh cooldown.
+/// breaker; another panic re-opens it for a fresh cooldown; an
+/// inconclusive probe (deadline-degraded or an honest error) leaves it
+/// open and frees the slot for the next probe.
 #[derive(Debug, Default)]
 pub(crate) struct BreakerState {
     /// Consecutive panic-degradations since the last clean answer.
@@ -86,6 +88,22 @@ enum Admit {
     Solve,
     /// Answer through the degradation chain without running a solver.
     Shed,
+}
+
+/// How one admitted solve ended, as the breaker sees it.
+enum BreakerOutcome {
+    /// A clean, non-degraded answer — the only outcome that proves the
+    /// model's solvers healthy and resets the failure count.
+    Clean,
+    /// A panic-caused degradation (or an escaped panic) — the only
+    /// outcome that counts toward tripping the breaker.
+    Panic,
+    /// Anything else: a deadline-caused degradation or an honest solve
+    /// error (infeasible caps, unknown solver).  Says nothing about
+    /// solver health, so it neither trips nor resets — in particular a
+    /// flapping solver interleaving panics with deadline expiries must
+    /// not have its panic streak erased.
+    Inconclusive,
 }
 
 impl ServingCore {
@@ -125,29 +143,34 @@ impl ServingCore {
         }
     }
 
-    /// Record a solve's outcome for the breaker.  `panicked` means the
-    /// answer was a panic-caused degradation (or an escaped panic), the
-    /// only failure mode the breaker counts.
-    fn breaker_record(&self, model: &str, panicked: bool) {
+    /// Record an admitted solve's outcome for the breaker.
+    fn breaker_record(&self, model: &str, outcome: BreakerOutcome) {
         let mut breakers = self.breakers.lock().unwrap();
         let st = breakers.entry(model.to_string()).or_default();
-        if panicked {
-            st.fails += 1;
-            st.probing = false;
-            if st.fails >= self.cfg.breaker_threshold {
-                st.open_until = Some(Instant::now() + self.cfg.breaker_cooldown);
+        match outcome {
+            BreakerOutcome::Panic => {
+                st.fails += 1;
+                st.probing = false;
+                if st.fails >= self.cfg.breaker_threshold {
+                    st.open_until = Some(Instant::now() + self.cfg.breaker_cooldown);
+                }
             }
-        } else {
-            *st = BreakerState::default();
+            BreakerOutcome::Clean => *st = BreakerState::default(),
+            // The probe (if this was one) ran but proved nothing; free
+            // the probe slot so the next request re-probes, and leave
+            // the panic streak untouched.
+            BreakerOutcome::Inconclusive => st.probing = false,
         }
     }
 
-    /// Operator-facing breaker state for one model.
+    /// Operator-facing breaker state for one model.  "half-open" means a
+    /// probe is actually in flight — a merely elapsed cooldown still
+    /// reports "open" until a request claims the probe slot.
     fn breaker_phase(&self, model: &str) -> &'static str {
         let breakers = self.breakers.lock().unwrap();
-        match breakers.get(model).and_then(|s| s.open_until) {
-            None => "closed",
-            Some(until) if Instant::now() >= until => "half-open",
+        match breakers.get(model) {
+            None | Some(BreakerState { open_until: None, .. }) => "closed",
+            Some(st) if st.probing => "half-open",
             Some(_) => "open",
         }
     }
@@ -185,19 +208,26 @@ impl ServingCore {
                 }));
                 match solved {
                     Ok(result) => {
-                        let panicked = matches!(
-                            &result,
-                            Ok(out) if out
-                                .degraded_reason
-                                .as_deref()
-                                .is_some_and(|r| r.starts_with(PANIC_REASON))
-                        );
-                        self.breaker_record(model, panicked);
+                        let outcome = match &result {
+                            Ok(out)
+                                if out
+                                    .degraded_reason
+                                    .as_deref()
+                                    .is_some_and(|r| r.starts_with(PANIC_REASON)) =>
+                            {
+                                BreakerOutcome::Panic
+                            }
+                            Ok(out) if out.degraded => BreakerOutcome::Inconclusive,
+                            Ok(_) => BreakerOutcome::Clean,
+                            // Honest solve errors say nothing about health.
+                            Err(_) => BreakerOutcome::Inconclusive,
+                        };
+                        self.breaker_record(model, outcome);
                         result
                     }
                     Err(_) => {
                         // A panic that escaped even the engine's firewall.
-                        self.breaker_record(model, true);
+                        self.breaker_record(model, BreakerOutcome::Panic);
                         Err(anyhow::anyhow!(
                             "internal error: solve for {:?} panicked",
                             spec.name
@@ -516,22 +546,28 @@ impl BatchRouter {
 
     /// Mark `slot` answered and flush its connection's ready prefix into
     /// the shared response queue (the mux picks it up within a tick).
+    ///
+    /// The flush happens while `inner` is still held: if it were dropped
+    /// first, a worker holding slot N's ready prefix could be preempted
+    /// and overtaken by the worker completing slot N+1 of the same
+    /// connection, writing the later response first and silently swapping
+    /// answers (the wire protocol has no correlation id).  No other path
+    /// takes `inner` and `responses` in the opposite order, so the nested
+    /// acquisition cannot deadlock.
     fn complete(&self, slot: usize, line: String) {
         let conn = self.conn_of[slot];
+        let mut inner = self.inner.lock().unwrap();
+        let RouterInner { done, per_conn } = &mut *inner;
+        done[slot] = Some(line);
+        let q = per_conn.get_mut(&conn).expect("slot's connection is registered");
         let mut ready: Vec<(u64, String)> = Vec::new();
-        {
-            let mut inner = self.inner.lock().unwrap();
-            let RouterInner { done, per_conn } = &mut *inner;
-            done[slot] = Some(line);
-            let q = per_conn.get_mut(&conn).expect("slot's connection is registered");
-            while let Some(&front) = q.front() {
-                match done[front].take() {
-                    Some(l) => {
-                        q.pop_front();
-                        ready.push((conn, l));
-                    }
-                    None => break,
+        while let Some(&front) = q.front() {
+            match done[front].take() {
+                Some(l) => {
+                    q.pop_front();
+                    ready.push((conn, l));
                 }
+                None => break,
             }
         }
         if !ready.is_empty() {
