@@ -7,7 +7,10 @@
 //! every access is an LRU evict + reload (`fleet_multi_reload`).
 //! Artifact-free: runs on a synthetic model meta, so the serving
 //! machinery — not the solver — dominates what is measured (requests pin
-//! the fast `greedy` solver).
+//! the fast `greedy` solver).  A `fleet_frontier` tier sends
+//! distinct-cap auto-solver queries with the certified Pareto surface
+//! on (every answer a frontier hit, no solver) vs off (every answer a
+//! cold exact solve) — the hot-path speedup the frontier subsystem buys.
 //!
 //! Run: cargo bench --bench fleet_serving [-- --json BENCH_fleet.json]
 //!
@@ -118,6 +121,42 @@ fn fault_volley(
                     if resp.opt("degraded").is_some() {
                         degraded.fetch_add(1, Ordering::Relaxed);
                     }
+                }
+            });
+        }
+    });
+}
+
+/// Frontier-tier volley: distinct caps like [`volley`] cold mode, but
+/// auto solver (no pin) so each query is eligible for the frontier hot
+/// path whenever the server has it enabled.
+fn frontier_volley(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    per_client: usize,
+    base: u64,
+    counter: &AtomicU64,
+) {
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            scope.spawn(|| {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                for _ in 0..per_client {
+                    let cap = base + 1000 * (1 + counter.fetch_add(1, Ordering::Relaxed));
+                    let line = format!("{{\"cap_gbitops\": {}}}\n", cap as f64 / 1e9);
+                    writer.write_all(line.as_bytes()).unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let ok = Json::parse(resp.trim())
+                        .expect("parse response")
+                        .get("ok")
+                        .unwrap()
+                        .as_bool()
+                        .unwrap();
+                    assert!(ok, "serve error: {resp}");
                 }
             });
         }
@@ -266,6 +305,48 @@ fn main() {
             ));
             server.shutdown();
         }
+    }
+
+    // Frontier tier: every query draws a fresh cap, so nothing ever hits
+    // the policy cache — with the surface on, every answer is a frontier
+    // hit (no solver runs after the settle pass builds the surface);
+    // with it off, every answer is a cold exact solve.  The ratio is the
+    // hot-path speedup the precomputed surface buys.
+    for (mode, frontier) in [("hit", true), ("off", false)] {
+        let meta = synthetic_meta(8, |i| 50_000 * (i as u64 + 1));
+        let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+        let server = FleetServer::spawn_with(
+            FleetSearcher::new(meta, imp),
+            "127.0.0.1:0",
+            ServeConfig { frontier, frontier_tol: 10.0, ..Default::default() },
+        )
+        .expect("spawn frontier server");
+        let addr = server.addr;
+        let clients = 8usize;
+        let counter = AtomicU64::new(0);
+        let queries = (clients * per_client) as f64;
+        // Unmeasured settle pass: builds the surface once (hit mode).
+        frontier_volley(addr, clients, per_client, base, &counter);
+        let stats = bench.run(&format!("fleet_frontier_{mode}_c{clients}x{per_client}"), || {
+            frontier_volley(addr, clients, per_client, base, &counter);
+        });
+        let sv = server.stats();
+        println!(
+            "fleet frontier {mode} @ {clients} clients: {:.0} queries/sec \
+             ({} frontier hits / {} misses / {} refines)",
+            queries / stats.mean.as_secs_f64(),
+            sv.frontier_hits,
+            sv.frontier_misses,
+            sv.frontier_refines
+        );
+        records.push(record(
+            &format!("fleet_frontier_{mode}"),
+            &format!("clients={clients}"),
+            threads,
+            &stats,
+            queries,
+        ));
+        server.shutdown();
     }
 
     // Fault tier: every 10th solve stalls well past a tight per-request

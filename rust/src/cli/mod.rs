@@ -54,6 +54,10 @@ const VALUE_FLAGS: &[&str] = &[
     "max-queue",
     "default-deadline-ms",
     "drain-ms",
+    "pareto-steps",
+    "frontier",
+    "frontier-steps",
+    "frontier-tol",
 ];
 
 impl Args {
@@ -130,6 +134,8 @@ USAGE:
                   [--persistent-pool on|off] [--mem-budget-mb N]
                   [--max-inflight N] [--max-queue N]
                   [--default-deadline-ms T] [--drain-ms T]
+                  [--frontier on|off] [--frontier-steps N]
+                  [--frontier-tol F]
                   event-driven fleet TCP server (see SERVE below)
   limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
                   policy on the validation split (finetuned ckpt if cached)
@@ -146,6 +152,10 @@ ENGINE (policy search):
                        relaxation + guided rounding), pareto (frontier
                        sweep), greedy (constructive repair)
     --node-limit N     branch-and-bound node budget (default 2000000)
+    --pareto-steps N   Lagrangian sweep resolution for the pareto solver
+                       (default 200, minimum 2); part of the canonical
+                       cache key, so different resolutions never collide.
+                       Rides the wire as \"pareto_steps\".
     --time-limit-ms T  wall-clock deadline for the exact B&B search; on
                        expiry the best feasible incumbent is returned
                        (optimality unproven).  Other solvers run to
@@ -226,6 +236,37 @@ SERVE (fleet serving stack):
     probe decides whether to close it.  Stats gain deadline_expired,
     degraded, breaker_open, model_load_retries, and a per-model
     \"breaker\" phase (closed / open / half-open).
+
+  FRONTIER (certified Pareto surfaces, the serving hot path):
+    Each model can carry a precomputed trade-off surface: a 2-D
+    Lagrangian sweep over (BitOps, size) caps whose vertices are
+    mutually non-dominated policies, plus dual points and exact-solve
+    bound points that certify how far any served vertex can be from the
+    true optimum.  With frontier-first serving on, an auto-solver cap
+    query is answered straight from the surface — no solver, no policy
+    cache — whenever the cheapest fitting vertex's certificate
+    gap is within tolerance; otherwise the normal engine path runs and
+    the exact answer is inserted back as a refining vertex, so repeated
+    cap patterns converge to exact O(1) replays.  Surfaces build lazily
+    per (alpha, weight_only) family on first cap query, single-flighted,
+    and their bytes count against --mem-budget-mb (evicted with the
+    model).  A solve may cap both axes at once (\"cap_gbitops\" +
+    \"size_cap_mb\"); frontier answers carry \"solver\": \"frontier\",
+    \"frontier_hit\": true and a \"frontier_gap\" certificate.
+    --frontier on|off       frontier-first serving (default on for
+                            `limpq serve`; embedded servers default off)
+    --frontier-steps N      sweep resolution per lambda axis, >= 2
+                            (default 24; the grid also always includes
+                            the lambda = 0 line for each axis so
+                            single-cap queries stay certified)
+    --frontier-tol F        relative certificate-gap tolerance for
+                            serving a vertex without an exact solve
+                            (default 0.05; 0 = serve only provably
+                            optimal answers)
+    {\"cmd\": \"frontier\", \"model\": M} force-builds the model's
+    default surface and reports per-surface vertices / refinements /
+    hits / misses / bytes; stats gain frontier_hits, frontier_misses,
+    frontier_refines and per-model frontier_bytes.
 
   Operator introspection over the wire: send {\"cmd\": \"stats\"} on any
   connection to get open/total connections, served and busy-rejected
@@ -371,6 +412,9 @@ fn request_from_args(args: &Args, cfg: &Config) -> Result<crate::engine::SearchR
     if let Some(v) = args.get("time-limit-ms") {
         b = b.time_limit(std::time::Duration::from_millis(v.parse::<u64>()?));
     }
+    if let Some(v) = args.get("pareto-steps") {
+        b = b.pareto_steps(v.parse::<usize>()?);
+    }
     b.build()
 }
 
@@ -491,6 +535,23 @@ fn serve_config_from_args(args: &Args) -> Result<ServeConfig> {
         let ms: u64 = v.parse().with_context(|| format!("--drain-ms {v:?}"))?;
         scfg.drain = std::time::Duration::from_millis(ms);
     }
+    // The CLI server defaults frontier-first serving ON (the struct
+    // default stays off so embedded/test servers opt in deliberately).
+    scfg.frontier = true;
+    if let Some(v) = args.get("frontier") {
+        scfg.frontier = parse_switch(v).with_context(|| format!("--frontier {v:?}"))?;
+    }
+    if let Some(v) = args.get("frontier-steps") {
+        scfg.frontier_steps = v.parse().with_context(|| format!("--frontier-steps {v:?}"))?;
+        anyhow::ensure!(scfg.frontier_steps >= 2, "--frontier-steps must be at least 2");
+    }
+    if let Some(v) = args.get("frontier-tol") {
+        scfg.frontier_tol = v.parse().with_context(|| format!("--frontier-tol {v:?}"))?;
+        anyhow::ensure!(
+            scfg.frontier_tol >= 0.0 && scfg.frontier_tol.is_finite(),
+            "--frontier-tol must be a finite non-negative number"
+        );
+    }
     Ok(scfg)
 }
 
@@ -572,7 +633,9 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
         "protocol: one JSON request per line, e.g. {{\"model\": \"{default_model}\", \
          \"cap_gbitops\": 1.5, \"alpha\": 1.0}}; {{\"cmd\": \"stats\"}} for counters, \
          {{\"cmd\": \"models\"}} / {{\"cmd\": \"load\", \"model\": ...}} / \
-         {{\"cmd\": \"evict\", \"model\": ...}} for registry control"
+         {{\"cmd\": \"evict\", \"model\": ...}} for registry control, \
+         {{\"cmd\": \"frontier\"}} to inspect Pareto surfaces (frontier-first serving {})",
+        if scfg.frontier { "on" } else { "off" }
     );
     // Serve until killed, reporting the serving stack's effectiveness.
     let mut last_served = 0usize;
@@ -593,7 +656,8 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
                 });
             println!(
                 "served {} responses in {} batches (last {}, max {}), queue {} (+{} admin), \
-                 {} busy-rejected; cache: {} hits / {} solves, {} cached, {} single-flight \
+                 {} busy-rejected; frontier: {} hits / {} misses / {} refines; \
+                 cache: {} hits / {} solves, {} cached, {} single-flight \
                  waits; health: {} deadline-expired / {} degraded / {} breaker-shed; \
                  {} models resident ({:.1} MB, {} loads / {} evictions / {} load retries); \
                  conns {} open / {} total ({} overloaded)",
@@ -604,6 +668,9 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
                 sv.queue_depth,
                 sv.admin_queue_depth,
                 sv.rejected,
+                sv.frontier_hits,
+                sv.frontier_misses,
+                sv.frontier_refines,
                 hits,
                 solves,
                 entries,
@@ -740,6 +807,64 @@ mod tests {
         assert!(serve_config_from_args(&bad).is_err());
         let junk = parse(&["serve", "--drain-ms", "soon"]);
         assert!(serve_config_from_args(&junk).is_err());
+    }
+
+    #[test]
+    fn frontier_flags_parse_into_config() {
+        // `limpq serve` defaults frontier-first serving ON, overriding
+        // the embedded-server struct default of off.
+        let d = serve_config_from_args(&parse(&["serve"])).unwrap();
+        assert!(d.frontier);
+        assert!(!ServeConfig::default().frontier);
+        assert_eq!(d.frontier_steps, ServeConfig::default().frontier_steps);
+        assert_eq!(d.frontier_tol, ServeConfig::default().frontier_tol);
+        let a = parse(&[
+            "serve",
+            "--frontier",
+            "off",
+            "--frontier-steps",
+            "9",
+            "--frontier-tol",
+            "0.25",
+        ]);
+        let scfg = serve_config_from_args(&a).unwrap();
+        assert!(!scfg.frontier);
+        assert_eq!(scfg.frontier_steps, 9);
+        assert_eq!(scfg.frontier_tol, 0.25);
+        // a 1-step sweep could not even bracket the lambda range
+        let bad = parse(&["serve", "--frontier-steps", "1"]);
+        assert!(serve_config_from_args(&bad).is_err());
+        let neg = parse(&["serve", "--frontier-tol", "-0.5"]);
+        assert!(serve_config_from_args(&neg).is_err());
+        let junk = parse(&["serve", "--frontier", "maybe"]);
+        assert!(serve_config_from_args(&junk).is_err());
+    }
+
+    #[test]
+    fn pareto_steps_flag_reaches_the_request_budget() {
+        let a = parse(&["search", "--cap-gbitops", "1.5", "--pareto-steps", "64"]);
+        let req = request_from_args(&a, &Config::default()).unwrap();
+        assert_eq!(req.budget.pareto_steps, 64);
+        // the builder rejects a degenerate sweep
+        let bad = parse(&["search", "--cap-gbitops", "1.5", "--pareto-steps", "1"]);
+        assert!(request_from_args(&bad, &Config::default()).is_err());
+    }
+
+    #[test]
+    fn help_documents_the_frontier() {
+        for needle in [
+            "FRONTIER",
+            "--frontier on|off",
+            "--frontier-steps",
+            "--frontier-tol",
+            "--pareto-steps",
+            "\"frontier_hit\"",
+            "\"frontier_gap\"",
+            "non-dominated",
+            "frontier_hits",
+        ] {
+            assert!(HELP.contains(needle), "HELP is missing {needle:?}");
+        }
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub struct SolveBudget {
     pub time_limit: Option<Duration>,
     /// Budget cells for the MCKP dynamic program's resource grid.
     pub dp_grid: usize,
+    /// Log-spaced λ points for the Pareto frontier sweep (`pareto`
+    /// solver and the fleet's precomputed frontier surfaces): more steps
+    /// trade solve/build time for a denser trade-off curve.
+    pub pareto_steps: usize,
     /// End-to-end cancellation: checked cooperatively inside the `bb`,
     /// `mckp`, and `lp-round` inner loops, and by single-flight
     /// followers waiting on a leader's solve.  Expiry mid-solve yields a
@@ -100,6 +104,7 @@ impl Default for SolveBudget {
             node_limit: 2_000_000,
             time_limit: None,
             dp_grid: 16_384,
+            pareto_steps: 200,
             cancel: CancelToken::none(),
         }
     }
@@ -184,6 +189,7 @@ impl SearchRequest {
             node_limit: self.budget.node_limit,
             time_limit_ns: self.budget.time_limit.map(|t| t.as_nanos()),
             dp_grid: self.budget.dp_grid,
+            pareto_steps: self.budget.pareto_steps,
         }
     }
 }
@@ -199,6 +205,7 @@ pub struct CanonicalKey {
     node_limit: usize,
     time_limit_ns: Option<u128>,
     dp_grid: usize,
+    pareto_steps: usize,
 }
 
 /// Builder for [`SearchRequest`].  All fields default sanely: α = 1,
@@ -290,6 +297,12 @@ impl SearchRequestBuilder {
         self
     }
 
+    /// Frontier sweep resolution (λ points) for the `pareto` solver.
+    pub fn pareto_steps(mut self, steps: usize) -> Self {
+        self.budget.pareto_steps = steps;
+        self
+    }
+
     pub fn budget(mut self, b: SolveBudget) -> Self {
         self.budget = b;
         self
@@ -313,6 +326,9 @@ impl SearchRequestBuilder {
         }
         if self.budget.dp_grid < 2 {
             bail!("dp_grid must be at least 2 cells");
+        }
+        if self.budget.pareto_steps < 2 {
+            bail!("pareto_steps must be at least 2");
         }
         Ok(SearchRequest {
             alpha: self.alpha,
@@ -346,6 +362,16 @@ mod tests {
         assert!(SearchRequest::builder().alpha(-1.0).build().is_err());
         assert!(SearchRequest::builder().node_limit(0).build().is_err());
         assert!(SearchRequest::builder().dp_grid(1).build().is_err());
+        assert!(SearchRequest::builder().pareto_steps(1).build().is_err());
+    }
+
+    #[test]
+    fn pareto_steps_default_and_key() {
+        let d = SearchRequest::builder().build().unwrap();
+        assert_eq!(d.budget.pareto_steps, 200);
+        let a = SearchRequest::builder().pareto_steps(50).build().unwrap();
+        assert_eq!(a.budget.pareto_steps, 50);
+        assert_ne!(a.canonical_key(), d.canonical_key());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use super::request::SolveBudget;
 use crate::search::lp::{Lp, LpOutcome};
 use crate::search::mckp::{solve_dp_stats, Resource};
 use crate::search::pareto::solve_pareto;
-use crate::search::{bb::solve_bb_stats, MpqProblem, Solution};
+use crate::search::{bb::solve_bb_stats, repair_to_feasible, MpqProblem, Solution};
 
 /// What a solver hands back besides the solution itself.
 #[derive(Debug, Clone)]
@@ -235,9 +235,6 @@ impl Solver for SimplexRelax {
 /// fallback chain it sits after the exact solvers.
 pub struct ParetoFrontier;
 
-/// Frontier sweep resolution (log-spaced λ points).
-const PARETO_STEPS: usize = 200;
-
 impl Solver for ParetoFrontier {
     fn name(&self) -> &'static str {
         "pareto"
@@ -247,11 +244,11 @@ impl Solver for ParetoFrontier {
         !p.layers.is_empty()
     }
 
-    fn solve_full(&self, p: &MpqProblem, _budget: &SolveBudget) -> Result<SolveOutcome> {
-        let solution = solve_pareto(p, PARETO_STEPS)?;
+    fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
+        let solution = solve_pareto(p, budget.pareto_steps)?;
         Ok(SolveOutcome {
             solution,
-            nodes: PARETO_STEPS as u64,
+            nodes: budget.pareto_steps as u64,
             lower_bound: None,
             proven_optimal: false,
             cancelled: false,
@@ -302,42 +299,6 @@ impl Solver for GreedyRepair {
             cancelled: false,
         })
     }
-}
-
-/// Shared repair: while a cap is violated, take the move with the best
-/// constraint-reduction per unit cost increase.  Returns None when no
-/// move helps (genuinely infeasible or stuck).
-/// TODO(next PR): `bb::greedy_incumbent` carries the same repair loop —
-/// fold both onto one `search::repair_to_feasible` helper.
-fn repair_to_feasible(p: &MpqProblem, choice: &[usize]) -> Option<Solution> {
-    let mut sol = p.evaluate(choice).ok()?;
-    let n = p.layers.len();
-    let mut guard = 0usize;
-    while !p.feasible(&sol) && guard < 10 * n + 10 {
-        guard += 1;
-        let need_b = p.bitops_cap.map_or(false, |cap| sol.bitops > cap);
-        let need_s = p.size_cap_bits.map_or(false, |cap| sol.size_bits > cap);
-        let mut best: Option<(usize, usize, f64)> = None;
-        for l in 0..n {
-            let cur = &p.layers[l][sol.choice[l]];
-            for (c, o) in p.layers[l].iter().enumerate() {
-                let db = cur.bitops as f64 - o.bitops as f64;
-                let ds = cur.size_bits as f64 - o.size_bits as f64;
-                let gain = (if need_b { db } else { 0.0 }) + (if need_s { ds } else { 0.0 });
-                if gain <= 0.0 {
-                    continue;
-                }
-                let ratio = (o.cost - cur.cost) / gain;
-                if best.map_or(true, |(_, _, r)| ratio < r) {
-                    best = Some((l, c, ratio));
-                }
-            }
-        }
-        let (l, c, _) = best?;
-        sol.choice[l] = c;
-        sol = p.evaluate(&sol.choice).ok()?;
-    }
-    p.feasible(&sol).then_some(sol)
 }
 
 #[cfg(test)]

@@ -7,7 +7,17 @@
 //! distinct model), and fans the batch out across a worker pool — so
 //! concurrent device queries share each model's policy cache, its
 //! single-flight table, and (in persistent mode) one long-lived set of
-//! workers.  Each solve answers **as soon as it finishes** through the
+//! workers.
+//!
+//! **Frontier first** (when [`ServeConfig::frontier`] is on): before the
+//! breaker, the policy cache, or any solver, an auto-solver cap query is
+//! answered from the model's precomputed certified Pareto surface
+//! ([`crate::frontier`]) when a vertex fits both caps within the
+//! certificate tolerance; misses run the normal engine path and feed the
+//! exact result back as a refining vertex.  `{"cmd":"frontier"}`
+//! inspects or force-builds a model's surfaces on the admin lane.
+//!
+//! Each solve answers **as soon as it finishes** through the
 //! [`BatchRouter`]: a 1.5 s solve no longer pins its batch siblings,
 //! only later lines of its *own* connection (per-connection responses
 //! still leave in arrival order, and the dispatcher waits for the whole
@@ -40,10 +50,13 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use super::protocol::{self, Request};
 use super::server::{ServeConfig, Shared, WorkItem};
-use super::{DeviceSpec, FleetSearcher};
-use crate::engine::{CancelToken, PANIC_REASON};
+use super::{DevicePolicy, DeviceSpec, FleetSearcher};
+use crate::engine::{CancelToken, SearchRequest, SolverPref, PANIC_REASON};
+use crate::frontier::{FrontierBuilder, FrontierIndex, SurfaceKey};
 use crate::kernels::{persistent_global, WorkerPool};
 use crate::registry::{ModelEntry, ModelRegistry};
 use crate::util::json::Json;
@@ -115,13 +128,11 @@ impl ServingCore {
             Request::Models => self.models_line(),
             Request::Load { model } => self.load_line(model),
             Request::Evict { model } => self.evict_line(model),
+            Request::Frontier { model } => self.frontier_line(model.as_deref()),
             Request::Solve { model, spec } => {
                 let name = model.as_deref().unwrap_or(&self.default_model);
                 match self.registry.get(name) {
-                    Ok(entry) => {
-                        let searcher = FleetSearcher::from_shared(entry.engine().clone());
-                        self.answer_solve(&searcher, spec, name, arrival)
-                    }
+                    Ok(entry) => self.answer_solve(&entry, spec, name, arrival),
                     Err(e) => protocol::error_line(&e),
                 }
             }
@@ -175,24 +186,67 @@ impl ServingCore {
         }
     }
 
-    /// Answer one solve slot end-to-end: arm the deadline token, consult
-    /// the breaker, run (or shed) the solve behind a panic firewall, and
-    /// account the outcome.  Always returns a response line — a solve
-    /// that reaches here gets exactly one answer, whatever fails.
+    /// Answer one solve slot end-to-end: arm the deadline token, try the
+    /// model's certified frontier surface, then consult the breaker, run
+    /// (or shed) the solve behind a panic firewall, and account the
+    /// outcome.  Always returns a response line — a solve that reaches
+    /// here gets exactly one answer, whatever fails.
     pub(crate) fn answer_solve(
         &self,
-        searcher: &FleetSearcher,
+        entry: &Arc<ModelEntry>,
         spec: &DeviceSpec,
         model: &str,
         arrival: Instant,
     ) -> String {
         let stats = &self.shared.stats;
+        let searcher = FleetSearcher::from_shared(entry.engine().clone());
         let mut spec = spec.clone();
         if let Some(rel) = spec.deadline.or(self.cfg.default_deadline) {
             // End-to-end: the deadline counts from the moment the mux
             // read the line, so queue wait and the coalesce window have
             // already been charged against it.
             spec.request.budget.cancel = CancelToken::with_deadline(arrival + rel);
+        }
+        // Frontier first: an auto-solver cap query can often be answered
+        // straight from the precomputed surface, without touching the
+        // breaker, the policy cache, or any solver.  A pinned solver
+        // bypasses the surface — the client asked for that solver's
+        // answer, not the cheapest certified one.
+        let mut frontier: Option<Arc<FrontierIndex>> = None;
+        if self.cfg.frontier
+            && matches!(spec.request.solver, SolverPref::Auto)
+            && (spec.request.bitops_cap.is_some() || spec.request.size_cap_bits.is_some())
+        {
+            match self.frontier_index(entry, &spec.request) {
+                Ok(idx) => {
+                    if let Some(hit) =
+                        idx.query(spec.request.bitops_cap, spec.request.size_cap_bits)
+                    {
+                        stats.frontier_hits.fetch_add(1, Ordering::Relaxed);
+                        let out = DevicePolicy {
+                            device: spec.name.clone(),
+                            policy: hit.policy,
+                            cost: hit.cost,
+                            bitops: hit.bitops,
+                            size_bits: hit.size_bits,
+                            solve_us: arrival.elapsed().as_micros(),
+                            solver: "frontier".into(),
+                            cache_hit: false,
+                            degraded: false,
+                            degraded_reason: None,
+                            frontier_hit: true,
+                            frontier_gap: Some(hit.gap),
+                            proven_optimal: hit.gap == 0.0,
+                        };
+                        return protocol::solve_response(&out, model).to_string();
+                    }
+                    stats.frontier_misses.fetch_add(1, Ordering::Relaxed);
+                    frontier = Some(idx);
+                }
+                // A surface we cannot build must never fail the solve —
+                // fall through to the ordinary engine path.
+                Err(e) => eprintln!("[fleet] frontier for model {model:?} unavailable: {e:#}"),
+            }
         }
         let result = match self.breaker_admit(model) {
             Admit::Shed => {
@@ -243,11 +297,96 @@ impl ServingCore {
             Ok(out) => {
                 if out.degraded {
                     stats.degraded.fetch_add(1, Ordering::Relaxed);
+                } else if let Some(idx) = &frontier {
+                    // Feed the clean answer back into the surface so the
+                    // next query at (or inside) these caps is a hit; only
+                    // a proven-optimal cost may also tighten the bound.
+                    stats.frontier_refines.fetch_add(1, Ordering::Relaxed);
+                    idx.refine(
+                        spec.request.bitops_cap,
+                        spec.request.size_cap_bits,
+                        out.policy.clone(),
+                        out.cost,
+                        out.bitops,
+                        out.size_bits,
+                        out.proven_optimal,
+                    );
                 }
                 protocol::solve_response(&out, model).to_string()
             }
             Err(e) => protocol::error_line(&e),
         }
+    }
+
+    /// The lazily built, single-flighted frontier index covering this
+    /// request's (α, weight-only) family.  Whichever call wins the build
+    /// race charges the surface's bytes against the registry budget.
+    fn frontier_index(
+        &self,
+        entry: &Arc<ModelEntry>,
+        req: &SearchRequest,
+    ) -> Result<Arc<FrontierIndex>> {
+        let key = SurfaceKey::new(req.alpha, req.weight_only);
+        let (idx, built) = entry.frontiers().get_or_build(key, || {
+            let problem = entry.engine().problem(req);
+            let surface = FrontierBuilder::new(self.cfg.frontier_steps).build(&problem)?;
+            Ok(FrontierIndex::new(surface, self.cfg.frontier_tol))
+        })?;
+        if built {
+            self.registry.account_frontier(entry.name(), idx.bytes());
+        }
+        Ok(idx)
+    }
+
+    /// `{"cmd":"frontier"}` — inspect a model's certified Pareto
+    /// surfaces, force-building the default-request surface (α = 1,
+    /// full MPQ) if none exists yet.  Works even when frontier-first
+    /// serving is off, so an operator can pre-warm or examine a surface
+    /// before flipping it on.
+    fn frontier_line(&self, model: Option<&str>) -> String {
+        let name = model.unwrap_or(&self.default_model);
+        let entry = match self.registry.get(name) {
+            Ok(entry) => entry,
+            Err(e) => return protocol::error_line(&e),
+        };
+        let req = match SearchRequest::builder().build() {
+            Ok(req) => req,
+            Err(e) => return protocol::error_line(&e),
+        };
+        if let Err(e) = self.frontier_index(&entry, &req) {
+            return protocol::error_line(&e);
+        }
+        let surfaces: Vec<Json> = entry
+            .frontiers()
+            .surfaces()
+            .iter()
+            .map(|(key, idx)| {
+                let st = idx.stats();
+                Json::obj(vec![
+                    ("alpha", Json::Num(key.alpha())),
+                    ("weight_only", Json::Bool(key.weight_only())),
+                    ("vertices", Json::from(st.vertices)),
+                    ("refined", Json::from(st.refined)),
+                    ("duals", Json::from(st.duals)),
+                    ("bounds", Json::from(st.bounds)),
+                    ("hits", Json::from(st.hits)),
+                    ("misses", Json::from(st.misses)),
+                    ("refines", Json::from(st.refines)),
+                    ("bytes", Json::from(st.bytes)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cmd", Json::from("frontier")),
+            ("model", Json::from(name)),
+            ("enabled", Json::Bool(self.cfg.frontier)),
+            ("steps", Json::from(self.cfg.frontier_steps)),
+            ("tolerance", Json::Num(self.cfg.frontier_tol)),
+            ("bytes", Json::from(entry.frontiers().bytes())),
+            ("surfaces", Json::Arr(surfaces)),
+        ])
+        .to_string()
     }
 
     /// Build the `{"cmd":"stats"}` response: serving counters, both
@@ -288,6 +427,9 @@ impl ServingCore {
             ("deadline_expired", Json::from(snap.deadline_expired)),
             ("degraded", Json::from(snap.degraded)),
             ("breaker_open", Json::from(snap.breaker_open)),
+            ("frontier_hits", Json::from(snap.frontier_hits)),
+            ("frontier_misses", Json::from(snap.frontier_misses)),
+            ("frontier_refines", Json::from(snap.frontier_refines)),
             ("cache_hits", Json::from(hits)),
             ("cache_misses", Json::from(misses)),
             ("cache_entries", Json::from(entries)),
@@ -312,6 +454,7 @@ impl ServingCore {
                 Json::obj(vec![
                     ("model", Json::from(m.model.as_str())),
                     ("bytes", Json::from(m.bytes)),
+                    ("frontier_bytes", Json::from(m.frontier_bytes)),
                     ("cache_hits", Json::from(m.cache.hits)),
                     ("cache_misses", Json::from(m.cache.misses)),
                     ("cache_entries", Json::from(m.cache.entries)),
@@ -493,10 +636,7 @@ impl Dispatcher {
             let line = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 match &entries[model] {
                     Err(line) => line.clone(),
-                    Ok(entry) => {
-                        let searcher = FleetSearcher::from_shared(entry.engine().clone());
-                        core.answer_solve(&searcher, spec, model, *arrival)
-                    }
+                    Ok(entry) => core.answer_solve(entry, spec, model, *arrival),
                 }
             }))
             .unwrap_or_else(|_| {

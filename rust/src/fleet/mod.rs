@@ -40,6 +40,18 @@
 //!   [`crate::registry::ModelEntry`] — lazy single-flighted loads,
 //!   LRU-by-bytes eviction against `--mem-budget-mb`, per-model byte
 //!   accounting in `{"cmd":"stats"}`.
+//! * **Frontier first** ([`crate::frontier`], when
+//!   [`ServeConfig::frontier`] is on): an auto-solver cap query is
+//!   answered from the model's precomputed certified Pareto surface
+//!   *before* the policy cache or any solver runs — O(1) per query by
+//!   construction, not by LRU luck.  A query whose certificate gap
+//!   exceeds [`ServeConfig::frontier_tol`] (or that no vertex satisfies)
+//!   falls through to the normal engine path, and the exact result is
+//!   inserted back as a refining vertex, so repeated cap pairs always
+//!   hit.  Surfaces build lazily (single-flighted), are byte-accounted
+//!   toward `--mem-budget-mb`, and evict with their model.  Lookup
+//!   order per solve: frontier surface → policy cache → single-flight
+//!   table → solver chain.
 //! * **Single-flight engine** (`engine::PolicyEngine`, one per model):
 //!   concurrent identical cold queries block on one in-progress solve and
 //!   share its outcome, so a stampede costs exactly one solver run.
@@ -65,26 +77,32 @@
 //! JSON per line, one response JSON per line.
 //!
 //! Solve request (any other key is rejected with an error naming it;
-//! `model` is optional and defaults to the server's seed model):
+//! `model` is optional and defaults to the server's seed model; dual-cap
+//! requests — both `cap_gbitops` *and* `size_cap_mb` — are first-class):
 //!   `{"name": "phone", "model": "resnet18", "cap_gbitops": 23.07,
 //!     "size_cap_mb": 8.0, "alpha": 3.0, "weight_only": false,
 //!     "solver": "auto", "node_limit": 2000000, "time_limit_ms": 500,
-//!     "deadline_ms": 250}`
+//!     "deadline_ms": 250, "pareto_steps": 200}`
 //!   (all optional except at least one cap)
 //! Solve response:
 //!   `{"ok": true, "model": "resnet18", "w_bits": [...], "a_bits": [...],
 //!     "bitops_g": ..., "size_mb": ..., "cost": ..., "solve_us": ...,
 //!     "solver": "bb", "cache_hit": false}`
+//!   plus, only on a frontier-surface answer:
+//!   `{"solver": "frontier", "frontier_hit": true, "frontier_gap": ...}`
 //!   plus, only on a degraded answer:
 //!   `{"degraded": true, "degraded_reason": "deadline expired ..."}`
 //! Operator introspection and registry control:
 //!   `{"cmd": "stats"}` → serving counters (`served`, `queue_depth`,
-//!     `admin_queue_depth`, `rejected`, `batches`, cache totals, ...)
+//!     `admin_queue_depth`, `rejected`, `batches`, cache totals,
+//!     `frontier_hits` / `frontier_misses` / `frontier_refines`, ...)
 //!     plus registry accounting (`models_resident`, `resident_bytes`,
 //!     `mem_budget_bytes`, `model_loads`, `model_evictions`, and a
 //!     per-model `models` array with bytes + cache counters)
 //!   `{"cmd": "models"}` → available + resident models
 //!   `{"cmd": "load", "model": "m"}` / `{"cmd": "evict", "model": "m"}`
+//!   `{"cmd": "frontier", "model": "m"}` → inspect (force-building if
+//!     absent) the model's Pareto surfaces; `model` optional
 
 pub mod conn;
 pub mod dispatch;
@@ -139,6 +157,15 @@ pub struct DevicePolicy {
     pub degraded: bool,
     /// Why the answer is degraded, when it is.
     pub degraded_reason: Option<String>,
+    /// True when a precomputed frontier surface answered (no solver, no
+    /// policy cache; `solver` reads `"frontier"`).
+    pub frontier_hit: bool,
+    /// `cost − certified_lower_bound` for a frontier answer.
+    pub frontier_gap: Option<f64>,
+    /// True when the solver certified optimality (clean exact solves) —
+    /// what lets the dispatcher feed the answer back as an exact
+    /// frontier bound point.
+    pub proven_optimal: bool,
 }
 
 /// Holds the one-time-trained importances behind a memoizing,
@@ -208,6 +235,9 @@ impl FleetSearcher {
             cache_hit: resp.cache_hit,
             degraded: out.stats.degraded,
             degraded_reason: out.stats.degraded_reason.clone(),
+            frontier_hit: false,
+            frontier_gap: None,
+            proven_optimal: out.stats.proven_optimal,
         })
     }
 
@@ -236,6 +266,9 @@ impl FleetSearcher {
             cache_hit: resp.cache_hit,
             degraded: out.stats.degraded,
             degraded_reason: out.stats.degraded_reason.clone(),
+            frontier_hit: false,
+            frontier_gap: None,
+            proven_optimal: out.stats.proven_optimal,
         })
     }
 

@@ -13,14 +13,19 @@
 //! * **Command**: `{"cmd": "stats"}` (serving-stack + registry
 //!   introspection), `{"cmd": "models"}` (available + resident models),
 //!   `{"cmd": "load", "model": "m"}` / `{"cmd": "evict", "model": "m"}`
-//!   (explicit registry control).  `load`/`evict` require the `"model"`
-//!   key; `stats`/`models` take none.  Unknown commands error.
+//!   (explicit registry control), `{"cmd": "frontier"}` (inspect or
+//!   force-build a model's precomputed Pareto surface; the `"model"` key
+//!   is optional and defaults to the server's default model).
+//!   `load`/`evict` require the `"model"` key; `stats`/`models` take
+//!   none.  Unknown commands error.
 //!
 //! Responses always carry `"ok"`; solve responses keep the exact PR 1
 //! field set (`device`, `w_bits`, `a_bits`, `cost`, `bitops_g`,
 //! `size_mb`, `solve_us`, `solver`, `cache_hit`) plus the `model` that
-//! answered.  Early backpressure rejections ([`busy_line`]) additionally
-//! carry `"busy": true` so pipelining clients can tell them from solve
+//! answered, and — only when a precomputed frontier surface answered —
+//! `"frontier_hit": true` with `"solver": "frontier"`.  Early
+//! backpressure rejections ([`busy_line`]) additionally carry
+//! `"busy": true` so pipelining clients can tell them from solve
 //! errors.
 
 use anyhow::{bail, Context, Result};
@@ -42,6 +47,7 @@ pub const KNOWN_FIELDS: &[&str] = &[
     "node_limit",
     "time_limit_ms",
     "deadline_ms",
+    "pareto_steps",
 ];
 
 /// A decoded protocol request.
@@ -58,6 +64,9 @@ pub enum Request {
     Load { model: String },
     /// `{"cmd": "evict", "model": "m"}` — drop a model from residency.
     Evict { model: String },
+    /// `{"cmd": "frontier"}` — inspect (force-building if absent) a
+    /// model's precomputed Pareto surface; `None` = the default model.
+    Frontier { model: Option<String> },
 }
 
 impl Request {
@@ -97,7 +106,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
             ("stats" | "models", Some(_)) => {
                 bail!("cmd {name:?} takes no \"model\" key")
             }
-            (other, _) => bail!("unknown cmd {other:?} (known: stats, models, load, evict)"),
+            ("frontier", model) => Ok(Request::Frontier { model }),
+            (other, _) => {
+                bail!("unknown cmd {other:?} (known: stats, models, load, evict, frontier)")
+            }
         };
     }
     let model = match req.opt("model") {
@@ -144,6 +156,9 @@ pub fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
     if let Some(v) = req.opt("time_limit_ms") {
         b = b.time_limit(std::time::Duration::from_millis(v.as_usize()? as u64));
     }
+    if let Some(v) = req.opt("pareto_steps") {
+        b = b.pareto_steps(v.as_usize()?);
+    }
     let deadline = match req.opt("deadline_ms") {
         Some(v) => {
             let ms = v.as_usize().context("\"deadline_ms\" must be a positive integer")?;
@@ -182,6 +197,12 @@ pub fn solve_response(out: &DevicePolicy, model: &str) -> Json {
         ("solver", Json::from(out.solver.as_str())),
         ("cache_hit", Json::Bool(out.cache_hit)),
     ];
+    if out.frontier_hit {
+        fields.push(("frontier_hit", Json::Bool(true)));
+        if let Some(gap) = out.frontier_gap {
+            fields.push(("frontier_gap", Json::Num(gap)));
+        }
+    }
     if out.degraded {
         fields.push(("degraded", Json::Bool(true)));
         if let Some(reason) = &out.degraded_reason {
@@ -257,6 +278,7 @@ fn cmd_name(req: &Request) -> &'static str {
         Request::Models => "models",
         Request::Load { .. } => "load",
         Request::Evict { .. } => "evict",
+        Request::Frontier { .. } => "frontier",
     }
 }
 
@@ -347,6 +369,31 @@ mod tests {
         // admin classification drives the fast lane
         assert!(parse_request(r#"{"cmd": "models"}"#).unwrap().is_admin());
         assert!(!parse_request(r#"{"cap_gbitops": 2.0}"#).unwrap().is_admin());
+    }
+
+    #[test]
+    fn frontier_cmd_parses_with_and_without_model() {
+        match parse_request(r#"{"cmd": "frontier"}"#).unwrap() {
+            Request::Frontier { model } => assert_eq!(model, None),
+            other => panic!("expected frontier, got {other:?}"),
+        }
+        match parse_request(r#"{"cmd": "frontier", "model": "m0"}"#).unwrap() {
+            Request::Frontier { model } => assert_eq!(model.as_deref(), Some("m0")),
+            other => panic!("expected frontier, got {other:?}"),
+        }
+        assert!(parse_request(r#"{"cmd": "frontier"}"#).unwrap().is_admin());
+        let err = parse_request(r#"{"cmd": "frontier", "alpha": 1.0}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("only the \"cmd\" key"), "{err:#}");
+    }
+
+    #[test]
+    fn pareto_steps_rides_the_wire() {
+        match parse_request(r#"{"cap_gbitops": 2.0, "pareto_steps": 64}"#).unwrap() {
+            Request::Solve { spec, .. } => assert_eq!(spec.request.budget.pareto_steps, 64),
+            other => panic!("expected solve, got {other:?}"),
+        }
+        // builder validation still applies on the wire path
+        assert!(parse_request(r#"{"cap_gbitops": 2.0, "pareto_steps": 1}"#).is_err());
     }
 
     #[test]

@@ -85,6 +85,18 @@ pub struct ServeConfig {
     /// How long an open breaker sheds before letting a half-open probe
     /// through.
     pub breaker_cooldown: Duration,
+    /// Consult each model's precomputed frontier surface before the
+    /// policy cache for auto-solver cap queries.  Off by default so
+    /// embedded/test servers opt in; `limpq serve` turns it on unless
+    /// `--frontier off`.
+    pub frontier: bool,
+    /// Log-spaced λ points per axis of the 2-D frontier sweep (plus the
+    /// λ = 0 lines); higher = denser surface, slower first build.
+    pub frontier_steps: usize,
+    /// Relative certificate tolerance for frontier hits: a surface
+    /// vertex is served only when `cost − lower_bound ≤ tol·cost`.
+    /// 0 demands an exact certificate (only refined cap pairs replay).
+    pub frontier_tol: f64,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +111,9 @@ impl Default for ServeConfig {
             drain: Duration::from_millis(250),
             breaker_threshold: 5,
             breaker_cooldown: Duration::from_secs(1),
+            frontier: false,
+            frontier_steps: 24,
+            frontier_tol: 0.05,
         }
     }
 }
@@ -122,6 +137,14 @@ pub struct ServerStats {
     pub degraded: AtomicUsize,
     /// Solves shed by an open per-model circuit breaker.
     pub breaker_open: AtomicUsize,
+    /// Solves answered straight from a frontier surface (no solver, no
+    /// policy cache).
+    pub frontier_hits: AtomicUsize,
+    /// Frontier consultations that fell through to an exact solve.
+    pub frontier_misses: AtomicUsize,
+    /// Exact-solve results inserted back into a surface as refining
+    /// vertices.
+    pub frontier_refines: AtomicUsize,
 }
 
 /// A point-in-time copy of [`ServerStats`] plus the queue depths.
@@ -151,6 +174,12 @@ pub struct StatsSnapshot {
     pub degraded: usize,
     /// Solves shed by an open per-model circuit breaker.
     pub breaker_open: usize,
+    /// Solves answered straight from a frontier surface.
+    pub frontier_hits: usize,
+    /// Frontier consultations that fell through to an exact solve.
+    pub frontier_misses: usize,
+    /// Exact-solve results inserted back as refining vertices.
+    pub frontier_refines: usize,
 }
 
 impl ServerStats {
@@ -169,6 +198,9 @@ impl ServerStats {
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
             breaker_open: self.breaker_open.load(Ordering::Relaxed),
+            frontier_hits: self.frontier_hits.load(Ordering::Relaxed),
+            frontier_misses: self.frontier_misses.load(Ordering::Relaxed),
+            frontier_refines: self.frontier_refines.load(Ordering::Relaxed),
         }
     }
 }
@@ -258,6 +290,11 @@ impl FleetServer {
         ensure!(cfg.max_queue >= 1, "max_queue must be >= 1");
         ensure!(cfg.max_inflight_per_conn >= 1, "max_inflight_per_conn must be >= 1");
         ensure!(cfg.breaker_threshold >= 1, "breaker_threshold must be >= 1");
+        ensure!(cfg.frontier_steps >= 2, "frontier_steps must be >= 2");
+        ensure!(
+            cfg.frontier_tol >= 0.0 && cfg.frontier_tol.is_finite(),
+            "frontier_tol must be a finite non-negative number"
+        );
         registry
             .get(default_model)
             .with_context(|| format!("load default model {default_model:?}"))?;

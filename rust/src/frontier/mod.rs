@@ -1,0 +1,749 @@
+//! Certified Pareto-frontier surfaces — precomputed multi-constraint
+//! serving (the fleet's O(1) hot path, by construction).
+//!
+//! The paper's efficiency pitch is that once layer-wise importances are
+//! learned, re-search per deployment target is nearly free.  At fleet
+//! scale most device queries are just points on one trade-off surface,
+//! so instead of a fresh MCKP solve per (bitops, size) cap pair we sweep
+//! the two-dimensional Lagrangian space **once** per model and serve
+//! every later query from the resulting surface:
+//!
+//! * [`FrontierBuilder`] generalizes the 1-D λ sweep of
+//!   [`crate::search::pareto`] to two multipliers (λ_bitops, λ_size).
+//!   Every swept dual point yields (a) a primal policy — the per-layer
+//!   penalized argmin — and (b) a dual value `g(λ)` that certifies a
+//!   lower bound for *any* cap pair: `LB(B,S) = g(λ) − λ_b·B − λ_s·S`.
+//!   The deduplicated, non-dominated policies become
+//!   [`FrontierVertex`]s; the dual values are kept as certificates.
+//! * [`FrontierIndex`] answers a constraint query by picking the
+//!   cheapest vertex fitting both caps and comparing its cost against
+//!   the best certificate: the answer is a **hit** only when the gap is
+//!   within a configurable relative tolerance, so a frontier answer is
+//!   never silently worse than `tolerance` × its own cost.  Anything
+//!   else is a miss — the caller runs an exact engine solve and feeds
+//!   the result back via [`FrontierIndex::refine`], which inserts the
+//!   policy as a refining vertex and (for proven-optimal solves) the
+//!   achieved cost as an exact bound point.  Repeats of a refined cap
+//!   pair therefore hit with gap 0.
+//! * [`FrontierSet`] holds one lazily-built, single-flighted index per
+//!   (α, weight_only) surface — the same publish/wait discipline as
+//!   registry model loads — and lives on
+//!   [`crate::registry::ModelEntry`], so surfaces are byte-accounted
+//!   toward `--mem-budget-mb` and evicted with their model.
+//!
+//! The fleet dispatcher ([`crate::fleet::dispatch`]) consults the
+//! frontier *before* the per-model policy cache; see the fleet module
+//! docs for the full lookup order and the `{"cmd":"frontier"}` admin
+//! command.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::quant::BitConfig;
+use crate::search::MpqProblem;
+
+/// One non-dominated point on a model's trade-off surface.
+#[derive(Debug, Clone)]
+pub struct FrontierVertex {
+    pub policy: BitConfig,
+    pub cost: f64,
+    pub bitops: u64,
+    pub size_bits: u64,
+    /// True when this vertex came from an exact engine solve fed back
+    /// through [`FrontierIndex::refine`] rather than the dual sweep.
+    pub refined: bool,
+}
+
+impl FrontierVertex {
+    /// `self` makes `other` redundant (no worse on every axis).
+    fn dominates_or_ties(&self, other: &FrontierVertex) -> bool {
+        self.cost <= other.cost
+            && self.bitops <= other.bitops
+            && self.size_bits <= other.size_bits
+    }
+}
+
+/// A swept dual point: `g` is the Lagrangian value
+/// Σ_l min_o (cost + λ_b·bitops + λ_s·size_bits), which lower-bounds the
+/// optimum of any cap pair via `g − λ_b·B − λ_s·S` (an axis with no cap
+/// only admits duals with λ = 0 on that axis).
+#[derive(Debug, Clone, Copy)]
+struct DualPoint {
+    lambda_b: f64,
+    lambda_s: f64,
+    g: f64,
+}
+
+/// An exact optimum recorded at specific caps: any query whose caps are
+/// componentwise at most these (missing cap = ∞) cannot do better.
+#[derive(Debug, Clone, Copy)]
+struct BoundPoint {
+    bitops_cap: Option<u64>,
+    size_cap_bits: Option<u64>,
+    cost: f64,
+}
+
+/// `query ≤ bound` on one cap axis, treating `None` as ∞.
+fn cap_le(query: Option<u64>, bound: Option<u64>) -> bool {
+    match (query, bound) {
+        (_, None) => true,
+        (None, Some(_)) => false,
+        (Some(q), Some(b)) => q <= b,
+    }
+}
+
+/// The certified surface for one (α, weight_only) problem family.
+#[derive(Debug, Clone)]
+pub struct FrontierSurface {
+    vertices: Vec<FrontierVertex>,
+    duals: Vec<DualPoint>,
+    bounds: Vec<BoundPoint>,
+    /// Σ per-layer max |cost| — the natural cost magnitude of the
+    /// problem, used only to absorb float noise in gap comparisons.
+    cost_scale: f64,
+}
+
+impl FrontierSurface {
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn n_refined(&self) -> usize {
+        self.vertices.iter().filter(|v| v.refined).count()
+    }
+
+    pub fn n_duals(&self) -> usize {
+        self.duals.len()
+    }
+
+    pub fn n_bounds(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn vertices(&self) -> &[FrontierVertex] {
+        &self.vertices
+    }
+
+    /// Best certified lower bound on the optimum under the given caps
+    /// (`NEG_INFINITY` when no certificate applies).
+    pub fn lower_bound(&self, bitops_cap: Option<u64>, size_cap_bits: Option<u64>) -> f64 {
+        let mut lb = f64::NEG_INFINITY;
+        for d in &self.duals {
+            if (bitops_cap.is_none() && d.lambda_b > 0.0)
+                || (size_cap_bits.is_none() && d.lambda_s > 0.0)
+            {
+                continue;
+            }
+            let mut v = d.g;
+            if let Some(cap) = bitops_cap {
+                v -= d.lambda_b * cap as f64;
+            }
+            if let Some(cap) = size_cap_bits {
+                v -= d.lambda_s * cap as f64;
+            }
+            lb = lb.max(v);
+        }
+        for b in &self.bounds {
+            if cap_le(bitops_cap, b.bitops_cap) && cap_le(size_cap_bits, b.size_cap_bits) {
+                lb = lb.max(b.cost);
+            }
+        }
+        lb
+    }
+
+    /// Cheapest vertex feasible under both caps, if any.  Ties prefer
+    /// refined (exact-solve) vertices, then tighter resource use, so a
+    /// refined cap pair replays the exact policy byte-for-byte.
+    pub fn best_vertex(
+        &self,
+        bitops_cap: Option<u64>,
+        size_cap_bits: Option<u64>,
+    ) -> Option<&FrontierVertex> {
+        self.vertices
+            .iter()
+            .filter(|v| {
+                bitops_cap.map_or(true, |c| v.bitops <= c)
+                    && size_cap_bits.map_or(true, |c| v.size_bits <= c)
+            })
+            .min_by(|x, y| {
+                x.cost
+                    .partial_cmp(&y.cost)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| x.refined.cmp(&y.refined).reverse())
+                    .then_with(|| x.bitops.cmp(&y.bitops))
+                    .then_with(|| x.size_bits.cmp(&y.size_bits))
+            })
+    }
+
+    /// Insert an exact-solve result as a refining vertex (dropped if an
+    /// existing vertex already dominates it) and, when the solve proved
+    /// optimality, an exact bound point at the query caps.  Returns an
+    /// estimate of the bytes added.
+    fn insert_refined(
+        &mut self,
+        vertex: FrontierVertex,
+        bitops_cap: Option<u64>,
+        size_cap_bits: Option<u64>,
+        exact: bool,
+    ) -> usize {
+        let mut added = 0usize;
+        // A swept vertex may tie the exact optimum on cost with a
+        // *different* policy; insert the refined vertex anyway (the
+        // query tie-break prefers refined) so a refined cap pair replays
+        // the exact solve's policy verbatim.  Only an existing refined
+        // vertex that is no worse everywhere makes this one redundant.
+        if !self.vertices.iter().any(|u| u.refined && u.dominates_or_ties(&vertex)) {
+            self.vertices.retain(|u| {
+                !(vertex.dominates_or_ties(u)
+                    && (vertex.cost < u.cost
+                        || vertex.bitops < u.bitops
+                        || vertex.size_bits < u.size_bits))
+            });
+            added += vertex_bytes(&vertex);
+            self.vertices.push(vertex.clone());
+        }
+        if exact {
+            let dup = self
+                .bounds
+                .iter_mut()
+                .find(|b| b.bitops_cap == bitops_cap && b.size_cap_bits == size_cap_bits);
+            match dup {
+                // Two exact optima at the same caps must agree; keep the
+                // tighter (larger) bound to shrug off float noise.
+                Some(b) => b.cost = b.cost.max(vertex.cost),
+                None => {
+                    self.bounds.push(BoundPoint { bitops_cap, size_cap_bits, cost: vertex.cost });
+                    added += std::mem::size_of::<BoundPoint>();
+                }
+            }
+        }
+        added
+    }
+}
+
+fn vertex_bytes(v: &FrontierVertex) -> usize {
+    96 + 2 * v.policy.w_bits.len()
+}
+
+fn surface_bytes(s: &FrontierSurface) -> usize {
+    256 + s.vertices.iter().map(vertex_bytes).sum::<usize>()
+        + s.duals.len() * std::mem::size_of::<DualPoint>()
+        + s.bounds.len() * std::mem::size_of::<BoundPoint>()
+}
+
+/// Sweeps the 2-D Lagrangian space of an [`MpqProblem`] into a
+/// [`FrontierSurface`] — the λ-grid generalization of
+/// [`crate::search::pareto::frontier`].
+#[derive(Debug, Clone, Copy)]
+pub struct FrontierBuilder {
+    /// Log-spaced multiplier points per axis (plus the λ = 0 line, which
+    /// certifies queries that leave that axis uncapped).
+    pub steps: usize,
+}
+
+impl FrontierBuilder {
+    pub fn new(steps: usize) -> FrontierBuilder {
+        FrontierBuilder { steps }
+    }
+
+    /// Build the certified surface.  The problem's own caps are ignored
+    /// — the surface covers every cap pair at once.
+    pub fn build(&self, p: &MpqProblem) -> Result<FrontierSurface> {
+        if self.steps < 2 {
+            bail!("frontier sweep needs at least 2 steps per axis");
+        }
+        if p.layers.is_empty() || p.layers.iter().any(|l| l.is_empty()) {
+            bail!("frontier sweep needs a non-empty problem");
+        }
+        let cost_scale: f64 = p
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|o| o.cost.abs()).fold(0.0, f64::max))
+            .sum::<f64>()
+            .max(1e-9);
+        let bitops_scale: f64 = p
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|o| o.bitops).max().unwrap_or(0) as f64)
+            .sum::<f64>()
+            .max(1.0);
+        let size_scale: f64 = p
+            .layers
+            .iter()
+            .map(|l| l.iter().map(|o| o.size_bits).max().unwrap_or(0) as f64)
+            .sum::<f64>()
+            .max(1.0);
+        let axis_b = lambda_axis(cost_scale / bitops_scale, self.steps);
+        let axis_s = lambda_axis(cost_scale / size_scale, self.steps);
+
+        let n = p.n_layers();
+        let mut duals = Vec::with_capacity(axis_b.len() * axis_s.len());
+        let mut seen: HashSet<Vec<usize>> = HashSet::new();
+        let mut candidates: Vec<FrontierVertex> = Vec::new();
+        for &lb in &axis_b {
+            for &ls in &axis_s {
+                let mut choice = vec![0usize; n];
+                let mut g = 0.0;
+                for (l, opts) in p.layers.iter().enumerate() {
+                    let mut best = 0usize;
+                    let mut best_v = f64::INFINITY;
+                    for (c, o) in opts.iter().enumerate() {
+                        let v = o.cost + lb * o.bitops as f64 + ls * o.size_bits as f64;
+                        if v < best_v {
+                            best_v = v;
+                            best = c;
+                        }
+                    }
+                    choice[l] = best;
+                    g += best_v;
+                }
+                duals.push(DualPoint { lambda_b: lb, lambda_s: ls, g });
+                if seen.insert(choice.clone()) {
+                    let sol = p.evaluate(&choice)?;
+                    candidates.push(FrontierVertex {
+                        policy: p.to_bit_config(&sol),
+                        cost: sol.cost,
+                        bitops: sol.bitops,
+                        size_bits: sol.size_bits,
+                        refined: false,
+                    });
+                }
+            }
+        }
+
+        // Drop dominated candidates (keep the first of exact ties).
+        let mut vertices: Vec<FrontierVertex> = Vec::new();
+        for v in candidates {
+            if vertices.iter().any(|u| u.dominates_or_ties(&v)) {
+                continue;
+            }
+            vertices.retain(|u| !v.dominates_or_ties(u));
+            vertices.push(v);
+        }
+        Ok(FrontierSurface { vertices, duals, bounds: Vec::new(), cost_scale })
+    }
+}
+
+/// `[0] ++ steps` log-spaced multipliers spanning 1e-4·unit ..= 1e4·unit
+/// (the same span [`crate::search::pareto`] sweeps in 1-D).
+fn lambda_axis(unit: f64, steps: usize) -> Vec<f64> {
+    let lo = 1e-4 * unit;
+    let hi = 1e4 * unit;
+    let mut axis = Vec::with_capacity(steps + 1);
+    axis.push(0.0);
+    for i in 0..steps {
+        let t = i as f64 / (steps - 1).max(1) as f64;
+        axis.push(lo * (hi / lo).powf(t));
+    }
+    axis
+}
+
+/// What a frontier answer carries back to the dispatcher.
+#[derive(Debug, Clone)]
+pub struct FrontierHit {
+    pub policy: BitConfig,
+    pub cost: f64,
+    pub bitops: u64,
+    pub size_bits: u64,
+    /// Certified `cost − lower_bound` for this query.
+    pub gap: f64,
+}
+
+/// Counter snapshot for `{"cmd":"frontier"}` / `{"cmd":"stats"}`.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontierStats {
+    pub vertices: usize,
+    pub refined: usize,
+    pub duals: usize,
+    pub bounds: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub refines: usize,
+    pub bytes: usize,
+}
+
+/// A queryable surface with hit/miss/refine accounting.
+#[derive(Debug)]
+pub struct FrontierIndex {
+    surface: RwLock<FrontierSurface>,
+    /// Relative certificate tolerance: a vertex is served only when
+    /// `cost − LB ≤ tolerance·|cost|` (plus float noise).  0 demands an
+    /// exact certificate.
+    tolerance: f64,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    refines: AtomicUsize,
+    bytes: AtomicUsize,
+}
+
+impl FrontierIndex {
+    pub fn new(surface: FrontierSurface, tolerance: f64) -> FrontierIndex {
+        let bytes = surface_bytes(&surface);
+        FrontierIndex {
+            surface: RwLock::new(surface),
+            tolerance,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            refines: AtomicUsize::new(0),
+            bytes: AtomicUsize::new(bytes),
+        }
+    }
+
+    pub fn tolerance(&self) -> f64 {
+        self.tolerance
+    }
+
+    /// Answer a cap query from the surface, or record a miss (no vertex
+    /// fits, or the certificate gap exceeds the tolerance) so the caller
+    /// falls back to an exact solve.
+    pub fn query(&self, bitops_cap: Option<u64>, size_cap_bits: Option<u64>) -> Option<FrontierHit> {
+        let hit = {
+            let surf = self.surface.read().unwrap();
+            surf.best_vertex(bitops_cap, size_cap_bits).and_then(|v| {
+                let lb = surf.lower_bound(bitops_cap, size_cap_bits);
+                let gap = if lb.is_finite() { (v.cost - lb).max(0.0) } else { f64::INFINITY };
+                let allowed = self.tolerance * v.cost.abs() + 1e-12 * surf.cost_scale;
+                (gap <= allowed).then(|| FrontierHit {
+                    policy: v.policy.clone(),
+                    cost: v.cost,
+                    bitops: v.bitops,
+                    size_bits: v.size_bits,
+                    gap,
+                })
+            })
+        };
+        match hit {
+            Some(h) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(h)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Feed an exact engine solve back into the surface.  `exact` marks
+    /// a proven-optimal solve, which additionally certifies a bound
+    /// point at the query caps (a heuristic incumbent only contributes
+    /// its vertex — its cost is an upper bound, never a certificate).
+    pub fn refine(
+        &self,
+        bitops_cap: Option<u64>,
+        size_cap_bits: Option<u64>,
+        policy: BitConfig,
+        cost: f64,
+        bitops: u64,
+        size_bits: u64,
+        exact: bool,
+    ) {
+        let vertex = FrontierVertex { policy, cost, bitops, size_bits, refined: true };
+        let added = {
+            let mut surf = self.surface.write().unwrap();
+            surf.insert_refined(vertex, bitops_cap, size_cap_bits, exact)
+        };
+        self.refines.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(added, Ordering::Relaxed);
+    }
+
+    /// Approximate resident bytes (build estimate + refinements).
+    pub fn bytes(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> FrontierStats {
+        let surf = self.surface.read().unwrap();
+        FrontierStats {
+            vertices: surf.n_vertices(),
+            refined: surf.n_refined(),
+            duals: surf.n_duals(),
+            bounds: surf.n_bounds(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            refines: self.refines.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Identifies one surface of a model: the problem family is fixed by
+/// (α, weight_only) — caps vary per query and live *on* the surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SurfaceKey {
+    alpha_bits: u64,
+    weight_only: bool,
+}
+
+impl SurfaceKey {
+    pub fn new(alpha: f64, weight_only: bool) -> SurfaceKey {
+        // Collapse -0.0 onto 0.0 so the two hash identically.
+        let alpha = if alpha == 0.0 { 0.0 } else { alpha };
+        SurfaceKey { alpha_bits: alpha.to_bits(), weight_only }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        f64::from_bits(self.alpha_bits)
+    }
+
+    pub fn weight_only(&self) -> bool {
+        self.weight_only
+    }
+}
+
+enum SlotState {
+    Building,
+    Ready(Arc<FrontierIndex>),
+}
+
+/// Per-model collection of lazily-built surfaces, single-flighted the
+/// same way the registry single-flights model loads: the first caller
+/// builds (lock released during the sweep), concurrent callers for the
+/// same key wait on the condvar and share the published index.  A
+/// failed or panicked build clears the slot so the next caller retries.
+#[derive(Default)]
+pub struct FrontierSet {
+    slots: Mutex<HashMap<SurfaceKey, SlotState>>,
+    ready: Condvar,
+}
+
+impl std::fmt::Debug for FrontierSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FrontierSet").finish_non_exhaustive()
+    }
+}
+
+impl FrontierSet {
+    pub fn new() -> FrontierSet {
+        FrontierSet::default()
+    }
+
+    /// The ready index for `key`, if one has been built.
+    pub fn get(&self, key: &SurfaceKey) -> Option<Arc<FrontierIndex>> {
+        match self.slots.lock().unwrap().get(key) {
+            Some(SlotState::Ready(idx)) => Some(idx.clone()),
+            _ => None,
+        }
+    }
+
+    /// Return the index for `key`, building it at most once across all
+    /// concurrent callers.  The second tuple element is true for the
+    /// caller that actually built (so it can byte-account the surface).
+    pub fn get_or_build(
+        &self,
+        key: SurfaceKey,
+        build: impl FnOnce() -> Result<FrontierIndex>,
+    ) -> Result<(Arc<FrontierIndex>, bool)> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            match slots.get(&key) {
+                Some(SlotState::Ready(idx)) => return Ok((idx.clone(), false)),
+                Some(SlotState::Building) => slots = self.ready.wait(slots).unwrap(),
+                None => {
+                    slots.insert(key, SlotState::Building);
+                    break;
+                }
+            }
+        }
+        drop(slots);
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(build))
+            .unwrap_or_else(|_| Err(anyhow!("frontier build panicked")));
+        let mut slots = self.slots.lock().unwrap();
+        match built {
+            Ok(idx) => {
+                let idx = Arc::new(idx);
+                slots.insert(key, SlotState::Ready(idx.clone()));
+                self.ready.notify_all();
+                Ok((idx, true))
+            }
+            Err(e) => {
+                slots.remove(&key);
+                self.ready.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Total approximate bytes across all ready surfaces.
+    pub fn bytes(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| match s {
+                SlotState::Ready(idx) => idx.bytes(),
+                SlotState::Building => 0,
+            })
+            .sum()
+    }
+
+    /// Snapshot of every ready surface, deterministically ordered.
+    pub fn surfaces(&self) -> Vec<(SurfaceKey, Arc<FrontierIndex>)> {
+        let mut out: Vec<(SurfaceKey, Arc<FrontierIndex>)> = self
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(k, s)| match s {
+                SlotState::Ready(idx) => Some((*k, idx.clone())),
+                SlotState::Building => None,
+            })
+            .collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    fn surface_for(p: &MpqProblem, steps: usize) -> FrontierSurface {
+        FrontierBuilder::new(steps).build(p).unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_input() {
+        assert!(FrontierBuilder::new(1).build(&MpqProblem::default()).is_err());
+        assert!(FrontierBuilder::new(8).build(&MpqProblem::default()).is_err());
+    }
+
+    #[test]
+    fn vertices_are_mutually_non_dominated() {
+        let mut rng = Rng::new(11);
+        let p = random_problem(&mut rng, 5, 4, 0.5);
+        let s = surface_for(&p, 16);
+        assert!(s.n_vertices() >= 2, "expected a non-trivial frontier");
+        for (i, a) in s.vertices().iter().enumerate() {
+            for (j, b) in s.vertices().iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !(a.dominates_or_ties(b)),
+                        "vertex {i} dominates vertex {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_brute_force() {
+        let mut rng = Rng::new(7);
+        for _ in 0..5 {
+            let p = random_problem(&mut rng, 4, 3, 0.4);
+            let s = surface_for(&p, 12);
+            let opt = p.brute_force().unwrap();
+            let lb = s.lower_bound(p.bitops_cap, None);
+            assert!(
+                lb <= opt.cost + 1e-9,
+                "dual bound {lb} above brute-force optimum {}",
+                opt.cost
+            );
+        }
+    }
+
+    #[test]
+    fn loose_tolerance_hits_and_answers_feasibly() {
+        let mut rng = Rng::new(3);
+        let p = random_problem(&mut rng, 5, 4, 0.6);
+        let idx = FrontierIndex::new(surface_for(&p, 24), 10.0);
+        let hit = idx.query(p.bitops_cap, None).expect("loose tolerance must hit");
+        assert!(hit.bitops <= p.bitops_cap.unwrap());
+        let opt = p.brute_force().unwrap();
+        assert!(hit.cost >= opt.cost - 1e-9, "frontier beat brute force");
+        assert_eq!(idx.stats().hits, 1);
+    }
+
+    #[test]
+    fn zero_tolerance_misses_then_refined_repeat_hits_exactly() {
+        let mut rng = Rng::new(19);
+        let p = random_problem(&mut rng, 4, 3, 0.5);
+        let idx = FrontierIndex::new(surface_for(&p, 8), 0.0);
+        let cap = p.bitops_cap;
+        // Dual certificates are rarely exactly tight → expect a miss.
+        if idx.query(cap, None).is_some() {
+            return; // grid happened to certify exactly; nothing to refine
+        }
+        let opt = p.brute_force().unwrap();
+        let policy = p.to_bit_config(&opt);
+        idx.refine(cap, None, policy.clone(), opt.cost, opt.bitops, opt.size_bits, true);
+        let hit = idx.query(cap, None).expect("refined cap pair must hit");
+        assert_eq!(hit.policy, policy);
+        assert_eq!(hit.cost, opt.cost);
+        assert_eq!(hit.gap, 0.0);
+        let st = idx.stats();
+        assert_eq!((st.hits, st.misses, st.refines, st.bounds), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn dual_cap_queries_respect_both_axes() {
+        let mut rng = Rng::new(23);
+        let p = random_problem(&mut rng, 5, 4, 0.7);
+        let idx = FrontierIndex::new(surface_for(&p, 16), 10.0);
+        // A size cap midway between the min and max size of the sweep.
+        let sizes: Vec<u64> = {
+            let min: u64 = p.layers.iter().map(|l| l.iter().map(|o| o.size_bits).min().unwrap()).sum();
+            let max: u64 = p.layers.iter().map(|l| l.iter().map(|o| o.size_bits).max().unwrap()).sum();
+            vec![min + (max - min) / 2]
+        };
+        let hit = idx.query(p.bitops_cap, Some(sizes[0]));
+        if let Some(h) = hit {
+            assert!(h.bitops <= p.bitops_cap.unwrap());
+            assert!(h.size_bits <= sizes[0]);
+        }
+        // Impossible caps must miss rather than serve an infeasible vertex.
+        assert!(idx.query(Some(0), Some(0)).is_none());
+    }
+
+    #[test]
+    fn surface_key_collapses_signed_zero() {
+        assert_eq!(SurfaceKey::new(0.0, false), SurfaceKey::new(-0.0, false));
+        assert_ne!(SurfaceKey::new(1.0, false), SurfaceKey::new(1.0, true));
+    }
+
+    #[test]
+    fn set_single_flights_concurrent_builds() {
+        let set = Arc::new(FrontierSet::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let mut rng = Rng::new(5);
+        let p = Arc::new(random_problem(&mut rng, 4, 3, 0.5));
+        let key = SurfaceKey::new(1.0, false);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (set, builds, p) = (set.clone(), builds.clone(), p.clone());
+                std::thread::spawn(move || {
+                    set.get_or_build(key, || {
+                        builds.fetch_add(1, Ordering::Relaxed);
+                        Ok(FrontierIndex::new(FrontierBuilder::new(8).build(&p)?, 0.1))
+                    })
+                    .unwrap()
+                    .1
+                })
+            })
+            .collect();
+        let built_flags: Vec<bool> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::Relaxed), 1, "build must run exactly once");
+        assert_eq!(built_flags.iter().filter(|b| **b).count(), 1);
+        assert!(set.bytes() > 0);
+        assert_eq!(set.surfaces().len(), 1);
+    }
+
+    #[test]
+    fn failed_build_clears_the_slot_for_retry() {
+        let set = FrontierSet::new();
+        let key = SurfaceKey::new(2.0, true);
+        assert!(set.get_or_build(key, || bail!("nope")).is_err());
+        assert!(set.get(&key).is_none());
+        let mut rng = Rng::new(9);
+        let p = random_problem(&mut rng, 3, 3, 0.5);
+        let (_, built) = set
+            .get_or_build(key, || Ok(FrontierIndex::new(FrontierBuilder::new(4).build(&p)?, 0.1)))
+            .unwrap();
+        assert!(built);
+    }
+}

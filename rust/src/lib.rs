@@ -42,6 +42,11 @@
 //! LRU-by-bytes eviction against `--mem-budget-mb`, per-model byte
 //! accounting in `{"cmd":"stats"}`.
 //!
+//! [`frontier`] precomputes the whole multi-constraint trade-off surface
+//! per model (a 2-D Lagrangian sweep with dual certificates); when
+//! enabled, the fleet dispatcher answers cap queries from the surface
+//! before ever reaching the policy cache or a solver.
+//!
 //! ## Compute: the [`kernels`] module
 //!
 //! All dense numeric work funnels through [`kernels`]: blocked GEMM over
@@ -56,6 +61,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod fleet;
+pub mod frontier;
 pub mod hessian;
 pub mod importance;
 pub mod kernels;

@@ -24,6 +24,15 @@
 //! last reference goes.  A model whose resident footprint alone exceeds
 //! the whole budget is a clean load error, never a livelock.
 //!
+//! Each entry also owns its [`crate::frontier::FrontierSet`]: the
+//! precomputed trade-off surfaces the fleet dispatcher consults *before*
+//! the per-model policy cache.  Surfaces are built lazily and
+//! single-flighted exactly like model loads, their (approximate) bytes
+//! are charged against the same `--mem-budget-mb` via
+//! [`ModelRegistry::account_frontier`], and they are evicted with the
+//! model (the set lives on the entry, so the last `Arc` holder frees
+//! it).
+//!
 //! Source loads are **retried** a bounded number of times with a short
 //! backoff ([`LOAD_RETRY_BACKOFF`]) before the leader reports failure —
 //! a file caught mid-rewrite or a transient I/O fault costs milliseconds,
@@ -45,6 +54,7 @@ pub use self::packed::{PackedLayer, PackedWeights};
 pub use self::source::{DirSource, ModelSource, StaticSource};
 
 use crate::engine::{CacheStats, PolicyEngine};
+use crate::frontier::FrontierSet;
 use crate::importance::IndicatorStore;
 use crate::models::ModelMeta;
 use crate::quant::int_infer::IntModel;
@@ -110,6 +120,8 @@ pub struct ModelEntry {
     flat: Option<Arc<Vec<f32>>>,
     packed: Option<Arc<PackedWeights>>,
     bytes: usize,
+    /// Lazily-built certified Pareto surfaces (frontier-first serving).
+    frontiers: FrontierSet,
 }
 
 impl ModelEntry {
@@ -132,6 +144,7 @@ impl ModelEntry {
             flat,
             packed,
             bytes: 0,
+            frontiers: FrontierSet::new(),
         };
         e.bytes = e.measure();
         Arc::new(e)
@@ -141,7 +154,15 @@ impl ModelEntry {
     /// solver-injection tests).  No weights or indicator store: policy
     /// serving only.
     pub fn from_engine(name: &str, engine: Arc<PolicyEngine>) -> Arc<ModelEntry> {
-        let mut e = ModelEntry { name: name.to_string(), engine, store: None, flat: None, packed: None, bytes: 0 };
+        let mut e = ModelEntry {
+            name: name.to_string(),
+            engine,
+            store: None,
+            flat: None,
+            packed: None,
+            bytes: 0,
+            frontiers: FrontierSet::new(),
+        };
         e.bytes = e.measure();
         Arc::new(e)
     }
@@ -173,6 +194,13 @@ impl ModelEntry {
     /// The model's isolated policy engine.
     pub fn engine(&self) -> &Arc<PolicyEngine> {
         &self.engine
+    }
+
+    /// The model's precomputed frontier surfaces (built lazily by the
+    /// fleet dispatcher; byte-accounted via
+    /// [`ModelRegistry::account_frontier`]).
+    pub fn frontiers(&self) -> &FrontierSet {
+        &self.frontiers
     }
 
     /// Resident footprint in bytes (params + packed weights +
@@ -219,6 +247,8 @@ impl ModelEntry {
 pub struct ModelStat {
     pub model: String,
     pub bytes: usize,
+    /// Approximate bytes of built frontier surfaces (on top of `bytes`).
+    pub frontier_bytes: usize,
     pub cache: CacheStats,
 }
 
@@ -288,6 +318,9 @@ struct Resident {
     entry: Arc<ModelEntry>,
     /// Monotonic recency stamp; smallest = least recently used.
     stamp: u64,
+    /// Approximate bytes of the entry's built frontier surfaces, charged
+    /// against the memory budget on top of `entry.bytes()`.
+    frontier_bytes: usize,
 }
 
 struct Inner {
@@ -436,11 +469,36 @@ impl ModelRegistry {
         let mut inner = self.inner.lock().unwrap();
         match inner.entries.remove(model) {
             Some(r) => {
-                inner.resident_bytes -= r.entry.bytes();
+                inner.resident_bytes -= r.entry.bytes() + r.frontier_bytes;
                 self.evictions.fetch_add(1, Ordering::Relaxed);
                 true
             }
             None => false,
+        }
+    }
+
+    /// Charge a freshly built (or refined) frontier surface for `model`
+    /// against the memory budget, evicting *other* least-recently-used
+    /// models if the total now overflows.  No-op when the model is no
+    /// longer resident (its surfaces die with the entry).
+    pub fn account_frontier(&self, model: &str, bytes: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(r) = inner.entries.get_mut(model) else { return };
+        r.frontier_bytes += bytes;
+        inner.resident_bytes += bytes;
+        if let Some(budget) = self.cfg.mem_budget {
+            while inner.resident_bytes > budget && inner.entries.len() > 1 {
+                let victim = inner
+                    .entries
+                    .iter()
+                    .filter(|(name, _)| name.as_str() != model)
+                    .min_by_key(|(_, r)| r.stamp)
+                    .map(|(name, _)| name.clone());
+                let Some(name) = victim else { break };
+                let r = inner.entries.remove(&name).expect("victim resident");
+                inner.resident_bytes -= r.entry.bytes() + r.frontier_bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
@@ -461,6 +519,7 @@ impl ModelRegistry {
                     ModelStat {
                         model: name.clone(),
                         bytes: r.entry.bytes(),
+                        frontier_bytes: r.frontier_bytes,
                         cache: r.entry.cache_stats(),
                     },
                 )
@@ -507,17 +566,18 @@ impl ModelRegistry {
                     .map(|(name, _)| name.clone());
                 let Some(name) = victim else { break };
                 let r = inner.entries.remove(&name).expect("victim resident");
-                inner.resident_bytes -= r.entry.bytes();
+                inner.resident_bytes -= r.entry.bytes() + r.frontier_bytes;
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
         inner.clock += 1;
         let stamp = inner.clock;
         inner.resident_bytes += entry.bytes();
-        if let Some(old) = inner.entries.insert(model.to_string(), Resident { entry, stamp }) {
+        let fresh = Resident { entry, stamp, frontier_bytes: 0 };
+        if let Some(old) = inner.entries.insert(model.to_string(), fresh) {
             // A racing explicit load replaced an existing entry; release
             // the old one's accounting.
-            inner.resident_bytes -= old.entry.bytes();
+            inner.resident_bytes -= old.entry.bytes() + old.frontier_bytes;
         }
         Ok(())
     }
@@ -791,5 +851,37 @@ mod tests {
         let without = ModelEntry::build("wo", assets(6, 1), &cfg);
         assert!(without.flat().is_none() && without.packed().is_none());
         assert!(without.bytes() < with.bytes());
+    }
+
+    #[test]
+    fn frontier_bytes_count_against_the_budget_and_evict_with_the_model() {
+        let probe = ModelEntry::build("probe", assets(6, 1), &RegistryConfig::default());
+        let cfg = RegistryConfig {
+            mem_budget: Some(2 * probe.bytes() + 64),
+            ..RegistryConfig::default()
+        };
+        let loads = Arc::new(AtomicUsize::new(0));
+        let reg =
+            ModelRegistry::new(Box::new(counting_source(&["a", "b"], 6, loads)), cfg);
+        reg.get("a").unwrap();
+        reg.get("b").unwrap();
+        let base = reg.stats().resident_bytes;
+        reg.account_frontier("b", 1000);
+        let s = reg.stats();
+        assert_eq!(s.resident_bytes, base + 1000);
+        assert_eq!(
+            s.resident_bytes,
+            s.models.iter().map(|m| m.bytes + m.frontier_bytes).sum::<usize>()
+        );
+        // Charging a huge surface to "b" must evict "a", never "b" itself.
+        reg.account_frontier("b", 3 * probe.bytes());
+        assert!(reg.resident("b") && !reg.resident("a"));
+        assert_eq!(reg.stats().evictions, 1);
+        // Evicting "b" releases model + frontier bytes together.
+        assert!(reg.evict("b"));
+        assert_eq!(reg.stats().resident_bytes, 0);
+        // Unknown / no-longer-resident models are a clean no-op.
+        reg.account_frontier("ghost", 123);
+        assert_eq!(reg.stats().resident_bytes, 0);
     }
 }

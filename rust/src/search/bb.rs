@@ -56,7 +56,7 @@ pub fn solve_bb_stats(
     if p.layers.is_empty() {
         return Ok((
             Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 },
-            BbStats { nodes: 0, root_bound: 0.0, proven_optimal: true },
+            BbStats { nodes: 0, root_bound: 0.0, proven_optimal: true, cancelled: false },
         ));
     }
     for (l, opts) in p.layers.iter().enumerate() {
@@ -294,36 +294,7 @@ fn greedy_incumbent(p: &MpqProblem, order: &[usize], lambda: f64, mu: f64) -> Op
             .unwrap();
         choice[l] = c;
     }
-    let mut sol = p.evaluate(&choice).ok()?;
-    // Repair loop: while infeasible, move the layer with the best
-    // Δconstraint/Δcost trade toward its min-bitops/min-size option.
-    let mut guard = 0;
-    while !p.feasible(&sol) && guard < 10 * n {
-        guard += 1;
-        let mut best: Option<(usize, usize, f64)> = None;
-        for l in 0..n {
-            for (c, o) in p.layers[l].iter().enumerate() {
-                let cur = &p.layers[l][sol.choice[l]];
-                let db = cur.bitops as f64 - o.bitops as f64;
-                let ds = cur.size_bits as f64 - o.size_bits as f64;
-                let need_b = p.bitops_cap.map_or(false, |cap| sol.bitops > cap);
-                let need_s = p.size_cap_bits.map_or(false, |cap| sol.size_bits > cap);
-                let gain = (if need_b { db } else { 0.0 }) + (if need_s { ds } else { 0.0 });
-                if gain <= 0.0 {
-                    continue;
-                }
-                let dcost = o.cost - cur.cost;
-                let ratio = dcost / gain;
-                if best.map_or(true, |(_, _, r)| ratio < r) {
-                    best = Some((l, c, ratio));
-                }
-            }
-        }
-        let (l, c, _) = best?;
-        sol.choice[l] = c;
-        sol = p.evaluate(&sol.choice).ok()?;
-    }
-    p.feasible(&sol).then_some(sol)
+    super::repair_to_feasible(p, &choice)
 }
 
 #[cfg(test)]

@@ -178,6 +178,45 @@ impl MpqProblem {
     }
 }
 
+/// Repair a per-layer choice toward feasibility: while a cap is
+/// violated, flip the single (layer, option) with the best
+/// Δconstraint/Δcost trade, i.e. the cheapest objective increase per
+/// unit of violated-constraint reduction.  Shared by
+/// `engine::GreedyRepair`, `engine::SimplexRelax` rounding, and
+/// [`bb::greedy_incumbent`]'s root incumbent (each used to carry its own
+/// copy of this loop).  Returns `None` when no sequence of single-option
+/// moves reaches feasibility.
+pub fn repair_to_feasible(p: &MpqProblem, choice: &[usize]) -> Option<Solution> {
+    let mut sol = p.evaluate(choice).ok()?;
+    let n = p.n_layers();
+    let mut guard = 0;
+    while !p.feasible(&sol) && guard < 10 * n + 10 {
+        guard += 1;
+        let need_b = p.bitops_cap.map_or(false, |cap| sol.bitops > cap);
+        let need_s = p.size_cap_bits.map_or(false, |cap| sol.size_bits > cap);
+        let mut best: Option<(usize, usize, f64)> = None;
+        for l in 0..n {
+            let cur = &p.layers[l][sol.choice[l]];
+            for (c, o) in p.layers[l].iter().enumerate() {
+                let db = cur.bitops as f64 - o.bitops as f64;
+                let ds = cur.size_bits as f64 - o.size_bits as f64;
+                let gain = (if need_b { db } else { 0.0 }) + (if need_s { ds } else { 0.0 });
+                if gain <= 0.0 {
+                    continue;
+                }
+                let ratio = (o.cost - cur.cost) / gain;
+                if best.map_or(true, |(_, _, r)| ratio < r) {
+                    best = Some((l, c, ratio));
+                }
+            }
+        }
+        let (l, c, _) = best?;
+        sol.choice[l] = c;
+        sol = p.evaluate(&sol.choice).ok()?;
+    }
+    p.feasible(&sol).then_some(sol)
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;

@@ -1,0 +1,247 @@
+//! Integration tests for the certified Pareto-frontier serving hot
+//! path: precomputed multi-constraint surfaces answering fleet cap
+//! queries before the policy cache or any solver runs.
+//!
+//! Artifact-free (synthetic model meta): always runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use limpq::engine::{
+    BranchAndBound, PolicyEngine, SolveBudget, SolveOutcome, Solver, SolverRegistry,
+};
+use limpq::fleet::{query, FleetSearcher, FleetServer, ServeConfig};
+use limpq::importance::IndicatorStore;
+use limpq::models::{synthetic_meta, ModelMeta};
+use limpq::quant::cost::{model_size_bytes, uniform_bitops};
+use limpq::quant::BitConfig;
+use limpq::search::MpqProblem;
+use limpq::util::json::Json;
+
+fn meta6() -> ModelMeta {
+    synthetic_meta(6, |i| 100_000 * (i as u64 + 1))
+}
+
+fn searcher() -> FleetSearcher {
+    let meta = meta6();
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    FleetSearcher::new(meta, imp)
+}
+
+/// A size cap (in the wire's MB unit) that the uniform-pinned w/a
+/// config satisfies, with float-rounding slack.
+fn size_cap_mb(meta: &ModelMeta, w: u8, a: u8) -> f64 {
+    (model_size_bytes(meta, &BitConfig::uniform_pinned(meta, w, a)) + 16) as f64 / 1e6
+}
+
+/// Delegates to branch-and-bound but counts every invocation, so a test
+/// can prove a query was answered without running any solver.
+struct CountingSolver(&'static AtomicUsize);
+
+impl Solver for CountingSolver {
+    fn name(&self) -> &'static str {
+        "counted-bb"
+    }
+    fn supports(&self, p: &MpqProblem) -> bool {
+        BranchAndBound.supports(p)
+    }
+    fn solve_full(&self, p: &MpqProblem, b: &SolveBudget) -> anyhow::Result<SolveOutcome> {
+        self.0.fetch_add(1, Ordering::SeqCst);
+        BranchAndBound.solve_full(p, b)
+    }
+}
+
+/// A server whose only solver counts its calls.
+fn counting_server(cfg: ServeConfig) -> (FleetServer, &'static AtomicUsize) {
+    let meta = meta6();
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    let count: &'static AtomicUsize = Box::leak(Box::new(AtomicUsize::new(0)));
+    let registry: &'static SolverRegistry = Box::leak(Box::new(SolverRegistry::with_solvers(
+        vec![Arc::new(CountingSolver(count))],
+    )));
+    let engine = PolicyEngine::with_registry(meta, imp, 64, registry);
+    let server =
+        FleetServer::spawn_with(FleetSearcher::from_engine(engine), "127.0.0.1:0", cfg).unwrap();
+    (server, count)
+}
+
+/// A solve may cap BitOps and size simultaneously, and the answer
+/// honors both.  Frontier-first serving stays off by default for
+/// embedded servers, so the response carries no frontier fields and the
+/// counters stay zero.
+#[test]
+fn dual_cap_solve_roundtrips_over_the_wire() {
+    let s = searcher();
+    let meta = s.meta().clone();
+    let cap_g = uniform_bitops(&meta, 4, 4) as f64 / 1e9;
+    let cap_mb = size_cap_mb(&meta, 4, 4);
+    let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
+    let req = Json::obj(vec![
+        ("name", Json::from("edge")),
+        ("cap_gbitops", Json::Num(cap_g)),
+        ("size_cap_mb", Json::Num(cap_mb)),
+    ]);
+    let resp = query(&server.addr, &req).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("device").unwrap().as_str().unwrap(), "edge");
+    assert!(resp.get("bitops_g").unwrap().as_f64().unwrap() <= cap_g + 1e-9, "{resp}");
+    assert!(resp.get("size_mb").unwrap().as_f64().unwrap() <= cap_mb + 1e-9, "{resp}");
+    assert!(resp.opt("frontier_hit").is_none(), "{resp}");
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    assert_eq!(stats.get("frontier_hits").unwrap().as_usize().unwrap(), 0, "{stats}");
+    assert_eq!(stats.get("frontier_misses").unwrap().as_usize().unwrap(), 0, "{stats}");
+    server.shutdown();
+}
+
+/// The acceptance tentpole: with a warm surface and a loose tolerance,
+/// repeated *distinct*-cap queries — including a dual-cap one — are all
+/// answered from the frontier without ever invoking a solver, each
+/// answer is feasible, and the stats counters show it.
+#[test]
+fn warm_frontier_answers_distinct_caps_without_any_solver() {
+    let (server, count) = counting_server(ServeConfig {
+        frontier: true,
+        frontier_tol: 10.0,
+        ..Default::default()
+    });
+    let meta = meta6();
+    let base = uniform_bitops(&meta, 4, 4);
+    for i in 0..5u64 {
+        let cap_g = (base + 40_000 * i) as f64 / 1e9;
+        let req = Json::obj(vec![
+            ("name", Json::Str(format!("d{i}"))),
+            ("cap_gbitops", Json::Num(cap_g)),
+        ]);
+        let resp = query(&server.addr, &req).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        assert_eq!(resp.get("solver").unwrap().as_str().unwrap(), "frontier", "{resp}");
+        assert!(resp.get("frontier_hit").unwrap().as_bool().unwrap(), "{resp}");
+        assert!(resp.get("frontier_gap").unwrap().as_f64().unwrap() >= 0.0, "{resp}");
+        assert!(resp.get("bitops_g").unwrap().as_f64().unwrap() <= cap_g + 1e-9, "{resp}");
+        assert!(!resp.get("cache_hit").unwrap().as_bool().unwrap(), "{resp}");
+    }
+    // A dual-cap query rides the same surface.
+    let dual = query(
+        &server.addr,
+        &Json::obj(vec![
+            ("cap_gbitops", Json::Num(base as f64 / 1e9)),
+            ("size_cap_mb", Json::Num(size_cap_mb(&meta, 4, 4))),
+        ]),
+    )
+    .unwrap();
+    assert!(dual.get("ok").unwrap().as_bool().unwrap(), "{dual}");
+    assert!(dual.get("frontier_hit").unwrap().as_bool().unwrap(), "{dual}");
+    assert_eq!(count.load(Ordering::SeqCst), 0, "a warm frontier must never invoke a solver");
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    assert_eq!(stats.get("frontier_hits").unwrap().as_usize().unwrap(), 6, "{stats}");
+    assert_eq!(stats.get("frontier_misses").unwrap().as_usize().unwrap(), 0, "{stats}");
+    assert_eq!(stats.get("cache_misses").unwrap().as_usize().unwrap(), 0, "{stats}");
+    server.shutdown();
+}
+
+/// At zero tolerance only provably optimal answers may come off the
+/// surface: an uncertified query falls back to the exact engine path,
+/// the exact result refines the surface, and the *same* caps queried
+/// again replay the exact policy byte-identically as a certified
+/// frontier hit — without re-solving.
+#[test]
+fn zero_tolerance_falls_back_then_replays_byte_identically() {
+    let (server, count) = counting_server(ServeConfig {
+        frontier: true,
+        frontier_tol: 0.0,
+        ..Default::default()
+    });
+    let meta = meta6();
+    let cap_g = uniform_bitops(&meta, 4, 4) as f64 / 1e9;
+    let req = Json::obj(vec![("cap_gbitops", Json::Num(cap_g))]);
+    let cold = query(&server.addr, &req).unwrap();
+    assert!(cold.get("ok").unwrap().as_bool().unwrap(), "{cold}");
+    let cold_solves = count.load(Ordering::SeqCst);
+    let cold_was_hit = cold.opt("frontier_hit").is_some();
+    if cold_was_hit {
+        // The sweep grid happened to certify these caps exactly.
+        assert_eq!(cold_solves, 0, "{cold}");
+    } else {
+        // Gap over tolerance: the real solver ran, and its exact answer
+        // was folded back into the surface.
+        assert_eq!(cold.get("solver").unwrap().as_str().unwrap(), "counted-bb", "{cold}");
+        assert_eq!(cold_solves, 1);
+        let stats =
+            query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+        assert_eq!(stats.get("frontier_misses").unwrap().as_usize().unwrap(), 1, "{stats}");
+        assert_eq!(stats.get("frontier_refines").unwrap().as_usize().unwrap(), 1, "{stats}");
+    }
+
+    let warm = query(&server.addr, &req).unwrap();
+    assert!(warm.get("ok").unwrap().as_bool().unwrap(), "{warm}");
+    assert!(warm.get("frontier_hit").unwrap().as_bool().unwrap(), "{warm}");
+    if !cold_was_hit {
+        // The refined bound point pins the gap to exactly zero.
+        assert_eq!(warm.get("frontier_gap").unwrap().as_f64().unwrap(), 0.0, "{warm}");
+    }
+    assert_eq!(
+        count.load(Ordering::SeqCst),
+        cold_solves,
+        "the replay must not invoke a solver"
+    );
+    // Byte-identical policy payload, cold solve vs frontier replay.
+    let payload = |r: &Json| {
+        format!(
+            "{}|{}|{}|{}|{}",
+            r.get("w_bits").unwrap(),
+            r.get("a_bits").unwrap(),
+            r.get("cost").unwrap(),
+            r.get("bitops_g").unwrap(),
+            r.get("size_mb").unwrap()
+        )
+    };
+    assert_eq!(payload(&cold), payload(&warm));
+    server.shutdown();
+}
+
+/// `{"cmd": "frontier"}` force-builds the model's default surface and
+/// reports it, its bytes count against the registry's accounting, and a
+/// pinned-solver request bypasses the surface entirely.
+#[test]
+fn frontier_admin_cmd_reports_surfaces_and_pinned_solvers_bypass() {
+    let s = searcher();
+    let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+    let server = FleetServer::spawn_with(
+        s,
+        "127.0.0.1:0",
+        ServeConfig { frontier: true, frontier_tol: 10.0, ..Default::default() },
+    )
+    .unwrap();
+    let resp = query(&server.addr, &Json::obj(vec![("cmd", Json::from("frontier"))])).unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(resp.get("cmd").unwrap().as_str().unwrap(), "frontier");
+    assert!(resp.get("enabled").unwrap().as_bool().unwrap(), "{resp}");
+    assert!(resp.get("bytes").unwrap().as_usize().unwrap() > 0, "{resp}");
+    let surfaces = resp.get("surfaces").unwrap().as_arr().unwrap();
+    assert_eq!(surfaces.len(), 1, "{resp}");
+    assert_eq!(surfaces[0].get("alpha").unwrap().as_f64().unwrap(), 1.0);
+    assert!(surfaces[0].get("vertices").unwrap().as_usize().unwrap() >= 1, "{resp}");
+    assert_eq!(surfaces[0].get("refined").unwrap().as_usize().unwrap(), 0, "{resp}");
+
+    // The surface bytes show up in per-model registry accounting.
+    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+    let models = stats.get("models").unwrap().as_arr().unwrap();
+    assert!(
+        models.iter().any(|m| m.get("frontier_bytes").unwrap().as_usize().unwrap() > 0),
+        "{stats}"
+    );
+
+    // Pinning a solver asks for *that solver's* answer: no frontier.
+    let pinned = query(
+        &server.addr,
+        &Json::obj(vec![
+            ("cap_gbitops", Json::Num(cap_g)),
+            ("solver", Json::from("bb")),
+        ]),
+    )
+    .unwrap();
+    assert!(pinned.get("ok").unwrap().as_bool().unwrap(), "{pinned}");
+    assert_eq!(pinned.get("solver").unwrap().as_str().unwrap(), "bb", "{pinned}");
+    assert!(pinned.opt("frontier_hit").is_none(), "{pinned}");
+    server.shutdown();
+}

@@ -42,6 +42,12 @@ cargo test -q
 echo "==> cargo test -q --test fault_tolerance"
 cargo test -q --test fault_tolerance
 
+# The frontier serving hot path, likewise by name: a certified-surface
+# regression (wrong policy, solver invoked on a warm hit, broken
+# accounting) must be unmistakable in CI logs.
+echo "==> cargo test -q --test frontier"
+cargo test -q --test frontier
+
 echo "==> cargo fmt --check"
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
