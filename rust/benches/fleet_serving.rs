@@ -11,6 +11,8 @@
 //! distinct-cap auto-solver queries with the certified Pareto surface
 //! on (every answer a frontier hit, no solver) vs off (every answer a
 //! cold exact solve) — the hot-path speedup the frontier subsystem buys.
+//! Where epoll is available, a `fleet_epoll` / `fleet_sweep` tier runs
+//! the same warm volleys through both readiness backends.
 //!
 //! Run: cargo bench --bench fleet_serving [-- --json BENCH_fleet.json]
 //!
@@ -27,7 +29,7 @@ use std::time::Duration;
 
 use limpq::engine::{BranchAndBound, PolicyEngine};
 use limpq::fleet::faults::{FaultPlan, FaultySolver};
-use limpq::fleet::{FleetSearcher, FleetServer, ServeConfig};
+use limpq::fleet::{FleetSearcher, FleetServer, PollBackend, ServeConfig};
 use limpq::importance::IndicatorStore;
 use limpq::kernels::WorkerPool;
 use limpq::models::synthetic_meta;
@@ -392,6 +394,44 @@ fn main() {
         );
         records.push(record("fleet_faults", &format!("clients={clients}"), threads, &stats, queries));
         server.shutdown();
+    }
+
+    // Poll-backend tier: identical warm volleys through the epoll mux
+    // and the portable sweep mux, so the readiness backends' serving
+    // overhead is directly comparable (the op name carries the backend;
+    // the tier only runs where epoll is available).
+    if PollBackend::Epoll.available() {
+        for (op, poll) in [("fleet_epoll", PollBackend::Epoll), ("fleet_sweep", PollBackend::Sweep)]
+        {
+            let meta = synthetic_meta(8, |i| 50_000 * (i as u64 + 1));
+            let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+            let server = FleetServer::spawn_with(
+                FleetSearcher::new(meta, imp),
+                "127.0.0.1:0",
+                ServeConfig { poll, ..Default::default() },
+            )
+            .expect("spawn poll-tier server");
+            let addr = server.addr;
+            let clients = 8usize;
+            let counter = AtomicU64::new(0);
+            let queries = (clients * per_client) as f64;
+            // Unmeasured settle pass primes the policy cache.
+            volley(addr, clients, per_client, true, base, &counter);
+            let stats = bench.run(&format!("{op}_c{clients}x{per_client}"), || {
+                volley(addr, clients, per_client, true, base, &counter);
+            });
+            let sv = server.stats();
+            println!(
+                "fleet poll {} @ {clients} clients: {:.0} queries/sec ({} idle wakeups)",
+                sv.poll,
+                queries / stats.mean.as_secs_f64(),
+                sv.idle_wakeups
+            );
+            records.push(record(op, &format!("clients={clients}"), threads, &stats, queries));
+            server.shutdown();
+        }
+    } else {
+        println!("SKIP fleet_epoll tier: epoll not available on this target");
     }
 
     if let Some(path) = &json_path {

@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
 use crate::coordinator::checkpoint::Cache;
-use crate::fleet::{DeviceSpec, FleetSearcher, FleetServer, ServeConfig};
+use crate::fleet::{DeviceSpec, FleetSearcher, FleetServer, PollBackend, ServeConfig};
 use crate::models::list_models;
 use crate::registry::{DirSource, ModelRegistry, ModelSource, RegistryConfig};
 use crate::report::bit_chart;
@@ -45,6 +45,8 @@ const VALUE_FLAGS: &[&str] = &[
     "node-limit",
     "time-limit-ms",
     "threads",
+    "simd",
+    "poll",
     "max-conns",
     "coalesce-window-us",
     "persistent-pool",
@@ -135,7 +137,7 @@ USAGE:
                   [--max-inflight N] [--max-queue N]
                   [--default-deadline-ms T] [--drain-ms T]
                   [--frontier on|off] [--frontier-steps N]
-                  [--frontier-tol F]
+                  [--frontier-tol F] [--poll epoll|sweep]
                   event-driven fleet TCP server (see SERVE below)
   limpq eval-policy --policy policy.json [--tag ft_tag]   evaluate a saved
                   policy on the validation split (finetuned ckpt if cached)
@@ -293,6 +295,36 @@ KERNELS (compute):
                        own dispatch, so training-pass/HVP scaling shows on
                        concurrency-capable backends; the int-GEMM and
                        fleet-sweep sharding benefits everywhere.)
+
+SIMD & POLLING (hardware-ceiling knobs):
+  The GEMM row kernels are hand-vectorized (AVX2+FMA on x86_64, NEON on
+  aarch64, including a widening 8-bit integer path) behind one runtime
+  dispatch decision made at startup; the serving multiplexer likewise
+  picks its readiness backend once.
+    --simd auto|avx2|neon|scalar   GEMM microkernel path (default auto:
+                       runtime feature detection).  Forcing an ISA the
+                       host lacks is a hard error; env LIMPQ_SIMD sets
+                       the default instead and silently falls back to
+                       scalar when unavailable.  Accepted by every
+                       subcommand.
+    --poll epoll|sweep            serve-only: readiness backend for the
+                       multiplexer (default auto = epoll on Linux, the
+                       portable 1ms nonblocking sweep elsewhere; env
+                       LIMPQ_POLL sets the default).  epoll blocks in
+                       the kernel until a socket, a finished response,
+                       or shutdown needs it — near-zero idle wakeups —
+                       with identical backpressure, ordering, and drain
+                       semantics to the sweep.
+  Determinism contract: integer SIMD paths are bit-exact against the
+  scalar kernels at any thread count (activation codes wider than 16
+  bits fall back to exact scalar rows automatically).  The f32 SIMD
+  path keeps a fixed lane-accumulation order, so results are
+  bit-identical across thread counts on a given ISA and differ from
+  scalar only within a documented rounding bound.  `--simd scalar` is
+  the cross-ISA reference.  Stats, the serve operator report, and
+  bench artifacts all record the selected \"simd\" and \"poll\"
+  backends, and tools/bench_diff.py refuses to compare artifacts from
+  different backends.
 ";
 
 /// Dispatch a parsed command. Returns process exit code.
@@ -300,6 +332,9 @@ pub fn dispatch(args: &Args) -> Result<i32> {
     if let Some(v) = args.get("threads") {
         let n: usize = v.parse().with_context(|| format!("--threads {v:?} is not a count"))?;
         crate::kernels::set_global_threads(n)?;
+    }
+    if let Some(v) = args.get("simd") {
+        crate::kernels::set_global_simd(v)?;
     }
     match args.command.as_str() {
         "help" | "--help" | "-h" => {
@@ -535,6 +570,9 @@ fn serve_config_from_args(args: &Args) -> Result<ServeConfig> {
         let ms: u64 = v.parse().with_context(|| format!("--drain-ms {v:?}"))?;
         scfg.drain = std::time::Duration::from_millis(ms);
     }
+    if let Some(v) = args.get("poll") {
+        scfg.poll = PollBackend::parse(v).with_context(|| format!("--poll {v:?}"))?;
+    }
     // The CLI server defaults frontier-first serving ON (the struct
     // default stays off so embedded/test servers opt in deliberately).
     scfg.frontier = true;
@@ -615,7 +653,8 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
     let server = FleetServer::spawn_registry(registry, &default_model, bind, scfg.clone())?;
     println!(
         "fleet server listening on {} — {} model(s) available, default {:?} (max {} conns, \
-         {}us coalesce window, {} pool, queue bound {}, {} in-flight/conn{})",
+         {}us coalesce window, {} pool, queue bound {}, {} in-flight/conn, \
+         {} poll backend, {} gemm kernels{})",
         server.addr,
         available.len(),
         default_model,
@@ -624,6 +663,8 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
         if scfg.persistent_pool { "persistent" } else { "scoped" },
         scfg.max_queue,
         scfg.max_inflight_per_conn,
+        scfg.poll.name(),
+        crate::kernels::active_simd().name(),
         match server.registry().config().mem_budget {
             Some(b) => format!(", {} MB budget", b >> 20),
             None => String::new(),
@@ -660,7 +701,8 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
                  cache: {} hits / {} solves, {} cached, {} single-flight \
                  waits; health: {} deadline-expired / {} degraded / {} breaker-shed; \
                  {} models resident ({:.1} MB, {} loads / {} evictions / {} load retries); \
-                 conns {} open / {} total ({} overloaded)",
+                 conns {} open / {} total ({} overloaded, {} accept errors); \
+                 mux: {} poll, {} idle wakeups; gemm: {}",
                 sv.served,
                 sv.batches,
                 sv.coalesced_batch_size,
@@ -685,7 +727,11 @@ fn run_serve(args: &Args, cfg: Config) -> Result<()> {
                 rs.load_retries,
                 sv.conns_open,
                 sv.conns_total,
-                sv.overloaded
+                sv.overloaded,
+                sv.accept_errors,
+                sv.poll,
+                sv.idle_wakeups,
+                crate::kernels::active_simd().name()
             );
         }
     }
@@ -969,6 +1015,49 @@ mod tests {
         assert!(HELP.contains("--threads"));
         assert!(HELP.contains("LIMPQ_THREADS"));
         assert!(HELP.contains("bit-identical"));
+    }
+
+    #[test]
+    fn help_documents_simd_and_polling() {
+        for needle in [
+            "SIMD & POLLING",
+            "--simd auto|avx2|neon|scalar",
+            "--poll epoll|sweep",
+            "LIMPQ_SIMD",
+            "LIMPQ_POLL",
+            "bit-exact",
+            "lane-accumulation",
+            "bench_diff",
+        ] {
+            assert!(HELP.contains(needle), "HELP is missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn poll_flag_parses_into_config() {
+        let a = parse(&["serve", "--poll", "sweep"]);
+        let scfg = serve_config_from_args(&a).unwrap();
+        assert_eq!(scfg.poll, PollBackend::Sweep);
+        // defaults to the platform auto pick when absent
+        let d = serve_config_from_args(&parse(&["serve"])).unwrap();
+        assert_eq!(d.poll, PollBackend::default());
+        let junk = parse(&["serve", "--poll", "kqueue"]);
+        assert!(serve_config_from_args(&junk).is_err());
+        #[cfg(target_os = "linux")]
+        {
+            let e = parse(&["serve", "--poll", "epoll"]);
+            assert_eq!(serve_config_from_args(&e).unwrap().poll, PollBackend::Epoll);
+        }
+    }
+
+    #[test]
+    fn simd_flag_is_a_value_flag_and_rejects_junk_at_dispatch() {
+        let a = parse(&["search", "--simd", "scalar", "--cap-gbitops", "1.5"]);
+        assert_eq!(a.get("simd"), Some("scalar"));
+        // a bogus backend name fails before the command body runs
+        // (without mutating the process-global dispatch)
+        let bad = parse(&["help", "--simd", "sse9"]);
+        assert!(dispatch(&bad).is_err());
     }
 
     #[test]

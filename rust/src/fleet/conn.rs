@@ -191,6 +191,22 @@ impl Conn {
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 
+    /// Raw socket fd for the epoll readiness backend.  The `Conn` keeps
+    /// sole ownership of the stream; callers must deregister before the
+    /// conn drops (closing the fd).
+    #[cfg(unix)]
+    pub fn raw_fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.stream.as_raw_fd()
+    }
+
+    /// Read side finished (EOF/error/poison): the epoll backend drops
+    /// read interest then, because a level-triggered EOF would otherwise
+    /// re-report forever while owed responses drain.
+    pub fn read_done(&self) -> bool {
+        self.closed || self.dead
+    }
+
     /// An oversize poison error is parked behind owed responses.
     #[cfg(test)]
     fn has_deferred_error(&self) -> bool {

@@ -414,9 +414,13 @@ impl ServingCore {
         let mut fields = vec![
             ("ok", Json::Bool(true)),
             ("cmd", Json::from("stats")),
+            ("simd", Json::from(crate::kernels::active_simd().name())),
+            ("poll", Json::from(snap.poll)),
             ("open_conns", Json::from(snap.conns_open)),
             ("total_conns", Json::from(snap.conns_total)),
             ("overloaded", Json::from(snap.overloaded)),
+            ("accept_errors", Json::from(snap.accept_errors)),
+            ("idle_wakeups", Json::from(snap.idle_wakeups)),
             ("rejected", Json::from(snap.rejected)),
             ("served", Json::from(snap.served)),
             ("queue_depth", Json::from(snap.queue_depth)),
@@ -712,6 +716,10 @@ impl BatchRouter {
         }
         if !ready.is_empty() {
             self.shared.responses.lock().unwrap().extend(ready);
+            // Kick the mux: under the epoll backend it is blocked in
+            // `epoll_wait` and would otherwise sit on these responses
+            // until the safety-net timeout.
+            self.shared.waker.wake();
         }
     }
 }
@@ -743,6 +751,7 @@ impl AdminLane {
             }))
             .unwrap_or_else(|_| protocol::error_message("internal error: admin command panicked"));
             self.core.shared.responses.lock().unwrap().push_back((item.conn, line));
+            self.core.shared.waker.wake();
         }
     }
 }

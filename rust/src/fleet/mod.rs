@@ -17,13 +17,17 @@
 //! ```
 //!
 //! * **Multiplexer** ([`server`]): one thread owns the listener and all
-//!   connections; nonblocking readiness sweeps decode line-delimited JSON
-//!   requests and flush buffered responses.  Connections beyond
-//!   [`ServeConfig::max_conns`] get a 503-style rejection line, and the
-//!   stop flag is honored within a millisecond even with idle keep-alive
-//!   clients attached.  Backpressure lives here too: solve lines past the
-//!   per-connection in-flight cap or the bounded solve queue are answered
-//!   immediately with a `"busy": true` 503-style line.
+//!   connections; readiness comes from a pluggable backend ([`poll`]) —
+//!   raw `epoll` on Linux (zero idle wakeups, a self-pipe waker for
+//!   responses and shutdown) or the portable nonblocking sweep
+//!   (`--poll sweep`) — and decoded line-delimited JSON requests and
+//!   buffered-response flushes are identical under both.  Connections
+//!   beyond [`ServeConfig::max_conns`] get a 503-style rejection line,
+//!   and the stop flag is honored within a millisecond even with idle
+//!   keep-alive clients attached.  Backpressure lives here too: solve
+//!   lines past the per-connection in-flight cap or the bounded solve
+//!   queue are answered immediately with a `"busy": true` 503-style
+//!   line.
 //! * **Admin fast lane** ([`dispatch`]): command lines take a second
 //!   queue and thread, so `stats`/`models`/`load`/`evict` answer even
 //!   while the dispatcher is deep in a slow solve batch (no more
@@ -107,6 +111,7 @@
 pub mod conn;
 pub mod dispatch;
 pub mod faults;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 
@@ -117,6 +122,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+pub use self::poll::PollBackend;
 pub use self::server::{FleetServer, ServeConfig, ServerStats, StatsSnapshot};
 
 use crate::engine::{CacheStats, PolicyEngine, SearchRequest};

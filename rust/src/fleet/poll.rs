@@ -1,0 +1,429 @@
+//! Readiness backends for the fleet multiplexer.
+//!
+//! The mux originally discovered work by sweeping every connection each
+//! tick and sleeping `POLL_IDLE` (1 ms) when nothing happened — simple
+//! and portable, but it burns a wakeup per millisecond per server and
+//! adds up to a millisecond of latency to every event.  This module adds
+//! a Linux `epoll` backend over **raw FFI** (`epoll_create1` /
+//! `epoll_ctl` / `epoll_wait` — no new crates, same vendored-shim
+//! discipline as `vendor/anyhow`): the mux blocks until a socket is
+//! actually ready, a response is queued, or shutdown is requested.
+//!
+//! * [`PollBackend`] — operator-visible selection (`--poll epoll|sweep`,
+//!   `LIMPQ_POLL` env, auto = epoll on Linux).  The sweep loop is kept
+//!   verbatim as the portable fallback and the reference semantics.
+//! * [`Poller`] — level-triggered epoll set over the listener and
+//!   connection fds.  Level-triggering is what preserves the mux's
+//!   per-tick read budget: bytes left in a kernel buffer re-report on
+//!   the next wait, exactly like the sweep re-visiting the socket.
+//! * [`Waker`] / [`WakeHandle`] — a nonblocking self-pipe registered in
+//!   the epoll set.  Dispatcher and admin threads queue responses from
+//!   outside the mux thread, so every response push (and shutdown) kicks
+//!   the pipe; under the sweep backend the handle is a no-op and the
+//!   1 ms tick provides liveness, unchanged.
+//!
+//! Fd lifetime: [`Poller`] and every [`Waker`] share one [`Fds`] via
+//! `Arc`, so a late wake from a dispatcher thread after the mux exited
+//! writes into a still-open pipe instead of a recycled fd number.
+
+use anyhow::{bail, Result};
+use std::sync::{Mutex, OnceLock};
+
+/// Environment variable consulted when no `--poll` flag was given.
+pub const POLL_ENV: &str = "LIMPQ_POLL";
+
+/// How the mux discovers readiness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollBackend {
+    /// Blocking `epoll_wait` over listener + conns + wake pipe (Linux).
+    Epoll,
+    /// Portable sweep: poll every conn each tick, sleep 1 ms when idle.
+    Sweep,
+}
+
+impl PollBackend {
+    /// Stable lowercase name for stats, bench records, and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            PollBackend::Epoll => "epoll",
+            PollBackend::Sweep => "sweep",
+        }
+    }
+
+    /// Whether this backend can run on this build target.
+    pub fn available(self) -> bool {
+        match self {
+            PollBackend::Epoll => cfg!(target_os = "linux"),
+            PollBackend::Sweep => true,
+        }
+    }
+
+    /// Best backend for this target: epoll on Linux, sweep elsewhere.
+    pub fn auto() -> PollBackend {
+        if PollBackend::Epoll.available() {
+            PollBackend::Epoll
+        } else {
+            PollBackend::Sweep
+        }
+    }
+
+    /// Parse a CLI-style value.  Requesting `epoll` where it cannot run
+    /// is a hard error (an explicit flag deserves a refusal, not a
+    /// silent sweep).
+    pub fn parse(value: &str) -> Result<PollBackend> {
+        match value.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(PollBackend::auto()),
+            "sweep" => Ok(PollBackend::Sweep),
+            "epoll" => {
+                if !PollBackend::Epoll.available() {
+                    bail!("poll backend \"epoll\" is not available on this target");
+                }
+                Ok(PollBackend::Epoll)
+            }
+            other => bail!("unknown poll backend {other:?} (expected epoll|sweep|auto)"),
+        }
+    }
+
+    /// The `LIMPQ_POLL` / auto default, resolved once.  An env value
+    /// that is invalid or unavailable degrades to [`PollBackend::auto`]
+    /// (env pins are for CI matrices, not hard errors).
+    pub fn default_backend() -> PollBackend {
+        static DEFAULT: OnceLock<PollBackend> = OnceLock::new();
+        *DEFAULT.get_or_init(|| match std::env::var(POLL_ENV) {
+            Ok(v) => PollBackend::parse(&v).unwrap_or_else(|_| PollBackend::auto()),
+            Err(_) => PollBackend::auto(),
+        })
+    }
+
+    /// Every backend runnable on this target — the wire test suites and
+    /// benches iterate this so both loops stay covered where possible.
+    pub fn matrix() -> Vec<PollBackend> {
+        let mut v = vec![PollBackend::Sweep];
+        if PollBackend::Epoll.available() {
+            v.push(PollBackend::Epoll);
+        }
+        v
+    }
+}
+
+impl Default for PollBackend {
+    fn default() -> Self {
+        PollBackend::default_backend()
+    }
+}
+
+/// Cross-platform wake slot living on the server's `Shared` state.
+/// Response producers call [`WakeHandle::wake`] unconditionally; it only
+/// does work once the epoll mux has installed its [`Waker`].
+#[derive(Debug, Default)]
+pub struct WakeHandle {
+    #[cfg(target_os = "linux")]
+    inner: Mutex<Option<Waker>>,
+    #[cfg(not(target_os = "linux"))]
+    inner: Mutex<()>,
+}
+
+impl WakeHandle {
+    pub fn new() -> WakeHandle {
+        WakeHandle::default()
+    }
+
+    /// Kick the mux out of a blocking wait, if one is listening.
+    pub fn wake(&self) {
+        #[cfg(target_os = "linux")]
+        if let Ok(guard) = self.inner.lock() {
+            if let Some(w) = guard.as_ref() {
+                w.wake();
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = &self.inner;
+    }
+
+    /// Install the epoll mux's waker (called once at mux startup).
+    #[cfg(target_os = "linux")]
+    pub fn install(&self, w: Waker) {
+        if let Ok(mut guard) = self.inner.lock() {
+            *guard = Some(w);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::{Poller, Waker, LISTENER_TOKEN};
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use std::io;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Token reserved for the listening socket.
+    pub const LISTENER_TOKEN: u64 = u64::MAX - 1;
+    /// Token reserved for the wake pipe (internal to [`Poller::wait`]).
+    const WAKE_TOKEN: u64 = u64::MAX;
+
+    // epoll_event is packed on x86_64 only (kernel/glibc __EPOLL_PACKED).
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const O_NONBLOCK: i32 = 0o4000;
+    const O_CLOEXEC: i32 = 0o2000000;
+    /// Max events decoded per wait; more simply surface on the next one.
+    const MAX_EVENTS: usize = 64;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn pipe2(fds: *mut i32, flags: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    /// The raw fds, closed exactly once when the last owner (poller or
+    /// straggling waker) drops.
+    #[derive(Debug)]
+    struct Fds {
+        epfd: i32,
+        wake_r: i32,
+        wake_w: i32,
+    }
+
+    impl Drop for Fds {
+        fn drop(&mut self) {
+            // SAFETY: fds were created by us and closed nowhere else.
+            unsafe {
+                close(self.wake_w);
+                close(self.wake_r);
+                close(self.epfd);
+            }
+        }
+    }
+
+    /// Level-triggered epoll set plus the self-pipe wake channel.
+    #[derive(Debug)]
+    pub struct Poller {
+        fds: Arc<Fds>,
+    }
+
+    /// Cheap clonable handle that kicks [`Poller::wait`] from any thread.
+    #[derive(Debug, Clone)]
+    pub struct Waker {
+        fds: Arc<Fds>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            let byte = 1u8;
+            // SAFETY: wake_w stays open while any Waker holds the Arc.
+            // A full pipe (EAGAIN) is fine: a wakeup is already pending.
+            unsafe {
+                write(self.fds.wake_w, &byte as *const u8, 1);
+            }
+        }
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscalls; results checked before use.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let mut pipe_fds = [-1i32; 2];
+            if unsafe { pipe2(pipe_fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } != 0 {
+                let err = io::Error::last_os_error();
+                unsafe { close(epfd) };
+                return Err(err);
+            }
+            let fds = Arc::new(Fds { epfd, wake_r: pipe_fds[0], wake_w: pipe_fds[1] });
+            let poller = Poller { fds };
+            poller.ctl(EPOLL_CTL_ADD, poller.fds.wake_r, EPOLLIN, WAKE_TOKEN)?;
+            Ok(poller)
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker { fds: Arc::clone(&self.fds) }
+        }
+
+        fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let ptr = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            // SAFETY: epfd/fd are live fds owned by this process.
+            if unsafe { epoll_ctl(self.fds.epfd, op, fd, ptr) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register `fd` for read readiness (plus peer-hangup).
+        pub fn add(&self, fd: i32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, EPOLLIN | EPOLLRDHUP, token)
+        }
+
+        /// Re-arm `fd` with the given interest set.
+        pub fn modify(
+            &self,
+            fd: i32,
+            token: u64,
+            want_read: bool,
+            want_write: bool,
+        ) -> io::Result<()> {
+            let mut events = 0u32;
+            if want_read {
+                events |= EPOLLIN | EPOLLRDHUP;
+            }
+            if want_write {
+                events |= EPOLLOUT;
+            }
+            self.ctl(EPOLL_CTL_MOD, fd, events, token)
+        }
+
+        /// Drop `fd` from the set (also happens implicitly on close).
+        pub fn remove(&self, fd: i32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block until readiness, a wake, or `timeout`; returns the
+        /// ready tokens (the wake token is drained and filtered out —
+        /// an empty vec after a wake means "re-check shared state").
+        pub fn wait(&self, timeout: Duration) -> io::Result<Vec<u64>> {
+            let mut events = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            let timeout_ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+            let n = loop {
+                // SAFETY: events buffer outlives the call; len matches.
+                let rc = unsafe {
+                    epoll_wait(self.fds.epfd, events.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms)
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            let mut tokens = Vec::with_capacity(n);
+            for ev in events.iter().take(n) {
+                let token = ev.data;
+                if token == WAKE_TOKEN {
+                    self.drain_wake();
+                } else {
+                    tokens.push(token);
+                }
+            }
+            Ok(tokens)
+        }
+
+        fn drain_wake(&self) {
+            let mut buf = [0u8; 64];
+            // SAFETY: wake_r is ours and nonblocking; loop ends on EAGAIN.
+            while unsafe { read(self.fds.wake_r, buf.as_mut_ptr(), buf.len()) } > 0 {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_parse_and_matrix_is_runnable() {
+        assert_eq!(PollBackend::parse("sweep").unwrap(), PollBackend::Sweep);
+        assert_eq!(PollBackend::parse(" AUTO ").unwrap(), PollBackend::auto());
+        assert!(PollBackend::parse("kqueue").is_err());
+        for b in PollBackend::matrix() {
+            assert!(b.available());
+            assert_eq!(PollBackend::parse(b.name()).unwrap(), b);
+        }
+        assert!(PollBackend::default().available());
+    }
+
+    #[test]
+    fn wake_handle_is_a_safe_noop_before_install() {
+        let h = WakeHandle::new();
+        h.wake(); // must not panic or block
+    }
+
+    #[cfg(target_os = "linux")]
+    mod epoll {
+        use super::super::{Poller, WakeHandle, LISTENER_TOKEN};
+        use std::io::Write;
+        use std::net::{TcpListener, TcpStream};
+        use std::os::unix::io::AsRawFd;
+        use std::time::{Duration, Instant};
+
+        #[test]
+        fn wait_times_out_empty_when_nothing_is_ready() {
+            let p = Poller::new().unwrap();
+            let t0 = Instant::now();
+            let tokens = p.wait(Duration::from_millis(30)).unwrap();
+            assert!(tokens.is_empty());
+            assert!(t0.elapsed() >= Duration::from_millis(20));
+        }
+
+        #[test]
+        fn waker_interrupts_a_blocking_wait() {
+            let p = Poller::new().unwrap();
+            let w = p.waker();
+            let handle = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                w.wake();
+            });
+            let t0 = Instant::now();
+            // Far longer than the wake delay: only the wake can end it early.
+            let tokens = p.wait(Duration::from_secs(5)).unwrap();
+            assert!(tokens.is_empty(), "wake token must be filtered out");
+            assert!(t0.elapsed() < Duration::from_secs(2));
+            handle.join().unwrap();
+        }
+
+        #[test]
+        fn a_ready_socket_reports_its_token() {
+            let p = Poller::new().unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            p.add(listener.as_raw_fd(), LISTENER_TOKEN).unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let tokens = p.wait(Duration::from_secs(5)).unwrap();
+            assert!(tokens.contains(&LISTENER_TOKEN));
+            // accepted conn becomes readable once bytes arrive
+            let (conn, _) = listener.accept().unwrap();
+            conn.set_nonblocking(true).unwrap();
+            p.add(conn.as_raw_fd(), 7).unwrap();
+            client.write_all(b"x\n").unwrap();
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                let tokens = p.wait(Duration::from_millis(100)).unwrap();
+                if tokens.contains(&7) {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "conn never became readable");
+            }
+            p.remove(conn.as_raw_fd()).unwrap();
+        }
+
+        #[test]
+        fn install_then_wake_reaches_the_pipe() {
+            let p = Poller::new().unwrap();
+            let h = WakeHandle::new();
+            h.install(p.waker());
+            h.wake();
+            let tokens = p.wait(Duration::from_millis(500)).unwrap();
+            assert!(tokens.is_empty()); // wake drained + filtered
+        }
+    }
+}

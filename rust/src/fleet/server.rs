@@ -3,14 +3,22 @@
 //!
 //! One **multiplexer thread** owns the listener and every connection:
 //! each tick it accepts new sockets (rejecting past
-//! [`ServeConfig::max_conns`] with a 503-style line), sweeps readiness
-//! over the nonblocking streams ([`super::conn::Conn`]), pushes decoded
-//! request lines into the shared queues, routes finished responses back
-//! into per-connection write buffers, and reaps finished connections.
-//! The tick sleeps only when nothing progressed, so the loop is idle-cheap
-//! and the stop flag is observed within a millisecond — `shutdown()`
+//! [`ServeConfig::max_conns`] with a 503-style line), discovers
+//! readiness over the nonblocking streams ([`super::conn::Conn`]),
+//! pushes decoded request lines into the shared queues, routes finished
+//! responses back into per-connection write buffers, and reaps finished
+//! connections.  **Readiness discovery is pluggable**
+//! ([`ServeConfig::poll`], [`super::poll::PollBackend`]): on Linux the
+//! mux blocks in `epoll_wait` over the listener, the conns, and a
+//! self-pipe that response producers and `shutdown()` kick — zero
+//! wakeups while idle; everywhere else (or under `--poll sweep`) the
+//! original portable loop sweeps every conn per tick and sleeps
+//! `POLL_IDLE` (1 ms) when nothing progressed.  Both backends share the
+//! same classify/route/flush/drain code, so lane semantics, per-tick
+//! read budgets, and shutdown latency are identical — `shutdown()`
 //! returns promptly even with idle keep-alive clients attached (the old
-//! thread-per-connection design blocked forever on their reads).
+//! thread-per-connection design blocked forever on their reads), and
+//! ticks that make no progress are counted in `idle_wakeups`.
 //!
 //! Lines are split into two lanes at the mux: command lines (those
 //! containing a `"cmd"` key) go to the **admin lane**
@@ -49,6 +57,7 @@ use anyhow::{ensure, Context, Result};
 
 use super::conn::Conn;
 use super::dispatch::{AdminLane, Dispatcher, ServingCore};
+use super::poll::{self, PollBackend};
 use super::protocol;
 use super::FleetSearcher;
 use crate::registry::{ModelEntry, ModelRegistry, RegistryConfig, StaticSource};
@@ -97,6 +106,10 @@ pub struct ServeConfig {
     /// vertex is served only when `cost − lower_bound ≤ tol·cost`.
     /// 0 demands an exact certificate (only refined cap pairs replay).
     pub frontier_tol: f64,
+    /// How the mux discovers readiness: blocking `epoll` (Linux) or the
+    /// portable 1 ms sweep.  Defaults to `--poll` / `LIMPQ_POLL` / auto
+    /// (epoll where available).
+    pub poll: PollBackend,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +127,7 @@ impl Default for ServeConfig {
             frontier: false,
             frontier_steps: 24,
             frontier_tol: 0.05,
+            poll: PollBackend::default(),
         }
     }
 }
@@ -145,6 +159,17 @@ pub struct ServerStats {
     /// Exact-solve results inserted back into a surface as refining
     /// vertices.
     pub frontier_refines: AtomicUsize,
+    /// Accept-loop failures that were real errors (EMFILE, aborted
+    /// handshakes, ...), as opposed to the routine `WouldBlock` that ends
+    /// every accept sweep.
+    pub accept_errors: AtomicUsize,
+    /// Mux ticks that made no progress (nothing accepted, read, routed).
+    /// The sweep backend accrues ~1000/s while idle; the epoll backend
+    /// should stay ~0 — that difference is pinned by a test.
+    pub idle_wakeups: AtomicUsize,
+    /// 1 while the mux runs the epoll readiness backend, 0 for sweep
+    /// (set by the mux at startup; reflects any runtime fallback).
+    pub poll_epoll: AtomicUsize,
 }
 
 /// A point-in-time copy of [`ServerStats`] plus the queue depths.
@@ -180,6 +205,12 @@ pub struct StatsSnapshot {
     pub frontier_misses: usize,
     /// Exact-solve results inserted back as refining vertices.
     pub frontier_refines: usize,
+    /// Real accept-loop errors (not `WouldBlock`).
+    pub accept_errors: usize,
+    /// Mux ticks that made no progress.
+    pub idle_wakeups: usize,
+    /// Readiness backend the mux is actually running.
+    pub poll: &'static str,
 }
 
 impl ServerStats {
@@ -201,6 +232,13 @@ impl ServerStats {
             frontier_hits: self.frontier_hits.load(Ordering::Relaxed),
             frontier_misses: self.frontier_misses.load(Ordering::Relaxed),
             frontier_refines: self.frontier_refines.load(Ordering::Relaxed),
+            accept_errors: self.accept_errors.load(Ordering::Relaxed),
+            idle_wakeups: self.idle_wakeups.load(Ordering::Relaxed),
+            poll: if self.poll_epoll.load(Ordering::Relaxed) == 1 {
+                PollBackend::Epoll.name()
+            } else {
+                PollBackend::Sweep.name()
+            },
         }
     }
 }
@@ -225,6 +263,10 @@ pub(crate) struct Shared {
     pub admin_cv: Condvar,
     pub responses: Mutex<VecDeque<(u64, String)>>,
     pub stats: ServerStats,
+    /// Kicks a blocking epoll mux when responses are queued or stop is
+    /// flagged; a no-op under the sweep backend (its 1 ms tick is the
+    /// liveness source there).
+    pub waker: poll::WakeHandle,
 }
 
 impl Shared {
@@ -237,6 +279,7 @@ impl Shared {
             admin_cv: Condvar::new(),
             responses: Mutex::new(VecDeque::new()),
             stats: ServerStats::default(),
+            waker: poll::WakeHandle::new(),
         }
     }
 }
@@ -313,6 +356,7 @@ impl FleetServer {
             shared.stop.store(true, Ordering::Relaxed);
             shared.req_cv.notify_all();
             shared.admin_cv.notify_all();
+            shared.waker.wake();
             for h in handles {
                 let _ = h.join();
             }
@@ -387,6 +431,7 @@ impl FleetServer {
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.req_cv.notify_all();
         self.shared.admin_cv.notify_all();
+        self.shared.waker.wake();
         for h in [self.mux.take(), self.disp.take(), self.admin.take()] {
             if let Some(h) = h {
                 let _ = h.join();
@@ -396,29 +441,37 @@ impl FleetServer {
 }
 
 fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
+    let conns = if cfg.poll == PollBackend::Epoll {
+        #[cfg(target_os = "linux")]
+        {
+            match poll::Poller::new() {
+                Ok(poller) => mux_loop_epoll(&listener, &shared, &cfg, poller),
+                Err(e) => {
+                    eprintln!("fleet-mux: epoll setup failed ({e}); falling back to sweep");
+                    mux_loop_sweep(&listener, &shared, &cfg)
+                }
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            mux_loop_sweep(&listener, &shared, &cfg)
+        }
+    } else {
+        mux_loop_sweep(&listener, &shared, &cfg)
+    };
+    drain_owed(conns, &shared, &cfg);
+}
+
+/// The portable readiness loop: sweep every conn each tick, sleep
+/// [`POLL_IDLE`] when nothing progressed.  Also the reference semantics
+/// the epoll backend must match.
+fn mux_loop_sweep(listener: &TcpListener, shared: &Shared, cfg: &ServeConfig) -> Vec<Conn> {
+    shared.stats.poll_epoll.store(0, Ordering::Relaxed);
     let mut conns: Vec<Conn> = Vec::new();
     let mut next_id: u64 = 0;
     while !shared.stop.load(Ordering::Relaxed) {
-        let mut progress = false;
-
-        // Accept whatever is pending, enforcing the connection cap.
-        loop {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    progress = true;
-                    if conns.len() >= cfg.max_conns {
-                        shared.stats.overloaded.fetch_add(1, Ordering::Relaxed);
-                        reject_overloaded(stream, cfg.max_conns);
-                    } else if let Ok(c) = Conn::new(stream, next_id) {
-                        next_id += 1;
-                        shared.stats.conns_total.fetch_add(1, Ordering::Relaxed);
-                        conns.push(c);
-                    }
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(_) => break, // transient accept failure; retry next tick
-            }
-        }
+        let mut progress =
+            accept_pending(listener, &mut conns, &mut next_id, shared, cfg, |_| {});
 
         // Readiness sweep: decode complete lines (collected outside the
         // locks — reads are syscalls), then classify per line.
@@ -428,74 +481,8 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
                 pending.push((i, line));
             }
         }
-        if !pending.is_empty() {
-            progress = true;
-            // Remaining solve-queue room, computed once per tick: the
-            // bound is approximate (the dispatcher drains concurrently)
-            // but can only under-admit, never exceed the cap.
-            let mut room = cfg.max_queue.saturating_sub(shared.requests.lock().unwrap().len());
-            let mut solve_items: Vec<WorkItem> = Vec::new();
-            let mut admin_items: Vec<WorkItem> = Vec::new();
-            let arrival = std::time::Instant::now();
-            for (i, line) in pending {
-                let c = &mut conns[i];
-                // Cheap lane split: a JSON command object always contains
-                // the `"cmd"` key literally.  A solve whose string values
-                // merely mention it lands on the admin lane, which answers
-                // solves inline — correct, just off the batch path.
-                if line.contains("\"cmd\"") {
-                    // Admin is never rejected: cheap, and refusing stats
-                    // under load would blind the operator.
-                    c.inflight += 1;
-                    admin_items.push(WorkItem { conn: c.id, line, arrival });
-                } else if c.inflight >= cfg.max_inflight_per_conn {
-                    shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                    c.queue_response(&protocol::busy_line(&format!(
-                        "per-connection in-flight cap ({}) reached",
-                        cfg.max_inflight_per_conn
-                    )));
-                } else if room == 0 {
-                    shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                    c.queue_response(&protocol::busy_line(&format!(
-                        "solve queue full ({})",
-                        cfg.max_queue
-                    )));
-                } else {
-                    room -= 1;
-                    c.inflight += 1;
-                    solve_items.push(WorkItem { conn: c.id, line, arrival });
-                }
-            }
-            if !solve_items.is_empty() {
-                shared.requests.lock().unwrap().extend(solve_items);
-                shared.req_cv.notify_all();
-            }
-            if !admin_items.is_empty() {
-                shared.admin.lock().unwrap().extend(admin_items);
-                shared.admin_cv.notify_all();
-            }
-        }
-
-        // Route finished responses into per-connection write buffers.
-        // Take the whole queue in one lock acquisition and route outside
-        // it — the dispatcher contends on this mutex to push the next
-        // batch, and a per-response scan over all conns would hold it for
-        // O(batch * conns).
-        let finished = std::mem::take(&mut *shared.responses.lock().unwrap());
-        if !finished.is_empty() {
-            progress = true;
-            let index: HashMap<u64, usize> =
-                conns.iter().enumerate().map(|(i, c)| (c.id, i)).collect();
-            for (id, line) in finished {
-                if let Some(&i) = index.get(&id) {
-                    let c = &mut conns[i];
-                    c.queue_response(&line);
-                    c.inflight -= 1;
-                    shared.stats.served.fetch_add(1, Ordering::Relaxed);
-                }
-                // connection already gone: drop the response
-            }
-        }
+        progress |= enqueue_lines(&mut conns, pending, shared, cfg);
+        progress |= route_responses(&mut conns, shared);
 
         // Flush and reap.
         for c in conns.iter_mut() {
@@ -505,29 +492,262 @@ fn mux_loop(listener: TcpListener, shared: Arc<Shared>, cfg: ServeConfig) {
         shared.stats.conns_open.store(conns.len(), Ordering::Relaxed);
 
         if !progress {
+            shared.stats.idle_wakeups.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(POLL_IDLE);
         }
     }
-    // Bounded-grace drain: no more accepts or reads, but keep routing
-    // finished responses and flushing write buffers until every surviving
-    // connection has been paid what it is owed — or the grace expires.
-    // Without this, responses still in flight in the dispatcher at stop
-    // time were silently dropped with the sockets.
-    let drain_deadline = std::time::Instant::now() + cfg.drain;
-    loop {
-        let finished = std::mem::take(&mut *shared.responses.lock().unwrap());
-        if !finished.is_empty() {
+    conns
+}
+
+/// Ceiling on one `epoll_wait`: a safety net bounding the damage of any
+/// missed wake; in normal operation readiness or the self-pipe returns
+/// the call long before this.
+#[cfg(target_os = "linux")]
+const EPOLL_SAFETY_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// The epoll readiness loop: block until a socket is ready, a response
+/// producer kicks the self-pipe, or shutdown.  Identical classify /
+/// route / flush semantics to the sweep — only discovery differs, so an
+/// idle server makes (near) zero wakeups.
+#[cfg(target_os = "linux")]
+fn mux_loop_epoll(
+    listener: &TcpListener,
+    shared: &Shared,
+    cfg: &ServeConfig,
+    poller: poll::Poller,
+) -> Vec<Conn> {
+    use std::os::unix::io::AsRawFd;
+    if poller.add(listener.as_raw_fd(), poll::LISTENER_TOKEN).is_err() {
+        return mux_loop_sweep(listener, shared, cfg);
+    }
+    shared.stats.poll_epoll.store(1, Ordering::Relaxed);
+    shared.waker.install(poller.waker());
+    let mut conns: Vec<Conn> = Vec::new();
+    // conn id -> (read, write) interest currently registered; an entry at
+    // (false, false) is deregistered (e.g. EOF'd while owed a response —
+    // a level-triggered EOF would otherwise re-report forever).
+    let mut interest: HashMap<u64, (bool, bool)> = HashMap::new();
+    let mut next_id: u64 = 0;
+    while !shared.stop.load(Ordering::Relaxed) {
+        let tokens = poller.wait(EPOLL_SAFETY_TIMEOUT).unwrap_or_default();
+        let mut progress = false;
+
+        if tokens.contains(&poll::LISTENER_TOKEN) {
+            progress |=
+                accept_pending(listener, &mut conns, &mut next_id, shared, cfg, |c| {
+                    let reg = poller.add(c.raw_fd(), c.id).is_ok();
+                    // On ctl failure, record (false, false) so sync below
+                    // retries registration instead of stranding the conn.
+                    interest.insert(c.id, (reg, false));
+                });
+        }
+
+        // Read only what epoll reported ready; level-triggering re-reports
+        // whatever the per-tick budget left in a kernel buffer.
+        let mut pending: Vec<(usize, String)> = Vec::new();
+        if !tokens.is_empty() {
             let index: HashMap<u64, usize> =
                 conns.iter().enumerate().map(|(i, c)| (c.id, i)).collect();
-            for (id, line) in finished {
-                if let Some(&i) = index.get(&id) {
-                    let c = &mut conns[i];
-                    c.queue_response(&line);
-                    c.inflight -= 1;
-                    shared.stats.served.fetch_add(1, Ordering::Relaxed);
+            for &t in &tokens {
+                if t == poll::LISTENER_TOKEN {
+                    continue;
+                }
+                if let Some(&i) = index.get(&t) {
+                    for line in conns[i].read_ready() {
+                        pending.push((i, line));
+                    }
                 }
             }
         }
+        progress |= enqueue_lines(&mut conns, pending, shared, cfg);
+        progress |= route_responses(&mut conns, shared);
+
+        for c in conns.iter_mut() {
+            c.flush();
+        }
+        for c in conns.iter().filter(|c| c.done()) {
+            if let Some(reg) = interest.remove(&c.id) {
+                if reg != (false, false) {
+                    let _ = poller.remove(c.raw_fd());
+                }
+            }
+        }
+        conns.retain(|c| !c.done());
+        for c in conns.iter() {
+            sync_interest(&poller, c, &mut interest);
+        }
+        shared.stats.conns_open.store(conns.len(), Ordering::Relaxed);
+
+        if !progress {
+            // ~0 in steady state (that is the backend's point); the brief
+            // sleep is a spin guard for persistent level-triggered states
+            // (e.g. an accept error leaving the listener readable).
+            shared.stats.idle_wakeups.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(POLL_IDLE);
+        }
+    }
+    conns
+}
+
+/// Re-arm a live conn's epoll registration to match what it needs now:
+/// read interest while the read side is open, write interest only while
+/// a flush left buffered bytes (registering EPOLLOUT on an always-
+/// writable socket would busy-wake the loop).
+#[cfg(target_os = "linux")]
+fn sync_interest(poller: &poll::Poller, c: &Conn, interest: &mut HashMap<u64, (bool, bool)>) {
+    let Some(reg) = interest.get_mut(&c.id) else {
+        return;
+    };
+    let want = (!c.read_done(), c.has_pending_write());
+    if *reg == want {
+        return;
+    }
+    let ok = if want == (false, false) {
+        poller.remove(c.raw_fd()).is_ok()
+    } else if *reg == (false, false) {
+        // Re-register, e.g. a response arrived for an EOF'd conn whose
+        // flush hit WouldBlock.
+        poller.add(c.raw_fd(), c.id).is_ok()
+            && poller.modify(c.raw_fd(), c.id, want.0, want.1).is_ok()
+    } else {
+        poller.modify(c.raw_fd(), c.id, want.0, want.1).is_ok()
+    };
+    if ok {
+        *reg = want;
+    }
+    // On ctl failure the old registration stands and the safety-net
+    // timeout keeps the loop live.
+}
+
+/// Accept everything pending, enforcing the connection cap.  `on_new`
+/// lets the epoll backend register the fresh socket.  Real accept
+/// errors (EMFILE, aborted handshakes, ...) are counted in
+/// `accept_errors` — previously they were lumped in with `WouldBlock`
+/// and silently ended the sweep — and retried next tick.
+fn accept_pending(
+    listener: &TcpListener,
+    conns: &mut Vec<Conn>,
+    next_id: &mut u64,
+    shared: &Shared,
+    cfg: &ServeConfig,
+    mut on_new: impl FnMut(&Conn),
+) -> bool {
+    let mut progress = false;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                progress = true;
+                if conns.len() >= cfg.max_conns {
+                    shared.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+                    reject_overloaded(stream, cfg.max_conns);
+                } else if let Ok(c) = Conn::new(stream, *next_id) {
+                    *next_id += 1;
+                    shared.stats.conns_total.fetch_add(1, Ordering::Relaxed);
+                    on_new(&c);
+                    conns.push(c);
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(_) => {
+                shared.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                break; // transient: retry next tick, now visibly counted
+            }
+        }
+    }
+    progress
+}
+
+/// Lane-split and backpressure for one tick's decoded lines (shared by
+/// both readiness backends).
+fn enqueue_lines(
+    conns: &mut [Conn],
+    pending: Vec<(usize, String)>,
+    shared: &Shared,
+    cfg: &ServeConfig,
+) -> bool {
+    if pending.is_empty() {
+        return false;
+    }
+    // Remaining solve-queue room, computed once per tick: the
+    // bound is approximate (the dispatcher drains concurrently)
+    // but can only under-admit, never exceed the cap.
+    let mut room = cfg.max_queue.saturating_sub(shared.requests.lock().unwrap().len());
+    let mut solve_items: Vec<WorkItem> = Vec::new();
+    let mut admin_items: Vec<WorkItem> = Vec::new();
+    let arrival = std::time::Instant::now();
+    for (i, line) in pending {
+        let c = &mut conns[i];
+        // Cheap lane split: a JSON command object always contains
+        // the `"cmd"` key literally.  A solve whose string values
+        // merely mention it lands on the admin lane, which answers
+        // solves inline — correct, just off the batch path.
+        if line.contains("\"cmd\"") {
+            // Admin is never rejected: cheap, and refusing stats
+            // under load would blind the operator.
+            c.inflight += 1;
+            admin_items.push(WorkItem { conn: c.id, line, arrival });
+        } else if c.inflight >= cfg.max_inflight_per_conn {
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            c.queue_response(&protocol::busy_line(&format!(
+                "per-connection in-flight cap ({}) reached",
+                cfg.max_inflight_per_conn
+            )));
+        } else if room == 0 {
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            c.queue_response(&protocol::busy_line(&format!(
+                "solve queue full ({})",
+                cfg.max_queue
+            )));
+        } else {
+            room -= 1;
+            c.inflight += 1;
+            solve_items.push(WorkItem { conn: c.id, line, arrival });
+        }
+    }
+    if !solve_items.is_empty() {
+        shared.requests.lock().unwrap().extend(solve_items);
+        shared.req_cv.notify_all();
+    }
+    if !admin_items.is_empty() {
+        shared.admin.lock().unwrap().extend(admin_items);
+        shared.admin_cv.notify_all();
+    }
+    true
+}
+
+/// Route finished responses into per-connection write buffers (shared by
+/// both backends and the drain).  Takes the whole queue in one lock
+/// acquisition and routes outside it — the dispatcher contends on this
+/// mutex to push the next batch, and a per-response scan over all conns
+/// would hold it for O(batch * conns).
+fn route_responses(conns: &mut [Conn], shared: &Shared) -> bool {
+    let finished = std::mem::take(&mut *shared.responses.lock().unwrap());
+    if finished.is_empty() {
+        return false;
+    }
+    let index: HashMap<u64, usize> =
+        conns.iter().enumerate().map(|(i, c)| (c.id, i)).collect();
+    for (id, line) in finished {
+        if let Some(&i) = index.get(&id) {
+            let c = &mut conns[i];
+            c.queue_response(&line);
+            c.inflight -= 1;
+            shared.stats.served.fetch_add(1, Ordering::Relaxed);
+        }
+        // connection already gone: drop the response
+    }
+    true
+}
+
+/// Bounded-grace drain: no more accepts or reads, but keep routing
+/// finished responses and flushing write buffers until every surviving
+/// connection has been paid what it is owed — or the grace expires.
+/// Without this, responses still in flight in the dispatcher at stop
+/// time were silently dropped with the sockets.
+fn drain_owed(mut conns: Vec<Conn>, shared: &Shared, cfg: &ServeConfig) {
+    let drain_deadline = std::time::Instant::now() + cfg.drain;
+    loop {
+        route_responses(&mut conns, shared);
         for c in conns.iter_mut() {
             c.flush();
         }

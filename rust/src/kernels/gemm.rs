@@ -22,9 +22,34 @@
 //! benches report packed-vs-naive speedup against them and the property
 //! tests pin equivalence on random shapes including ragged edge tiles.
 //!
+//! ## SIMD dispatch
+//!
+//! On top of the scalar tiles, hand-vectorized row kernels slot in under
+//! the same `[out, in]` unit-stride packing: AVX2+FMA and NEON paths for
+//! the f32 row, and a widening-multiply `i8` path (weights sign-extended
+//! to `i16`, activations narrowed once per call to `i16` when they fit,
+//! `madd`-style `i16*i16 -> i32` pair sums drained into `i64` lane
+//! accumulators well before `i32` overflow).  The backend is chosen once
+//! at startup ([`super::simd`]: `--simd`, `LIMPQ_SIMD`, else runtime
+//! detection) and the determinism contract is:
+//!
+//! * **Integer kernels are bit-exact** vs [`gemm_i64_naive`] on every
+//!   backend — integer addition is exact, so lane order cannot change a
+//!   sum; activations wider than `i16` (never produced by the quantizers,
+//!   which clamp to <= 8-bit ranges) fall back to the scalar row.
+//! * **f32 SIMD is deterministic per ISA and per thread count**: each
+//!   output is `hsum(lanes) + tail`, with the horizontal sum always
+//!   taken in ascending-lane order, so a given backend produces
+//!   bit-identical results at any `--threads`.  Across backends the
+//!   result may differ from scalar by reassociation only, bounded by
+//!   `2 * cols * EPSILON * sum_i |x_i * w_i|` per output (pinned by the
+//!   property tests); the scalar path remains the bit-exact-vs-naive
+//!   reference.
+//!
 //! [`WorkerPool`]: super::pool::WorkerPool
 
 use super::pool::WorkerPool;
+use super::simd::{active_simd, SimdBackend};
 
 /// Output rows produced per activation-row pass (register tile height).
 pub const TILE_OUT: usize = 4;
@@ -196,18 +221,49 @@ fn gemm_i64_row(xr: &[i64], w: &PackedI32, yr: &mut [i64]) {
 }
 
 /// `y[b, o] = sum_i x[b, i] * W[i, o]` with packed weights, sharded over
-/// batch rows on `pool` when the work clears [`PAR_MIN_MACS`].
-/// Bit-identical to [`gemm_f32_naive`] at any thread count.
+/// batch rows on `pool` when the work clears [`PAR_MIN_MACS`], on the
+/// globally selected SIMD backend ([`active_simd`]).  Deterministic at
+/// any thread count; with the scalar backend it is bit-identical to
+/// [`gemm_f32_naive`] (see the module header for the SIMD bound).
 pub fn gemm_f32(x: &[f32], batch: usize, w: &PackedF32, y: &mut [f32], pool: &WorkerPool) {
+    gemm_f32_with(x, batch, w, y, pool, active_simd());
+}
+
+/// [`gemm_f32`] on an explicit backend.  `backend` must be available on
+/// this machine ([`super::simd::available`]); benches and the property
+/// tests pin specific paths through this.
+pub fn gemm_f32_with(
+    x: &[f32],
+    batch: usize,
+    w: &PackedF32,
+    y: &mut [f32],
+    pool: &WorkerPool,
+    backend: SimdBackend,
+) {
     assert_eq!(x.len(), batch * w.cols, "activation size mismatch");
     assert_eq!(y.len(), batch * w.rows, "output size mismatch");
     if w.rows == 0 {
         return;
     }
+    debug_assert!(super::simd::available(backend), "unavailable SIMD backend");
     let pool = effective(pool, batch, w.rows, w.cols);
     pool.for_each_chunk(y, w.rows, |b, yr| {
-        gemm_f32_row(&x[b * w.cols..(b + 1) * w.cols], w, yr);
+        dispatch_f32_row(backend, &x[b * w.cols..(b + 1) * w.cols], w, yr);
     });
+}
+
+#[inline]
+fn dispatch_f32_row(backend: SimdBackend, xr: &[f32], w: &PackedF32, yr: &mut [f32]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selectable when runtime detection found
+        // AVX2+FMA (simd::available, asserted by the `_with` entry).
+        SimdBackend::Avx2 => unsafe { avx2::gemm_f32_row(xr, w, yr) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdBackend::Neon => unsafe { neon::gemm_f32_row(xr, w, yr) },
+        _ => gemm_f32_row(xr, w, yr),
+    }
 }
 
 /// Integer GEMM: i64 accumulation over i64 activation codes and packed
@@ -259,18 +315,411 @@ fn gemm_i8_row(xr: &[i64], w: &PackedI8, yr: &mut [i64]) {
 }
 
 /// Integer GEMM over `i8`-narrowed weight codes, i64 accumulation —
-/// identical results to [`gemm_i64`] (same codes, same order, exact
-/// arithmetic) at a quarter of the weight-stream footprint.
+/// identical results to [`gemm_i64`] (exact arithmetic, so the SIMD
+/// widening path is bit-exact too) at a quarter of the weight-stream
+/// footprint.  Dispatches on the global backend ([`active_simd`]).
 pub fn gemm_i8(codes: &[i64], batch: usize, w: &PackedI8, acc: &mut [i64], pool: &WorkerPool) {
+    gemm_i8_with(codes, batch, w, acc, pool, active_simd());
+}
+
+/// [`gemm_i8`] on an explicit backend (must be available on this
+/// machine).  The vector path narrows the activation codes to `i16`
+/// once per call; codes outside `i16` — never produced by the <= 8-bit
+/// quantizers — run the exact scalar rows instead.
+pub fn gemm_i8_with(
+    codes: &[i64],
+    batch: usize,
+    w: &PackedI8,
+    acc: &mut [i64],
+    pool: &WorkerPool,
+    backend: SimdBackend,
+) {
     assert_eq!(codes.len(), batch * w.cols, "code size mismatch");
     assert_eq!(acc.len(), batch * w.rows, "accumulator size mismatch");
     if w.rows == 0 {
         return;
     }
+    debug_assert!(super::simd::available(backend), "unavailable SIMD backend");
     let pool = effective(pool, batch, w.rows, w.cols);
+    if backend != SimdBackend::Scalar {
+        if let Some(x16) = narrow_codes_i16(codes) {
+            pool.for_each_chunk(acc, w.rows, |b, yr| {
+                dispatch_i8_row(backend, &x16[b * w.cols..(b + 1) * w.cols], w, yr);
+            });
+            return;
+        }
+    }
     pool.for_each_chunk(acc, w.rows, |b, yr| {
         gemm_i8_row(&codes[b * w.cols..(b + 1) * w.cols], w, yr);
     });
+}
+
+/// Activations narrowed once per call for the widening SIMD path (one
+/// `O(batch*cols)` pass vs `O(batch*rows*cols)` MACs); `None` when any
+/// code exceeds `i16`, in which case the scalar rows handle the call
+/// exactly.
+fn narrow_codes_i16(codes: &[i64]) -> Option<Vec<i16>> {
+    let mut out = Vec::with_capacity(codes.len());
+    for &c in codes {
+        if c < i16::MIN as i64 || c > i16::MAX as i64 {
+            return None;
+        }
+        out.push(c as i16);
+    }
+    Some(out)
+}
+
+#[inline]
+fn dispatch_i8_row(backend: SimdBackend, xr: &[i16], w: &PackedI8, yr: &mut [i64]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selectable when runtime detection found it.
+        SimdBackend::Avx2 => unsafe { avx2::gemm_i8_row(xr, w, yr) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdBackend::Neon => unsafe { neon::gemm_i8_row(xr, w, yr) },
+        // Unreachable under the availability contract; kept exact anyway.
+        _ => gemm_i8_row_i16(xr, w, yr),
+    }
+}
+
+/// Scalar rows over pre-narrowed `i16` activations (exact, like every
+/// integer path).  Only the defensive `_` dispatch arm reaches this.
+fn gemm_i8_row_i16(xr: &[i16], w: &PackedI8, yr: &mut [i64]) {
+    for (o, y) in yr.iter_mut().enumerate().take(w.rows) {
+        let wr = w.row(o);
+        let mut acc = 0i64;
+        for i in 0..w.cols {
+            acc += xr[i] as i64 * wr[i] as i64;
+        }
+        *y = acc;
+    }
+}
+
+/// AVX2+FMA row kernels.  Safety contract for every `pub unsafe fn`
+/// here: the caller has verified AVX2+FMA via runtime detection
+/// ([`super::simd::available`]); the dispatchers enforce it.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{PackedF32, PackedI8, TILE_OUT};
+    use std::arch::x86_64::*;
+
+    /// Ascending-lane horizontal sum — the **fixed order** that makes
+    /// the f32 SIMD path deterministic per ISA and thread count.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_ps(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        let mut s = 0.0f32;
+        for l in lanes {
+            s += l;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64(v: __m256i) -> i64 {
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    /// Single f32 dot: one 8-wide FMA chain + ordered hsum + scalar tail.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_f32(xr: &[f32], wr: &[f32]) -> f32 {
+        let n = xr.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(xr.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(xv, _mm256_loadu_ps(wr.as_ptr().add(i)), acc);
+            i += 8;
+        }
+        let mut s = hsum_ps(acc);
+        while i < n {
+            s += xr[i] * wr[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// f32 row kernel: the same [`TILE_OUT`]-tall tile as the scalar
+    /// path, but each of the four accumulator chains is an 8-wide FMA.
+    /// Per output the result is `hsum(lanes) + tail` in fixed order, so
+    /// a tiled output is bit-identical to [`dot_f32`] on the same row.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_f32_row(xr: &[f32], w: &PackedF32, yr: &mut [f32]) {
+        let rows = w.rows;
+        let n = xr.len();
+        let mut o = 0;
+        while o + TILE_OUT <= rows {
+            let w0 = w.row(o);
+            let w1 = w.row(o + 1);
+            let w2 = w.row(o + 2);
+            let w3 = w.row(o + 3);
+            let mut v0 = _mm256_setzero_ps();
+            let mut v1 = _mm256_setzero_ps();
+            let mut v2 = _mm256_setzero_ps();
+            let mut v3 = _mm256_setzero_ps();
+            let mut i = 0;
+            while i + 8 <= n {
+                let xv = _mm256_loadu_ps(xr.as_ptr().add(i));
+                v0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(w0.as_ptr().add(i)), v0);
+                v1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(w1.as_ptr().add(i)), v1);
+                v2 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(w2.as_ptr().add(i)), v2);
+                v3 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(w3.as_ptr().add(i)), v3);
+                i += 8;
+            }
+            let (mut a0, mut a1, mut a2, mut a3) =
+                (hsum_ps(v0), hsum_ps(v1), hsum_ps(v2), hsum_ps(v3));
+            while i < n {
+                let xv = xr[i];
+                a0 += xv * w0[i];
+                a1 += xv * w1[i];
+                a2 += xv * w2[i];
+                a3 += xv * w3[i];
+                i += 1;
+            }
+            yr[o] = a0;
+            yr[o + 1] = a1;
+            yr[o + 2] = a2;
+            yr[o + 3] = a3;
+            o += TILE_OUT;
+        }
+        while o < rows {
+            yr[o] = dot_f32(xr, w.row(o));
+            o += 1;
+        }
+    }
+
+    /// Cols per i32-accumulation block in the widening i8 path: with
+    /// `|x| <= 32768` and `|w| <= 128` each `madd` lane gains at most
+    /// `2 * 2^22 = 2^23` per step, so 128 steps of 16 cols peak at
+    /// `2^30` — drained into i64 lanes well before `i32` overflow.
+    const I8_BLOCK_COLS: usize = 128 * 16;
+
+    /// 16 weight codes sign-extended `i8 -> i16`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_w16(wr: &[i8], i: usize) -> __m256i {
+        _mm256_cvtepi8_epi16(_mm_loadu_si128(wr.as_ptr().add(i) as *const __m128i))
+    }
+
+    /// Widen an i32x8 block accumulator to i64 and fold it in (exact).
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold_epi64(acc: __m256i, block: __m256i) -> __m256i {
+        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(block));
+        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(block));
+        _mm256_add_epi64(acc, _mm256_add_epi64(lo, hi))
+    }
+
+    /// Single i8 dot over pre-narrowed `i16` activations:
+    /// `madd(i16*i16) -> i32` pair sums, blocked into i64 lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8(xr: &[i16], wr: &[i8]) -> i64 {
+        let n = xr.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= n {
+            let stop = usize::min(n, i + I8_BLOCK_COLS);
+            let mut b = _mm256_setzero_si256();
+            while i + 16 <= stop {
+                let xv = _mm256_loadu_si256(xr.as_ptr().add(i) as *const __m256i);
+                b = _mm256_add_epi32(b, _mm256_madd_epi16(xv, load_w16(wr, i)));
+                i += 16;
+            }
+            acc = fold_epi64(acc, b);
+        }
+        let mut s = hsum_epi64(acc);
+        while i < n {
+            s += xr[i] as i64 * wr[i] as i64;
+            i += 1;
+        }
+        s
+    }
+
+    /// Widening-multiply i8 row kernel, [`TILE_OUT`]-tall like the
+    /// scalar tile.  Bit-exact: every intermediate is an exact integer
+    /// sum (madd pairs in i32 within proven bounds, then i64).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_i8_row(xr: &[i16], w: &PackedI8, yr: &mut [i64]) {
+        let rows = w.rows;
+        let n = xr.len();
+        let mut o = 0;
+        while o + TILE_OUT <= rows {
+            let w0 = w.row(o);
+            let w1 = w.row(o + 1);
+            let w2 = w.row(o + 2);
+            let w3 = w.row(o + 3);
+            let mut acc0 = _mm256_setzero_si256();
+            let mut acc1 = _mm256_setzero_si256();
+            let mut acc2 = _mm256_setzero_si256();
+            let mut acc3 = _mm256_setzero_si256();
+            let mut i = 0;
+            while i + 16 <= n {
+                let stop = usize::min(n, i + I8_BLOCK_COLS);
+                let mut b0 = _mm256_setzero_si256();
+                let mut b1 = _mm256_setzero_si256();
+                let mut b2 = _mm256_setzero_si256();
+                let mut b3 = _mm256_setzero_si256();
+                while i + 16 <= stop {
+                    let xv = _mm256_loadu_si256(xr.as_ptr().add(i) as *const __m256i);
+                    b0 = _mm256_add_epi32(b0, _mm256_madd_epi16(xv, load_w16(w0, i)));
+                    b1 = _mm256_add_epi32(b1, _mm256_madd_epi16(xv, load_w16(w1, i)));
+                    b2 = _mm256_add_epi32(b2, _mm256_madd_epi16(xv, load_w16(w2, i)));
+                    b3 = _mm256_add_epi32(b3, _mm256_madd_epi16(xv, load_w16(w3, i)));
+                    i += 16;
+                }
+                acc0 = fold_epi64(acc0, b0);
+                acc1 = fold_epi64(acc1, b1);
+                acc2 = fold_epi64(acc2, b2);
+                acc3 = fold_epi64(acc3, b3);
+            }
+            let (mut a0, mut a1, mut a2, mut a3) =
+                (hsum_epi64(acc0), hsum_epi64(acc1), hsum_epi64(acc2), hsum_epi64(acc3));
+            while i < n {
+                let xv = xr[i] as i64;
+                a0 += xv * w0[i] as i64;
+                a1 += xv * w1[i] as i64;
+                a2 += xv * w2[i] as i64;
+                a3 += xv * w3[i] as i64;
+                i += 1;
+            }
+            yr[o] = a0;
+            yr[o + 1] = a1;
+            yr[o + 2] = a2;
+            yr[o + 3] = a3;
+            o += TILE_OUT;
+        }
+        while o < rows {
+            yr[o] = dot_i8(xr, w.row(o));
+            o += 1;
+        }
+    }
+}
+
+/// NEON row kernels (aarch64 only; NEON is baseline there, so the
+/// intrinsics need no runtime gate — the `unsafe` is the raw-pointer
+/// loads).  Same structure and determinism contract as the AVX2 module:
+/// fixed ascending-lane hsum for f32, exact integer accumulation for i8.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{PackedF32, PackedI8, TILE_OUT};
+    use std::arch::aarch64::*;
+
+    #[inline]
+    unsafe fn hsum_f32(v: float32x4_t) -> f32 {
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), v);
+        ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3]
+    }
+
+    #[inline]
+    unsafe fn hsum_s64(v: int64x2_t) -> i64 {
+        vgetq_lane_s64::<0>(v) + vgetq_lane_s64::<1>(v)
+    }
+
+    #[inline]
+    unsafe fn dot_f32(xr: &[f32], wr: &[f32]) -> f32 {
+        let n = xr.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = vld1q_f32(xr.as_ptr().add(i));
+            acc = vfmaq_f32(acc, xv, vld1q_f32(wr.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut s = hsum_f32(acc);
+        while i < n {
+            s += xr[i] * wr[i];
+            i += 1;
+        }
+        s
+    }
+
+    pub unsafe fn gemm_f32_row(xr: &[f32], w: &PackedF32, yr: &mut [f32]) {
+        let rows = w.rows;
+        let n = xr.len();
+        let mut o = 0;
+        while o + TILE_OUT <= rows {
+            let w0 = w.row(o);
+            let w1 = w.row(o + 1);
+            let w2 = w.row(o + 2);
+            let w3 = w.row(o + 3);
+            let mut v0 = vdupq_n_f32(0.0);
+            let mut v1 = vdupq_n_f32(0.0);
+            let mut v2 = vdupq_n_f32(0.0);
+            let mut v3 = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 4 <= n {
+                let xv = vld1q_f32(xr.as_ptr().add(i));
+                v0 = vfmaq_f32(v0, xv, vld1q_f32(w0.as_ptr().add(i)));
+                v1 = vfmaq_f32(v1, xv, vld1q_f32(w1.as_ptr().add(i)));
+                v2 = vfmaq_f32(v2, xv, vld1q_f32(w2.as_ptr().add(i)));
+                v3 = vfmaq_f32(v3, xv, vld1q_f32(w3.as_ptr().add(i)));
+                i += 4;
+            }
+            let (mut a0, mut a1, mut a2, mut a3) =
+                (hsum_f32(v0), hsum_f32(v1), hsum_f32(v2), hsum_f32(v3));
+            while i < n {
+                let xv = xr[i];
+                a0 += xv * w0[i];
+                a1 += xv * w1[i];
+                a2 += xv * w2[i];
+                a3 += xv * w3[i];
+                i += 1;
+            }
+            yr[o] = a0;
+            yr[o + 1] = a1;
+            yr[o + 2] = a2;
+            yr[o + 3] = a3;
+            o += TILE_OUT;
+        }
+        while o < rows {
+            yr[o] = dot_f32(xr, w.row(o));
+            o += 1;
+        }
+    }
+
+    /// Cols per i32 block: each `vmlal` step adds two products
+    /// (`<= 2^23` total) per lane, so 128 steps of 8 cols stay at
+    /// `2^30 < i32::MAX` before draining to i64.
+    const I8_BLOCK_COLS: usize = 128 * 8;
+
+    #[inline]
+    unsafe fn dot_i8(xr: &[i16], wr: &[i8]) -> i64 {
+        let n = xr.len();
+        let mut acc = vdupq_n_s64(0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let stop = usize::min(n, i + I8_BLOCK_COLS);
+            let mut b = vdupq_n_s32(0);
+            while i + 8 <= stop {
+                let xv = vld1q_s16(xr.as_ptr().add(i));
+                let wv = vmovl_s8(vld1_s8(wr.as_ptr().add(i)));
+                b = vmlal_s16(b, vget_low_s16(xv), vget_low_s16(wv));
+                b = vmlal_s16(b, vget_high_s16(xv), vget_high_s16(wv));
+                i += 8;
+            }
+            acc = vaddq_s64(acc, vpaddlq_s32(b));
+        }
+        let mut s = hsum_s64(acc);
+        while i < n {
+            s += xr[i] as i64 * wr[i] as i64;
+            i += 1;
+        }
+        s
+    }
+
+    pub unsafe fn gemm_i8_row(xr: &[i16], w: &PackedI8, yr: &mut [i64]) {
+        let rows = w.rows;
+        let mut o = 0;
+        // sdot-style tiling buys little here; the per-row widening dot
+        // already streams weights at unit stride with exact arithmetic.
+        while o < rows {
+            yr[o] = dot_i8(xr, w.row(o));
+            o += 1;
+        }
+    }
 }
 
 fn effective(pool: &WorkerPool, batch: usize, rows: usize, cols: usize) -> WorkerPool {
@@ -463,5 +912,115 @@ mod tests {
         assert_eq!(p.row(0), &[1.0, 4.0]);
         assert_eq!(p.row(1), &[2.0, 5.0]);
         assert_eq!(p.row(2), &[3.0, 6.0]);
+    }
+
+    /// Extra ragged shapes for the SIMD cross-checks: vector-width
+    /// remainders on both sides, a row long enough to cross the widening
+    /// path's i32-block boundary, and odd tile remainders.
+    const SIMD_SHAPES: &[(usize, usize, usize)] = &[
+        (2, 9, 6),
+        (3, 17, 5),
+        (1, 2049, 3), // crosses I8_BLOCK_COLS on every backend
+        (4, 515, 7),
+        (2, 40, 9),
+        (1, 8, 4), // exact vector multiples, no tail
+    ];
+
+    #[test]
+    fn detected_simd_i8_path_is_bit_exact_vs_naive() {
+        let backend = crate::kernels::simd::detect();
+        let mut rng = Rng::new(77);
+        for &(batch, in_f, out_f) in SHAPES.iter().chain(SIMD_SHAPES) {
+            let codes = rand_codes(&mut rng, batch * in_f, 127);
+            let wq: Vec<i32> =
+                (0..in_f * out_f).map(|_| (rng.below(256) as i32) - 128).collect();
+            let p8 = PackedI8::from_row_major(&wq, in_f, out_f);
+            let mut a_ref = vec![0i64; batch * out_f];
+            gemm_i64_naive(&codes, batch, &wq, in_f, out_f, &mut a_ref);
+            for threads in [1, 4] {
+                let mut a = vec![i64::MIN; batch * out_f];
+                gemm_i8_with(&codes, batch, &p8, &mut a, &WorkerPool::new(threads), backend);
+                assert_eq!(
+                    a,
+                    a_ref,
+                    "backend {} shape ({batch},{in_f},{out_f}) threads {threads}",
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wide_activation_codes_fall_back_to_the_exact_scalar_rows() {
+        let backend = crate::kernels::simd::detect();
+        let (batch, in_f, out_f) = (2, 21, 6);
+        let mut rng = Rng::new(5);
+        let mut codes = rand_codes(&mut rng, batch * in_f, 127);
+        codes[3] = 1 << 20; // exceeds i16: the narrowing pass must bail
+        let wq: Vec<i32> =
+            (0..in_f * out_f).map(|_| (rng.below(255) as i32) - 127).collect();
+        let p8 = PackedI8::from_row_major(&wq, in_f, out_f);
+        let mut a_ref = vec![0i64; batch * out_f];
+        gemm_i64_naive(&codes, batch, &wq, in_f, out_f, &mut a_ref);
+        let mut a = vec![0i64; batch * out_f];
+        gemm_i8_with(&codes, batch, &p8, &mut a, &WorkerPool::new(2), backend);
+        assert_eq!(a, a_ref);
+    }
+
+    /// The documented f32 SIMD divergence bound vs scalar: the paths
+    /// differ by reassociation only, so `2 * cols * eps * sum_i |x_i*w_i|`
+    /// per output (plus one subnormal to absorb an all-zero product).
+    fn f32_tol(xr: &[f32], wr: &[f32]) -> f32 {
+        let dot_abs: f64 = xr.iter().zip(wr).map(|(a, b)| f64::from((a * b).abs())).sum();
+        let n = xr.len().max(1) as f64;
+        (2.0 * n * f64::from(f32::EPSILON) * dot_abs) as f32 + f32::MIN_POSITIVE
+    }
+
+    #[test]
+    fn detected_simd_f32_path_is_deterministic_and_ulp_bounded() {
+        let backend = crate::kernels::simd::detect();
+        let mut rng = Rng::new(23);
+        for &(batch, in_f, out_f) in SHAPES.iter().chain(SIMD_SHAPES) {
+            let x = rand_f32(&mut rng, batch * in_f);
+            let w = rand_f32(&mut rng, in_f * out_f);
+            let packed = PackedF32::from_row_major(&w, in_f, out_f);
+            let mut y_scalar = vec![0.0f32; batch * out_f];
+            gemm_f32_with(
+                &x,
+                batch,
+                &packed,
+                &mut y_scalar,
+                &WorkerPool::new(1),
+                SimdBackend::Scalar,
+            );
+            let mut y1 = vec![f32::NAN; batch * out_f];
+            gemm_f32_with(&x, batch, &packed, &mut y1, &WorkerPool::new(1), backend);
+            let mut y4 = vec![f32::NAN; batch * out_f];
+            gemm_f32_with(&x, batch, &packed, &mut y4, &WorkerPool::new(4), backend);
+            // fixed lane-accumulation order => bit-identical across
+            // thread counts on the same backend
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(
+                bits(&y1),
+                bits(&y4),
+                "backend {} shape ({batch},{in_f},{out_f}) not thread-deterministic",
+                backend.name()
+            );
+            for b in 0..batch {
+                let xr = &x[b * in_f..(b + 1) * in_f];
+                for o in 0..out_f {
+                    let tol = f32_tol(xr, packed.row(o));
+                    let d = (y1[b * out_f + o] - y_scalar[b * out_f + o]).abs();
+                    assert!(
+                        d <= tol,
+                        "backend {} shape ({batch},{in_f},{out_f}) out ({b},{o}): \
+                         |{} - {}| = {d} > tol {tol}",
+                        backend.name(),
+                        y1[b * out_f + o],
+                        y_scalar[b * out_f + o]
+                    );
+                }
+            }
+        }
     }
 }

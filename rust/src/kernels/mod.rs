@@ -7,7 +7,11 @@
 //!   weights: [`gemm::PackedF32`] / [`gemm::PackedI32`] are built once per
 //!   model, then [`gemm::gemm_f32`] / [`gemm::gemm_i64`] run unit-stride
 //!   inner products, bit-identical to the naive references at any thread
-//!   count.
+//!   count.  Vectorized row kernels (AVX2+FMA, NEON, and a widening
+//!   `i8` path) slot in under the same tiling, selected once at startup
+//!   by [`simd`] (`--simd` / `LIMPQ_SIMD` / runtime detection); integer
+//!   SIMD stays bit-exact and f32 SIMD is deterministic per ISA within
+//!   a documented bound of scalar.
 //! * [`scratch`] — per-thread reusable buffer arena
 //!   ([`scratch::with_thread_scratch`]) so forwards stop allocating
 //!   per row/batch.
@@ -30,7 +34,11 @@
 pub mod gemm;
 pub mod pool;
 pub mod scratch;
+pub mod simd;
 
-pub use gemm::{gemm_f32, gemm_i64, gemm_i8, PackedF32, PackedI32, PackedI8};
+pub use gemm::{
+    gemm_f32, gemm_f32_with, gemm_i64, gemm_i8, gemm_i8_with, PackedF32, PackedI32, PackedI8,
+};
 pub use pool::{persistent_global, set_global_threads, PersistentPool, WorkerPool};
 pub use scratch::{with_thread_scratch, ScratchArena};
+pub use simd::{active_simd, set_global_simd, SimdBackend, SIMD_ENV};

@@ -1,0 +1,201 @@
+//! Runtime SIMD backend selection for the GEMM microkernels.
+//!
+//! The vectorized row kernels in [`super::gemm`] are compiled per-arch
+//! (`AVX2+FMA` on x86_64, NEON on aarch64) and selected **once at
+//! startup** from, in priority order:
+//!
+//! 1. `--simd auto|avx2|neon|scalar` (CLI, via [`set_global_simd`] —
+//!    forcing an ISA the machine lacks is an error),
+//! 2. the `LIMPQ_SIMD` environment variable (same values; an
+//!    unavailable forced ISA falls back to scalar rather than erroring,
+//!    so a pinned CI matrix stays portable),
+//! 3. auto-detection (`is_x86_feature_detected!` on x86_64; NEON is
+//!    baseline on aarch64).
+//!
+//! The scalar kernels are always kept as the reference path: integer
+//! SIMD must be bit-exact vs scalar (integer addition is exact, so the
+//! lane order cannot matter), while the f32 SIMD path fixes its
+//! lane-accumulation order so results are deterministic per ISA and
+//! per thread count, within a documented ULP-style bound of scalar
+//! (see the `gemm` module header).
+
+use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Environment variable consulted when no CLI override was given.
+pub const SIMD_ENV: &str = "LIMPQ_SIMD";
+
+/// A vectorization backend for the GEMM row kernels.
+///
+/// All variants exist on every arch (so CLI parsing and reporting are
+/// portable); [`available`] says whether one can actually run here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdBackend {
+    /// Portable scalar reference kernels (always available).
+    Scalar = 1,
+    /// AVX2 + FMA (x86_64, runtime-detected).
+    Avx2 = 2,
+    /// NEON (aarch64 baseline).
+    Neon = 3,
+}
+
+impl SimdBackend {
+    /// Stable lowercase name, used on the wire (`{"cmd":"stats"}`), in
+    /// bench records, and by the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+/// Best backend this machine supports.
+pub fn detect() -> SimdBackend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            SimdBackend::Avx2
+        } else {
+            SimdBackend::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdBackend::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdBackend::Scalar
+    }
+}
+
+/// Whether `b` can run on this machine.
+pub fn available(b: SimdBackend) -> bool {
+    match b {
+        SimdBackend::Scalar => true,
+        SimdBackend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        SimdBackend::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+enum Choice {
+    Auto,
+    Force(SimdBackend),
+}
+
+fn parse(s: &str) -> Result<Choice> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" => Ok(Choice::Auto),
+        "scalar" => Ok(Choice::Force(SimdBackend::Scalar)),
+        "avx2" => Ok(Choice::Force(SimdBackend::Avx2)),
+        "neon" => Ok(Choice::Force(SimdBackend::Neon)),
+        other => bail!("unknown SIMD backend {other:?} (expected auto|avx2|neon|scalar)"),
+    }
+}
+
+/// 0 = no process-wide override; otherwise a `SimdBackend` discriminant.
+static GLOBAL_SIMD: AtomicU8 = AtomicU8::new(0);
+
+fn from_discriminant(d: u8) -> Option<SimdBackend> {
+    match d {
+        1 => Some(SimdBackend::Scalar),
+        2 => Some(SimdBackend::Avx2),
+        3 => Some(SimdBackend::Neon),
+        _ => None,
+    }
+}
+
+/// The `LIMPQ_SIMD` / auto-detected default, resolved once.  A forced
+/// env value naming an unavailable ISA degrades to scalar (never to a
+/// crash): env pins are for reproducibility matrices, not hard errors.
+fn default_simd() -> SimdBackend {
+    static DEFAULT: OnceLock<SimdBackend> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var(SIMD_ENV) {
+            match parse(&v) {
+                Ok(Choice::Force(b)) => {
+                    return if available(b) { b } else { SimdBackend::Scalar };
+                }
+                Ok(Choice::Auto) | Err(_) => {}
+            }
+        }
+        detect()
+    })
+}
+
+/// Backend every dispatching GEMM call uses right now.
+pub fn active_simd() -> SimdBackend {
+    from_discriminant(GLOBAL_SIMD.load(Ordering::Relaxed)).unwrap_or_else(default_simd)
+}
+
+/// Install a process-wide backend from a CLI-style value
+/// (`auto|avx2|neon|scalar`).  Unlike the env fallback, forcing an ISA
+/// the machine lacks is a hard error — an operator who typed `--simd
+/// avx2` wants AVX2 or a refusal, not a silent scalar run.
+pub fn set_global_simd(value: &str) -> Result<SimdBackend> {
+    let b = match parse(value)? {
+        Choice::Auto => detect(),
+        Choice::Force(b) => {
+            ensure!(
+                available(b),
+                "SIMD backend {:?} is not available on this machine (detected: {})",
+                b.name(),
+                detect().name()
+            );
+            b
+        }
+    };
+    GLOBAL_SIMD.store(b as u8, Ordering::Relaxed);
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for b in [SimdBackend::Scalar, SimdBackend::Avx2, SimdBackend::Neon] {
+            match parse(b.name()).unwrap() {
+                Choice::Force(got) => assert_eq!(got, b),
+                Choice::Auto => panic!("named backend parsed as auto"),
+            }
+        }
+        assert!(matches!(parse("auto").unwrap(), Choice::Auto));
+        assert!(matches!(parse("  AVX2 ").unwrap(), Choice::Force(SimdBackend::Avx2)));
+        assert!(parse("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detection_is_runnable() {
+        assert!(available(SimdBackend::Scalar));
+        // whatever detect() picks must be runnable here
+        assert!(available(detect()));
+        // the active backend is runnable too (env may have pinned it)
+        assert!(available(active_simd()));
+    }
+
+    #[test]
+    fn forcing_an_unavailable_isa_errors() {
+        // at most one of avx2/neon can be available on a given arch, so
+        // one of these must refuse; scalar must always be accepted.
+        // NOTE: does not call set_global_simd on valid inputs to avoid
+        // mutating process-wide dispatch under a shared test binary.
+        let both_ok = available(SimdBackend::Avx2) && available(SimdBackend::Neon);
+        assert!(!both_ok, "avx2 and neon can never coexist");
+        assert!(set_global_simd("bogus").is_err());
+    }
+}

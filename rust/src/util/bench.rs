@@ -132,7 +132,11 @@ pub fn black_box<T>(x: T) -> T {
 /// One machine-readable `BENCH_*.json` record — the one schema every
 /// bench binary emits (`op`, `size`, `threads`, `ns_per_iter`,
 /// `throughput` = `items`/sec at the measured mean), so the CI
-/// regression-diff job never sees two shapes drift apart.
+/// regression-diff job never sees two shapes drift apart.  Every record
+/// also stamps the session-active `simd` and `poll` backends, so
+/// `tools/bench_diff.py` can refuse to compare numbers measured on
+/// different hardware paths (forced-path bench ops additionally carry
+/// the forcing in their `op` names).
 pub fn json_record(
     op: &str,
     size: &str,
@@ -148,6 +152,8 @@ pub fn json_record(
         ("threads", Json::Num(threads as f64)),
         ("ns_per_iter", Json::Num(ns)),
         ("throughput", Json::Num(items / (ns / 1e9))),
+        ("simd", Json::Str(crate::kernels::active_simd().name().to_string())),
+        ("poll", Json::Str(crate::fleet::PollBackend::default().name().to_string())),
     ])
 }
 
@@ -168,6 +174,19 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.mean.as_nanos() > 0);
         assert!(s.p95 >= s.median);
+    }
+
+    #[test]
+    fn json_records_stamp_the_active_backends() {
+        let b = Bench {
+            budget: Duration::from_millis(5),
+            warmup: Duration::from_millis(1),
+            max_iters: 50,
+        };
+        let s = b.run("stamp_probe", || 1u64);
+        let rec = json_record("stamp_probe", "1", 1, &s, 1.0).to_string();
+        assert!(rec.contains("\"simd\""), "record must carry the simd backend: {rec}");
+        assert!(rec.contains("\"poll\""), "record must carry the poll backend: {rec}");
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! injected faults (solver panics, slow solves, flaky model loads) driven
 //! through real sockets, asserting the robustness contract — every
 //! request gets exactly one response (solved or degraded), per-connection
-//! order holds, and the server stays up.
+//! order holds, and the server stays up.  The mux-sensitive scenarios
+//! run once per available poll backend (`PollBackend::matrix`).
 //!
 //! Artifact-free (synthetic model meta): always runs.
 
@@ -15,7 +16,7 @@ use limpq::engine::{
     BranchAndBound, PolicyEngine, SolveBudget, SolveOutcome, Solver, SolverRegistry,
 };
 use limpq::fleet::faults::{flaky_entry_builder, FaultPlan, FaultySolver};
-use limpq::fleet::{query, FleetServer, ServeConfig};
+use limpq::fleet::{query, FleetServer, PollBackend, ServeConfig};
 use limpq::importance::IndicatorStore;
 use limpq::models::{synthetic_meta, ModelMeta};
 use limpq::quant::cost::uniform_bitops;
@@ -48,6 +49,12 @@ fn faulty_server(plan: FaultPlan, scfg: ServeConfig) -> FleetServer {
 /// afterwards.
 #[test]
 fn chaos_plan_answers_every_request_exactly_once_in_order() {
+    for poll in PollBackend::matrix() {
+        chaos_plan_exactly_once_under(poll);
+    }
+}
+
+fn chaos_plan_exactly_once_under(poll: PollBackend) {
     const CLIENTS: usize = 4;
     const PER_CLIENT: usize = 12;
     let server = faulty_server(
@@ -62,6 +69,7 @@ fn chaos_plan_answers_every_request_exactly_once_in_order() {
             default_deadline: Some(Duration::from_millis(60)),
             // this test is about deadlines and panics, not shedding
             breaker_threshold: 1_000,
+            poll,
             ..Default::default()
         },
     );
@@ -158,10 +166,16 @@ fn slow_server(delay: Duration, scfg: ServeConfig) -> FleetServer {
 /// connection: a fast solve pipelined behind the slow one waits for it.
 #[test]
 fn slow_solve_streams_past_its_batch_siblings_but_not_its_own_conn() {
+    for poll in PollBackend::matrix() {
+        slow_solve_streams_under(poll);
+    }
+}
+
+fn slow_solve_streams_under(poll: PollBackend) {
     let delay = Duration::from_millis(1500);
     let server = slow_server(
         delay,
-        ServeConfig { coalesce_window: Duration::from_millis(50), ..Default::default() },
+        ServeConfig { coalesce_window: Duration::from_millis(50), poll, ..Default::default() },
     );
     let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
 
@@ -220,6 +234,12 @@ fn slow_solve_streams_past_its_batch_siblings_but_not_its_own_conn() {
 /// call), and after the cooldown one half-open probe recovers it.
 #[test]
 fn breaker_trips_sheds_then_half_open_probe_recovers() {
+    for poll in PollBackend::matrix() {
+        breaker_lifecycle_under(poll);
+    }
+}
+
+fn breaker_lifecycle_under(poll: PollBackend) {
     let meta = meta_n(6);
     let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
     // The first two solver calls panic; every later call is clean.
@@ -238,7 +258,7 @@ fn breaker_trips_sheds_then_half_open_probe_recovers() {
         registry,
         "m",
         "127.0.0.1:0",
-        ServeConfig { breaker_threshold: 2, breaker_cooldown: cooldown, ..Default::default() },
+        ServeConfig { breaker_threshold: 2, breaker_cooldown: cooldown, poll, ..Default::default() },
     )
     .unwrap();
     let base = uniform_bitops(&meta, 4, 4);
@@ -435,9 +455,15 @@ fn degraded_policy_is_bit_identical_across_pool_modes() {
 /// with the socket.
 #[test]
 fn shutdown_drains_the_owed_response() {
+    for poll in PollBackend::matrix() {
+        shutdown_drains_under(poll);
+    }
+}
+
+fn shutdown_drains_under(poll: PollBackend) {
     let server = slow_server(
         Duration::from_millis(300),
-        ServeConfig { drain: Duration::from_millis(2_000), ..Default::default() },
+        ServeConfig { drain: Duration::from_millis(2_000), poll, ..Default::default() },
     );
     let cap_g = uniform_bitops(&meta_n(4), 4, 4) as f64 / 1e9;
     let stream = TcpStream::connect(server.addr).unwrap();

@@ -1,6 +1,10 @@
 //! Integration tests for the event-driven fleet serving stack:
 //! multiplexer → queue → coalescing dispatcher → single-flight engine.
 //!
+//! Every wire test runs once per available poll backend
+//! ([`PollBackend::matrix`]) — the epoll and sweep multiplexers must be
+//! behaviorally indistinguishable to clients.
+//!
 //! Artifact-free (synthetic model meta): always runs.
 
 use std::io::{BufRead, BufReader, Write};
@@ -10,7 +14,7 @@ use std::time::{Duration, Instant};
 use limpq::engine::{
     BranchAndBound, PolicyEngine, SolveBudget, SolveOutcome, Solver, SolverRegistry,
 };
-use limpq::fleet::{query, FleetSearcher, FleetServer, ServeConfig};
+use limpq::fleet::{query, FleetSearcher, FleetServer, PollBackend, ServeConfig};
 use limpq::importance::IndicatorStore;
 use limpq::models::{synthetic_meta, ModelMeta};
 use limpq::quant::cost::uniform_bitops;
@@ -27,30 +31,44 @@ fn searcher() -> FleetSearcher {
     FleetSearcher::new(meta, imp)
 }
 
+/// A default config pinned to one poll backend (every test body takes
+/// the backend so the whole suite runs under each available mux).
+fn cfg_with(poll: PollBackend) -> ServeConfig {
+    ServeConfig { poll, ..Default::default() }
+}
+
 /// The satellite regression for the old shutdown hang: a client that
 /// connects and never writes must not keep `shutdown()` from returning
 /// (the pre-refactor per-connection thread blocked forever in `read`).
 #[test]
 fn shutdown_completes_promptly_with_idle_connections_open() {
-    let s = searcher();
-    let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
-    let idle1 = TcpStream::connect(server.addr).unwrap();
-    let idle2 = TcpStream::connect(server.addr).unwrap();
-    std::thread::sleep(Duration::from_millis(50)); // let the mux register them
-    let t = Instant::now();
-    server.shutdown();
-    let elapsed = t.elapsed();
-    assert!(elapsed < Duration::from_secs(5), "shutdown hung for {elapsed:?}");
-    drop((idle1, idle2));
+    for poll in PollBackend::matrix() {
+        let s = searcher();
+        let server = FleetServer::spawn_with(s, "127.0.0.1:0", cfg_with(poll)).unwrap();
+        let idle1 = TcpStream::connect(server.addr).unwrap();
+        let idle2 = TcpStream::connect(server.addr).unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // let the mux register them
+        let t = Instant::now();
+        server.shutdown();
+        let elapsed = t.elapsed();
+        assert!(elapsed < Duration::from_secs(5), "[{poll:?}] shutdown hung for {elapsed:?}");
+        drop((idle1, idle2));
+    }
 }
 
 /// The legacy one-line-JSON request/response contract from PR 1/2
 /// clients round-trips unchanged through the new stack.
 #[test]
 fn legacy_protocol_roundtrip_unchanged() {
+    for poll in PollBackend::matrix() {
+        legacy_protocol_roundtrip_under(poll);
+    }
+}
+
+fn legacy_protocol_roundtrip_under(poll: PollBackend) {
     let s = searcher();
     let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
-    let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
+    let server = FleetServer::spawn_with(s, "127.0.0.1:0", cfg_with(poll)).unwrap();
     let req = Json::obj(vec![
         ("name", Json::from("phone")),
         ("cap_gbitops", Json::Num(cap_g)),
@@ -86,9 +104,15 @@ fn legacy_protocol_roundtrip_unchanged() {
 /// connection keeps working afterwards.
 #[test]
 fn malformed_and_blank_lines_are_tolerated_per_connection() {
+    for poll in PollBackend::matrix() {
+        malformed_and_blank_lines_under(poll);
+    }
+}
+
+fn malformed_and_blank_lines_under(poll: PollBackend) {
     let s = searcher();
     let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
-    let server = FleetServer::spawn(s, "127.0.0.1:0").unwrap();
+    let server = FleetServer::spawn_with(s, "127.0.0.1:0", cfg_with(poll)).unwrap();
     let stream = TcpStream::connect(server.addr).unwrap();
     stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
     let mut writer = stream.try_clone().unwrap();
@@ -116,6 +140,12 @@ fn malformed_and_blank_lines_are_tolerated_per_connection() {
 /// payloads for the identical requests.
 #[test]
 fn stress_concurrent_clients_single_flight_and_order() {
+    for poll in PollBackend::matrix() {
+        stress_concurrent_clients_under(poll);
+    }
+}
+
+fn stress_concurrent_clients_under(poll: PollBackend) {
     const CLIENTS: usize = 8;
     let s = searcher();
     let stats_view = s.clone();
@@ -124,7 +154,7 @@ fn stress_concurrent_clients_single_flight_and_order() {
     let server = FleetServer::spawn_with(
         s,
         "127.0.0.1:0",
-        ServeConfig { coalesce_window: Duration::from_micros(500), ..Default::default() },
+        ServeConfig { coalesce_window: Duration::from_micros(500), poll, ..Default::default() },
     )
     .unwrap();
     let addr = server.addr;
@@ -203,6 +233,11 @@ fn stress_concurrent_clients_single_flight_and_order() {
     // Operator stats over the wire.
     let stats = query(&addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
     assert!(stats.get("ok").unwrap().as_bool().unwrap(), "{stats}");
+    // The selected backends are reported to operators.
+    assert_eq!(stats.get("poll").unwrap().as_str().unwrap(), poll.name(), "{stats}");
+    assert!(!stats.get("simd").unwrap().as_str().unwrap().is_empty(), "{stats}");
+    assert_eq!(stats.get("accept_errors").unwrap().as_usize().unwrap(), 0, "{stats}");
+    assert!(stats.get("idle_wakeups").unwrap().as_usize().is_ok(), "{stats}");
     assert_eq!(stats.get("served").unwrap().as_usize().unwrap(), 4 * CLIENTS);
     assert!(stats.get("batches").unwrap().as_usize().unwrap() >= 1);
     assert!(stats.get("coalesced_batch_size").unwrap().as_usize().unwrap() >= 1);
@@ -244,6 +279,12 @@ impl Solver for PanicSolver {
 /// in `degraded_reason` and the stats counters.
 #[test]
 fn solver_panic_answers_with_error_and_server_keeps_serving() {
+    for poll in PollBackend::matrix() {
+        solver_panic_keeps_serving_under(poll);
+    }
+}
+
+fn solver_panic_keeps_serving_under(poll: PollBackend) {
     let meta = meta6();
     let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
     let cap_g = uniform_bitops(&meta, 4, 4) as f64 / 1e9;
@@ -251,7 +292,9 @@ fn solver_panic_answers_with_error_and_server_keeps_serving() {
         vec![std::sync::Arc::new(PanicSolver), std::sync::Arc::new(BranchAndBound)],
     )));
     let engine = PolicyEngine::with_registry(meta, imp, 64, registry);
-    let server = FleetServer::spawn(FleetSearcher::from_engine(engine), "127.0.0.1:0").unwrap();
+    let server =
+        FleetServer::spawn_with(FleetSearcher::from_engine(engine), "127.0.0.1:0", cfg_with(poll))
+            .unwrap();
 
     // Drive it manually with a read timeout: if the dispatcher dies, the
     // old behavior is an unanswered socket, which must fail fast here.
@@ -290,34 +333,42 @@ fn solver_panic_answers_with_error_and_server_keeps_serving() {
 /// The scoped (non-persistent) pool mode serves the same protocol.
 #[test]
 fn scoped_pool_mode_roundtrips() {
-    let s = searcher();
-    let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
-    let server = FleetServer::spawn_with(
-        s,
-        "127.0.0.1:0",
-        ServeConfig { persistent_pool: false, ..Default::default() },
-    )
-    .unwrap();
-    let req = Json::obj(vec![("cap_gbitops", Json::Num(cap_g))]);
-    let resp = query(&server.addr, &req).unwrap();
-    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
-    let resp2 = query(&server.addr, &req).unwrap();
-    assert!(resp2.get("cache_hit").unwrap().as_bool().unwrap());
-    let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
-    assert!(!stats.get("persistent_pool").unwrap().as_bool().unwrap());
-    server.shutdown();
+    for poll in PollBackend::matrix() {
+        let s = searcher();
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+        let server = FleetServer::spawn_with(
+            s,
+            "127.0.0.1:0",
+            ServeConfig { persistent_pool: false, poll, ..Default::default() },
+        )
+        .unwrap();
+        let req = Json::obj(vec![("cap_gbitops", Json::Num(cap_g))]);
+        let resp = query(&server.addr, &req).unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+        let resp2 = query(&server.addr, &req).unwrap();
+        assert!(resp2.get("cache_hit").unwrap().as_bool().unwrap());
+        let stats = query(&server.addr, &Json::obj(vec![("cmd", Json::from("stats"))])).unwrap();
+        assert!(!stats.get("persistent_pool").unwrap().as_bool().unwrap());
+        server.shutdown();
+    }
 }
 
 /// Connections past `max_conns` are rejected with a 503-style error
 /// line, and capacity frees up once a client disconnects.
 #[test]
 fn overload_rejects_with_503_style_error_then_recovers() {
+    for poll in PollBackend::matrix() {
+        overload_rejects_then_recovers_under(poll);
+    }
+}
+
+fn overload_rejects_then_recovers_under(poll: PollBackend) {
     let s = searcher();
     let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
     let server = FleetServer::spawn_with(
         s,
         "127.0.0.1:0",
-        ServeConfig { max_conns: 1, ..Default::default() },
+        ServeConfig { max_conns: 1, poll, ..Default::default() },
     )
     .unwrap();
     // Occupy the single slot (a full round-trip guarantees registration).
@@ -362,12 +413,18 @@ fn overload_rejects_with_503_style_error_then_recovers() {
 /// long coalesce window still answers a lone request.
 #[test]
 fn coalescing_batches_bursts() {
+    for poll in PollBackend::matrix() {
+        coalescing_batches_bursts_under(poll);
+    }
+}
+
+fn coalescing_batches_bursts_under(poll: PollBackend) {
     let s = searcher();
     let base = uniform_bitops(s.meta(), 4, 4);
     let server = FleetServer::spawn_with(
         s,
         "127.0.0.1:0",
-        ServeConfig { coalesce_window: Duration::from_millis(20), ..Default::default() },
+        ServeConfig { coalesce_window: Duration::from_millis(20), poll, ..Default::default() },
     )
     .unwrap();
     // One connection pipelines a burst of distinct requests in one write.
@@ -396,4 +453,44 @@ fn coalescing_batches_bursts() {
         sv.coalesced_batch_max
     );
     server.shutdown();
+}
+
+/// The epoll backend's whole point: with an idle client attached, the
+/// kernel-blocked mux makes (near) zero wakeups while the sweep backend
+/// ticks every `POLL_IDLE` (1ms) — both observable via the `idle_wakeups`
+/// counter.  The epoll bound allows for the 100ms safety-net timeout
+/// (a few wakeups per observation window) but not a 1ms tick loop.
+#[test]
+fn epoll_backend_sleeps_while_sweep_ticks_when_idle() {
+    for poll in PollBackend::matrix() {
+        let s = searcher();
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+        let server = FleetServer::spawn_with(s, "127.0.0.1:0", cfg_with(poll)).unwrap();
+        // An attached, idle keep-alive client (one roundtrip proves the
+        // connection is registered with the mux before we observe).
+        let stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writer.write_all(format!("{{\"cap_gbitops\": {cap_g}}}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(line.trim()).unwrap().get("ok").unwrap().as_bool().unwrap());
+
+        let before = server.stats().idle_wakeups;
+        std::thread::sleep(Duration::from_millis(400));
+        let wakeups = server.stats().idle_wakeups - before;
+        match poll {
+            PollBackend::Sweep => assert!(
+                wakeups > 50,
+                "sweep backend should tick while idle, saw only {wakeups} wakeups"
+            ),
+            PollBackend::Epoll => assert!(
+                wakeups < 20,
+                "epoll backend should sleep in the kernel while idle, saw {wakeups} wakeups"
+            ),
+        }
+        server.shutdown();
+        drop((writer, reader, stream));
+    }
 }

@@ -8,6 +8,13 @@
 # warm cache) so the perf trajectory is tracked from PR 2 onward —
 # compare the files across commits to catch regressions.
 #
+# The kernel artifact includes forced gemm_f32_simd / gemm_i8_simd tiers
+# against forced gemm_*_scalar baselines (where a vector ISA is
+# detected), and the fleet artifact includes a fleet_epoll / fleet_sweep
+# readiness-backend tier (where epoll is available).  Every record
+# stamps the session-active "simd" and "poll" backends; set LIMPQ_SIMD /
+# LIMPQ_POLL to pin them for a run.
+#
 # Usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--quick]
 #   --out FILE        where to write the kernel records (default BENCH_kernels.json)
 #   --fleet-out FILE  where to write the fleet records (default BENCH_fleet.json)

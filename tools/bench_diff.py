@@ -8,6 +8,13 @@ crate's `util::bench::json_record`.  Records are matched on
 better), falling back to ns_per_iter (lower is better) when a record
 carries no throughput.
 
+Records also stamp the measured "simd" and "poll" backends.  A pair of
+records whose backends disagree (e.g. the baseline ran AVX2 kernels and
+the current run is scalar, or vice versa) is skipped with a note rather
+than compared — the delta would measure the hardware path, not the
+code.  Records without backend fields (pre-stamping baselines) compare
+as before.
+
 Usage:
     tools/bench_diff.py BASELINE CURRENT [--threshold PCT] [--strict]
 
@@ -50,6 +57,17 @@ def metric(record):
     return float(record["ns_per_iter"]), False
 
 
+def backend_mismatch(base, cur):
+    """(field, base_value, cur_value) when the two records were measured
+    on different simd/poll backends; None when comparable.  A record
+    missing the field (a pre-stamping baseline) never mismatches."""
+    for field in ("simd", "poll"):
+        bval, cval = base.get(field), cur.get(field)
+        if bval is not None and cval is not None and bval != cval:
+            return field, bval, cval
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline")
@@ -79,10 +97,20 @@ def main():
     regressions = []
     improved = 0
     compared = 0
+    skipped = 0
     for key, c in sorted(cur.items()):
         b = base.get(key)
         if b is None:
             print(f"  new  {key[0]} [{key[1]}, t={key[2]}] (no baseline record)")
+            continue
+        mismatch = backend_mismatch(b, c)
+        if mismatch:
+            skipped += 1
+            field, bval, cval = mismatch
+            print(
+                f"  skip {key[0]} [{key[1]}, t={key[2]}]: "
+                f"{field} backend changed ({bval} -> {cval}); not comparable"
+            )
             continue
         compared += 1
         cv, higher_better = metric(c)
@@ -110,7 +138,8 @@ def main():
 
     print(
         f"bench_diff: {compared} compared, {len(regressions)} regressions "
-        f"(> {args.threshold:.0f}% slower), {improved} improvements"
+        f"(> {args.threshold:.0f}% slower), {improved} improvements, "
+        f"{skipped} skipped (backend mismatch)"
     )
     if regressions and args.strict:
         return 1

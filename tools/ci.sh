@@ -33,7 +33,15 @@ fi
 echo "==> cargo build --release"
 cargo build --release
 
-echo "==> cargo test -q"
+# The suite runs twice: once pinned to the portable reference backends
+# (scalar kernels + sweep mux) and once with auto-detected backends
+# (AVX2/NEON kernels + epoll on Linux).  `cargo test -q` must pass
+# identically under both — the SIMD determinism contract and the
+# backend-agnostic mux semantics are both exercised on every change.
+echo "==> cargo test -q (LIMPQ_SIMD=scalar LIMPQ_POLL=sweep)"
+LIMPQ_SIMD=scalar LIMPQ_POLL=sweep cargo test -q
+
+echo "==> cargo test -q (auto-detected simd + poll backends)"
 cargo test -q
 
 # The wire-level robustness gate, run by name so a fault-tolerance
@@ -55,8 +63,16 @@ else
     echo "rustfmt not installed; skipping format check"
 fi
 
-echo "==> bench smoke (quick kernel + fleet-serving tiers)"
+echo "==> bench smoke (quick kernel + fleet-serving tiers, auto backends)"
 bash tools/bench.sh --quick --out BENCH_kernels.json --fleet-out BENCH_fleet.json
+
+# A second artifact variant pinned to the scalar/sweep reference
+# backends, so bench_diff always has a like-for-like baseline even when
+# the runner hardware (and therefore the auto-detected SIMD path)
+# changes between runs.
+echo "==> bench smoke (quick, scalar/sweep reference backends)"
+LIMPQ_SIMD=scalar LIMPQ_POLL=sweep bash tools/bench.sh --quick \
+    --out BENCH_kernels_scalar.json --fleet-out BENCH_fleet_scalar.json
 
 # CHANGES.md append discipline: any change relative to the main branch
 # must carry a CHANGES.md update, so the next session knows what landed.
