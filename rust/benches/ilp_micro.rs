@@ -32,10 +32,10 @@ fn instance(layers: usize, opts: &[(u8, u8)], seed: u64, tightness: f64) -> MpqP
                 size_bits: numel * wb as u64,
             });
         }
-        p.layers.push(lo);
+        p.groups.push(lo);
     }
-    let max: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.bitops).max().unwrap()).sum();
-    let min: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.bitops).min().unwrap()).sum();
+    let max: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.bitops).max().unwrap()).sum();
+    let min: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.bitops).min().unwrap()).sum();
     p.bitops_cap = Some(min + ((max - min) as f64 * tightness) as u64);
     p
 }
@@ -79,7 +79,7 @@ fn main() {
 
     // Two-constraint instance (Table 3 shape)
     let mut p2c = instance(30, &pairs, 4, 0.5);
-    let smax: u64 = p2c.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+    let smax: u64 = p2c.groups.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
     p2c.size_cap_bits = Some(smax / 2);
     bench.run("bb_two_constraint(30L)", || solve_bb(&p2c, 10_000_000).unwrap());
 

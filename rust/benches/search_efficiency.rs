@@ -10,20 +10,134 @@
 use std::path::Path;
 
 use limpq::coordinator::checkpoint::Cache;
-use limpq::engine::{PolicyEngine, SearchRequest};
+use limpq::engine::{CancelToken, PolicyEngine, SearchRequest};
 use limpq::importance::IndicatorStore;
+use limpq::kernels::pool::WorkerPool;
 use limpq::models::{list_models, ModelMeta};
 use limpq::quant::cost::uniform_bitops;
-use limpq::util::bench::Bench;
+use limpq::search::lagrange::solve_lagrange;
+use limpq::search::{prune_dominated, Granularity, MpqProblem};
+use limpq::util::bench::{json_out_arg, json_record, Bench};
+use limpq::util::json::Json;
 use limpq::util::rng::Rng;
 
+/// ResNet18-shaped meta with real output-channel counts (stem, four
+/// stages of BasicBlocks, classifier; first/last pinned).  Channel
+/// granularity turns it into a fine-grained MCKP instance: channel:8
+/// splits the 3840 unpinned channels into 480 groups of 36 (w, a)
+/// options each; kernel granularity goes all the way to 3840 groups.
+fn resnet18_like_meta() -> ModelMeta {
+    let chans: [usize; 18] =
+        [64, 64, 64, 64, 64, 128, 128, 128, 128, 256, 256, 256, 256, 512, 512, 512, 512, 10];
+    let mut params = String::new();
+    let mut qlayers = String::new();
+    let mut off = 0usize;
+    for (i, &c) in chans.iter().enumerate() {
+        let size = c * 16;
+        if i > 0 {
+            params.push(',');
+            qlayers.push(',');
+        }
+        params.push_str(&format!(
+            r#"{{"name":"l{i}.w","shape":[{c},16],"offset":{off},"size":{size},"init":"he_dense","fan_in":16}}"#
+        ));
+        qlayers.push_str(&format!(
+            r#"{{"index":{i},"name":"l{i}","kind":"conv","macs":{},"w_numel":{size},"pinned":{}}}"#,
+            size as u64 * 49,
+            i == 0 || i + 1 == chans.len()
+        ));
+        off += size;
+    }
+    let text = format!(
+        r#"{{"name":"resnet18_like","param_size":{off},"n_qlayers":{},
+          "input_shape":[8,8,3],"n_classes":10,
+          "train_batch":4,"eval_batch":8,"serve_batch":2,
+          "bit_options":[2,3,4,5,6,8],"pin_bits":8,
+          "params":[{params}],"qlayers":[{qlayers}],"artifacts":{{}}}}"#,
+        chans.len()
+    );
+    ModelMeta::from_json(&Json::parse(&text).unwrap(), Path::new("/tmp")).unwrap()
+}
+
+/// The fine-granularity tiers: the decomposed Lagrangian solver core on
+/// the same ResNet18-scale instance at layer / channel:8 / kernel
+/// granularity.  Each tier records wall time at 1 thread with dominance
+/// pruning off (the disabled baseline) and at N threads on the pruned
+/// instance, plus the prune ratio and the rounded-vs-bound gap — the
+/// numbers the CI regression diff watches.
+fn fine_granularity_tiers(bench: &Bench) -> Vec<Json> {
+    let meta = resnet18_like_meta();
+    let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
+    // A small alpha weights activation importance; on the (w, a) grid
+    // that leaves many dominated combinations for the pruner to drop.
+    let alpha = 0.1;
+    let cap = uniform_bitops(&meta, 4, 4);
+    let pool = WorkerPool::global();
+    let threads = pool.threads();
+    let base_pool = WorkerPool::new(1);
+    let mut records = Vec::new();
+    for (tier, g) in [
+        ("search_fine_layer", Granularity::Layer),
+        ("search_fine_channel", Granularity::ChannelGroup(8)),
+        ("search_fine_kernel", Granularity::Kernel),
+    ] {
+        let p = MpqProblem::from_importance(&meta, &imp, alpha, Some(cap), None, false, g);
+        let n_vars = p.n_vars();
+        let pruned = prune_dominated(&p);
+        let prune_ratio = pruned.dropped as f64 / n_vars.max(1) as f64;
+        let size = format!("vars={n_vars}");
+        let base = bench.run(&format!("{tier}_base(vars={n_vars},t=1)"), || {
+            solve_lagrange(&p, &base_pool, None, &CancelToken::none()).unwrap()
+        });
+        let (sol, st) = solve_lagrange(&pruned.problem, &pool, None, &CancelToken::none())
+            .expect("fine solve");
+        let gap = (sol.cost - st.bound).max(0.0) / sol.cost.abs().max(1e-12);
+        let fast = bench.run(&format!("{tier}(vars={n_vars},t={threads})"), || {
+            solve_lagrange(&pruned.problem, &pool, None, &CancelToken::none()).unwrap()
+        });
+        let speedup = base.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12);
+        println!(
+            "{tier}: {n_vars} vars, {:.0}% pruned, bound gap {:.3}%, \
+             {speedup:.1}x vs pruning+parallelism disabled",
+            100.0 * prune_ratio,
+            100.0 * gap,
+        );
+        if tier == "search_fine_channel" && speedup < 5.0 {
+            println!("WARNING: {tier} speedup {speedup:.1}x below the 5x target");
+        }
+        for (stats, t) in [(&base, 1usize), (&fast, threads)] {
+            let mut rec = json_record(tier, &size, t, stats, 1.0);
+            if let Json::Obj(m) = &mut rec {
+                m.insert("vars".into(), Json::Num(n_vars as f64));
+                m.insert("prune_ratio".into(), Json::Num(prune_ratio));
+                m.insert("bound_gap".into(), Json::Num(gap));
+                m.insert("speedup".into(), Json::Num(speedup));
+            }
+            records.push(rec);
+        }
+    }
+    records
+}
+
 fn main() {
+    let json_path = json_out_arg();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+
+    // The synthetic fine-granularity tiers run (and emit BENCH_search
+    // records) even without built artifacts, so CI smoke always gets an
+    // artifact to diff.
+    let records = fine_granularity_tiers(&bench);
+    if let Some(path) = &json_path {
+        std::fs::write(path, Json::Arr(records).to_string()).expect("write bench json");
+        println!("search bench records -> {path}");
+    }
+
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("SKIP: artifacts not built (run `make artifacts`)");
         return;
     }
-    let bench = Bench::default();
     let cache = Cache::new(Path::new("runs")).ok();
 
     for model in list_models(dir).unwrap() {

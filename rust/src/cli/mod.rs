@@ -57,6 +57,7 @@ const VALUE_FLAGS: &[&str] = &[
     "default-deadline-ms",
     "drain-ms",
     "pareto-steps",
+    "granularity",
     "frontier",
     "frontier-steps",
     "frontier-tol",
@@ -131,6 +132,7 @@ USAGE:
   limpq search    --model M (--cap-gbitops X | --size-cap-mb X)
                   [--alpha A] [--weight-only] [--save policy.json]
                   [--solver S] [--node-limit N] [--time-limit-ms T]
+                  [--granularity layer|channel:<g>|kernel]
   limpq serve     [--model M | --models DIR] [--bind 127.0.0.1:7070]
                   [--max-conns N] [--coalesce-window-us U]
                   [--persistent-pool on|off] [--mem-budget-mb N]
@@ -166,8 +168,33 @@ ENGINE (policy search):
                        cleanly mid-solve (see SERVE: DEADLINES &
                        DEGRADATION).
   The fleet line protocol accepts the same controls as JSON fields
-  (\"solver\", \"node_limit\", \"time_limit_ms\", \"deadline_ms\") and
-  reports \"solver\" and \"cache_hit\" in every response.
+  (\"solver\", \"node_limit\", \"time_limit_ms\", \"deadline_ms\",
+  \"granularity\") and reports \"solver\" and \"cache_hit\" in every
+  response.
+
+GRANULARITY (fine-grained precision search):
+  By default every parameter tensor is one decision group (per-layer
+  mixed precision, the paper's formulation).  --granularity splits
+  layers into smaller groups so the MCKP assigns bit-widths at channel
+  resolution:
+    --granularity layer        one group per layer (default; solutions
+                               and cache keys are byte-identical to
+                               builds without the flag)
+    --granularity channel:<g>  split each unpinned layer into groups of
+                               <g> output channels (the last group takes
+                               the remainder); importance, BitOps, and
+                               size split exactly by channel share
+    --granularity kernel       one group per output channel (alias for
+                               channel:1)
+  Pinned layers (first/last) never split.  Fine-grained instances can
+  reach tens of thousands of variables; past the fine-grain threshold
+  the engine prunes MCKP-dominated options up front (reported as
+  \"pruned\" in solve stats), routes lp-round through a Lagrangian
+  decomposition whose per-group argmins run on the worker pool (bit
+  identical at any thread count), shares that root bound with bb, and
+  shards the mckp DP by group blocks.  Granularity is part of the
+  canonical cache key and the frontier surface key, and rides the wire
+  as \"granularity\".
 
 SERVE (fleet serving stack):
   The server is event-driven: one nonblocking multiplexer thread owns
@@ -250,7 +277,8 @@ SERVE (fleet serving stack):
     gap is within tolerance; otherwise the normal engine path runs and
     the exact answer is inserted back as a refining vertex, so repeated
     cap patterns converge to exact O(1) replays.  Surfaces build lazily
-    per (alpha, weight_only) family on first cap query, single-flighted,
+    per (alpha, weight_only, granularity) family on first cap query,
+    single-flighted,
     and their bytes count against --mem-budget-mb (evicted with the
     model).  A solve may cap both axes at once (\"cap_gbitops\" +
     \"size_cap_mb\"); frontier answers carry \"solver\": \"frontier\",
@@ -449,6 +477,9 @@ fn request_from_args(args: &Args, cfg: &Config) -> Result<crate::engine::SearchR
     }
     if let Some(v) = args.get("pareto-steps") {
         b = b.pareto_steps(v.parse::<usize>()?);
+    }
+    if let Some(v) = args.get("granularity") {
+        b = b.granularity(crate::search::Granularity::parse(v)?);
     }
     b.build()
 }
@@ -894,6 +925,37 @@ mod tests {
         // the builder rejects a degenerate sweep
         let bad = parse(&["search", "--cap-gbitops", "1.5", "--pareto-steps", "1"]);
         assert!(request_from_args(&bad, &Config::default()).is_err());
+    }
+
+    #[test]
+    fn granularity_flag_reaches_the_request() {
+        use crate::search::Granularity;
+        let d = parse(&["search", "--cap-gbitops", "1.5"]);
+        let req = request_from_args(&d, &Config::default()).unwrap();
+        assert_eq!(req.granularity, Granularity::Layer);
+        let a = parse(&["search", "--cap-gbitops", "1.5", "--granularity", "channel:8"]);
+        let req = request_from_args(&a, &Config::default()).unwrap();
+        assert_eq!(req.granularity, Granularity::ChannelGroup(8));
+        let k = parse(&["search", "--cap-gbitops", "1.5", "--granularity", "kernel"]);
+        let req = request_from_args(&k, &Config::default()).unwrap();
+        assert_eq!(req.granularity, Granularity::Kernel);
+        // unknown spellings are rejected by name, not silently defaulted
+        let bad = parse(&["search", "--cap-gbitops", "1.5", "--granularity", "per-tensor"]);
+        let err = request_from_args(&bad, &Config::default()).unwrap_err().to_string();
+        assert!(err.contains("per-tensor"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn help_documents_granularity() {
+        for needle in [
+            "GRANULARITY",
+            "--granularity layer|channel:<g>|kernel",
+            "channel:<g>",
+            "--granularity kernel",
+            "(alpha, weight_only, granularity)",
+        ] {
+            assert!(HELP.contains(needle), "HELP is missing {needle:?}");
+        }
     }
 
     #[test]

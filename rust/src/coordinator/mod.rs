@@ -315,7 +315,15 @@ mod tests {
 
         // Stage 3: ILP at a 4-bit-level cap.
         let cap = crate::quant::cost::uniform_bitops(&meta, 4, 4);
-        let prob = MpqProblem::from_importance(&meta, &imp, 1.0, Some(cap), None, false);
+        let prob = MpqProblem::from_importance(
+            &meta,
+            &imp,
+            1.0,
+            Some(cap),
+            None,
+            false,
+            crate::search::Granularity::Layer,
+        );
         let sol = solve_auto(&prob).unwrap();
         let policy = prob.to_bit_config(&sol);
         policy.validate(&meta).unwrap();

@@ -20,6 +20,17 @@
 //! benches) goes through this module; `search::` keeps only the raw
 //! problem substrate and algorithms.
 //!
+//! Problems are **group-based**: at the default
+//! [`Granularity::Layer`](crate::search::Granularity) each group is one
+//! layer (the paper's setting, bit-for-bit the pre-group engine), while
+//! `channel:<g>` / `kernel` requests split every unpinned layer into
+//! channel groups, multiplying the variable count by ~2 orders of
+//! magnitude.  The registry keeps such instances tractable with an MCKP
+//! dominance-pruning pass (options pointwise no better than a sibling
+//! are dropped before any solver runs; the count lands in
+//! [`SolveStats::pruned`]) and by reordering the Auto chain so the
+//! decomposed, pool-parallel `lp-round` runs before exact B&B.
+//!
 //! ```no_run
 //! # use limpq::engine::{PolicyEngine, SearchRequest};
 //! # fn demo(meta: limpq::models::ModelMeta, imp: limpq::importance::Importance) -> anyhow::Result<()> {
@@ -72,6 +83,10 @@ pub struct SolveStats {
     pub wall_us: u128,
     /// How many solvers failed before one succeeded (Auto mode).
     pub fallbacks: u32,
+    /// Options removed by the registry's dominance preprocessing before
+    /// the winning solver ran (0 when the pass was skipped — layer-sized
+    /// instances — or nothing was dominated).
+    pub pruned: usize,
     /// True when this outcome came from the degradation chain (deadline
     /// expiry, solver panic, or breaker shed) rather than a clean solve.
     /// Degraded outcomes are never cached.
@@ -178,12 +193,28 @@ impl SolverRegistry {
             SolverPref::Named(n) if n == "auto" || n.is_empty() => &auto,
             other => other,
         };
+        // Dominance preprocessing for fine-grained instances: options
+        // pointwise no better than a sibling cannot appear in any optimal
+        // solution (`search::prune_dominated`), so every solver sees the
+        // reduced instance and choices are mapped back afterwards.
+        // Layer-sized instances skip the pass entirely — their solves
+        // stay byte-identical to the pre-group engine.
+        let fine = p.n_vars() > crate::search::FINE_GRAIN_VARS;
+        let pruned = if fine { Some(crate::search::prune_dominated(p)) } else { None };
+        let (sp, dropped) = match &pruned {
+            Some(pr) => (&pr.problem, pr.dropped),
+            None => (p, 0),
+        };
+        let restore = |s: &Solution| match &pruned {
+            Some(pr) => pr.restore(s),
+            None => s.clone(),
+        };
         match pref {
             SolverPref::Named(name) => {
                 let Some(s) = self.get(name) else {
                     bail!("unknown solver {name:?} (registered: {})", self.names().join(", "));
                 };
-                if !s.supports(p) {
+                if !s.supports(sp) {
                     bail!(
                         "solver {name:?} does not support this problem's constraint shape \
                          (bitops cap: {}, size cap: {})",
@@ -192,21 +223,37 @@ impl SolverRegistry {
                     );
                 }
                 let t = Instant::now();
-                let out = s.solve_full(p, budget)?;
-                Ok((out.solution.clone(), stats_of(s.name(), p.n_vars(), &out, t, 0)))
+                let mut out = s.solve_full(sp, budget)?;
+                out.pruned = dropped;
+                let solution = restore(&out.solution);
+                Ok((solution, stats_of(s.name(), p.n_vars(), &out, t, 0)))
             }
             SolverPref::Auto => {
                 let mut failures: Vec<String> = Vec::new();
-                for s in &self.solvers {
-                    if !s.supports(p) {
+                // Fine-grained instances flip the chain head: the
+                // decomposed `lp-round` answers 10k+ variables inside the
+                // default budget, while exact B&B would burn its whole
+                // node budget before falling through.
+                let order: Vec<&Arc<dyn Solver>> = if fine {
+                    let mut v: Vec<&Arc<dyn Solver>> =
+                        self.solvers.iter().filter(|s| s.name() == "lp-round").collect();
+                    v.extend(self.solvers.iter().filter(|s| s.name() != "lp-round"));
+                    v
+                } else {
+                    self.solvers.iter().collect()
+                };
+                for s in order {
+                    if !s.supports(sp) {
                         continue;
                     }
                     let t = Instant::now();
-                    match s.solve_full(p, budget) {
-                        Ok(out) => {
+                    match s.solve_full(sp, budget) {
+                        Ok(mut out) => {
+                            out.pruned = dropped;
                             let stats =
                                 stats_of(s.name(), p.n_vars(), &out, t, failures.len() as u32);
-                            return Ok((out.solution, stats));
+                            let solution = restore(&out.solution);
+                            return Ok((solution, stats));
                         }
                         Err(e) => failures.push(format!("{}: {e:#}", s.name())),
                     }
@@ -232,6 +279,7 @@ fn stats_of(
         proven_optimal: out.proven_optimal,
         wall_us: started.elapsed().as_micros(),
         fallbacks,
+        pruned: out.pruned,
         degraded: out.cancelled,
         degraded_reason: out
             .cancelled
@@ -384,6 +432,7 @@ impl PolicyEngine {
             req.bitops_cap,
             req.size_cap_bits,
             req.weight_only,
+            req.granularity,
         )
     }
 
@@ -696,13 +745,70 @@ mod tests {
         let mut rng = Rng::new(31);
         let mut p = random_problem(&mut rng, 4, 3, 0.7);
         let min_s: u64 =
-            p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+            p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
         let max_s: u64 =
-            p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+            p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
         p.size_cap_bits = Some(min_s + (max_s - min_s) * 8 / 10);
         let (sol, stats) = reg.solve(&p, &SolverPref::Auto, &SolveBudget::default()).unwrap();
         assert_eq!(stats.solver, "greedy");
         assert!(p.feasible(&sol));
+    }
+
+    /// Satellite property: MCKP dominance pruning never changes the
+    /// optimum.  Exact solvers must return the same cost on the pruned
+    /// instance as on the original, and choices restored through the
+    /// keep-lists must evaluate cleanly on the original problem.
+    #[test]
+    fn dominance_pruning_preserves_every_solvers_optimum() {
+        let mut rng = Rng::new(0xD011);
+        for trial in 0..25 {
+            let layers = 2 + rng.below(4);
+            let opts = 2 + rng.below(4);
+            let tight = rng.uniform(0.2, 0.9);
+            let p = random_problem(&mut rng, layers, opts, tight);
+            let pr = crate::search::prune_dominated(&p);
+            let budget = SolveBudget {
+                dp_grid: p.bitops_cap.unwrap() as usize + 1,
+                ..SolveBudget::default()
+            };
+            for name in ["bb", "mckp", "lp-round", "pareto", "greedy"] {
+                let s = standard_registry().get(name).unwrap();
+                if !s.supports(&p) {
+                    continue;
+                }
+                let orig = s.solve_full(&p, &budget);
+                let reduced = s.solve_full(&pr.problem, &budget);
+                match (orig, reduced) {
+                    (Ok(a), Ok(b)) => {
+                        let restored = pr.restore(&b.solution);
+                        let re = p.evaluate(&restored.choice).unwrap();
+                        assert!(p.feasible(&re), "trial {trial}: {name} restored infeasible");
+                        assert!(
+                            (re.cost - b.solution.cost).abs() < 1e-9,
+                            "trial {trial}: {name} restore changed cost"
+                        );
+                        // Exact solvers must be unaffected by pruning.
+                        if matches!(name, "bb" | "mckp") {
+                            assert!(
+                                (a.solution.cost - b.solution.cost).abs() < 1e-9,
+                                "trial {trial}: {name} optimum moved ({} vs {})",
+                                a.solution.cost,
+                                b.solution.cost
+                            );
+                        }
+                    }
+                    // Heuristics may miss on either instance; exact
+                    // solvers must agree on feasibility.
+                    (Err(_), Err(_)) => {}
+                    (a, b) => {
+                        assert!(
+                            !matches!(name, "bb" | "mckp"),
+                            "trial {trial}: {name} feasibility flipped: {a:?} vs {b:?}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

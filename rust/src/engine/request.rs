@@ -2,7 +2,7 @@
 //!
 //! Replaces the positional-argument sprawl of
 //! `MpqProblem::from_importance(meta, imp, alpha, bitops_cap, size_cap,
-//! weight_only)` + `solve(&p)` with a validated builder, and carries
+//! weight_only, granularity)` + `solve(&p)` with a validated builder, and carries
 //! everything a solve needs besides the model itself: constraint set,
 //! objective mix (α), solver preference, and time/node budget.
 //!
@@ -14,6 +14,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::search::Granularity;
 
 /// Cooperative cancellation handle threaded from the serving layer down
 /// into solver inner loops (`bb` node expansion, `mckp` layer sweep,
@@ -166,6 +168,10 @@ pub struct SearchRequest {
     pub size_cap_bits: Option<u64>,
     /// Pin activations to 8 bits, search weights only (Table 5 setting).
     pub weight_only: bool,
+    /// Precision-assignment granularity: one decision variable per layer
+    /// (the paper's setting, the default), per channel group, or per
+    /// kernel (channel group of 1).
+    pub granularity: Granularity,
     pub solver: SolverPref,
     pub budget: SolveBudget,
 }
@@ -185,6 +191,7 @@ impl SearchRequest {
             bitops_cap: self.bitops_cap,
             size_cap_bits: self.size_cap_bits,
             weight_only: self.weight_only,
+            granularity: self.granularity,
             solver: self.solver.canonical().to_string(),
             node_limit: self.budget.node_limit,
             time_limit_ns: self.budget.time_limit.map(|t| t.as_nanos()),
@@ -201,6 +208,7 @@ pub struct CanonicalKey {
     bitops_cap: Option<u64>,
     size_cap_bits: Option<u64>,
     weight_only: bool,
+    granularity: Granularity,
     solver: String,
     node_limit: usize,
     time_limit_ns: Option<u128>,
@@ -217,6 +225,7 @@ pub struct SearchRequestBuilder {
     bitops_cap: Option<u64>,
     size_cap_bits: Option<u64>,
     weight_only: bool,
+    granularity: Granularity,
     solver: SolverPref,
     budget: SolveBudget,
 }
@@ -228,6 +237,7 @@ impl Default for SearchRequestBuilder {
             bitops_cap: None,
             size_cap_bits: None,
             weight_only: false,
+            granularity: Granularity::Layer,
             solver: SolverPref::Auto,
             budget: SolveBudget::default(),
         }
@@ -268,6 +278,12 @@ impl SearchRequestBuilder {
 
     pub fn weight_only(mut self, on: bool) -> Self {
         self.weight_only = on;
+        self
+    }
+
+    /// Precision-assignment granularity (defaults to per-layer).
+    pub fn granularity(mut self, g: Granularity) -> Self {
+        self.granularity = g;
         self
     }
 
@@ -335,6 +351,7 @@ impl SearchRequestBuilder {
             bitops_cap: self.bitops_cap,
             size_cap_bits: self.size_cap_bits,
             weight_only: self.weight_only,
+            granularity: self.granularity,
             solver: self.solver.normalized(),
             budget: self.budget,
         })
@@ -352,8 +369,33 @@ mod tests {
         assert_eq!(r.bitops_cap, None);
         assert_eq!(r.size_cap_bits, None);
         assert!(!r.weight_only);
+        assert_eq!(r.granularity, Granularity::Layer);
         assert_eq!(r.solver, SolverPref::Auto);
         assert_eq!(r.budget, SolveBudget::default());
+    }
+
+    #[test]
+    fn granularity_splits_the_cache_key() {
+        let layer = SearchRequest::builder().bitops_cap(100).build().unwrap();
+        let chan = SearchRequest::builder()
+            .bitops_cap(100)
+            .granularity(Granularity::ChannelGroup(8))
+            .build()
+            .unwrap();
+        let kern = SearchRequest::builder()
+            .bitops_cap(100)
+            .granularity(Granularity::Kernel)
+            .build()
+            .unwrap();
+        assert_ne!(layer.canonical_key(), chan.canonical_key());
+        assert_ne!(layer.canonical_key(), kern.canonical_key());
+        assert_ne!(chan.canonical_key(), kern.canonical_key());
+        let chan2 = SearchRequest::builder()
+            .bitops_cap(100)
+            .granularity(Granularity::ChannelGroup(8))
+            .build()
+            .unwrap();
+        assert_eq!(chan.canonical_key(), chan2.canonical_key());
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! * [`BranchAndBound`] (`bb`) — exact Lagrangian B&B, any constraint set
 //! * [`MckpDp`] (`mckp`) — dynamic program, exactly one constraint
 //! * [`SimplexRelax`] (`lp-round`) — LP relaxation + guided rounding,
-//!   reports the relaxation value as a certified lower bound
+//!   reports the relaxation value as a certified lower bound; above
+//!   [`FINE_GRAIN_VARS`] variables it swaps the dense simplex for the
+//!   parallel Lagrangian decomposition in `search::lagrange`
+//!
+//! [`FINE_GRAIN_VARS`]: crate::search::FINE_GRAIN_VARS
 //! * [`ParetoFrontier`] (`pareto`) — HAWQ-v2-style frontier sweep
 //! * [`GreedyRepair`] (`greedy`) — constructive argmin + ratio repair
 //!
@@ -38,6 +42,10 @@ pub struct SolveOutcome {
     ///
     /// [`CancelToken`]: super::request::CancelToken
     pub cancelled: bool,
+    /// Options removed by MCKP dominance preprocessing before the solve.
+    /// Solvers themselves report 0; the registry's pruning hook fills it
+    /// in when it solves the reduced problem.
+    pub pruned: usize,
 }
 
 /// A pluggable MPQ policy solver.
@@ -82,6 +90,7 @@ impl Solver for BranchAndBound {
             lower_bound: Some(stats.root_bound),
             proven_optimal: stats.proven_optimal,
             cancelled: stats.cancelled,
+            pruned: 0,
         })
     }
 }
@@ -116,6 +125,7 @@ impl Solver for MckpDp {
             // Exact whenever the cap fits the grid without rounding.
             proven_optimal: dp.unit == 1,
             cancelled: false,
+            pruned: 0,
         })
     }
 }
@@ -127,18 +137,24 @@ impl Solver for MckpDp {
 /// LP relaxation (two-phase simplex) + guided rounding.  The relaxation
 /// value is a certified lower bound; the rounded policy is repaired to
 /// feasibility with the same ratio-greedy move the B&B incumbent uses.
+///
+/// The dense simplex tableau is O(n²) in the variable count, so above
+/// [`crate::search::FINE_GRAIN_VARS`] variables (channel-group / kernel
+/// granularity) the solve routes to the Lagrangian decomposition instead:
+/// same certified-lower-bound contract, per-group argmins parallelized
+/// over the worker pool, bit-identical at any thread count.
 pub struct SimplexRelax;
 
 impl SimplexRelax {
     /// Build the MCKP LP relaxation: one column per option, choose-one
-    /// equality row per layer, one ≤ row per active cap (normalized to
+    /// equality row per group, one ≤ row per active cap (normalized to
     /// rhs 1 for conditioning).
     fn relaxation(p: &MpqProblem) -> Lp {
         let n: usize = p.n_vars();
         let mut c = Vec::with_capacity(n);
-        let mut a_eq = Vec::with_capacity(p.layers.len());
+        let mut a_eq = Vec::with_capacity(p.groups.len());
         let mut col = 0usize;
-        for opts in &p.layers {
+        for opts in &p.groups {
             let mut row = vec![0.0; n];
             for o in opts {
                 c.push(o.cost);
@@ -152,7 +168,7 @@ impl SimplexRelax {
         if let Some(cap) = p.bitops_cap {
             let cap = cap.max(1) as f64;
             let mut row = Vec::with_capacity(n);
-            for opts in &p.layers {
+            for opts in &p.groups {
                 for o in opts {
                     row.push(o.bitops as f64 / cap);
                 }
@@ -163,7 +179,7 @@ impl SimplexRelax {
         if let Some(cap) = p.size_cap_bits {
             let cap = cap.max(1) as f64;
             let mut row = Vec::with_capacity(n);
-            for opts in &p.layers {
+            for opts in &p.groups {
                 for o in opts {
                     row.push(o.size_bits as f64 / cap);
                 }
@@ -171,7 +187,7 @@ impl SimplexRelax {
             a_ub.push(row);
             b_ub.push(1.0);
         }
-        let b_eq = vec![1.0; p.layers.len()];
+        let b_eq = vec![1.0; p.groups.len()];
         Lp { c, a_ub, b_ub, a_eq, b_eq }
     }
 }
@@ -182,23 +198,39 @@ impl Solver for SimplexRelax {
     }
 
     fn supports(&self, p: &MpqProblem) -> bool {
-        !p.layers.is_empty()
+        !p.groups.is_empty()
     }
 
     fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
-        if p.layers.iter().any(|o| o.is_empty()) {
-            bail!("a layer has no options");
+        if p.groups.iter().any(|o| o.is_empty()) {
+            bail!("a group has no options");
+        }
+        // Fine-grained route: the dense tableau would be quadratic in
+        // 10k+ variables; the decomposed dual solve is linear per
+        // evaluation and parallel, with the same bound contract.
+        if p.n_vars() > crate::search::FINE_GRAIN_VARS {
+            let pool = crate::kernels::pool::WorkerPool::global();
+            let (solution, stats) =
+                crate::search::lagrange::solve_lagrange(p, &pool, budget.deadline(), &budget.cancel)?;
+            return Ok(SolveOutcome {
+                solution,
+                nodes: stats.evals,
+                lower_bound: Some(stats.bound),
+                proven_optimal: stats.proven_optimal,
+                cancelled: stats.cancelled,
+                pruned: 0,
+            });
         }
         let (x, lp_obj) = match Self::relaxation(p).solve_supervised(&budget.cancel)? {
             LpOutcome::Optimal { x, obj } => (x, obj),
             LpOutcome::Infeasible => bail!("LP relaxation infeasible"),
             LpOutcome::Unbounded => bail!("LP relaxation unbounded (malformed problem)"),
         };
-        // Round: per layer take the option with the largest fractional
+        // Round: per group take the option with the largest fractional
         // mass (ties to the lighter option so rounding leans feasible).
-        let mut choice = Vec::with_capacity(p.layers.len());
+        let mut choice = Vec::with_capacity(p.groups.len());
         let mut col = 0usize;
-        for opts in &p.layers {
+        for opts in &p.groups {
             let mut best = 0usize;
             let mut best_mass = f64::MIN;
             for (i, o) in opts.iter().enumerate() {
@@ -222,6 +254,7 @@ impl Solver for SimplexRelax {
             lower_bound: Some(lp_obj),
             proven_optimal: proven,
             cancelled: false,
+            pruned: 0,
         })
     }
 }
@@ -241,7 +274,7 @@ impl Solver for ParetoFrontier {
     }
 
     fn supports(&self, p: &MpqProblem) -> bool {
-        !p.layers.is_empty()
+        !p.groups.is_empty()
     }
 
     fn solve_full(&self, p: &MpqProblem, budget: &SolveBudget) -> Result<SolveOutcome> {
@@ -252,6 +285,7 @@ impl Solver for ParetoFrontier {
             lower_bound: None,
             proven_optimal: false,
             cancelled: false,
+            pruned: 0,
         })
     }
 }
@@ -260,7 +294,7 @@ impl Solver for ParetoFrontier {
 // greedy
 // ---------------------------------------------------------------------------
 
-/// Constructive heuristic: per-layer cost argmin, then ratio-greedy
+/// Constructive heuristic: per-group cost argmin, then ratio-greedy
 /// repair toward the caps.  Never optimal by proof, but always fast and
 /// supports every constraint shape — the registry's last resort.
 pub struct GreedyRepair;
@@ -271,15 +305,15 @@ impl Solver for GreedyRepair {
     }
 
     fn supports(&self, p: &MpqProblem) -> bool {
-        !p.layers.is_empty()
+        !p.groups.is_empty()
     }
 
     fn solve_full(&self, p: &MpqProblem, _budget: &SolveBudget) -> Result<SolveOutcome> {
-        if p.layers.iter().any(|o| o.is_empty()) {
-            bail!("a layer has no options");
+        if p.groups.iter().any(|o| o.is_empty()) {
+            bail!("a group has no options");
         }
         let choice: Vec<usize> = p
-            .layers
+            .groups
             .iter()
             .map(|opts| {
                 opts.iter()
@@ -297,6 +331,7 @@ impl Solver for GreedyRepair {
             lower_bound: None,
             proven_optimal: false,
             cancelled: false,
+            pruned: 0,
         })
     }
 }
@@ -419,7 +454,23 @@ mod tests {
         p.bitops_cap = None;
         let out = GreedyRepair.solve_full(&p, &SolveBudget::default()).unwrap();
         let want: f64 =
-            p.layers.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
+            p.groups.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
         assert!((out.solution.cost - want).abs() < 1e-9);
+    }
+
+    /// The fine-grained `lp-round` route (Lagrangian decomposition) obeys
+    /// the same contract as the dense simplex: feasible solution, cost
+    /// never below the certified lower bound.
+    #[test]
+    fn lp_round_fine_route_keeps_bound_contract() {
+        let mut rng = Rng::new(0xF17E);
+        // 600 groups × 4 options = 2400 vars > FINE_GRAIN_VARS (2000).
+        let p = random_problem(&mut rng, 600, 4, 0.5);
+        assert!(p.n_vars() > crate::search::FINE_GRAIN_VARS);
+        let out = SimplexRelax.solve_full(&p, &SolveBudget::default()).unwrap();
+        assert!(p.feasible(&out.solution));
+        let lb = out.lower_bound.expect("fine route must certify a bound");
+        assert!(out.solution.cost >= lb - 1e-9, "cost {} below bound {lb}", out.solution.cost);
+        assert!(out.nodes > 0, "dual evaluations must be reported as effort");
     }
 }

@@ -319,14 +319,15 @@ impl ServingCore {
     }
 
     /// The lazily built, single-flighted frontier index covering this
-    /// request's (α, weight-only) family.  Whichever call wins the build
+    /// request's (α, weight-only, granularity) family.  Whichever call
+    /// wins the build
     /// race charges the surface's bytes against the registry budget.
     fn frontier_index(
         &self,
         entry: &Arc<ModelEntry>,
         req: &SearchRequest,
     ) -> Result<Arc<FrontierIndex>> {
-        let key = SurfaceKey::new(req.alpha, req.weight_only);
+        let key = SurfaceKey::new(req.alpha, req.weight_only, req.granularity);
         let (idx, built) = entry.frontiers().get_or_build(key, || {
             let problem = entry.engine().problem(req);
             let surface = FrontierBuilder::new(self.cfg.frontier_steps).build(&problem)?;
@@ -365,6 +366,7 @@ impl ServingCore {
                 Json::obj(vec![
                     ("alpha", Json::Num(key.alpha())),
                     ("weight_only", Json::Bool(key.weight_only())),
+                    ("granularity", Json::from(key.granularity().canonical().as_str())),
                     ("vertices", Json::from(st.vertices)),
                     ("refined", Json::from(st.refined)),
                     ("duals", Json::from(st.duals)),

@@ -133,7 +133,15 @@ mod tests {
         let meta = crate::models::synthetic_meta(6, |i| 100_000 * (i as u64 + 1));
         let imp = IndicatorStore::init_uniform(&meta).importance(&meta);
         let cap = uniform_bitops(&meta, 4, 4);
-        MpqProblem::from_importance(&meta, &imp, 1.0, Some(cap), None, false)
+        MpqProblem::from_importance(
+            &meta,
+            &imp,
+            1.0,
+            Some(cap),
+            None,
+            false,
+            crate::search::Granularity::Layer,
+        )
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub const KNOWN_FIELDS: &[&str] = &[
     "time_limit_ms",
     "deadline_ms",
     "pareto_steps",
+    "granularity",
 ];
 
 /// A decoded protocol request.
@@ -158,6 +159,9 @@ pub fn parse_device_request(req: &Json) -> Result<DeviceSpec> {
     }
     if let Some(v) = req.opt("pareto_steps") {
         b = b.pareto_steps(v.as_usize()?);
+    }
+    if let Some(v) = req.opt("granularity") {
+        b = b.granularity(crate::search::Granularity::parse(v.as_str()?)?);
     }
     let deadline = match req.opt("deadline_ms") {
         Some(v) => {
@@ -394,6 +398,36 @@ mod tests {
         }
         // builder validation still applies on the wire path
         assert!(parse_request(r#"{"cap_gbitops": 2.0, "pareto_steps": 1}"#).is_err());
+    }
+
+    #[test]
+    fn granularity_rides_the_wire_and_rejects_unknown_values() {
+        use crate::search::Granularity;
+        match parse_request(r#"{"cap_gbitops": 2.0, "granularity": "channel:8"}"#).unwrap() {
+            Request::Solve { spec, .. } => {
+                assert_eq!(spec.request.granularity, Granularity::ChannelGroup(8));
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        match parse_request(r#"{"cap_gbitops": 2.0, "granularity": "kernel"}"#).unwrap() {
+            Request::Solve { spec, .. } => {
+                assert_eq!(spec.request.granularity, Granularity::Kernel);
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        // omitted -> layer-wise, the PR 1 wire form unchanged
+        match parse_request(r#"{"cap_gbitops": 2.0}"#).unwrap() {
+            Request::Solve { spec, .. } => {
+                assert_eq!(spec.request.granularity, Granularity::Layer);
+            }
+            other => panic!("expected solve, got {other:?}"),
+        }
+        // unknown strings are named in the error, like unknown fields
+        let err =
+            parse_request(r#"{"cap_gbitops": 2.0, "granularity": "per-tensor"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("per-tensor"), "{err:#}");
+        let err = parse_request(r#"{"cap_gbitops": 2.0, "granularity": "channel:0"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("channel group size"), "{err:#}");
     }
 
     #[test]

@@ -255,23 +255,23 @@ impl FrontierBuilder {
         if self.steps < 2 {
             bail!("frontier sweep needs at least 2 steps per axis");
         }
-        if p.layers.is_empty() || p.layers.iter().any(|l| l.is_empty()) {
+        if p.groups.is_empty() || p.groups.iter().any(|l| l.is_empty()) {
             bail!("frontier sweep needs a non-empty problem");
         }
         let cost_scale: f64 = p
-            .layers
+            .groups
             .iter()
             .map(|l| l.iter().map(|o| o.cost.abs()).fold(0.0, f64::max))
             .sum::<f64>()
             .max(1e-9);
         let bitops_scale: f64 = p
-            .layers
+            .groups
             .iter()
             .map(|l| l.iter().map(|o| o.bitops).max().unwrap_or(0) as f64)
             .sum::<f64>()
             .max(1.0);
         let size_scale: f64 = p
-            .layers
+            .groups
             .iter()
             .map(|l| l.iter().map(|o| o.size_bits).max().unwrap_or(0) as f64)
             .sum::<f64>()
@@ -279,7 +279,7 @@ impl FrontierBuilder {
         let axis_b = lambda_axis(cost_scale / bitops_scale, self.steps);
         let axis_s = lambda_axis(cost_scale / size_scale, self.steps);
 
-        let n = p.n_layers();
+        let n = p.n_groups();
         let mut duals = Vec::with_capacity(axis_b.len() * axis_s.len());
         let mut seen: HashSet<Vec<usize>> = HashSet::new();
         let mut candidates: Vec<FrontierVertex> = Vec::new();
@@ -287,7 +287,7 @@ impl FrontierBuilder {
             for &ls in &axis_s {
                 let mut choice = vec![0usize; n];
                 let mut g = 0.0;
-                for (l, opts) in p.layers.iter().enumerate() {
+                for (l, opts) in p.groups.iter().enumerate() {
                     let mut best = 0usize;
                     let mut best_v = f64::INFINITY;
                     for (c, o) in opts.iter().enumerate() {
@@ -471,18 +471,26 @@ impl FrontierIndex {
 }
 
 /// Identifies one surface of a model: the problem family is fixed by
-/// (α, weight_only) — caps vary per query and live *on* the surface.
+/// (α, weight_only, granularity) — caps vary per query and live *on*
+/// the surface.  Granularity is part of the key because a channel-group
+/// surface's policies have a different variable space than the
+/// layer-wise surface of the same α.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SurfaceKey {
     alpha_bits: u64,
     weight_only: bool,
+    granularity: crate::search::Granularity,
 }
 
 impl SurfaceKey {
-    pub fn new(alpha: f64, weight_only: bool) -> SurfaceKey {
+    pub fn new(
+        alpha: f64,
+        weight_only: bool,
+        granularity: crate::search::Granularity,
+    ) -> SurfaceKey {
         // Collapse -0.0 onto 0.0 so the two hash identically.
         let alpha = if alpha == 0.0 { 0.0 } else { alpha };
-        SurfaceKey { alpha_bits: alpha.to_bits(), weight_only }
+        SurfaceKey { alpha_bits: alpha.to_bits(), weight_only, granularity }
     }
 
     pub fn alpha(&self) -> f64 {
@@ -491,6 +499,10 @@ impl SurfaceKey {
 
     pub fn weight_only(&self) -> bool {
         self.weight_only
+    }
+
+    pub fn granularity(&self) -> crate::search::Granularity {
+        self.granularity
     }
 }
 
@@ -687,8 +699,8 @@ mod tests {
         let idx = FrontierIndex::new(surface_for(&p, 16), 10.0);
         // A size cap midway between the min and max size of the sweep.
         let sizes: Vec<u64> = {
-            let min: u64 = p.layers.iter().map(|l| l.iter().map(|o| o.size_bits).min().unwrap()).sum();
-            let max: u64 = p.layers.iter().map(|l| l.iter().map(|o| o.size_bits).max().unwrap()).sum();
+            let min: u64 = p.groups.iter().map(|l| l.iter().map(|o| o.size_bits).min().unwrap()).sum();
+            let max: u64 = p.groups.iter().map(|l| l.iter().map(|o| o.size_bits).max().unwrap()).sum();
             vec![min + (max - min) / 2]
         };
         let hit = idx.query(p.bitops_cap, Some(sizes[0]));
@@ -702,8 +714,24 @@ mod tests {
 
     #[test]
     fn surface_key_collapses_signed_zero() {
-        assert_eq!(SurfaceKey::new(0.0, false), SurfaceKey::new(-0.0, false));
-        assert_ne!(SurfaceKey::new(1.0, false), SurfaceKey::new(1.0, true));
+        use crate::search::Granularity;
+        let g = Granularity::Layer;
+        assert_eq!(SurfaceKey::new(0.0, false, g), SurfaceKey::new(-0.0, false, g));
+        assert_ne!(SurfaceKey::new(1.0, false, g), SurfaceKey::new(1.0, true, g));
+    }
+
+    #[test]
+    fn surface_key_splits_by_granularity() {
+        use crate::search::Granularity;
+        let layer = SurfaceKey::new(1.0, false, Granularity::Layer);
+        let chan = SurfaceKey::new(1.0, false, Granularity::ChannelGroup(8));
+        let kern = SurfaceKey::new(1.0, false, Granularity::Kernel);
+        assert_ne!(layer, chan);
+        assert_ne!(layer, kern);
+        assert_ne!(chan, kern);
+        assert_eq!(chan, SurfaceKey::new(1.0, false, Granularity::ChannelGroup(8)));
+        assert_ne!(chan, SurfaceKey::new(1.0, false, Granularity::ChannelGroup(4)));
+        assert_eq!(chan.granularity(), Granularity::ChannelGroup(8));
     }
 
     #[test]
@@ -712,7 +740,7 @@ mod tests {
         let builds = Arc::new(AtomicUsize::new(0));
         let mut rng = Rng::new(5);
         let p = Arc::new(random_problem(&mut rng, 4, 3, 0.5));
-        let key = SurfaceKey::new(1.0, false);
+        let key = SurfaceKey::new(1.0, false, crate::search::Granularity::Layer);
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 let (set, builds, p) = (set.clone(), builds.clone(), p.clone());
@@ -736,7 +764,7 @@ mod tests {
     #[test]
     fn failed_build_clears_the_slot_for_retry() {
         let set = FrontierSet::new();
-        let key = SurfaceKey::new(2.0, true);
+        let key = SurfaceKey::new(2.0, true, crate::search::Granularity::Layer);
         assert!(set.get_or_build(key, || bail!("nope")).is_err());
         assert!(set.get(&key).is_none());
         let mut rng = Rng::new(9);

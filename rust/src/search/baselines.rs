@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use super::{LayerOption, MpqProblem, Solution};
+use super::{Granularity, LayerOption, MpqProblem, Solution};
 use crate::engine::solve_auto;
 use crate::importance::Importance;
 use crate::models::ModelMeta;
@@ -68,7 +68,15 @@ pub fn reversed_policy(
     bitops_cap: Option<u64>,
     size_cap_bits: Option<u64>,
 ) -> Result<(BitConfig, Solution)> {
-    let p = MpqProblem::from_importance(meta, &imp.reversed(), alpha, bitops_cap, size_cap_bits, false);
+    let p = MpqProblem::from_importance(
+        meta,
+        &imp.reversed(),
+        alpha,
+        bitops_cap,
+        size_cap_bits,
+        false,
+        Granularity::Layer,
+    );
     let s = solve_auto(&p)?;
     Ok((p.to_bit_config(&s), s))
 }
@@ -179,7 +187,7 @@ pub fn hessian_problem(
         }
         layers.push(opts);
     }
-    MpqProblem { layers, bitops_cap, size_cap_bits }
+    MpqProblem { groups: layers, group_layer: Vec::new(), bitops_cap, size_cap_bits }
 }
 
 /// Iterative-search proxy (AutoQ/HAQ/DNAS cost model): evaluates `k`
@@ -304,7 +312,7 @@ mod tests {
             imp.a[4][bi] = 0.02 / (bi + 1) as f32;
         }
         let cap = Some(uniform_bitops(&m, 3, 3));
-        let p = MpqProblem::from_importance(&m, &imp, 1.0, cap, None, false);
+        let p = MpqProblem::from_importance(&m, &imp, 1.0, cap, None, false, Granularity::Layer);
         let ours = p.to_bit_config(&solve_auto(&p).unwrap());
         let (rev, _) = reversed_policy(&m, &imp, 1.0, cap, None).unwrap();
         // ours gives the sensitive layer >= bits than reversed does

@@ -1,17 +1,19 @@
 //! Exact branch-and-bound MCKP solver with Lagrangian lower bounds.
 //!
 //! For multipliers λ, μ ≥ 0 on the BitOps / size constraints, the
-//! Lagrangian relaxation decomposes per layer:
+//! Lagrangian relaxation decomposes per group:
 //!
-//!   L(λ,μ) = Σ_l min_j (cost_lj + λ·bitops_lj + μ·size_lj) − λ·C_b − μ·C_s
+//!   L(λ,μ) = Σ_g min_j (cost_gj + λ·bitops_gj + μ·size_gj) − λ·C_b − μ·C_s
 //!
 //! and lower-bounds the ILP optimum for *any* λ, μ ≥ 0.  We tune the
-//! multipliers with a short subgradient loop at the root, precompute
-//! per-layer suffix minima of the penalized costs, and run a depth-first
-//! search over layers ordered by decreasing cost spread with incumbent
-//! pruning.  Exact (never prunes the optimum) because the bound is valid
-//! at every node; typically visits a few thousand nodes on
-//! paper-sized instances (L≈20-30, 25 combos/layer, paper eq. 3).
+//! multipliers at the root — a short subgradient loop on layer-sized
+//! instances, the shared parallel dual bisection from
+//! [`super::lagrange`] above [`super::FINE_GRAIN_VARS`] variables —
+//! precompute per-group suffix minima of the penalized costs, and run a
+//! depth-first search over groups ordered by decreasing cost spread with
+//! incumbent pruning.  Exact (never prunes the optimum) because the
+//! bound is valid at every node; typically visits a few thousand nodes
+//! on paper-sized instances (L≈20-30, 25 combos/layer, paper eq. 3).
 
 use anyhow::{bail, Result};
 
@@ -53,34 +55,42 @@ pub fn solve_bb_stats(
     deadline: Option<std::time::Instant>,
     cancel: &CancelToken,
 ) -> Result<(Solution, BbStats)> {
-    if p.layers.is_empty() {
+    if p.groups.is_empty() {
         return Ok((
             Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 },
             BbStats { nodes: 0, root_bound: 0.0, proven_optimal: true, cancelled: false },
         ));
     }
-    for (l, opts) in p.layers.iter().enumerate() {
+    for (l, opts) in p.groups.iter().enumerate() {
         if opts.is_empty() {
-            bail!("layer {l} has no options");
+            bail!("group {l} has no options");
         }
     }
 
     // Quick feasibility: min-bitops/min-size assignment must fit.
-    let min_b: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.bitops).min().unwrap()).sum();
-    let min_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+    let min_b: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.bitops).min().unwrap()).sum();
+    let min_s: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
     if p.bitops_cap.map_or(false, |c| min_b > c) || p.size_cap_bits.map_or(false, |c| min_s > c) {
         bail!("infeasible: even the minimum-cost assignment exceeds the caps");
     }
 
-    // --- root multipliers by subgradient ---------------------------------
+    // --- root multipliers -------------------------------------------------
+    // Layer-sized instances keep the short sequential subgradient loop
+    // (byte-identical to the pre-group engine); fine-grained instances
+    // share the parallel dual bisection with `lp-round`, so both solvers
+    // pay for one bound computation strategy.
     let cb = p.bitops_cap.map(|c| c as f64);
     let cs = p.size_cap_bits.map(|c| c as f64);
-    let (lambda, mu) = tune_multipliers(p, cb, cs);
+    let (lambda, mu) = if p.n_vars() > super::FINE_GRAIN_VARS {
+        super::lagrange::tune_duals(p, &crate::kernels::pool::WorkerPool::global(), deadline, cancel)
+    } else {
+        tune_multipliers(p, cb, cs)
+    };
 
-    // Layer order: biggest penalized-cost spread first (strongest branching).
-    let mut order: Vec<usize> = (0..p.layers.len()).collect();
+    // Group order: biggest penalized-cost spread first (strongest branching).
+    let mut order: Vec<usize> = (0..p.groups.len()).collect();
     let spread = |l: usize| -> f64 {
-        let pen: Vec<f64> = p.layers[l]
+        let pen: Vec<f64> = p.groups[l]
             .iter()
             .map(|o| o.cost + lambda * o.bitops as f64 + mu * o.size_bits as f64)
             .collect();
@@ -90,15 +100,15 @@ pub fn solve_bb_stats(
     };
     order.sort_by(|&a, &b| spread(b).partial_cmp(&spread(a)).unwrap());
 
-    // Suffix structures over the *ordered* layers.
+    // Suffix structures over the *ordered* groups.
     let n = order.len();
-    // suffix_pen[d] = Σ_{k≥d} min_j penalized cost of ordered layer k
+    // suffix_pen[d] = Σ_{k≥d} min_j penalized cost of ordered group k
     let mut suffix_pen = vec![0.0f64; n + 1];
     // suffix minima of raw bitops/size: for feasibility pruning
     let mut suffix_min_b = vec![0u64; n + 1];
     let mut suffix_min_s = vec![0u64; n + 1];
     for d in (0..n).rev() {
-        let opts = &p.layers[order[d]];
+        let opts = &p.groups[order[d]];
         let pmin = opts
             .iter()
             .map(|o| o.cost + lambda * o.bitops as f64 + mu * o.size_bits as f64)
@@ -176,7 +186,7 @@ pub fn solve_bb_stats(
                 && p.size_cap_bits.map_or(true, |c| node.size <= c);
             if leaf_feasible && node.cost < best_cost - 1e-12 {
                 best_cost = node.cost;
-                // reorder choice back to layer index space
+                // reorder choice back to group index space
                 let mut choice = vec![0usize; n];
                 for (depth, &l) in order.iter().enumerate() {
                     choice[l] = node.choice[depth];
@@ -202,18 +212,18 @@ pub fn solve_bb_stats(
         let l = order[d];
         // Expand children best-penalized-first so the DFS finds good
         // incumbents early (push in reverse for stack order).
-        let mut idx: Vec<usize> = (0..p.layers[l].len()).collect();
+        let mut idx: Vec<usize> = (0..p.groups[l].len()).collect();
         idx.sort_by(|&a, &b| {
-            let pa = p.layers[l][a].cost
-                + lambda * p.layers[l][a].bitops as f64
-                + mu * p.layers[l][a].size_bits as f64;
-            let pb = p.layers[l][b].cost
-                + lambda * p.layers[l][b].bitops as f64
-                + mu * p.layers[l][b].size_bits as f64;
+            let pa = p.groups[l][a].cost
+                + lambda * p.groups[l][a].bitops as f64
+                + mu * p.groups[l][a].size_bits as f64;
+            let pb = p.groups[l][b].cost
+                + lambda * p.groups[l][b].bitops as f64
+                + mu * p.groups[l][b].size_bits as f64;
             pb.partial_cmp(&pa).unwrap()
         });
         for c in idx {
-            let o = &p.layers[l][c];
+            let o = &p.groups[l][c];
             let mut choice = node.choice.clone();
             choice.push(c);
             stack.push(Node {
@@ -242,7 +252,7 @@ fn tune_multipliers(p: &MpqProblem, cb: Option<f64>, cs: Option<f64>) -> (f64, f
     }
     // Scale-aware initial step sizes.
     let cost_scale: f64 = p
-        .layers
+        .groups
         .iter()
         .map(|o| o.iter().map(|x| x.cost).fold(f64::MIN, f64::max))
         .sum::<f64>()
@@ -253,7 +263,7 @@ fn tune_multipliers(p: &MpqProblem, cb: Option<f64>, cs: Option<f64>) -> (f64, f
         // Relaxed assignment under current multipliers.
         let mut tot_b = 0.0f64;
         let mut tot_s = 0.0f64;
-        for opts in &p.layers {
+        for opts in &p.groups {
             let best = opts
                 .iter()
                 .min_by(|a, b| {
@@ -277,13 +287,13 @@ fn tune_multipliers(p: &MpqProblem, cb: Option<f64>, cs: Option<f64>) -> (f64, f
     (lambda, mu)
 }
 
-/// Greedy feasible incumbent: per-layer penalized argmin, then repair by
+/// Greedy feasible incumbent: per-group penalized argmin, then repair by
 /// upgrading to lower-bitops options until feasible.
 fn greedy_incumbent(p: &MpqProblem, order: &[usize], lambda: f64, mu: f64) -> Option<Solution> {
-    let n = p.layers.len();
+    let n = p.groups.len();
     let mut choice = vec![0usize; n];
     for &l in order {
-        let (c, _) = p.layers[l]
+        let (c, _) = p.groups[l]
             .iter()
             .enumerate()
             .min_by(|(_, a), (_, b)| {
@@ -335,8 +345,8 @@ mod tests {
         for trial in 0..40 {
             let mut p = random_problem(&mut rng, 4, 4, 0.7);
             // add a size cap at ~60% of range
-            let min_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
-            let max_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+            let min_s: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+            let max_s: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
             p.size_cap_bits = Some(min_s + (max_s - min_s) * 6 / 10);
             let bf = p.brute_force();
             let bb = solve_bb(&p, 1_000_000);
@@ -357,7 +367,7 @@ mod tests {
         let mut p = random_problem(&mut rng, 5, 5, 1.0);
         p.bitops_cap = None;
         let s = solve_bb(&p, 100_000).unwrap();
-        let want: f64 = p.layers.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
+        let want: f64 = p.groups.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
         assert!((s.cost - want).abs() < 1e-9);
     }
 
@@ -433,9 +443,9 @@ mod tests {
                     });
                 }
             }
-            p.layers.push(opts);
+            p.groups.push(opts);
         }
-        let total_max: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.bitops).max().unwrap()).sum();
+        let total_max: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.bitops).max().unwrap()).sum();
         p.bitops_cap = Some(total_max / 3);
         let t = std::time::Instant::now();
         let s = solve_bb(&p, 5_000_000).unwrap();

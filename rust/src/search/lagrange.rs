@@ -1,0 +1,553 @@
+//! Parallel Lagrangian decomposition for fine-grained MCKP instances.
+//!
+//! For multipliers λ, μ ≥ 0 on the BitOps / size caps, the relaxation
+//! decomposes into independent per-group argmins:
+//!
+//!   L(λ,μ) = Σ_g min_j (cost_gj + λ·bitops_gj + μ·size_gj) − λ·C_b − μ·C_s
+//!
+//! which lower-bounds the ILP optimum for *any* λ, μ ≥ 0.  At 10k+
+//! groups the per-group argmin sweep is the hot loop, so it fans out
+//! over the [`WorkerPool`] in **fixed blocks of [`BLOCK`] groups**: the
+//! block boundaries never depend on the thread count, each block's
+//! partial sums accumulate sequentially, and `parallel_for` returns
+//! blocks in index order, so the combined totals — and therefore every
+//! dual iterate, the bound, and the final solution — are bit-identical
+//! at any thread count.
+//!
+//! The dual search is per-axis bisection (a doubling phase to bracket
+//! the cap, then interval halving), alternated across the two axes when
+//! both caps are set.  Bisection beats subgradient stepping here: each
+//! evaluation is a parallel sweep, monotone usage-vs-multiplier makes
+//! the bracket sound, and ~40 evaluations per axis give machine-precision
+//! duals.
+//!
+//! Rounding is O(n log n), not the O(n²·k) repair loop: starting from
+//! the feasible high-multiplier assignment, each group's switch to its
+//! unconstrained-ideal option is scored by Δcost per unit of
+//! dual-weighted resource, sorted once, and applied greedily while the
+//! caps still fit (ties broken by group index — deterministic).
+//!
+//! Consumers: `engine::SimplexRelax` routes instances above
+//! [`super::FINE_GRAIN_VARS`] here instead of the dense simplex, and
+//! `bb` takes its root multipliers from [`tune_duals`] at that scale —
+//! one shared bound computation for both solvers.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{MpqProblem, Solution};
+use crate::engine::CancelToken;
+use crate::kernels::pool::WorkerPool;
+
+/// Groups per parallel work item.  Fixed — never derived from the thread
+/// count — so partial-sum boundaries (and float rounding) are identical
+/// whether 1 or 64 workers run the sweep.  Small enough that a few
+/// hundred channel groups (ResNet18 at channel:8) already fan out
+/// across every worker; each block still amortizes dispatch over
+/// thousands of option evaluations.
+pub const BLOCK: usize = 64;
+
+/// Telemetry from a Lagrangian solve.
+#[derive(Debug, Clone, Default)]
+pub struct LagrangeStats {
+    /// Final BitOps multiplier.
+    pub lambda: f64,
+    /// Final size multiplier.
+    pub mu: f64,
+    /// Best dual lower bound observed (valid for the original ILP).
+    pub bound: f64,
+    /// Dual evaluations performed (each one parallel argmin sweep).
+    pub evals: u64,
+    /// True when the rounded cost matches the bound to 1e-9.
+    pub proven_optimal: bool,
+    /// True when the token/deadline cut the dual search short.
+    pub cancelled: bool,
+}
+
+/// One relaxed assignment under fixed multipliers.
+#[derive(Debug, Clone)]
+struct DualEval {
+    choice: Vec<usize>,
+    /// Σ_g min penalized cost (the decomposable part of L).
+    pen: f64,
+    cost: f64,
+    bitops: u64,
+    size_bits: u64,
+}
+
+/// Per-group penalized argmin, fanned out in fixed blocks.  Ties take
+/// the lowest option index.
+fn argmin_assignment(p: &MpqProblem, pool: &WorkerPool, lambda: f64, mu: f64) -> DualEval {
+    let n = p.n_groups();
+    let n_blocks = n.div_ceil(BLOCK).max(1);
+    let parts = pool.parallel_for(n_blocks, |b| {
+        let lo = b * BLOCK;
+        let hi = (lo + BLOCK).min(n);
+        let mut choice = Vec::with_capacity(hi - lo);
+        let mut pen = 0.0f64;
+        let mut cost = 0.0f64;
+        let mut bitops = 0u64;
+        let mut size = 0u64;
+        for g in lo..hi {
+            let opts = &p.groups[g];
+            let mut best = 0usize;
+            let mut best_pen = f64::INFINITY;
+            for (j, o) in opts.iter().enumerate() {
+                let pj = o.cost + lambda * o.bitops as f64 + mu * o.size_bits as f64;
+                if pj < best_pen {
+                    best_pen = pj;
+                    best = j;
+                }
+            }
+            let o = &opts[best];
+            choice.push(best);
+            pen += best_pen;
+            cost += o.cost;
+            bitops += o.bitops;
+            size += o.size_bits;
+        }
+        (choice, pen, cost, bitops, size)
+    });
+    // Combine strictly in block order — the sequential reference schedule.
+    let mut out = DualEval { choice: Vec::with_capacity(n), pen: 0.0, cost: 0.0, bitops: 0, size_bits: 0 };
+    for (choice, pen, cost, bitops, size) in parts {
+        out.choice.extend(choice);
+        out.pen += pen;
+        out.cost += cost;
+        out.bitops += bitops;
+        out.size_bits += size;
+    }
+    out
+}
+
+struct DualSearch {
+    lambda: f64,
+    mu: f64,
+    bound: f64,
+    evals: u64,
+    /// Cheapest cap-feasible relaxed assignment seen.
+    feasible: Option<DualEval>,
+    /// The λ=μ=0 assignment — per-group unconstrained minima, the
+    /// rounding target.
+    ideal: DualEval,
+    cancelled: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Axis {
+    BitOps,
+    Size,
+}
+
+/// Bisection search over the dual multipliers.  Deterministic: the
+/// sequence of evaluated (λ, μ) points depends only on the problem.
+fn optimize_duals(
+    p: &MpqProblem,
+    pool: &WorkerPool,
+    deadline: Option<Instant>,
+    cancel: &CancelToken,
+) -> DualSearch {
+    let cb = p.bitops_cap.map(|c| c as f64);
+    let cs = p.size_cap_bits.map(|c| c as f64);
+    let fits = |e: &DualEval| {
+        p.bitops_cap.map_or(true, |c| e.bitops <= c)
+            && p.size_cap_bits.map_or(true, |c| e.size_bits <= c)
+    };
+
+    let ideal = argmin_assignment(p, pool, 0.0, 0.0);
+    let mut s = DualSearch {
+        lambda: 0.0,
+        mu: 0.0,
+        // L(0,0) = Σ_g min cost — already a valid bound.
+        bound: ideal.pen,
+        evals: 1,
+        feasible: None,
+        ideal,
+        cancelled: false,
+    };
+    if fits(&s.ideal) {
+        // The unconstrained optimum is feasible: solved exactly at λ=μ=0.
+        s.bound = s.ideal.cost;
+        s.feasible = Some(s.ideal.clone());
+        return s;
+    }
+
+    let stopped = |s: &mut DualSearch| {
+        if !s.cancelled
+            && (cancel.expired() || deadline.map_or(false, |d| Instant::now() >= d))
+        {
+            s.cancelled = true;
+        }
+        s.cancelled
+    };
+    // Evaluate + book-keep: bound is the max L over every point visited.
+    let eval = |s: &mut DualSearch, lambda: f64, mu: f64| -> DualEval {
+        let e = argmin_assignment(p, pool, lambda, mu);
+        s.evals += 1;
+        let l_val = e.pen - lambda * cb.unwrap_or(0.0) - mu * cs.unwrap_or(0.0);
+        if l_val > s.bound {
+            s.bound = l_val;
+        }
+        if fits(&e) && s.feasible.as_ref().map_or(true, |f| e.cost < f.cost) {
+            s.feasible = Some(e.clone());
+        }
+        e
+    };
+
+    let cost_scale: f64 = p
+        .groups
+        .iter()
+        .map(|o| o.iter().map(|x| x.cost).fold(f64::MIN, f64::max))
+        .sum::<f64>()
+        .max(1e-9);
+    let mut axes = Vec::new();
+    if cb.is_some() {
+        axes.push(Axis::BitOps);
+    }
+    if cs.is_some() {
+        axes.push(Axis::Size);
+    }
+    let rounds = if axes.len() == 2 { 2 } else { 1 };
+
+    'search: for _round in 0..rounds {
+        for &axis in &axes {
+            if stopped(&mut s) {
+                break 'search;
+            }
+            let cap = match axis {
+                Axis::BitOps => cb.unwrap(),
+                Axis::Size => cs.unwrap(),
+            };
+            let usage = |e: &DualEval| match axis {
+                Axis::BitOps => e.bitops as f64,
+                Axis::Size => e.size_bits as f64,
+            };
+            let at = |s: &DualSearch, m: f64| match axis {
+                Axis::BitOps => (m, s.mu),
+                Axis::Size => (s.lambda, m),
+            };
+            let seed = (cost_scale / cap.max(1.0)).max(1e-12);
+            let cur = match axis {
+                Axis::BitOps => s.lambda,
+                Axis::Size => s.mu,
+            };
+            let mut lo = 0.0f64;
+            let mut hi = seed.max(cur).max(1e-12);
+            let (l0, m0) = at(&s, hi);
+            let mut e_hi = eval(&mut s, l0, m0);
+            // Doubling phase: bracket the cap from above.
+            let mut doubles = 0;
+            while usage(&e_hi) > cap && doubles < 64 && !stopped(&mut s) {
+                lo = hi;
+                hi *= 2.0;
+                let (l, m) = at(&s, hi);
+                e_hi = eval(&mut s, l, m);
+                doubles += 1;
+            }
+            if usage(&e_hi) <= cap {
+                // Halving phase: tighten toward the smallest multiplier
+                // that still fits this axis.
+                for _ in 0..32 {
+                    if stopped(&mut s) || hi - lo <= 1e-12 * hi.max(1.0) {
+                        break;
+                    }
+                    let mid = 0.5 * (lo + hi);
+                    let (l, m) = at(&s, mid);
+                    let e = eval(&mut s, l, m);
+                    if usage(&e) > cap {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+            }
+            match axis {
+                Axis::BitOps => s.lambda = hi,
+                Axis::Size => s.mu = hi,
+            }
+        }
+    }
+
+    // Joint evaluation at the final duals; if the combination still
+    // violates a cap (possible with two active caps), push the violated
+    // multipliers up until it fits.
+    if !stopped(&mut s) {
+        let mut e = eval(&mut s, s.lambda, s.mu);
+        let mut doubles = 0;
+        while !fits(&e) && doubles < 64 && !stopped(&mut s) {
+            if cb.map_or(false, |c| e.bitops as f64 > c) {
+                s.lambda = (s.lambda.max(1e-12)) * 2.0;
+            }
+            if cs.map_or(false, |c| e.size_bits as f64 > c) {
+                s.mu = (s.mu.max(1e-12)) * 2.0;
+            }
+            e = eval(&mut s, s.lambda, s.mu);
+            doubles += 1;
+        }
+    }
+    s
+}
+
+/// Tuned root multipliers for `bb` at fine granularity — the same dual
+/// bisection `lp-round` uses, so both solvers share one bound
+/// computation strategy.
+pub fn tune_duals(
+    p: &MpqProblem,
+    pool: &WorkerPool,
+    deadline: Option<Instant>,
+    cancel: &CancelToken,
+) -> (f64, f64) {
+    let s = optimize_duals(p, pool, deadline, cancel);
+    (s.lambda, s.mu)
+}
+
+/// Deterministic cap-seeking assignment: per group, the option with the
+/// smallest cap-normalized resource footprint (ties → lowest index).
+fn min_resource_choice(p: &MpqProblem) -> Vec<usize> {
+    let cb = p.bitops_cap.map(|c| (c as f64).max(1.0));
+    let cs = p.size_cap_bits.map(|c| (c as f64).max(1.0));
+    p.groups
+        .iter()
+        .map(|opts| {
+            let mut best = 0usize;
+            let mut best_r = f64::INFINITY;
+            for (j, o) in opts.iter().enumerate() {
+                let r = cb.map_or(0.0, |c| o.bitops as f64 / c)
+                    + cs.map_or(0.0, |c| o.size_bits as f64 / c);
+                if r < best_r {
+                    best_r = r;
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Solve via Lagrangian decomposition + guided rounding.
+///
+/// Returns a cap-feasible solution and a certified lower bound; the gap
+/// `cost − bound` is the optimality certificate (`proven_optimal` when
+/// it closes to 1e-9).  Bit-identical at any thread count.  When the
+/// token or deadline fires mid-search the best incumbent so far is
+/// returned with `cancelled: true`.
+pub fn solve_lagrange(
+    p: &MpqProblem,
+    pool: &WorkerPool,
+    deadline: Option<Instant>,
+    cancel: &CancelToken,
+) -> Result<(Solution, LagrangeStats)> {
+    if p.groups.is_empty() {
+        return Ok((
+            Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 },
+            LagrangeStats { proven_optimal: true, ..LagrangeStats::default() },
+        ));
+    }
+    for (g, opts) in p.groups.iter().enumerate() {
+        if opts.is_empty() {
+            bail!("group {g} has no options");
+        }
+    }
+    // Sound infeasibility proof (same convention as bb).
+    let min_b: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.bitops).min().unwrap()).sum();
+    let min_s: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+    if p.bitops_cap.map_or(false, |c| min_b > c) || p.size_cap_bits.map_or(false, |c| min_s > c) {
+        bail!("infeasible: even the minimum-cost assignment exceeds the caps");
+    }
+
+    let ds = optimize_duals(p, pool, deadline, cancel);
+
+    // Feasible start: the dual search's best, or the deterministic
+    // min-resource assignment (repaired if the two caps fight).
+    let start = match &ds.feasible {
+        Some(f) => f.clone(),
+        None => {
+            let choice = min_resource_choice(p);
+            let sol = p
+                .evaluate(&choice)
+                .ok()
+                .filter(|s| p.feasible(s))
+                .or_else(|| super::repair_to_feasible(p, &choice))
+                .ok_or_else(|| {
+                    anyhow!("lagrange: no cap-feasible assignment found (caps too tight)")
+                })?;
+            DualEval {
+                choice: sol.choice.clone(),
+                pen: sol.cost,
+                cost: sol.cost,
+                bitops: sol.bitops,
+                size_bits: sol.size_bits,
+            }
+        }
+    };
+
+    // Guided rounding: upgrade groups toward their unconstrained-ideal
+    // option, best Δcost per unit of dual-weighted resource first, while
+    // the caps keep fitting.  One O(n log n) pass.
+    let mut choice = start.choice.clone();
+    let mut cur_b = start.bitops as i128;
+    let mut cur_s = start.size_bits as i128;
+    let mut cands: Vec<(f64, usize)> = Vec::new();
+    for g in 0..p.n_groups() {
+        let i = ds.ideal.choice[g];
+        let c = choice[g];
+        if i == c {
+            continue;
+        }
+        let oi = &p.groups[g][i];
+        let oc = &p.groups[g][c];
+        let dc = oi.cost - oc.cost;
+        if dc >= 0.0 {
+            continue;
+        }
+        let db = (oi.bitops as f64 - oc.bitops as f64).max(0.0);
+        let dsz = (oi.size_bits as f64 - oc.size_bits as f64).max(0.0);
+        let denom = (ds.lambda * db + ds.mu * dsz).max(1e-18);
+        cands.push((dc / denom, g));
+    }
+    cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    for &(_, g) in &cands {
+        let i = ds.ideal.choice[g];
+        let c = choice[g];
+        let oi = &p.groups[g][i];
+        let oc = &p.groups[g][c];
+        let nb = cur_b + oi.bitops as i128 - oc.bitops as i128;
+        let ns = cur_s + oi.size_bits as i128 - oc.size_bits as i128;
+        let ok_b = p.bitops_cap.map_or(true, |cap| nb <= cap as i128);
+        let ok_s = p.size_cap_bits.map_or(true, |cap| ns <= cap as i128);
+        if ok_b && ok_s {
+            choice[g] = i;
+            cur_b = nb;
+            cur_s = ns;
+        }
+    }
+    let sol = p.evaluate(&choice)?;
+    debug_assert!(p.feasible(&sol));
+
+    let stats = LagrangeStats {
+        lambda: ds.lambda,
+        mu: ds.mu,
+        bound: ds.bound,
+        evals: ds.evals,
+        proven_optimal: !ds.cancelled && (sol.cost - ds.bound).abs() <= 1e-9,
+        cancelled: ds.cancelled,
+    };
+    Ok((sol, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    fn pool1() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+
+    #[test]
+    fn feasible_and_bounded_on_random_instances() {
+        let mut rng = Rng::new(0xAB);
+        for trial in 0..40 {
+            let layers = 2 + rng.below(4);
+            let tight = rng.uniform(0.1, 0.9);
+            let p = random_problem(&mut rng, layers, 4, tight);
+            let bf = p.brute_force();
+            let lg = solve_lagrange(&p, &pool1(), None, &CancelToken::none());
+            match (bf, lg) {
+                (Some(b), Ok((s, st))) => {
+                    assert!(p.feasible(&s), "trial {trial}");
+                    assert!(
+                        s.cost >= b.cost - 1e-9,
+                        "trial {trial}: rounded {} below optimum {}",
+                        s.cost,
+                        b.cost
+                    );
+                    assert!(
+                        st.bound <= b.cost + 1e-9,
+                        "trial {trial}: bound {} above optimum {}",
+                        st.bound,
+                        b.cost
+                    );
+                }
+                (None, Err(_)) => {}
+                (bf, lg) => panic!("trial {trial}: disagree bf={bf:?} lg={lg:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unconstrained_is_exact() {
+        let mut rng = Rng::new(7);
+        let mut p = random_problem(&mut rng, 8, 5, 1.0);
+        p.bitops_cap = None;
+        let (s, st) = solve_lagrange(&p, &pool1(), None, &CancelToken::none()).unwrap();
+        let want: f64 =
+            p.groups.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
+        assert!((s.cost - want).abs() < 1e-12);
+        assert!(st.proven_optimal);
+    }
+
+    /// Satellite property: the parallel decomposition is bit-identical at
+    /// any thread count — fixed block boundaries + index-ordered
+    /// reduction, nothing depends on worker scheduling.
+    #[test]
+    fn one_vs_many_threads_bit_identical() {
+        let mut rng = Rng::new(0xBEEF);
+        // Big enough that several blocks exist and many threads engage.
+        let p = random_problem(&mut rng, 4 * BLOCK + 57, 5, 0.35);
+        let (s1, st1) = solve_lagrange(&p, &WorkerPool::new(1), None, &CancelToken::none()).unwrap();
+        for threads in [2usize, 5, 16] {
+            let (sn, stn) =
+                solve_lagrange(&p, &WorkerPool::new(threads), None, &CancelToken::none()).unwrap();
+            assert_eq!(s1.choice, sn.choice, "{threads} threads");
+            assert_eq!(s1.cost.to_bits(), sn.cost.to_bits(), "{threads} threads");
+            assert_eq!(s1.bitops, sn.bitops);
+            assert_eq!(st1.bound.to_bits(), stn.bound.to_bits(), "{threads} threads");
+            assert_eq!(st1.lambda.to_bits(), stn.lambda.to_bits());
+            assert_eq!(st1.evals, stn.evals);
+        }
+    }
+
+    #[test]
+    fn fine_grained_instance_solves_with_tight_gap() {
+        let mut rng = Rng::new(0xFEED);
+        // ~10k variables: 2000 groups × 5 options.
+        let p = random_problem(&mut rng, 2000, 5, 0.4);
+        let t = std::time::Instant::now();
+        let (s, st) = solve_lagrange(&p, &WorkerPool::global(), None, &CancelToken::none()).unwrap();
+        assert!(p.feasible(&s));
+        // The decomposition gap shrinks with group count: at 2000 groups
+        // the rounded cost must sit within 2% of the certified bound.
+        assert!(st.bound <= s.cost + 1e-9);
+        assert!(
+            s.cost - st.bound <= 0.02 * s.cost.abs().max(1.0),
+            "gap too wide: cost {} bound {}",
+            s.cost,
+            st.bound
+        );
+        assert!(t.elapsed().as_secs_f64() < 10.0, "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn pre_cancelled_token_returns_deterministic_feasible_incumbent() {
+        let mut rng = Rng::new(3);
+        let p = random_problem(&mut rng, 50, 4, 0.5);
+        let token = CancelToken::none();
+        token.cancel();
+        let (a, sa) = solve_lagrange(&p, &pool1(), None, &token).unwrap();
+        assert!(sa.cancelled && !sa.proven_optimal);
+        assert!(p.feasible(&a));
+        let (b, _) = solve_lagrange(&p, &pool1(), None, &token).unwrap();
+        assert_eq!(a.choice, b.choice);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut rng = Rng::new(11);
+        let mut p = random_problem(&mut rng, 4, 3, 0.5);
+        p.bitops_cap = Some(0);
+        assert!(solve_lagrange(&p, &pool1(), None, &CancelToken::none()).is_err());
+    }
+}

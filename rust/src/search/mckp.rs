@@ -3,14 +3,31 @@
 //! Exact when the constraint values fit the integer grid directly
 //! (`unit == 1`); otherwise weights are rounded *up* to grid units, which
 //! keeps every returned solution feasible (conservative) at a bounded
-//! optimality gap of one grid unit per layer.  Complements the exact
-//! branch-and-bound: O(L · grid · options) time, fully predictable — the
+//! optimality gap of one grid unit per group.  Complements the exact
+//! branch-and-bound: O(G · grid · options) time, fully predictable — the
 //! profile used in the `ilp_micro` bench comparison.
+//!
+//! Fine-grained scaling: the parent-pointer table is the memory hot spot
+//! (groups × cells), so the requested `SolveBudget.dp_grid` is coarsened
+//! under [`DP_CELL_BUDGET`] total cells·groups — layer-sized instances
+//! never hit the ceiling (their DP is byte-identical to the pre-group
+//! engine), while a 10k-group instance lands on a few hundred cells.
+//! Above [`POOL_GROUPS`] groups each DP row update is sharded over the
+//! worker pool in fixed cell chunks; every output cell is computed
+//! independently from the previous row, so the result is bit-identical
+//! at any thread count by construction.
 
 use anyhow::{bail, Result};
 
 use super::{MpqProblem, Solution};
 use crate::engine::CancelToken;
+use crate::kernels::pool::WorkerPool;
+
+/// Ceiling on `groups × cells` for the parent-pointer table (× 2 bytes).
+pub const DP_CELL_BUDGET: usize = 4_000_000;
+
+/// Group count above which DP row updates fan out over the worker pool.
+pub const POOL_GROUPS: usize = 512;
 
 /// Which resource the DP runs against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,7 +52,7 @@ pub fn solve_dp(p: &MpqProblem, resource: Resource, grid: usize) -> Result<Solut
 }
 
 /// [`solve_dp`] plus the grid telemetry it ran with.  The cancellation
-/// token is checked once per layer (each layer costs O(grid · options));
+/// token is checked once per group (each group costs O(grid · options));
 /// a fired token aborts with an error — the DP has no partial incumbent,
 /// so degradation is the engine's job (greedy / last cached policy).
 pub fn solve_dp_stats(
@@ -58,10 +75,15 @@ pub fn solve_dp_stats(
         }
         _ => {}
     }
+    // Cost-grid coarsening: honor the requested grid until the parent
+    // table would blow the cell budget, then shrink (never below 64
+    // cells, never above the request).
+    let coarse = (DP_CELL_BUDGET / p.groups.len().max(1)).max(64);
+    let grid = grid.min(coarse).max(1);
     let unit = (cap / grid as u64).max(1);
     let cells = (cap / unit) as usize + 1;
     let stats = DpStats { unit, cells };
-    if p.layers.is_empty() {
+    if p.groups.is_empty() {
         return Ok((Solution { choice: vec![], cost: 0.0, bitops: 0, size_bits: 0 }, stats));
     }
 
@@ -72,31 +94,70 @@ pub fn solve_dp_stats(
 
     const INF: f64 = f64::INFINITY;
 
-    // dp[j] = min cost using exactly ≤ j units; parent pointers per layer.
+    // dp[j] = min cost using exactly ≤ j units; parent pointers per group.
     let mut dp = vec![INF; cells];
     dp[0] = 0.0;
-    // parent[l][j] = option chosen at layer l to reach state j (u16), or u16::MAX
-    let mut parent: Vec<Vec<u16>> = Vec::with_capacity(p.layers.len());
+    // parent[g][j] = option chosen at group g to reach state j (u16), or u16::MAX
+    let mut parent: Vec<Vec<u16>> = Vec::with_capacity(p.groups.len());
+
+    // Fine-grained instances shard each row update over the pool: cell
+    // j2 of the next row depends only on the previous row, so disjoint
+    // cell chunks never race and the result matches the sequential loop
+    // exactly (same option order, same strict-< tie-break).
+    let use_pool = p.groups.len() >= POOL_GROUPS && cells > 1;
+    let pool = WorkerPool::global();
+    let mut row: Vec<(f64, u16)> = if use_pool { vec![(INF, u16::MAX); cells] } else { Vec::new() };
 
     let mut next = vec![INF; cells];
-    for opts in &p.layers {
+    for opts in &p.groups {
         if cancel.expired() {
             bail!("mckp DP cancelled mid-solve (deadline or shed)");
         }
-        next.fill(INF);
         let mut par = vec![u16::MAX; cells];
-        for (c, o) in opts.iter().enumerate() {
-            let w = weight_of(o).div_ceil(unit) as usize;
-            if w >= cells {
-                continue;
+        if use_pool {
+            let ws: Vec<usize> =
+                opts.iter().map(|o| weight_of(o).div_ceil(unit) as usize).collect();
+            let dp_ref = &dp;
+            pool.for_each_chunk(&mut row, 4096, |ci, chunk| {
+                let base_j = ci * 4096;
+                for (off, cell) in chunk.iter_mut().enumerate() {
+                    let j2 = base_j + off;
+                    let mut best = INF;
+                    let mut pc = u16::MAX;
+                    for (c, &w) in ws.iter().enumerate() {
+                        if w < cells && w <= j2 {
+                            let base = dp_ref[j2 - w];
+                            if base.is_finite() {
+                                let cand = base + opts[c].cost;
+                                if cand < best {
+                                    best = cand;
+                                    pc = c as u16;
+                                }
+                            }
+                        }
+                    }
+                    *cell = (best, pc);
+                }
+            });
+            for (j, &(cost, pc)) in row.iter().enumerate() {
+                next[j] = cost;
+                par[j] = pc;
             }
-            for j in 0..cells - w {
-                let base = dp[j];
-                if base.is_finite() {
-                    let cand = base + o.cost;
-                    if cand < next[j + w] {
-                        next[j + w] = cand;
-                        par[j + w] = c as u16;
+        } else {
+            next.fill(INF);
+            for (c, o) in opts.iter().enumerate() {
+                let w = weight_of(o).div_ceil(unit) as usize;
+                if w >= cells {
+                    continue;
+                }
+                for j in 0..cells - w {
+                    let base = dp[j];
+                    if base.is_finite() {
+                        let cand = base + o.cost;
+                        if cand < next[j + w] {
+                            next[j + w] = cand;
+                            par[j + w] = c as u16;
+                        }
                     }
                 }
             }
@@ -114,14 +175,14 @@ pub fn solve_dp_stats(
         .ok_or_else(|| anyhow::anyhow!("infeasible under cap {cap}"))?;
 
     // Backtrack.
-    let mut choice = vec![0usize; p.layers.len()];
-    for l in (0..p.layers.len()).rev() {
+    let mut choice = vec![0usize; p.groups.len()];
+    for l in (0..p.groups.len()).rev() {
         let c = parent[l][j];
         if c == u16::MAX {
-            bail!("DP backtrack inconsistency at layer {l}");
+            bail!("DP backtrack inconsistency at group {l}");
         }
         choice[l] = c as usize;
-        let w = weight_of(&p.layers[l][c as usize]).div_ceil(unit) as usize;
+        let w = weight_of(&p.groups[l][c as usize]).div_ceil(unit) as usize;
         j -= w;
     }
     let sol = p.evaluate(&choice)?;
@@ -184,6 +245,22 @@ mod tests {
     }
 
     #[test]
+    fn many_group_instance_coarsens_and_stays_feasible() {
+        let mut rng = Rng::new(0x600D);
+        // 700 groups: above POOL_GROUPS, so the sharded row update runs,
+        // and the cell budget coarsens the requested 16k grid.
+        let p = random_problem(&mut rng, 700, 4, 0.5);
+        let (s, st) = solve_dp_stats(&p, Resource::BitOps, 16_384, &CancelToken::none()).unwrap();
+        assert!(p.feasible(&s));
+        assert!(st.cells <= DP_CELL_BUDGET / 700 + 1, "cells {} not coarsened", st.cells);
+        // The sharded update is per-cell independent — repeat solves are
+        // bit-identical regardless of worker scheduling.
+        let (s2, _) = solve_dp_stats(&p, Resource::BitOps, 16_384, &CancelToken::none()).unwrap();
+        assert_eq!(s.choice, s2.choice);
+        assert_eq!(s.cost.to_bits(), s2.cost.to_bits());
+    }
+
+    #[test]
     fn rejects_two_constraints() {
         let mut rng = Rng::new(3);
         let mut p = random_problem(&mut rng, 3, 3, 0.5);
@@ -195,8 +272,8 @@ mod tests {
     fn size_resource_works() {
         let mut rng = Rng::new(4);
         let mut p = random_problem(&mut rng, 4, 4, 0.9);
-        let min_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
-        let max_s: u64 = p.layers.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
+        let min_s: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).min().unwrap()).sum();
+        let max_s: u64 = p.groups.iter().map(|o| o.iter().map(|x| x.size_bits).max().unwrap()).sum();
         p.bitops_cap = None;
         p.size_cap_bits = Some((min_s + max_s) / 2);
         let s = solve_dp(&p, Resource::SizeBits, (min_s + max_s) as usize / 2 + 1).unwrap();

@@ -1,15 +1,32 @@
 //! MPQ policy search: the paper's one-time ILP (eq. 3) + every baseline.
 //!
-//! The search problem is a Multiple-Choice Knapsack: each layer picks
-//! exactly one (w_bits, a_bits) combination; the summed importance
-//! objective is minimized under a BitOps cap and/or a model-size cap.
+//! The search problem is a Multiple-Choice Knapsack over **groups**:
+//! each group picks exactly one (w_bits, a_bits) combination; the summed
+//! importance objective is minimized under a BitOps cap and/or a
+//! model-size cap.  At the paper's granularity a group *is* a layer
+//! (eq. 3 verbatim, hundreds of variables); [`Granularity`] refines that
+//! to channel groups or single output channels (IMPQ-style kernel-wise),
+//! exploding the instance to 10^4–10^5 variables.  The learned per-layer
+//! indicator is apportioned across a layer's groups by weight-share —
+//! no retraining — while MACs and numel split *exactly* (the group
+//! resources sum bit-for-bit to the layer totals).
 //!
 //! Solvers (all from scratch, cross-validated against each other and
 //! brute force in tests):
-//!   * [`bb`]    — exact branch-and-bound with Lagrangian bounds (default)
-//!   * [`mckp`]  — dynamic program (exact on an integer grid)
-//!   * [`lp`]    — dense two-phase simplex (relaxation bounds / checks)
+//!   * [`bb`]       — exact branch-and-bound with Lagrangian bounds (default)
+//!   * [`mckp`]     — dynamic program (exact on an integer grid)
+//!   * [`lp`]       — dense two-phase simplex (relaxation bounds / checks)
+//!   * [`lagrange`] — parallel Lagrangian decomposition (fine-grained
+//!     instances: dual bisection over per-group argmins on the worker
+//!     pool, bit-identical at any thread count)
 //!   * [`baselines`] — uniform, random, reversed, greedy, Hessian-Pareto
+//!
+//! On fine-grained instances (above [`FINE_GRAIN_VARS`]) the engine
+//! runs [`prune_dominated`] before any solver: it drops per-group
+//! options that are *simply dominated* (another option no worse in
+//! cost, BitOps and size, strictly better in one).  Unlike
+//! LP/convex-hull pruning — which is unsafe for the integer problem —
+//! simple dominance provably never changes the optimum.
 //!
 //! This module holds the problem substrate and the raw algorithms; the
 //! public entry point is [`crate::engine::PolicyEngine`], which wraps
@@ -23,6 +40,7 @@
 
 pub mod baselines;
 pub mod bb;
+pub mod lagrange;
 pub mod lp;
 pub mod mckp;
 pub mod pareto;
@@ -34,12 +52,67 @@ use crate::models::ModelMeta;
 use crate::quant::cost::{layer_bitops, layer_size_bits};
 use crate::quant::BitConfig;
 
-/// One candidate (w_bits, a_bits) combination for a layer.
+/// Variable-count threshold above which the engine treats an instance as
+/// *fine-grained*: `lp-round` switches from the dense simplex to the
+/// parallel Lagrangian decomposition, `bb` takes its root bound from the
+/// same dual bisection, and the auto chain prefers `lp-round`.  Every
+/// layer-granularity instance sits far below this, so coarse solves are
+/// byte-identical to the pre-group engine.
+pub const FINE_GRAIN_VARS: usize = 2_000;
+
+/// How finely a layer's weight tensor is split into MCKP groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Granularity {
+    /// One group per quantizable layer — the paper's eq. 3 (default).
+    Layer,
+    /// Groups of `g` output channels (the last group takes the remainder).
+    ChannelGroup(u32),
+    /// One group per output channel (IMPQ-style kernel-wise precision).
+    Kernel,
+}
+
+impl Default for Granularity {
+    fn default() -> Self {
+        Granularity::Layer
+    }
+}
+
+impl Granularity {
+    /// Parse the wire/CLI spelling: `layer`, `channel:<g>` or `kernel`.
+    pub fn parse(s: &str) -> Result<Granularity> {
+        match s {
+            "layer" => Ok(Granularity::Layer),
+            "kernel" => Ok(Granularity::Kernel),
+            _ => {
+                if let Some(g) = s.strip_prefix("channel:") {
+                    match g.parse::<u32>() {
+                        Ok(g) if g >= 1 => return Ok(Granularity::ChannelGroup(g)),
+                        _ => bail!("invalid channel group size {g:?} (expected an integer >= 1)"),
+                    }
+                }
+                bail!("unknown granularity {s:?} (expected \"layer\", \"channel:<g>\", or \"kernel\")")
+            }
+        }
+    }
+
+    /// Canonical spelling — the inverse of [`Granularity::parse`]; used in
+    /// cache keys, frontier reports and bench records.
+    pub fn canonical(&self) -> String {
+        match self {
+            Granularity::Layer => "layer".to_string(),
+            Granularity::ChannelGroup(g) => format!("channel:{g}"),
+            Granularity::Kernel => "kernel".to_string(),
+        }
+    }
+}
+
+/// One candidate (w_bits, a_bits) combination for a group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerOption {
     pub w_bits: u8,
     pub a_bits: u8,
-    /// Objective contribution s_a + α·s_w (paper eq. 3).
+    /// Objective contribution s_a + α·s_w (paper eq. 3), scaled by the
+    /// group's weight share under fine granularities.
     pub cost: f64,
     pub bitops: u64,
     pub size_bits: u64,
@@ -48,8 +121,13 @@ pub struct LayerOption {
 /// The MCKP instance.
 #[derive(Debug, Clone, Default)]
 pub struct MpqProblem {
-    /// Options per layer (pinned layers have exactly one option).
-    pub layers: Vec<Vec<LayerOption>>,
+    /// Options per group (pinned layers have exactly one option and are
+    /// never split).
+    pub groups: Vec<Vec<LayerOption>>,
+    /// Model-layer index of each group, ascending.  Empty means the
+    /// identity map (every group is a layer) — the pre-group layout that
+    /// all coarse instances use.
+    pub group_layer: Vec<usize>,
     pub bitops_cap: Option<u64>,
     pub size_cap_bits: Option<u64>,
 }
@@ -57,11 +135,20 @@ pub struct MpqProblem {
 /// A solved policy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Solution {
-    /// Chosen option index per layer.
+    /// Chosen option index per group.
     pub choice: Vec<usize>,
     pub cost: f64,
     pub bitops: u64,
     pub size_bits: u64,
+}
+
+/// Exact integer split of a layer total across `channels` channels:
+/// cumulative differencing guarantees the spans sum bit-for-bit to
+/// `total` and each span is deterministic for a given boundary.
+fn split_exact(total: u64, channels: u64, start: u64, end: u64) -> u64 {
+    let t = total as u128;
+    let c = channels as u128;
+    (t * end as u128 / c - t * start as u128 / c) as u64
 }
 
 impl MpqProblem {
@@ -69,7 +156,15 @@ impl MpqProblem {
     ///
     /// `alpha` linearly combines activation and weight importances; when
     /// `weight_only` is set the activation bit-width is pinned to 8
-    /// (Table 5's weight-only MPQ setting).
+    /// (Table 5's weight-only MPQ setting) — including for pinned layers,
+    /// so their BitOps accounting matches the unpinned convention.
+    ///
+    /// `granularity` splits each unpinned layer's weight tensor into
+    /// channel groups (channel count = leading dim of the layer's `.w`
+    /// param): MACs and numel split exactly by cumulative differencing,
+    /// and the layer's learned cost is apportioned by each group's numel
+    /// share.  [`Granularity::Layer`] reproduces the per-layer instance
+    /// bit-for-bit.
     pub fn from_importance(
         meta: &ModelMeta,
         imp: &Importance,
@@ -77,20 +172,60 @@ impl MpqProblem {
         bitops_cap: Option<u64>,
         size_cap_bits: Option<u64>,
         weight_only: bool,
+        granularity: Granularity,
     ) -> MpqProblem {
-        let mut layers = Vec::with_capacity(meta.n_qlayers);
-        for q in &meta.qlayers {
-            let mut opts = Vec::new();
+        let fine = !matches!(granularity, Granularity::Layer);
+        let mut groups = Vec::with_capacity(meta.n_qlayers);
+        let mut group_layer = Vec::new();
+        for (li, q) in meta.qlayers.iter().enumerate() {
             if q.pinned {
                 let b = meta.pin_bits;
-                opts.push(LayerOption {
+                let a = if weight_only { 8 } else { b };
+                groups.push(vec![LayerOption {
                     w_bits: b,
-                    a_bits: b,
+                    a_bits: a,
                     cost: 0.0,
-                    bitops: layer_bitops(q.macs, b, b),
+                    bitops: layer_bitops(q.macs, b, a),
                     size_bits: layer_size_bits(q.w_numel, b),
-                });
+                }]);
+                if fine {
+                    group_layer.push(li);
+                }
+                continue;
+            }
+            // (macs, numel, cost share) per group of this layer.
+            let spans: Vec<(u64, u64, f64)> = if fine {
+                let channels = meta
+                    .params
+                    .iter()
+                    .find(|p| p.name == format!("{}.w", q.name))
+                    .and_then(|p| p.shape.first().copied())
+                    .unwrap_or(1)
+                    .max(1) as u64;
+                let per_group = match granularity {
+                    Granularity::ChannelGroup(g) => g as u64,
+                    _ => 1,
+                };
+                let n = channels.div_ceil(per_group);
+                (0..n)
+                    .map(|gi| {
+                        let c0 = gi * per_group;
+                        let c1 = ((gi + 1) * per_group).min(channels);
+                        let macs = split_exact(q.macs, channels, c0, c1);
+                        let numel = split_exact(q.w_numel, channels, c0, c1);
+                        let share = if q.w_numel > 0 {
+                            numel as f64 / q.w_numel as f64
+                        } else {
+                            (c1 - c0) as f64 / channels as f64
+                        };
+                        (macs, numel, share)
+                    })
+                    .collect()
             } else {
+                vec![(q.macs, q.w_numel, 1.0)]
+            };
+            for (macs, numel, share) in spans {
+                let mut opts = Vec::new();
                 for (wi, &wb) in meta.bit_options.iter().enumerate() {
                     let a_opts: Vec<(usize, u8)> = if weight_only {
                         vec![(usize::MAX, 8u8)]
@@ -100,39 +235,62 @@ impl MpqProblem {
                     for (ai, ab) in a_opts {
                         let s_w = imp.w[q.index][wi];
                         let s_a = if ai == usize::MAX { 0.0 } else { imp.a[q.index][ai] };
+                        let full = s_a as f64 + alpha * s_w as f64;
                         opts.push(LayerOption {
                             w_bits: wb,
                             a_bits: ab,
-                            cost: s_a as f64 + alpha * s_w as f64,
-                            bitops: layer_bitops(q.macs, wb, ab),
-                            size_bits: layer_size_bits(q.w_numel, wb),
+                            cost: if fine { full * share } else { full },
+                            bitops: layer_bitops(macs, wb, ab),
+                            size_bits: layer_size_bits(numel, wb),
                         });
                     }
                 }
+                groups.push(opts);
+                if fine {
+                    group_layer.push(li);
+                }
             }
-            layers.push(opts);
         }
-        MpqProblem { layers, bitops_cap, size_cap_bits }
+        MpqProblem { groups, group_layer, bitops_cap, size_cap_bits }
     }
 
+    /// Number of MCKP groups (decision variables' rows).
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of model layers the groups project onto.
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        if self.group_layer.is_empty() {
+            self.groups.len()
+        } else {
+            self.group_layer.last().map_or(0, |&l| l + 1)
+        }
+    }
+
+    /// Model-layer index of group `g`.
+    pub fn layer_of(&self, g: usize) -> usize {
+        if self.group_layer.is_empty() {
+            g
+        } else {
+            self.group_layer[g]
+        }
     }
 
     /// Total option count (ILP variable count).
     pub fn n_vars(&self) -> usize {
-        self.layers.iter().map(|l| l.len()).sum()
+        self.groups.iter().map(|l| l.len()).sum()
     }
 
     pub fn evaluate(&self, choice: &[usize]) -> Result<Solution> {
-        if choice.len() != self.layers.len() {
+        if choice.len() != self.groups.len() {
             bail!("choice length mismatch");
         }
         let mut cost = 0.0;
         let mut bitops = 0u64;
         let mut size = 0u64;
         for (l, &c) in choice.iter().enumerate() {
-            let Some(o) = self.layers[l].get(c) else { bail!("layer {l}: option {c} out of range") };
+            let Some(o) = self.groups[l].get(c) else { bail!("group {l}: option {c} out of range") };
             cost += o.cost;
             bitops += o.bitops;
             size += o.size_bits;
@@ -146,27 +304,44 @@ impl MpqProblem {
     }
 
     /// Convert a solution into the runtime [`BitConfig`].
+    ///
+    /// Fine-grained solutions project conservatively: each layer takes the
+    /// max w/a bit-width across its groups (deterministic, and never
+    /// under-provisions a channel the solver gave more precision).
     pub fn to_bit_config(&self, s: &Solution) -> BitConfig {
-        let mut w = Vec::with_capacity(self.layers.len());
-        let mut a = Vec::with_capacity(self.layers.len());
-        for (l, &c) in s.choice.iter().enumerate() {
-            w.push(self.layers[l][c].w_bits);
-            a.push(self.layers[l][c].a_bits);
+        if self.group_layer.is_empty() {
+            let mut w = Vec::with_capacity(self.groups.len());
+            let mut a = Vec::with_capacity(self.groups.len());
+            for (l, &c) in s.choice.iter().enumerate() {
+                w.push(self.groups[l][c].w_bits);
+                a.push(self.groups[l][c].a_bits);
+            }
+            BitConfig { w_bits: w, a_bits: a }
+        } else {
+            let n = self.n_layers();
+            let mut w = vec![0u8; n];
+            let mut a = vec![0u8; n];
+            for (g, &c) in s.choice.iter().enumerate() {
+                let l = self.group_layer[g];
+                let o = &self.groups[g][c];
+                w[l] = w[l].max(o.w_bits);
+                a[l] = a[l].max(o.a_bits);
+            }
+            BitConfig { w_bits: w, a_bits: a }
         }
-        BitConfig { w_bits: w, a_bits: a }
     }
 
     /// Exhaustive optimum — exponential; tests only.
     pub fn brute_force(&self) -> Option<Solution> {
         fn rec(p: &MpqProblem, l: usize, choice: &mut Vec<usize>, best: &mut Option<Solution>) {
-            if l == p.layers.len() {
+            if l == p.groups.len() {
                 let s = p.evaluate(choice).unwrap();
                 if p.feasible(&s) && best.as_ref().map_or(true, |b| s.cost < b.cost - 1e-12) {
                     *best = Some(s);
                 }
                 return;
             }
-            for c in 0..p.layers[l].len() {
+            for c in 0..p.groups[l].len() {
                 choice.push(c);
                 rec(p, l + 1, choice, best);
                 choice.pop();
@@ -178,17 +353,99 @@ impl MpqProblem {
     }
 }
 
-/// Repair a per-layer choice toward feasibility: while a cap is
-/// violated, flip the single (layer, option) with the best
+/// A problem with per-group simply-dominated options removed, plus the
+/// bookkeeping to map its solutions back to the original option indices.
+#[derive(Debug, Clone)]
+pub struct PrunedProblem {
+    pub problem: MpqProblem,
+    /// `keep[g][j]` = original option index of the pruned problem's
+    /// option `j` in group `g`.
+    pub keep: Vec<Vec<usize>>,
+    /// Total options dropped (reported as `SolveStats.pruned`).
+    pub dropped: usize,
+}
+
+impl PrunedProblem {
+    /// Re-index a solution of the pruned problem into the original
+    /// problem's option space.  Cost/BitOps/size are unchanged — pruning
+    /// only removes options, it never alters the ones kept.
+    pub fn restore(&self, s: &Solution) -> Solution {
+        Solution {
+            choice: s.choice.iter().enumerate().map(|(g, &c)| self.keep[g][c]).collect(),
+            cost: s.cost,
+            bitops: s.bitops,
+            size_bits: s.size_bits,
+        }
+    }
+}
+
+/// MCKP dominance preprocessing: within each group, drop option B when
+/// some option A is no worse on all three axes (cost, BitOps, size) and
+/// strictly better on at least one.
+///
+/// This is *simple* dominance, not the classic LP/convex-hull pruning —
+/// deliberately.  Hull pruning is only safe for the LP relaxation: the
+/// integer optimum can sit strictly inside the hull (e.g. options
+/// (weight, cost) = (0,10), (4,6.5), (9,1) under cap 4 — the hull drops
+/// (4,6.5) and the integer optimum jumps from 6.5 to 10).  Simple
+/// dominance preserves the integer optimum by construction: any solution
+/// using a dropped option maps to one at least as good using its
+/// dominator.  The hull-style reduction still happens implicitly inside
+/// the Lagrangian argmins, where it *is* valid.
+///
+/// The strictness requirement makes domination antisymmetric, so at
+/// least one option always survives per group (the lexicographic min
+/// over (cost, bitops, size) has no dominator).
+pub fn prune_dominated(p: &MpqProblem) -> PrunedProblem {
+    let mut groups = Vec::with_capacity(p.groups.len());
+    let mut keep = Vec::with_capacity(p.groups.len());
+    let mut dropped = 0usize;
+    for opts in &p.groups {
+        let mut kept: Vec<usize> = Vec::with_capacity(opts.len());
+        'options: for (j, o) in opts.iter().enumerate() {
+            for (k, d) in opts.iter().enumerate() {
+                if k == j {
+                    continue;
+                }
+                let no_worse =
+                    d.cost <= o.cost && d.bitops <= o.bitops && d.size_bits <= o.size_bits;
+                let strictly_better =
+                    d.cost < o.cost || d.bitops < o.bitops || d.size_bits < o.size_bits;
+                if no_worse && strictly_better {
+                    dropped += 1;
+                    continue 'options;
+                }
+            }
+            kept.push(j);
+        }
+        groups.push(kept.iter().map(|&j| opts[j].clone()).collect());
+        keep.push(kept);
+    }
+    PrunedProblem {
+        problem: MpqProblem {
+            groups,
+            group_layer: p.group_layer.clone(),
+            bitops_cap: p.bitops_cap,
+            size_cap_bits: p.size_cap_bits,
+        },
+        keep,
+        dropped,
+    }
+}
+
+/// Repair a per-group choice toward feasibility: while a cap is
+/// violated, flip the single (group, option) with the best
 /// Δconstraint/Δcost trade, i.e. the cheapest objective increase per
 /// unit of violated-constraint reduction.  Shared by
 /// `engine::GreedyRepair`, `engine::SimplexRelax` rounding, and
 /// [`bb::greedy_incumbent`]'s root incumbent (each used to carry its own
 /// copy of this loop).  Returns `None` when no sequence of single-option
-/// moves reaches feasibility.
+/// moves reaches feasibility.  O(passes × groups × options) — fine at
+/// layer granularity; fine-grained instances use
+/// [`lagrange`]'s O(n log n) upgrade rounding instead.
 pub fn repair_to_feasible(p: &MpqProblem, choice: &[usize]) -> Option<Solution> {
     let mut sol = p.evaluate(choice).ok()?;
-    let n = p.n_layers();
+    let n = p.n_groups();
     let mut guard = 0;
     while !p.feasible(&sol) && guard < 10 * n + 10 {
         guard += 1;
@@ -196,8 +453,8 @@ pub fn repair_to_feasible(p: &MpqProblem, choice: &[usize]) -> Option<Solution> 
         let need_s = p.size_cap_bits.map_or(false, |cap| sol.size_bits > cap);
         let mut best: Option<(usize, usize, f64)> = None;
         for l in 0..n {
-            let cur = &p.layers[l][sol.choice[l]];
-            for (c, o) in p.layers[l].iter().enumerate() {
+            let cur = &p.groups[l][sol.choice[l]];
+            for (c, o) in p.groups[l].iter().enumerate() {
                 let db = cur.bitops as f64 - o.bitops as f64;
                 let ds = cur.size_bits as f64 - o.size_bits as f64;
                 let gain = (if need_b { db } else { 0.0 }) + (if need_s { ds } else { 0.0 });
@@ -241,7 +498,7 @@ pub(crate) mod testutil {
             }
             max_bitops += lo.iter().map(|o| o.bitops).max().unwrap();
             min_bitops += lo.iter().map(|o| o.bitops).min().unwrap();
-            p.layers.push(lo);
+            p.groups.push(lo);
         }
         let cap = min_bitops as f64 + tightness * (max_bitops - min_bitops) as f64;
         p.bitops_cap = Some(cap as u64);
@@ -252,10 +509,11 @@ pub(crate) mod testutil {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::synthetic_meta;
 
     fn tiny() -> MpqProblem {
         MpqProblem {
-            layers: vec![
+            groups: vec![
                 vec![
                     LayerOption { w_bits: 2, a_bits: 2, cost: 5.0, bitops: 4, size_bits: 2 },
                     LayerOption { w_bits: 4, a_bits: 4, cost: 1.0, bitops: 16, size_bits: 4 },
@@ -265,8 +523,18 @@ mod tests {
                     LayerOption { w_bits: 4, a_bits: 4, cost: 0.5, bitops: 32, size_bits: 8 },
                 ],
             ],
+            group_layer: Vec::new(),
             bitops_cap: Some(24),
             size_cap_bits: None,
+        }
+    }
+
+    fn uniform_importance(meta: &ModelMeta) -> Importance {
+        let opts = meta.bit_options.len();
+        Importance {
+            bits: meta.bit_options.clone(),
+            w: (0..meta.n_qlayers).map(|l| vec![0.3 + l as f32 * 0.1; opts]).collect(),
+            a: (0..meta.n_qlayers).map(|l| vec![0.2 + l as f32 * 0.05; opts]).collect(),
         }
     }
 
@@ -302,5 +570,206 @@ mod tests {
         let p = tiny();
         assert!(p.evaluate(&[0]).is_err());
         assert!(p.evaluate(&[0, 9]).is_err());
+    }
+
+    #[test]
+    fn granularity_parse_and_canonical() {
+        assert_eq!(Granularity::parse("layer").unwrap(), Granularity::Layer);
+        assert_eq!(Granularity::parse("kernel").unwrap(), Granularity::Kernel);
+        assert_eq!(Granularity::parse("channel:8").unwrap(), Granularity::ChannelGroup(8));
+        assert_eq!(Granularity::default(), Granularity::Layer);
+        for g in [Granularity::Layer, Granularity::ChannelGroup(8), Granularity::Kernel] {
+            assert_eq!(Granularity::parse(&g.canonical()).unwrap(), g);
+        }
+        let err = Granularity::parse("per-tensor").unwrap_err().to_string();
+        assert!(err.contains("per-tensor"), "error must name the bad string: {err}");
+        assert!(Granularity::parse("channel:0").is_err());
+        assert!(Granularity::parse("channel:x").is_err());
+    }
+
+    /// Golden test: `Granularity::Layer` must reproduce the pre-group
+    /// construction bit-for-bit (an inline replica of the original
+    /// per-layer loop).
+    #[test]
+    fn layer_granularity_matches_legacy_construction() {
+        let meta = synthetic_meta(6, |i| 100 + 37 * i as u64);
+        let imp = uniform_importance(&meta);
+        let alpha = 1.5;
+        let weight_only = false;
+        let p = MpqProblem::from_importance(
+            &meta,
+            &imp,
+            alpha,
+            Some(12_345),
+            Some(678),
+            weight_only,
+            Granularity::Layer,
+        );
+        // Replica of the pre-group loop (pin_bits == 8, so the pinned
+        // weight_only fix is a no-op here).
+        let mut legacy: Vec<Vec<LayerOption>> = Vec::new();
+        for q in &meta.qlayers {
+            let mut opts = Vec::new();
+            if q.pinned {
+                let b = meta.pin_bits;
+                opts.push(LayerOption {
+                    w_bits: b,
+                    a_bits: b,
+                    cost: 0.0,
+                    bitops: layer_bitops(q.macs, b, b),
+                    size_bits: layer_size_bits(q.w_numel, b),
+                });
+            } else {
+                for (wi, &wb) in meta.bit_options.iter().enumerate() {
+                    for (ai, &ab) in meta.bit_options.iter().enumerate() {
+                        opts.push(LayerOption {
+                            w_bits: wb,
+                            a_bits: ab,
+                            cost: imp.a[q.index][ai] as f64 + alpha * imp.w[q.index][wi] as f64,
+                            bitops: layer_bitops(q.macs, wb, ab),
+                            size_bits: layer_size_bits(q.w_numel, wb),
+                        });
+                    }
+                }
+            }
+            legacy.push(opts);
+        }
+        assert!(p.group_layer.is_empty(), "Layer granularity keeps the identity map");
+        assert_eq!(p.groups, legacy);
+        assert_eq!(p.bitops_cap, Some(12_345));
+        assert_eq!(p.size_cap_bits, Some(678));
+    }
+
+    /// Satellite regression: pinned layers must honor `weight_only` — the
+    /// activation width follows the unpinned a=8 convention, not pin_bits.
+    #[test]
+    fn pinned_layers_honor_weight_only() {
+        let mut meta = synthetic_meta(4, |_| 200);
+        meta.pin_bits = 6;
+        let imp = uniform_importance(&meta);
+        for granularity in [Granularity::Layer, Granularity::Kernel] {
+            let wo = MpqProblem::from_importance(
+                &meta, &imp, 1.0, None, None, true, granularity,
+            );
+            let full = MpqProblem::from_importance(
+                &meta, &imp, 1.0, None, None, false, granularity,
+            );
+            // Layer 0 is pinned and never split: one group, one option.
+            assert_eq!(wo.groups[0].len(), 1);
+            let (owo, ofull) = (&wo.groups[0][0], &full.groups[0][0]);
+            assert_eq!(owo.w_bits, 6);
+            assert_eq!(owo.a_bits, 8, "weight-only pins activations to 8");
+            assert_eq!(owo.bitops, layer_bitops(200, 6, 8));
+            assert_eq!(ofull.a_bits, 6, "full MPQ keeps a = pin_bits");
+            assert_eq!(ofull.bitops, layer_bitops(200, 6, 6));
+        }
+    }
+
+    #[test]
+    fn channel_groups_split_resources_exactly() {
+        let meta = synthetic_meta(4, |i| 1000 + 13 * i as u64);
+        let imp = uniform_importance(&meta);
+        let layer = MpqProblem::from_importance(
+            &meta, &imp, 1.0, Some(1 << 40), None, false, Granularity::Layer,
+        );
+        // Params have shape [10] → 10 channels; channel:4 → groups of 4,4,2.
+        let p = MpqProblem::from_importance(
+            &meta, &imp, 1.0, Some(1 << 40), None, false, Granularity::ChannelGroup(4),
+        );
+        assert_eq!(p.n_layers(), meta.n_qlayers);
+        // Pinned first/last stay one group; the two middle layers split in 3.
+        assert_eq!(p.n_groups(), 2 + 2 * 3);
+        assert_eq!(p.group_layer, vec![0, 1, 1, 1, 2, 2, 2, 3]);
+        for l in 0..meta.n_qlayers {
+            let member: Vec<usize> =
+                (0..p.n_groups()).filter(|&g| p.layer_of(g) == l).collect();
+            for (oi, lo) in layer.groups[l].iter().enumerate() {
+                let bitops: u64 = member.iter().map(|&g| p.groups[g][oi].bitops).sum();
+                let size: u64 = member.iter().map(|&g| p.groups[g][oi].size_bits).sum();
+                let cost: f64 = member.iter().map(|&g| p.groups[g][oi].cost).sum();
+                assert_eq!(bitops, lo.bitops, "layer {l} opt {oi}: BitOps split exactly");
+                assert_eq!(size, lo.size_bits, "layer {l} opt {oi}: size splits exactly");
+                assert!((cost - lo.cost).abs() < 1e-9, "layer {l} opt {oi}: cost share sums");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_granularity_projects_max_bits() {
+        let meta = synthetic_meta(3, |_| 500);
+        let imp = uniform_importance(&meta);
+        let p = MpqProblem::from_importance(
+            &meta, &imp, 1.0, None, None, false, Granularity::Kernel,
+        );
+        // 10 channels in the single unpinned middle layer.
+        assert_eq!(p.n_groups(), 1 + 10 + 1);
+        assert_eq!(p.n_layers(), 3);
+        // Pick mixed options across the middle layer's kernels: the
+        // BitConfig takes the max per layer.
+        let mut choice = vec![0usize; p.n_groups()];
+        choice[3] = p.groups[3].len() - 1; // highest (w, a) combo in one kernel
+        let s = p.evaluate(&choice).unwrap();
+        let cfg = p.to_bit_config(&s);
+        assert_eq!(cfg.w_bits.len(), 3);
+        let hi = *meta.bit_options.last().unwrap();
+        assert_eq!(cfg.w_bits[1], hi);
+        assert_eq!(cfg.a_bits[1], hi);
+    }
+
+    #[test]
+    fn prune_dominated_drops_only_dominated_options() {
+        let mut p = tiny();
+        // Add a strictly dominated option to group 0 (worse than [1] on
+        // cost with equal resources) and a non-comparable one.
+        p.groups[0].push(LayerOption { w_bits: 4, a_bits: 4, cost: 2.0, bitops: 16, size_bits: 4 });
+        p.groups[0].push(LayerOption { w_bits: 3, a_bits: 3, cost: 0.9, bitops: 9, size_bits: 3 });
+        let pruned = prune_dominated(&p);
+        // Only the added (cost 2, bitops 16, size 4) option is dominated
+        // (by the cost-1 twin); the cost-5 option survives on its small
+        // BitOps, the cost-0.9 one on its small size.
+        assert_eq!(pruned.dropped, 1);
+        assert!(pruned.keep[0].iter().all(|&j| j != 2), "dominated option dropped");
+        // Optimum unchanged, and restore() maps back to original indices.
+        let a = p.brute_force().unwrap();
+        let b = pruned.problem.brute_force().unwrap();
+        assert!((a.cost - b.cost).abs() < 1e-12);
+        let restored = pruned.restore(&b);
+        let re = p.evaluate(&restored.choice).unwrap();
+        assert!((re.cost - b.cost).abs() < 1e-12);
+        assert_eq!(re.bitops, b.bitops);
+    }
+
+    /// Property: simple dominance never changes the optimum (cost, BitOps
+    /// and size all agree with the unpruned brute force).
+    #[test]
+    fn prune_dominated_preserves_optimum_on_random_instances() {
+        let mut rng = crate::util::rng::Rng::new(0xD0_0D);
+        for trial in 0..40 {
+            let layers = 2 + (trial % 4);
+            let tight = 0.15 + 0.2 * ((trial % 5) as f64);
+            let p = testutil::random_problem(&mut rng, layers, 4, tight);
+            let pruned = prune_dominated(&p);
+            for g in 0..p.n_groups() {
+                assert!(!pruned.problem.groups[g].is_empty(), "a group lost all options");
+            }
+            let a = p.brute_force();
+            let b = pruned.problem.brute_force();
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert!(
+                        (a.cost - b.cost).abs() < 1e-9,
+                        "trial {trial}: optimum changed {} vs {}",
+                        a.cost,
+                        b.cost
+                    );
+                    assert_eq!(a.bitops, b.bitops, "trial {trial}");
+                    assert_eq!(a.size_bits, b.size_bits, "trial {trial}");
+                    let restored = pruned.restore(&b);
+                    assert_eq!(p.evaluate(&restored.choice).unwrap().bitops, b.bitops);
+                }
+                (None, None) => {}
+                (a, b) => panic!("trial {trial}: feasibility diverged ({a:?} vs {b:?})"),
+            }
+        }
     }
 }

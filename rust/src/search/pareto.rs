@@ -31,18 +31,18 @@ pub struct FrontierPoint {
 
 /// Trace the Lagrangian frontier over `steps` log-spaced λ values.
 pub fn frontier(p: &MpqProblem, steps: usize) -> Result<Vec<FrontierPoint>> {
-    if p.layers.is_empty() {
+    if p.groups.is_empty() {
         bail!("empty problem");
     }
     // λ range: from "bitops free" to "bitops dominate".
     let cost_scale: f64 = p
-        .layers
+        .groups
         .iter()
         .map(|o| o.iter().map(|x| x.cost.abs()).fold(0.0f64, f64::max))
         .sum::<f64>()
         .max(1e-9);
     let bitops_scale: f64 = p
-        .layers
+        .groups
         .iter()
         .map(|o| o.iter().map(|x| x.bitops).max().unwrap() as f64)
         .sum::<f64>()
@@ -54,7 +54,7 @@ pub fn frontier(p: &MpqProblem, steps: usize) -> Result<Vec<FrontierPoint>> {
         let t = i as f64 / (steps - 1).max(1) as f64;
         let lambda = lo * (hi / lo).powf(t);
         let choice: Vec<usize> = p
-            .layers
+            .groups
             .iter()
             .map(|opts| {
                 opts.iter()
@@ -133,7 +133,7 @@ mod tests {
         p.bitops_cap = None;
         let s = solve_pareto(&p, 60).unwrap();
         let want: f64 =
-            p.layers.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
+            p.groups.iter().map(|o| o.iter().map(|x| x.cost).fold(f64::MAX, f64::min)).sum();
         assert!((s.cost - want).abs() < 1e-9);
     }
 }

@@ -494,3 +494,111 @@ fn epoll_backend_sleeps_while_sweep_ticks_when_idle() {
         drop((writer, reader, stream));
     }
 }
+
+/// Granularity rides the wire end to end: a channel-group solve
+/// round-trips through the dispatcher (bit-widths still projected back
+/// onto the model's layers), keys the policy cache separately from a
+/// layer-wise solve under identical caps, builds its own frontier
+/// surface family, and unknown spellings are rejected by name.
+#[test]
+fn granularity_round_trips_and_keys_caches_separately() {
+    for poll in PollBackend::matrix() {
+        let s = searcher();
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+        let server = FleetServer::spawn_with(s, "127.0.0.1:0", cfg_with(poll)).unwrap();
+        let layer_req = Json::obj(vec![
+            ("cap_gbitops", Json::Num(cap_g)),
+            ("alpha", Json::Num(3.0)),
+        ]);
+        let chan_req = Json::obj(vec![
+            ("cap_gbitops", Json::Num(cap_g)),
+            ("alpha", Json::Num(3.0)),
+            ("granularity", Json::from("channel:8")),
+        ]);
+        // Warm the layer-wise entry, then prove the identical-caps
+        // channel-group query is a *distinct* canonical key: it must
+        // miss the policy cache the layer solve just filled.
+        let first = query(&server.addr, &layer_req).unwrap();
+        assert!(first.get("ok").unwrap().as_bool().unwrap(), "[{poll:?}] {first}");
+        let warm = query(&server.addr, &layer_req).unwrap();
+        assert!(warm.get("cache_hit").unwrap().as_bool().unwrap(), "[{poll:?}] {warm}");
+        let chan = query(&server.addr, &chan_req).unwrap();
+        assert!(chan.get("ok").unwrap().as_bool().unwrap(), "[{poll:?}] {chan}");
+        assert!(
+            !chan.get("cache_hit").unwrap().as_bool().unwrap(),
+            "[{poll:?}] channel:8 query was served from the layer-wise cache entry"
+        );
+        // The fine solve still answers in per-layer bit-widths.
+        assert_eq!(chan.get("w_bits").unwrap().as_arr().unwrap().len(), 6, "[{poll:?}]");
+        assert_eq!(chan.get("a_bits").unwrap().as_arr().unwrap().len(), 6, "[{poll:?}]");
+        let chan_warm = query(&server.addr, &chan_req).unwrap();
+        assert!(chan_warm.get("cache_hit").unwrap().as_bool().unwrap(), "[{poll:?}]");
+        // Unknown spellings come back as named errors, not defaults.
+        for (bad, needle) in
+            [("per-tensor", "per-tensor"), ("channel:0", "channel group size")]
+        {
+            let resp = query(
+                &server.addr,
+                &Json::obj(vec![
+                    ("cap_gbitops", Json::Num(cap_g)),
+                    ("granularity", Json::from(bad)),
+                ]),
+            )
+            .unwrap();
+            assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "[{poll:?}] {resp}");
+            assert!(
+                resp.get("error").unwrap().as_str().unwrap().contains(needle),
+                "[{poll:?}] error for {bad:?} does not name the problem: {resp}"
+            );
+        }
+        server.shutdown();
+    }
+}
+
+/// With frontier-first serving on, a channel-group cap query builds its
+/// own certified surface family — `{"cmd":"frontier"}` lists it beside
+/// the layer-wise surfaces instead of sharing their key.
+#[test]
+fn granularity_splits_the_frontier_surface_family() {
+    for poll in PollBackend::matrix() {
+        let s = searcher();
+        let cap_g = uniform_bitops(s.meta(), 4, 4) as f64 / 1e9;
+        let server = FleetServer::spawn_with(
+            s,
+            "127.0.0.1:0",
+            ServeConfig { frontier: true, frontier_tol: 10.0, poll, ..Default::default() },
+        )
+        .unwrap();
+        for g in ["layer", "channel:8"] {
+            let resp = query(
+                &server.addr,
+                &Json::obj(vec![
+                    ("cap_gbitops", Json::Num(cap_g)),
+                    ("alpha", Json::Num(3.0)),
+                    ("granularity", Json::from(g)),
+                ]),
+            )
+            .unwrap();
+            assert!(resp.get("ok").unwrap().as_bool().unwrap(), "[{poll:?}] {g}: {resp}");
+        }
+        let info = query(&server.addr, &Json::obj(vec![("cmd", Json::from("frontier"))])).unwrap();
+        assert!(info.get("ok").unwrap().as_bool().unwrap(), "[{poll:?}] {info}");
+        let grans: Vec<String> = info
+            .get("surfaces")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("granularity").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(
+            grans.iter().any(|g| g == "channel:8"),
+            "[{poll:?}] no channel:8 surface family, got {grans:?}"
+        );
+        assert!(
+            grans.iter().any(|g| g == "layer"),
+            "[{poll:?}] no layer surface family, got {grans:?}"
+        );
+        server.shutdown();
+    }
+}

@@ -5,8 +5,11 @@
 # Runs the bench targets and writes BENCH_kernels.json (op, size, threads,
 # ns_per_iter, throughput) plus BENCH_fleet.json (queries/sec through the
 # event-driven TCP serving stack at 1/8/64 concurrent clients, cold vs
-# warm cache) so the perf trajectory is tracked from PR 2 onward —
-# compare the files across commits to catch regressions.
+# warm cache) plus BENCH_search.json (the fine-granularity MCKP solver
+# core at layer / channel:8 / kernel granularity — variables, dominance
+# prune ratio, certified bound gap, wall time at 1 and N threads) so the
+# perf trajectory is tracked from PR 2 onward — compare the files across
+# commits to catch regressions.
 #
 # The kernel artifact includes forced gemm_f32_simd / gemm_i8_simd tiers
 # against forced gemm_*_scalar baselines (where a vector ISA is
@@ -15,9 +18,11 @@
 # stamps the session-active "simd" and "poll" backends; set LIMPQ_SIMD /
 # LIMPQ_POLL to pin them for a run.
 #
-# Usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--quick]
+# Usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--search-out FILE] [--quick]
 #   --out FILE        where to write the kernel records (default BENCH_kernels.json)
 #   --fleet-out FILE  where to write the fleet records (default BENCH_fleet.json)
+#   --search-out FILE where to write the fine-granularity search records
+#                     (default BENCH_search.json)
 #   --quick           short budgets (the CI smoke mode; also BENCH_QUICK=1)
 set -euo pipefail
 
@@ -25,6 +30,7 @@ cd "$(dirname "$0")/.."
 
 OUT="BENCH_kernels.json"
 FLEET_OUT="BENCH_fleet.json"
+SEARCH_OUT="BENCH_search.json"
 while [[ $# -gt 0 ]]; do
     case "$1" in
         --out)
@@ -35,12 +41,16 @@ while [[ $# -gt 0 ]]; do
             FLEET_OUT="$2"
             shift 2
             ;;
+        --search-out)
+            SEARCH_OUT="$2"
+            shift 2
+            ;;
         --quick)
             export BENCH_QUICK=1
             shift
             ;;
         *)
-            echo "unknown argument: $1 (usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--quick])" >&2
+            echo "unknown argument: $1 (usage: tools/bench.sh [--out FILE] [--fleet-out FILE] [--search-out FILE] [--quick])" >&2
             exit 2
             ;;
     esac
@@ -51,6 +61,9 @@ cargo bench --bench runtime_exec -- --json "$OUT"
 
 echo "==> cargo bench --bench fleet_serving (event-driven serving tier)"
 cargo bench --bench fleet_serving -- --json "$FLEET_OUT"
+
+echo "==> cargo bench --bench search_efficiency (fine-granularity solver tiers)"
+cargo bench --bench search_efficiency -- --json "$SEARCH_OUT"
 
 echo "==> cargo bench --bench data_pipeline"
 cargo bench --bench data_pipeline
@@ -63,5 +76,10 @@ if [[ ! -s "$FLEET_OUT" ]]; then
     echo "bench.sh: $FLEET_OUT was not produced" >&2
     exit 1
 fi
+if [[ ! -s "$SEARCH_OUT" ]]; then
+    echo "bench.sh: $SEARCH_OUT was not produced" >&2
+    exit 1
+fi
 echo "kernel bench records -> $OUT"
 echo "fleet bench records  -> $FLEET_OUT"
+echo "search bench records -> $SEARCH_OUT"

@@ -64,7 +64,8 @@ else
 fi
 
 echo "==> bench smoke (quick kernel + fleet-serving tiers, auto backends)"
-bash tools/bench.sh --quick --out BENCH_kernels.json --fleet-out BENCH_fleet.json
+bash tools/bench.sh --quick --out BENCH_kernels.json --fleet-out BENCH_fleet.json \
+    --search-out BENCH_search.json
 
 # A second artifact variant pinned to the scalar/sweep reference
 # backends, so bench_diff always has a like-for-like baseline even when
@@ -72,7 +73,8 @@ bash tools/bench.sh --quick --out BENCH_kernels.json --fleet-out BENCH_fleet.jso
 # changes between runs.
 echo "==> bench smoke (quick, scalar/sweep reference backends)"
 LIMPQ_SIMD=scalar LIMPQ_POLL=sweep bash tools/bench.sh --quick \
-    --out BENCH_kernels_scalar.json --fleet-out BENCH_fleet_scalar.json
+    --out BENCH_kernels_scalar.json --fleet-out BENCH_fleet_scalar.json \
+    --search-out BENCH_search_scalar.json
 
 # CHANGES.md append discipline: any change relative to the main branch
 # must carry a CHANGES.md update, so the next session knows what landed.
